@@ -1,0 +1,76 @@
+"""Fig. 6: per-component time breakdown for the sync request vs response.
+
+The paper's money figure: under background traffic the *response* spends
+far longer in the switch fed by the bulk flow than the request does,
+explaining the NTP error.  We reproduce it from LinkTransfer spans of the
+NTP packets (direction in attrs), plus the TPU-native analogue: per-
+component breakdown of a training step with a straggler chip.
+"""
+import statistics
+import tempfile
+import time
+from collections import defaultdict
+
+
+def _ntp_breakdown(background: bool):
+    from repro.core import ColumboScript, SimType
+    from repro.sim import run_ntp_sim
+
+    with tempfile.TemporaryDirectory() as d:
+        cl = run_ntp_sim(background=background, sim_seconds=8.0, outdir=d)
+        script = ColumboScript()
+        for p in cl.log_paths()["host"]:
+            script.add_log(p, SimType.HOST)
+        for p in cl.log_paths()["net"]:
+            script.add_log(p, SimType.NET)
+        spans = script.run()
+    per = defaultdict(lambda: defaultdict(list))  # direction -> component -> [us]
+    for s in spans:
+        if s.name == "LinkTransfer" and s.attrs.get("proto") == "ntp":
+            per[s.attrs.get("dir")][s.component].append(s.duration / 1e6)
+    return {
+        d: {c: statistics.mean(v) for c, v in comps.items()} for d, comps in per.items()
+    }
+
+
+def run():
+    rows = []
+    for bg in (False, True):
+        t0 = time.perf_counter()
+        bd = _ntp_breakdown(bg)
+        us = (time.perf_counter() - t0) * 1e6
+        tag = "bg" if bg else "base"
+        for direction in ("req", "resp"):
+            comps = bd.get(direction, {})
+            desc = " ".join(f"{c.split('.')[-1]}={v:.1f}us" for c, v in sorted(comps.items()))
+            rows.append((f"fig6.{tag}.{direction}", us, desc))
+        if bg:
+            sw = bd.get("resp", {}).get("eth.sw1_sw2", 0) / max(
+                bd.get("req", {}).get("eth.sw1_sw2", 1e-9), 1e-9
+            )
+            rows.append(
+                ("fig6.bg.resp_over_req_sw1sw2", 0.0,
+                 f"{sw:.1f}x (paper: response >> request on the contended switch)")
+            )
+
+    # TPU-native analogue: straggler chip shows up in the step breakdown
+    from repro.core import ColumboScript, SimType, assemble_traces, component_breakdown, straggler_report
+    from repro.sim import run_training_sim, synthetic_program
+
+    t0 = time.perf_counter()
+    prog = synthetic_program(n_layers=2, layer_flops=5e11, layer_bytes=2e8, grad_bytes=1e8)
+    with tempfile.TemporaryDirectory() as d:
+        cl = run_training_sim(prog, n_steps=1, n_pods=2, chips_per_pod=4, outdir=d,
+                              compute_scale={"pod1.chip02": 3.0})
+        script = ColumboScript()
+        for st_name, ps in cl.log_paths().items():
+            for p in ps:
+                script.add_log(p, SimType(st_name))
+        spans = script.run()
+    us = (time.perf_counter() - t0) * 1e6
+    rep = straggler_report(spans, span_name="Op")
+    rows.append(
+        ("fig6.training_straggler", us,
+         f"flagged={rep['stragglers']} median_us={rep['median_us']:.0f}")
+    )
+    return rows

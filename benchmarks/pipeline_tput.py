@@ -1,0 +1,68 @@
+"""Columbo processing throughput (§3.5 'large amounts of data').
+
+Measures end-to-end log-line -> span throughput of a single pipeline
+(parse + weave) and of the parser alone, on a synthetic gem5-flavoured
+device log.  The paper's concern is 100s of GB of logs; events/s here
+sets the single-core processing rate.
+"""
+import os
+import tempfile
+import time
+
+
+def _gen_device_log(path: str, n_ops: int) -> int:
+    lines = 0
+    with open(path, "w") as f:
+        f.write("0: system.pod0.chip00: ProgramStart: program=train_step step=0\n")
+        lines += 1
+        for i in range(n_ops):
+            t = 1000 + i * 2000
+            f.write(
+                f"{t}: system.pod0.chip00: OpBegin: op=op{i} name=seg{i} flops=1000000 bytes=5000 step=0\n"
+            )
+            f.write(f"{t+100}: system.pod0.chip00: HbmRead: op=op{i} bytes=3000\n")
+            f.write(f"{t+1500}: system.pod0.chip00: OpEnd: op=op{i} name=seg{i} step=0\n")
+            lines += 3
+        f.write(f"{1000 + n_ops * 2000}: system.pod0.chip00: ProgramEnd: program=train_step step=0\n")
+        lines += 1
+    return lines
+
+
+def run():
+    from repro.core import ColumboScript, LogFileProducer, Pipeline, SimType, parser_for
+
+    rows = []
+    n_ops = 100_000
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "device.log")
+        n_lines = _gen_device_log(path, n_ops)
+        size_mb = os.path.getsize(path) / 2**20
+
+        # parse-only
+        class _Null:
+            def consume(self, ev):
+                pass
+
+            def on_finish(self):
+                pass
+
+        t0 = time.perf_counter()
+        p = Pipeline(LogFileProducer(path, parser_for(SimType.DEVICE)), (), _Null())
+        p.run_sync()
+        dt = time.perf_counter() - t0
+        rows.append(
+            ("pipeline.parse_only", dt * 1e6,
+             f"{p.events_in/dt:,.0f} ev/s {size_mb/dt:.1f} MB/s lines={n_lines}")
+        )
+
+        # parse + weave + finalize
+        t0 = time.perf_counter()
+        script = ColumboScript()
+        script.add_log(path, SimType.DEVICE)
+        spans = script.run()
+        dt = time.perf_counter() - t0
+        rows.append(
+            ("pipeline.parse_weave", dt * 1e6,
+             f"{(3*n_ops+2)/dt:,.0f} ev/s {len(spans):,} spans {size_mb/dt:.1f} MB/s")
+        )
+    return rows

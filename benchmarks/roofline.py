@@ -1,0 +1,195 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline deliverable).
+
+Per (arch × shape) on the single-pod 16x16 mesh:
+
+  compute term    = HLO_FLOPs / peak_FLOPs            (per-chip quantities:
+  memory term     = HLO_bytes / HBM_bw                 an SPMD module is the
+  collective term = wire_bytes / ICI_link_bw           per-device program)
+
+HLO_FLOPs/bytes come from the depth-extrapolated cost compiles
+(--mode cost: layers + inner scans unrolled, exact trip counts — XLA's
+cost_analysis does not multiply while-loop bodies), falling back to the
+scanned compile (flagged) when no cost artifact exists.  wire_bytes models
+ring algorithms (AR 2(N-1)/N etc.) parsed from the optimized HLO.
+
+Headline score (roofline_fraction):
+  train/prefill — MFU-style: MODEL_FLOPS_time / max(term)
+  decode        — MBU-style: MIN_BYTES_time / max(term), where MIN_BYTES is
+                  the unavoidable HBM traffic (active params + KV/state
+                  cache read once per token).
+"""
+from __future__ import annotations
+
+import csv
+import glob
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRYRUN_DIR = os.path.join(REPO, "results", "dryrun")
+OUT_CSV = os.path.join(REPO, "results", "roofline.csv")
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+CHIPS = 256
+
+
+def _load(path: str) -> Optional[Dict[str, Any]]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _model_flops_per_dev(rec: Dict[str, Any], shape: str, kind: str) -> float:
+    n_active = rec["model"]["n_active_params"]
+    from repro.configs import SHAPES
+
+    s = SHAPES[shape]
+    if kind == "train":
+        tokens = s.global_batch * s.seq
+        total = 6.0 * n_active * tokens
+    elif kind == "prefill":
+        tokens = s.global_batch * s.seq
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * s.global_batch
+    return total / CHIPS
+
+
+def analyze_cell(arch: str, shape: str) -> Optional[Dict[str, Any]]:
+    full = _load(os.path.join(DRYRUN_DIR, f"{arch}.{shape}.16x16.json"))
+    cost = _load(os.path.join(DRYRUN_DIR, f"{arch}.{shape}.cost.json"))
+    if full is None or not full.get("ok"):
+        return None
+    if cost is not None and cost.get("ok"):
+        flops = cost["extrapolated"]["flops"]
+        # TPU-fusion-adjusted bytes (raw cost_analysis bytes kept as the
+        # pessimistic bound in the csv)
+        bytes_ = cost["extrapolated"].get("tpu_bytes") or cost["extrapolated"]["bytes"]
+        bytes_raw = cost["extrapolated"]["bytes"]
+        mb = cost.get("microbatches") or 1
+        # cost compiles run mb=1; real cells run `mb` accumulation sweeps.
+        # Activation all-reduces scale with TOKENS (constant per step);
+        # param all-gathers/reduce-scatters repeat per microbatch.
+        pk = cost["extrapolated"].get("coll_per_kind", {})
+        ar_like = pk.get("all-reduce", 0) + pk.get("all-to-all", 0) + pk.get(
+            "collective-permute", 0
+        )
+        ag_rs = pk.get("all-gather", 0) + pk.get("reduce-scatter", 0)
+        # convert operand bytes to ring wire bytes approximately via the
+        # measured wire/operand ratio
+        total_op = max(sum(pk.values()), 1)
+        wire_ratio = cost["extrapolated"]["wire_bytes"] / total_op
+        wire = (ar_like + mb * ag_rs) * wire_ratio
+        wire_low = wire_high = wire
+        src = "cost-extrapolated"
+    else:
+        flops = full["cost"]["flops"]
+        bytes_ = bytes_raw = full["cost"]["bytes_accessed"]
+        wire_low = wire_high = full["collectives"].get("wire_bytes", 0)
+        src = "scanned (UNDERCOUNTS loop bodies)"
+
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    t_n = wire_high / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_n}
+    dominant = max(terms, key=terms.get)
+    mf = _model_flops_per_dev(full, shape, full["kind"])
+    if full["kind"] == "decode":
+        # MBU: minimum HBM traffic per token = active params (bf16) + the
+        # per-device share of cache/state reads; approximate the latter by
+        # the cell's per-device argument bytes excluding params/opt — use
+        # the memory_analysis argument size as the cache+params proxy.
+        min_bytes = full["memory"].get("argument_size_in_bytes", 0.0)
+        t_model = min_bytes / HBM_BW
+    else:
+        t_model = mf / PEAK_FLOPS
+    frac = t_model / max(max(terms.values()), 1e-30)
+    suggestions = {
+        "compute": "reduce recompute (remat policy) / useless FLOPs — compute-bound is the good case",
+        "memory": "increase arithmetic intensity: fuse, larger microbatches, bf16 IO, avoid re-materialized gathers",
+        "collective": "reshard to cut gathered bytes (FSDP axis, TP extent), overlap collectives with compute, compress",
+    }
+    return {
+        "arch": arch,
+        "shape": shape,
+        "kind": full["kind"],
+        "flops_per_dev": flops,
+        "bytes_per_dev": bytes_,
+        "bytes_raw_per_dev": bytes_raw,
+        "wire_bytes_per_dev": wire_high,
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_n,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "useful_flops_ratio": mf / max(flops, 1e-30),
+        "roofline_fraction": frac,
+        "mem_gib_per_dev": full["memory"]["total_bytes"] / 2**30,
+        "source": src,
+        "suggestion": suggestions[dominant],
+    }
+
+
+def analyze_all() -> List[Dict[str, Any]]:
+    from repro.configs import all_cells
+
+    out = []
+    for arch, shape in all_cells():
+        r = analyze_cell(arch, shape)
+        if r:
+            out.append(r)
+    return out
+
+
+def write_csv(rows: List[Dict[str, Any]], path: str = OUT_CSV) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    if not rows:
+        return
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+
+
+def markdown_table(rows: List[Dict[str, Any]]) -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant | "
+           "MODEL/HLO | roofline_frac | GiB/dev |\n|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} | {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {r['mem_gib_per_dev']:.1f} |\n"
+        )
+    return hdr + body
+
+
+def run():
+    t0 = time.perf_counter()
+    rows = analyze_all()
+    write_csv(rows)
+    us = (time.perf_counter() - t0) * 1e6
+    out = []
+    n_cost = sum(1 for r in rows if r["source"].startswith("cost"))
+    out.append(
+        ("roofline.cells", us,
+         f"{len(rows)} cells analyzed ({n_cost} cost-extrapolated) -> results/roofline.csv")
+    )
+    for r in rows:
+        out.append(
+            (f"roofline.{r['arch']}.{r['shape']}", 0.0,
+             f"dom={r['dominant']} frac={r['roofline_fraction']:.3f} "
+             f"c/m/n={r['compute_s']:.2e}/{r['memory_s']:.2e}/{r['collective_s']:.2e}")
+        )
+    return out
+
+
+if __name__ == "__main__":
+    rows = analyze_all()
+    write_csv(rows)
+    print(markdown_table(rows))

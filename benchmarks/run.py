@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure + framework perf.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measurement).
+
+  table1     — §4 Table 1: event/span type inventory per simulator type
+  fig4_fig5  — §5 Fig. 4/5: clock skew + chrony estimates, both scenarios
+  fig6       — §5 Fig. 6: per-component breakdown (+ straggler analogue)
+  pipeline   — §3.5: log->span processing throughput
+  online     — §3.8: named-pipe online mode
+  roofline   — §Roofline terms per (arch x shape) from dry-run artifacts
+"""
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    from . import (
+        fig4_fig5_clock_sync,
+        fig6_breakdown,
+        online_mode,
+        pipeline_tput,
+        roofline,
+        table1_coverage,
+    )
+
+    benches = {
+        "table1": table1_coverage.run,
+        "fig4_fig5": fig4_fig5_clock_sync.run,
+        "fig6": fig6_breakdown.run,
+        "pipeline": pipeline_tput.run,
+        "online": online_mode.run,
+        "roofline": roofline.run,
+    }
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        if only and name != only:
+            continue
+        try:
+            for row in fn():
+                n, us, d = row
+                print(f"{n},{us:.1f},{d}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

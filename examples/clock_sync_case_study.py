@@ -1,0 +1,78 @@
+"""The paper's §5 case study, reproduced end to end.
+
+Two hosts (client/server) behind two switches run chrony-style NTP.
+Scenario 1: quiet network.  Scenario 2: a BulkSend flow saturates the
+inter-switch link.  Columbo traces reveal *why* NTP breaks: the response
+path queues behind the bulk flow while the request path doesn't — the
+asymmetry NTP cannot model (Figs. 4, 5, 6).
+
+    PYTHONPATH=src python examples/clock_sync_case_study.py
+"""
+import os
+import statistics
+import tempfile
+from collections import defaultdict
+
+from repro.core import (
+    ColumboScript,
+    JaegerJSONExporter,
+    SimType,
+    clock_offset_series,
+    ntp_estimated_offsets,
+)
+from repro.sim import run_ntp_sim
+
+
+def scenario(background: bool, outdir: str):
+    cluster = run_ntp_sim(background=background, sim_seconds=15.0, outdir=outdir)
+    script = ColumboScript()
+    for sim_type, paths in cluster.log_paths().items():
+        for p in paths:
+            script.add_log(p, SimType(sim_type))
+    return script.run()
+
+
+def main() -> None:
+    out = os.environ.get("CASESTUDY_OUT", "results/clock_sync")
+    os.makedirs(out, exist_ok=True)
+    results = {}
+    for bg in (False, True):
+        tag = "scenario2_bg" if bg else "scenario1_base"
+        spans = scenario(bg, os.path.join(out, tag))
+        results[tag] = spans
+        JaegerJSONExporter(os.path.join(out, f"{tag}.jaeger.json")).export(spans)
+
+    print("=== Fig. 4: measured clock skew (ground-truth global clock) ===")
+    for tag, spans in results.items():
+        skew = [abs(o) for _, o in clock_offset_series(spans, "client", "server")[2:]]
+        print(f"  {tag:18s} max |skew| = {max(skew):8.2f} us   mean = {statistics.mean(skew):8.2f} us")
+
+    print("\n=== Fig. 5: chrony-estimated offsets (what the system *thinks*) ===")
+    for tag, spans in results.items():
+        est = [abs(o) for _, o in ntp_estimated_offsets(spans, "client")[2:]]
+        print(f"  {tag:18s} max |est| = {max(est):8.2f} us   mean = {statistics.mean(est):8.2f} us")
+
+    print("\n=== Fig. 6: where do NTP packets spend their time? (mean us per link) ===")
+    for tag, spans in results.items():
+        per = defaultdict(lambda: defaultdict(list))
+        for s in spans:
+            if s.name == "LinkTransfer" and s.attrs.get("proto") == "ntp":
+                per[s.attrs.get("dir")][s.component].append(s.duration / 1e6)
+        print(f"  {tag}:")
+        for direction in ("req", "resp"):
+            comps = {c: statistics.mean(v) for c, v in per[direction].items()}
+            line = "  ".join(f"{c.split('.', 1)[1]}={v:7.1f}" for c, v in sorted(comps.items()))
+            print(f"    {direction:4s}: {line}")
+
+    print(
+        "\nConclusion (paper §5): with background traffic the response direction "
+        "queues on the inter-switch link while the request does not; NTP assumes "
+        "symmetric paths, so the estimated offset stays plausible while the true "
+        "clocks drift apart. The hardware-enriched trace makes the root cause "
+        "directly visible."
+    )
+    print(f"\ntraces: {out}/scenario*.jaeger.json (load in Jaeger UI)")
+
+
+if __name__ == "__main__":
+    main()

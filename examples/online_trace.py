@@ -1,0 +1,57 @@
+"""§3.8 online mode: Columbo consumes simulator logs through named pipes
+while the simulation runs — nothing is ever persisted to disk.
+
+    PYTHONPATH=src python examples/online_trace.py
+"""
+import os
+import tempfile
+import threading
+
+from repro.core import ColumboScript, SimType, assemble_traces, make_fifo, trace_summary
+from repro.sim import run_training_sim, synthetic_program
+
+
+def main() -> None:
+    prog = synthetic_program(n_layers=2, layer_flops=3e11, layer_bytes=1e8, grad_bytes=5e7)
+    with tempfile.TemporaryDirectory() as d:
+        names = {
+            "host": [os.path.join(d, "host-host0.log")],
+            "device": [os.path.join(d, "device-pod0.log")],
+            "net": [os.path.join(d, "net.log")],
+        }
+        for ps in names.values():
+            for p in ps:
+                make_fifo(p)
+        print("named pipes created; starting Columbo readers (they block on open)")
+
+        script = ColumboScript(poll_timeout=5.0)
+        for k, ps in names.items():
+            for p in ps:
+                script.add_log(p, SimType(k))
+        for p in script.pipelines:
+            p.start()
+
+        print("starting the simulation (writers connect to the pipes)")
+        t = threading.Thread(
+            target=lambda: run_training_sim(prog, n_steps=2, n_pods=1, chips_per_pod=4, outdir=d)
+        )
+        t.start()
+        t.join()
+        for p in script.pipelines:
+            p.join(timeout=60)
+
+        spans = []
+        for w in script.weavers:
+            spans.extend(w.spans)
+        from repro.core import finalize_spans
+
+        stats = finalize_spans(spans, script.registry)
+        print(f"\nstreamed weave complete: {trace_summary(spans)}")
+        print(f"orphans: {stats['orphans']} (0 = every cross-simulator edge resolved)")
+        print("log files on disk?", any(os.path.getsize(p) > 0 for ps in names.values()
+                                         for p in ps if os.path.exists(p)) and "yes" or
+              "no — FIFOs drained in flight")
+
+
+if __name__ == "__main__":
+    main()

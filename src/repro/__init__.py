@@ -1,0 +1,18 @@
+"""repro — Columbo (modular full-system-simulation tracing) built into a
+multi-pod JAX training/serving framework.
+
+Subpackages:
+  core         Columbo: event streams, pipelines, SpanWeavers, exporters
+  sim          component simulators (chip/host/interconnect) + orchestrator
+  models       composable model stack (10 assigned architectures)
+  training     AdamW, train_step, Trainer
+  serving      KV caches, prefill/decode, batched engine
+  data         deterministic synthetic pipeline
+  checkpoint   atomic sharded checkpoints + elastic restore
+  distributed  compression, pipeline parallelism
+  kernels      Pallas TPU kernels + jnp oracles
+  configs      architecture registry + input shapes
+  launch       meshes, dry-run, train/serve/trace CLIs
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,151 @@
+"""Sharded checkpointing without external deps.
+
+Layout:  <dir>/step_<N>/
+            manifest.json      — tree structure, shapes, dtypes, step, extras
+            <leaf-path>.npy    — one file per pytree leaf (host-local values)
+
+Writes are atomic (tmp dir + rename), retention keeps the last K steps,
+``save_async`` runs serialization on a background thread (the training loop
+continues), and ``restore`` reshards onto any mesh/sharding — the basis of
+elastic restart (checkpoint from a 256-chip mesh restores onto whatever
+survives).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "__"
+
+
+def _flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = _SEP.join(_key_str(k) for k in path) or "root"
+        out.append((name, leaf))
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._async_thread: Optional[threading.Thread] = None
+        self._async_err: Optional[BaseException] = None
+
+    # -- write -----------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, extras: Optional[Dict[str, Any]] = None) -> str:
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
+        return self._write(step, host_tree, extras)
+
+    def save_async(self, step: int, tree: Any, extras: Optional[Dict[str, Any]] = None) -> None:
+        self.wait()
+        # snapshot to host memory synchronously (cheap), write on a thread
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _run() -> None:
+            try:
+                self._write(step, host_tree, extras)
+            except BaseException as e:  # surfaced on next wait()
+                self._async_err = e
+
+        self._async_thread = threading.Thread(target=_run, daemon=True)
+        self._async_thread.start()
+
+    def wait(self) -> None:
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+        if self._async_err is not None:
+            err, self._async_err = self._async_err, None
+            raise err
+
+    def _write(self, step: int, host_tree: Any, extras: Optional[Dict[str, Any]]) -> str:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=self.dir)
+        leaves = _flatten_with_paths(host_tree)
+        manifest = {
+            "step": step,
+            "extras": extras or {},
+            "leaves": {},
+        }
+        for name, arr in leaves:
+            arr = np.asarray(arr)
+            np.save(os.path.join(tmp, name + ".npy"), arr)
+            manifest["leaves"][name] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)           # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- read ------------------------------------------------------------------
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", d)
+            if m and os.path.exists(os.path.join(self.dir, d, "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        like: Any,
+        step: Optional[int] = None,
+        shardings: Optional[Any] = None,
+    ) -> Tuple[Any, Dict[str, Any]]:
+        """Restore into the structure of ``like``; optionally placing each
+        leaf with the given shardings (any mesh — elastic restart)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        names = [n for n, _ in _flatten_with_paths(like)]
+        leaves = []
+        for name in names:
+            arr = np.load(os.path.join(d, name + ".npy"))
+            leaves.append(arr)
+        treedef = jax.tree_util.tree_structure(like)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            flat_s = treedef.flatten_up_to(shardings)
+            flat_t = jax.tree_util.tree_leaves(tree)
+            tree = jax.tree_util.tree_unflatten(
+                treedef,
+                [jax.device_put(a, s) for a, s in zip(flat_t, flat_s)],
+            )
+        return tree, manifest["extras"]

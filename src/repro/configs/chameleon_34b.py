@@ -1,0 +1,27 @@
+"""chameleon-34b [vlm] — 48L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=65536, early fusion over VQ image tokens, qk-norm.
+[arXiv:2405.09818; unverified].  Patch/VQ frontend is a STUB:
+input_specs() provides precomputed token embeddings.
+"""
+from ..models.config import ModelConfig
+from . import ArchSpec
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="chameleon-34b",
+        family="vlm",
+        n_layers=48,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=22016,
+        vocab_size=65536,
+        qk_norm=True,
+        mlp_act="swiglu",
+        frontend="vision",
+        rope_theta=10_000.0,
+        param_dtype="bfloat16",
+    ),
+    microbatches={"train_4k": 16},
+    kv_cache_dtype={"decode_32k": "int8"},
+)

@@ -1,0 +1,27 @@
+"""falcon-mamba-7b [ssm] — 64L d_model=4096, attention-free Mamba-1 blocks,
+vocab=65024, ssm_state=16.  [arXiv:2410.05355; unverified].
+d_inner = 2*d_model = 8192, dt_rank = ceil(4096/16) = 256, conv width 4.
+
+Runs long_500k (recurrent state is O(1) in context length).
+"""
+from ..models.config import ModelConfig
+from . import ArchSpec
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="falcon-mamba-7b",
+        family="ssm",
+        n_layers=64,
+        d_model=4096,
+        n_heads=1,
+        n_kv_heads=1,
+        d_ff=0,
+        vocab_size=65024,
+        head_dim=64,
+        block_pattern=("mamba",),
+        ssm_state=16,
+        ssm_conv=4,
+        ssm_expand=2,
+    ),
+    microbatches={"train_4k": 8},
+)

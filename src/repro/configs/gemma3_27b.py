@@ -1,0 +1,33 @@
+"""gemma3-27b [dense] — 62L d_model=5376 32H (GQA kv=16) d_ff=21504
+vocab=262144, 5:1 local:global attention (window 1024), 128k context.
+[hf:google/gemma-3-27b-pt; unverified].  head_dim=128 per the public config
+(not d_model/n_heads); GeGLU MLP.
+
+long_500k: SKIPPED — every 6th layer is full global attention (assignment
+rule: skip for archs whose attention path is quadratic at 500k prefill).
+"""
+from ..models.config import ModelConfig
+from . import ArchSpec
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="gemma3-27b",
+        family="dense",
+        n_layers=62,
+        d_model=5376,
+        n_heads=32,
+        n_kv_heads=16,
+        d_ff=21504,
+        vocab_size=262144,
+        head_dim=128,
+        block_pattern=("attn_local",) * 5 + ("attn",),
+        window=1024,
+        qk_norm=True,
+        mlp_act="geglu",
+        rope_theta=1_000_000.0,
+    ),
+    microbatches={"train_4k": 8},
+    kv_cache_dtype={"decode_32k": "int8"},
+    notes="62 = 10 full (5L+1G) groups + 2 remainder local layers; "
+    "int8 KV for decode_32k (global-layer caches dominate HBM)",
+)

@@ -1,0 +1,30 @@
+"""granite-moe-1b-a400m [moe] — 24L d_model=1024 16H (GQA kv=8)
+per-expert d_ff=512, vocab=49155, MoE 32 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf].
+
+vocab 49155 is not divisible by the 16-way model axis -> the embedding
+falls back to replication (recorded by the sharding rules; see §Dry-run).
+"""
+from ..models.config import ModelConfig
+from . import ArchSpec
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="granite-moe-1b-a400m",
+        family="moe",
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=8,
+        d_ff=512,
+        vocab_size=49155,
+        head_dim=64,
+        n_experts=32,
+        top_k=8,
+        expert_d_ff=512,
+        capacity_factor=1.25,
+        mlp_act="swiglu",
+        rope_theta=10_000.0,
+    ),
+    microbatches={"train_4k": 2},
+)

@@ -1,0 +1,36 @@
+"""llama4-scout-17b-a16e [moe] — 48L d_model=5120 40H (GQA kv=8) d_ff=8192,
+vocab=202048, MoE 16 experts top-1 + shared expert, early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified].  head_dim=128.
+
+40 heads are not divisible by the 16-way model axis -> attention head
+sharding falls back to replication (a roofline finding; §Perf examines the
+pad-to-48 alternative).  Vision frontend is a STUB (precomputed patch
+embeddings).
+"""
+from ..models.config import ModelConfig
+from . import ArchSpec
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="llama4-scout-17b-a16e",
+        family="moe",
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab_size=202048,
+        head_dim=128,
+        n_experts=16,
+        top_k=1,
+        expert_d_ff=8192,
+        shared_expert_d_ff=8192,
+        capacity_factor=1.25,
+        mlp_act="swiglu",
+        frontend="vision",
+        rope_theta=500_000.0,
+        param_dtype="bfloat16",
+    ),
+    microbatches={"train_4k": 16},
+    kv_cache_dtype={"decode_32k": "int8", "prefill_32k": "int8"},
+)

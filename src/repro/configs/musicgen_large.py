@@ -1,0 +1,26 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens.
+48L d_model=2048 32H (GQA kv=32 = MHA) d_ff=8192 vocab=2048.
+[arXiv:2306.05284; hf].  EnCodec frontend is a STUB: input_specs() provides
+precomputed frame embeddings (B, S, d); targets are codebook tokens.
+"""
+from ..models.config import ModelConfig
+from . import ArchSpec
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="musicgen-large",
+        family="audio",
+        n_layers=48,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab_size=2048,
+        mlp_act="gelu",            # MusicGen uses standard transformer FFN
+        frontend="audio",
+        rope_theta=10_000.0,
+    ),
+    microbatches={"train_4k": 4},
+    kv_cache_dtype={"decode_32k": "int8"},
+    notes="pure global attention -> long_500k skipped per assignment rule",
+)

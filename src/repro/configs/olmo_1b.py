@@ -1,0 +1,22 @@
+"""olmo-1b [dense] — 16L d_model=2048 16H (GQA kv=16 = MHA) d_ff=8192
+vocab=50304, non-parametric LayerNorm.  [arXiv:2402.00838; hf].
+"""
+from ..models.config import ModelConfig
+from . import ArchSpec
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="olmo-1b",
+        family="dense",
+        n_layers=16,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=8192,
+        vocab_size=50304,
+        nonparametric_ln=True,
+        mlp_act="swiglu",
+        rope_theta=10_000.0,
+    ),
+    microbatches={"train_4k": 2},
+)

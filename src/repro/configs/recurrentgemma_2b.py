@@ -1,0 +1,30 @@
+"""recurrentgemma-2b [hybrid] — 26L d_model=2560 10H (MQA kv=1) d_ff=7680,
+vocab=256000, RG-LRU + local attention, pattern (rec, rec, attn), window
+2048.  [arXiv:2402.19427; hf].  lru_width = d_model = 2560; GeGLU.
+
+Runs long_500k (local attention + recurrent states are O(1) in context).
+"""
+from ..models.config import ModelConfig
+from . import ArchSpec
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="recurrentgemma-2b",
+        family="hybrid",
+        n_layers=26,
+        d_model=2560,
+        n_heads=10,
+        n_kv_heads=1,
+        d_ff=7680,
+        vocab_size=256000,
+        head_dim=256,
+        block_pattern=("rglru", "rglru", "attn_local"),
+        window=2048,
+        lru_width=2560,
+        conv_width=4,
+        mlp_act="geglu",
+        rope_theta=10_000.0,
+    ),
+    microbatches={"train_4k": 4},
+    notes="26 = 8 (rec,rec,attn) groups + 2 remainder rec layers",
+)

@@ -1,0 +1,21 @@
+"""stablelm-1.6b [dense] — 24L d_model=2048 32H (GQA kv=32 = MHA) d_ff=5632
+vocab=100352.  [hf:stabilityai/stablelm-2-1_6b; unverified].
+"""
+from ..models.config import ModelConfig
+from . import ArchSpec
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="stablelm-1.6b",
+        family="dense",
+        n_layers=24,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=5632,
+        vocab_size=100352,
+        mlp_act="swiglu",
+        rope_theta=10_000.0,
+    ),
+    microbatches={"train_4k": 2},
+)

@@ -1,0 +1,62 @@
+"""Columbo core: modular full-system-simulation logs -> end-to-end traces.
+
+Public API surface of the paper's contribution (§3):
+
+* events:    type-specific event streams per simulator type
+* parsers:   simulator-specific log-format parsers
+* pipeline:  producer -> actors -> SpanWeaver pipelines (+ online mode)
+* weaver:    span weaving + implicit context propagation
+* exporters: Jaeger / Chrome trace / OTLP / console
+* analysis:  breakdowns, critical path, clock + straggler diagnostics
+* script:    the ColumboScript composition API
+"""
+from .actors import (
+    FilterActor,
+    KindFilterActor,
+    MapActor,
+    RateMeterActor,
+    ReorderBufferActor,
+    SourceFilterActor,
+    SymbolizeActor,
+    TagActor,
+    TimeWindowActor,
+)
+from .analysis import (
+    clock_offset_series,
+    component_breakdown,
+    critical_path,
+    ntp_estimated_offsets,
+    ntp_path_asymmetry,
+    span_name_breakdown,
+    straggler_report,
+    trace_summary,
+)
+from .context import ContextRegistry
+from .events import Event, SimType, event_type_counts, event_types
+from .exporters import (
+    ChromeTraceExporter,
+    ConsoleExporter,
+    Exporter,
+    JaegerJSONExporter,
+    OTLPJSONExporter,
+)
+from .parsers import DeviceLogParser, HostLogParser, NetLogParser, parser_for
+from .pipeline import (
+    IterableProducer,
+    LineIterProducer,
+    LogFileProducer,
+    Pipeline,
+    make_fifo,
+)
+from .script import ColumboScript
+from .span import Span, SpanContext, Trace, assemble_traces, reset_ids
+from .weaver import (
+    DeviceSpanWeaver,
+    HostSpanWeaver,
+    NetSpanWeaver,
+    SpanWeaver,
+    finalize_spans,
+    span_type_counts,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,162 @@
+"""Predefined event-stream actors (Columbo §3.5 'building blocks').
+
+Actors filter, modify, or enrich the type-specific event stream before it
+reaches the SpanWeaver.  The paper's examples: filtering events, resolving a
+function address to its name (we resolve HLO op ids to fused-op names via a
+symbol table extracted from the compiled module).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .events import Event
+
+
+class FilterActor:
+    """Keep events satisfying a predicate."""
+
+    def __init__(self, pred: Callable[[Event], bool]):
+        self.pred = pred
+        self.dropped = 0
+
+    def process(self, ev: Event) -> Iterable[Event]:
+        if self.pred(ev):
+            return (ev,)
+        self.dropped += 1
+        return ()
+
+    def flush(self) -> Iterable[Event]:
+        return ()
+
+
+class KindFilterActor(FilterActor):
+    """Keep only the given event kinds (or drop them with ``exclude=True``)."""
+
+    def __init__(self, kinds: Sequence[str], exclude: bool = False):
+        kindset: Set[str] = set(kinds)
+        if exclude:
+            super().__init__(lambda e: e.kind not in kindset)
+        else:
+            super().__init__(lambda e: e.kind in kindset)
+
+
+class TimeWindowActor(FilterActor):
+    """Keep events with t0 <= ts < t1 (ps) — 'small subsection of the data'."""
+
+    def __init__(self, t0: int, t1: int):
+        super().__init__(lambda e: t0 <= e.ts < t1)
+
+
+class SourceFilterActor(FilterActor):
+    def __init__(self, sources: Sequence[str]):
+        srcset = set(sources)
+        super().__init__(lambda e: e.source in srcset)
+
+
+class MapActor:
+    """Apply fn(event) -> event | None | iterable of events."""
+
+    def __init__(self, fn: Callable[[Event], Any]):
+        self.fn = fn
+
+    def process(self, ev: Event) -> Iterable[Event]:
+        out = self.fn(ev)
+        if out is None:
+            return ()
+        if isinstance(out, Event):
+            return (out,)
+        return out
+
+    def flush(self) -> Iterable[Event]:
+        return ()
+
+
+class TagActor(MapActor):
+    """Attach constant attributes to every event (e.g. run id, scenario)."""
+
+    def __init__(self, **tags: Any):
+        def fn(ev: Event) -> Event:
+            ev.attrs.update(tags)
+            return ev
+
+        super().__init__(fn)
+
+
+class SymbolizeActor:
+    """Resolve ``op=<id>`` to a human name via a symbol table.
+
+    The paper's analogue is resolving a function's address to its name; ours
+    maps HLO op ids ("fusion.12") to their fused-op kind + einsum label, using
+    the symbol table the device simulator dumps alongside its log.
+    """
+
+    def __init__(self, symbols: Dict[str, str], attr: str = "op", out_attr: str = "op_name"):
+        self.symbols = symbols
+        self.attr = attr
+        self.out_attr = out_attr
+        self.misses = 0
+
+    def process(self, ev: Event) -> Iterable[Event]:
+        op = ev.attrs.get(self.attr)
+        if op is not None:
+            name = self.symbols.get(op)
+            if name is None:
+                self.misses += 1
+            else:
+                ev.attrs[self.out_attr] = name
+        return (ev,)
+
+    def flush(self) -> Iterable[Event]:
+        return ()
+
+
+class RateMeterActor:
+    """Pass-through that counts events/bytes — used by throughput benches."""
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.first_ts: Optional[int] = None
+        self.last_ts: Optional[int] = None
+
+    def process(self, ev: Event) -> Iterable[Event]:
+        self.count += 1
+        if self.first_ts is None:
+            self.first_ts = ev.ts
+        self.last_ts = ev.ts
+        return (ev,)
+
+    def flush(self) -> Iterable[Event]:
+        return ()
+
+
+class ReorderBufferActor:
+    """Re-sorts a nearly-sorted stream within a bounded window of ps.
+
+    Component simulators flush their logs in loose timestamp order around
+    boundaries; weavers assume monotone streams per source.  This actor
+    restores order with bounded memory (window must exceed the simulator's
+    max log reordering).
+    """
+
+    def __init__(self, window_ps: int = 1_000_000):
+        self.window = window_ps
+        self._buf: List[Tuple[int, int, Event]] = []
+        self._seq = 0
+
+    def process(self, ev: Event) -> Iterable[Event]:
+        import heapq
+
+        heapq.heappush(self._buf, (ev.ts, self._seq, ev))
+        self._seq += 1
+        out: List[Event] = []
+        while self._buf and self._buf[0][0] <= ev.ts - self.window:
+            out.append(heapq.heappop(self._buf)[2])
+        return out
+
+    def flush(self) -> Iterable[Event]:
+        import heapq
+
+        out: List[Event] = []
+        while self._buf:
+            out.append(heapq.heappop(self._buf)[2])
+        return out

@@ -1,0 +1,210 @@
+"""Trace analysis (Columbo §3.2 'Trace analysis', §5 case study figures).
+
+Operates on finalized spans (weaver output).  Provides the analyses used by
+the paper's evaluation plus the straggler/fault diagnostics the training
+framework exposes as telemetry:
+
+* per-component time breakdown of a trace (Fig. 6);
+* clock-offset series from host clock_read events vs. the simulation's
+  ground-truth global clock (Fig. 4) and NTP-estimated offsets (Fig. 5);
+* critical path through a trace;
+* straggler detection across per-chip/per-pod spans (k·MAD outliers).
+"""
+from __future__ import annotations
+
+import statistics
+from collections import defaultdict
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .span import Span, Trace, assemble_traces
+
+PS_PER_US = 1_000_000
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 analogue: where did the time go, per component?
+# ---------------------------------------------------------------------------
+
+
+def component_breakdown(trace: Trace, leaf_only: bool = True) -> Dict[str, float]:
+    """Map component -> µs of span time in this trace.
+
+    With ``leaf_only`` (default), a span only contributes the part of its
+    duration not covered by its children, so the breakdown sums to ~the
+    trace's critical-path-ish total instead of double counting.
+    """
+    out: Dict[str, float] = defaultdict(float)
+    children: Dict[int, List[Span]] = defaultdict(list)
+    for s in trace.spans:
+        if s.parent is not None:
+            children[s.parent.span_id].append(s)
+    for s in trace.spans:
+        dur = s.duration
+        if leaf_only and children.get(s.context.span_id):
+            covered = _union_len(
+                [(c.start, c.end) for c in children[s.context.span_id]], s.start, s.end
+            )
+            dur = max(0, dur - covered)
+        out[f"{s.sim_type}:{s.component}"] += dur / PS_PER_US
+    return dict(out)
+
+
+def span_name_breakdown(trace: Trace) -> Dict[str, float]:
+    out: Dict[str, float] = defaultdict(float)
+    for s in trace.spans:
+        out[s.name] += s.duration / PS_PER_US
+    return dict(out)
+
+
+def _union_len(ivals: List[Tuple[int, int]], lo: int, hi: int) -> int:
+    ivals = sorted((max(a, lo), min(b, hi)) for a, b in ivals)
+    total = 0
+    cur_a, cur_b = None, None
+    for a, b in ivals:
+        if b <= a:
+            continue
+        if cur_b is None or a > cur_b:
+            if cur_b is not None:
+                total += cur_b - cur_a
+            cur_a, cur_b = a, b
+        else:
+            cur_b = max(cur_b, b)
+    if cur_b is not None:
+        total += cur_b - cur_a
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Critical path
+# ---------------------------------------------------------------------------
+
+
+def critical_path(trace: Trace) -> List[Span]:
+    """Longest chain of child spans ending at the latest-finishing leaf.
+
+    Walks from each root to the descendant that determines its end time.
+    """
+    children: Dict[int, List[Span]] = defaultdict(list)
+    for s in trace.spans:
+        if s.parent is not None:
+            children[s.parent.span_id].append(s)
+
+    path: List[Span] = []
+    roots = trace.roots()
+    if not roots:
+        return path
+    cur: Optional[Span] = max(roots, key=lambda s: s.end)
+    seen = set()
+    while cur is not None and cur.context.span_id not in seen:
+        seen.add(cur.context.span_id)
+        path.append(cur)
+        kids = children.get(cur.context.span_id, [])
+        # the child on the critical path is the one finishing last
+        cur = max(kids, key=lambda s: s.end) if kids else None
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Clock analysis (Fig. 4 / Fig. 5)
+# ---------------------------------------------------------------------------
+
+
+def clock_offset_series(spans: Iterable[Span], host_a: str, host_b: str) -> List[Tuple[float, float]]:
+    """Measured host_a - host_b system-clock difference over global time.
+
+    clock_read events carry ``local`` (the host's system clock, ps) and are
+    timestamped with the simulation's ground-truth global clock; the sim's
+    global clock plays the paper's "true and precise global clock" role.
+    Returns [(global_time_us, offset_us)].
+    """
+    reads: Dict[str, List[Tuple[int, int]]] = {host_a: [], host_b: []}
+    for s in spans:
+        if s.sim_type != "host" or s.component not in reads:
+            continue
+        for ts, name, attrs in s.events:
+            if name == "clock_read" and "local" in attrs:
+                reads[s.component].append((ts, int(attrs["local"])))
+    for v in reads.values():
+        v.sort()
+    out: List[Tuple[float, float]] = []
+    bi = 0
+    b = reads[host_b]
+    for ts, local_a in reads[host_a]:
+        # nearest host_b read at (or before) the same global instant
+        while bi + 1 < len(b) and b[bi + 1][0] <= ts:
+            bi += 1
+        if not b:
+            break
+        ts_b, local_b = b[bi]
+        # correct for the sampling-instant difference using the global clock
+        offset = (local_a - ts) - (local_b - ts_b)
+        out.append((ts / PS_PER_US, offset / PS_PER_US))
+    return out
+
+
+def ntp_estimated_offsets(spans: Iterable[Span], host: str) -> List[Tuple[float, float]]:
+    """Chrony-style estimated offsets from NtpSync spans: ((t2-t1)+(t3-t4))/2."""
+    out = []
+    for s in spans:
+        if s.name == "NtpSync" and s.component == host:
+            a = s.attrs
+            if all(k in a for k in ("t1", "t2", "t3", "t4")):
+                off = ((a["t2"] - a["t1"]) + (a["t3"] - a["t4"])) / 2
+                out.append((s.start / PS_PER_US, off / PS_PER_US))
+    out.sort()
+    return out
+
+
+def ntp_path_asymmetry(spans: Iterable[Span], host: str) -> List[Tuple[float, float, float]]:
+    """(t_us, req_us, resp_us) one-way delays per NTP exchange — the quantity
+    whose asymmetry under background traffic explains Fig. 4/6."""
+    out = []
+    for s in spans:
+        if s.name == "NtpSync" and s.component == host:
+            a = s.attrs
+            if all(k in a for k in ("t1", "t2", "t3", "t4", "true_off")):
+                # with ground truth offset we can compute true one-way delays
+                req = (a["t2"] - a["true_off"]) - a["t1"]
+                resp = a["t4"] - (a["t3"] - a["true_off"])
+                out.append((s.start / PS_PER_US, req / PS_PER_US, resp / PS_PER_US))
+    out.sort()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Straggler / fault diagnostics (framework telemetry on top of Columbo)
+# ---------------------------------------------------------------------------
+
+
+def straggler_report(
+    spans: Iterable[Span],
+    span_name: str = "DeviceProgram",
+    k: float = 4.0,
+) -> Dict[str, Any]:
+    """Flag components whose span durations are > median + k * MAD."""
+    durs: Dict[str, List[int]] = defaultdict(list)
+    for s in spans:
+        if s.name == span_name:
+            durs[s.component].append(s.duration)
+    if not durs:
+        return {"stragglers": [], "median_us": 0.0, "per_component_us": {}}
+    per_comp = {c: statistics.median(v) / PS_PER_US for c, v in durs.items()}
+    med = statistics.median(per_comp.values())
+    mad = statistics.median(abs(v - med) for v in per_comp.values()) or max(med * 0.01, 1e-9)
+    stragglers = sorted(
+        (c for c, v in per_comp.items() if v > med + k * mad),
+        key=lambda c: -per_comp[c],
+    )
+    return {"stragglers": stragglers, "median_us": med, "per_component_us": per_comp}
+
+
+def trace_summary(spans: Sequence[Span]) -> Dict[str, Any]:
+    traces = assemble_traces(spans)
+    return {
+        "n_spans": len(spans),
+        "n_traces": len(traces),
+        "span_types": sorted({s.name for s in spans}),
+        "components": sorted({f"{s.sim_type}:{s.component}" for s in spans}),
+        "linked_spans": sum(1 for s in spans if s.links),
+        "parented_spans": sum(1 for s in spans if s.parent is not None),
+    }

@@ -1,0 +1,99 @@
+"""Implicit context propagation between SpanWeavers (Columbo §3.6).
+
+Simulators are *unmodified* (here: they only write their native logs), so no
+explicit trace context ever crosses a simulator boundary.  Instead, weavers
+exchange SpanContexts through shared queues keyed by *natural boundary
+identifiers* that appear in both simulators' logs — exactly the paper's
+mechanism (PCIe/Ethernet boundaries; we use dispatch queue ids, DMA ids,
+collective channel ids, and chunk ids).
+
+Implementation detail beyond the paper: ``poll`` can be non-blocking,
+blocking (online mode, §3.8), or *deferred* — a weaver may register a link
+to be resolved at end-of-weave, which makes sync single-threaded processing
+independent of pipeline execution order.  Deferred resolution is possible
+precisely because contexts are keyed by ids from the logs, not by arrival
+order.
+"""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
+
+from .span import Span, SpanContext
+
+Key = Tuple[Hashable, ...]
+
+
+class ContextRegistry:
+    """Shared, thread-safe context store for a set of SpanWeavers."""
+
+    def __init__(self) -> None:
+        self._store: Dict[Key, SpanContext] = {}
+        self._cv = threading.Condition()
+        self.pushes = 0
+        self.hits = 0
+        self.misses = 0
+        self._deferred: List[Tuple[Span, Key, str]] = []
+
+    # -- paper's push/poll ----------------------------------------------------
+
+    def push(self, key: Key, ctx: SpanContext) -> None:
+        with self._cv:
+            self._store[key] = ctx
+            self.pushes += 1
+            self._cv.notify_all()
+
+    def poll(self, key: Key, timeout: Optional[float] = None) -> Optional[SpanContext]:
+        """Non-blocking by default; blocking with timeout for online mode."""
+        with self._cv:
+            if timeout:
+                deadline_ok = self._cv.wait_for(lambda: key in self._store, timeout)
+                if not deadline_ok:
+                    self.misses += 1
+                    return None
+            ctx = self._store.get(key)
+            if ctx is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return ctx
+
+    # -- deferred resolution ----------------------------------------------------
+
+    def defer(self, span: Span, key: Key, mode: str = "parent") -> None:
+        """Ask for span.parent (mode='parent') or a span link (mode='link')
+        to be resolved to the context stored under ``key`` at finish time."""
+        with self._cv:
+            self._deferred.append((span, key, mode))
+
+    def resolve_deferred(self) -> Dict[str, int]:
+        """Resolve all deferred parent/link requests.  Returns stats."""
+        resolved = 0
+        orphans = 0
+        with self._cv:
+            for span, key, mode in self._deferred:
+                ctx = self._store.get(key)
+                if ctx is None:
+                    orphans += 1
+                    continue
+                if mode == "parent":
+                    span.parent = ctx
+                    # adopt the upstream trace id so the whole causal chain
+                    # lands in one trace
+                    span.context = SpanContext(ctx.trace_id, span.context.span_id)
+                else:
+                    span.add_link(ctx)
+                resolved += 1
+            self._deferred.clear()
+        self.hits += resolved
+        self.misses += orphans
+        return {"resolved": resolved, "orphans": orphans}
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "pushes": self.pushes,
+            "hits": self.hits,
+            "misses": self.misses,
+            "pending_deferred": len(self._deferred),
+        }

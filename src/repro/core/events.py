@@ -1,0 +1,341 @@
+"""Type-specific event streams (Columbo §3.4).
+
+Every component simulator in a modular full-system simulation logs in its own
+ad-hoc format.  Columbo standardizes *per simulator type*: for each type
+(HOST runtime, DEVICE/chip, NET/interconnect) there is a closed set of typed
+events that any simulator of that type must be parsed into.  Supporting a new
+simulator of an existing type only requires a new parser (core/parsers.py);
+the rest of the pipeline is unchanged.
+
+Times are integer picoseconds on the simulation's global virtual clock
+(gem5-style ticks).  Exporters convert to µs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, ClassVar, Dict, List, Optional, Type
+
+PS_PER_US = 1_000_000
+PS_PER_NS = 1_000
+PS_PER_S = 1_000_000_000_000
+
+
+class SimType(str, Enum):
+    """Simulator *types* (paper §3.4): the unit of event-stream standardization."""
+
+    HOST = "host"        # host runtime: input pipeline, dispatch, DMA, ckpt
+    DEVICE = "device"    # accelerator chip: op timeline, HBM, collectives
+    NET = "net"          # interconnect: ICI/DCN links, chunk transfers
+
+
+# ---------------------------------------------------------------------------
+# Event base + registry
+# ---------------------------------------------------------------------------
+
+_EVENT_REGISTRY: Dict[SimType, Dict[str, Type["Event"]]] = {t: {} for t in SimType}
+
+
+def register_event(cls: Type["Event"]) -> Type["Event"]:
+    """Class decorator: add an event type to its simulator type's registry."""
+    _EVENT_REGISTRY[cls.sim_type][cls.kind] = cls
+    return cls
+
+
+def event_types(sim_type: SimType) -> Dict[str, Type["Event"]]:
+    return dict(_EVENT_REGISTRY[sim_type])
+
+
+def event_type_counts() -> Dict[str, int]:
+    """Per-simulator-type event counts — the Table 1 inventory."""
+    return {t.value: len(_EVENT_REGISTRY[t]) for t in SimType}
+
+
+@dataclass(slots=True)
+class Event:
+    """Base event: a timestamped fact from one component simulator instance."""
+
+    sim_type: ClassVar[SimType]
+    kind: ClassVar[str]
+
+    ts: int                    # picoseconds, global virtual clock
+    source: str                # component instance id, e.g. "chip03", "host0", "ici.l7"
+    attrs: Dict[str, Any] = field(default_factory=dict)
+
+    def copy(self, **updates: Any) -> "Event":
+        return dataclasses.replace(self, **updates)
+
+    def __repr__(self) -> str:  # compact: useful when debugging weaves
+        return f"{type(self).__name__}(ts={self.ts}, src={self.source}, {self.attrs})"
+
+
+# ---------------------------------------------------------------------------
+# HOST runtime events (paper: host simulator had 16 event types)
+# ---------------------------------------------------------------------------
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class HostStepBegin(Event):
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "step_begin"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class HostStepEnd(Event):
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "step_end"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class DataLoadBegin(Event):
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "data_load_begin"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class DataLoadEnd(Event):
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "data_load_end"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class ProgramEnqueue(Event):
+    """Dispatch of a compiled program to a chip (the PCIe mmio-write analogue)."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "program_enqueue"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class ProgramRetire(Event):
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "program_retire"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class DmaH2DIssue(Event):
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "dma_h2d_issue"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class DmaH2DComplete(Event):
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "dma_h2d_complete"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class DmaD2HIssue(Event):
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "dma_d2h_issue"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class DmaD2HComplete(Event):
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "dma_d2h_complete"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class CkptBegin(Event):
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "ckpt_begin"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class CkptShardWrite(Event):
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "ckpt_shard_write"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class CkptEnd(Event):
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "ckpt_end"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class Heartbeat(Event):
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "heartbeat"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class ClockRead(Event):
+    """Host reads its local system clock (the NTP case study's raw material)."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "clock_read"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class NtpExchange(Event):
+    """One NTP request/response with t1..t4 timestamps (case study §5)."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "ntp_exchange"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class HostFailure(Event):
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "host_failure"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class HostRestart(Event):
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "host_restart"
+
+
+# ---------------------------------------------------------------------------
+# DEVICE (chip) events (paper: NIC simulator had 9; our chip sim is richer,
+# closer to the gem5 role: 12 types)
+# ---------------------------------------------------------------------------
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class ProgramStart(Event):
+    sim_type: ClassVar[SimType] = SimType.DEVICE
+    kind: ClassVar[str] = "program_start"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class ProgramEnd(Event):
+    sim_type: ClassVar[SimType] = SimType.DEVICE
+    kind: ClassVar[str] = "program_end"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class OpBegin(Event):
+    """A fused HLO op starts executing on the chip."""
+
+    sim_type: ClassVar[SimType] = SimType.DEVICE
+    kind: ClassVar[str] = "op_begin"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class OpEnd(Event):
+    sim_type: ClassVar[SimType] = SimType.DEVICE
+    kind: ClassVar[str] = "op_end"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class HbmRead(Event):
+    sim_type: ClassVar[SimType] = SimType.DEVICE
+    kind: ClassVar[str] = "hbm_read"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class HbmWrite(Event):
+    sim_type: ClassVar[SimType] = SimType.DEVICE
+    kind: ClassVar[str] = "hbm_write"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class MxuIssue(Event):
+    """Systolic-array busy interval attribution for a matmul-like op."""
+
+    sim_type: ClassVar[SimType] = SimType.DEVICE
+    kind: ClassVar[str] = "mxu_issue"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class CollectiveStart(Event):
+    sim_type: ClassVar[SimType] = SimType.DEVICE
+    kind: ClassVar[str] = "collective_start"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class CollectiveChunkTx(Event):
+    """Chip hands one chunk of a collective to the interconnect (the Ethernet-
+    style natural boundary between the DEVICE and NET simulators)."""
+
+    sim_type: ClassVar[SimType] = SimType.DEVICE
+    kind: ClassVar[str] = "collective_chunk_tx"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class CollectiveChunkRx(Event):
+    sim_type: ClassVar[SimType] = SimType.DEVICE
+    kind: ClassVar[str] = "collective_chunk_rx"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class CollectiveEnd(Event):
+    sim_type: ClassVar[SimType] = SimType.DEVICE
+    kind: ClassVar[str] = "collective_end"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class DeviceDmaRecv(Event):
+    """H2D DMA lands in HBM (the PCIe natural boundary, device side)."""
+
+    sim_type: ClassVar[SimType] = SimType.DEVICE
+    kind: ClassVar[str] = "dma_recv"
+
+
+# ---------------------------------------------------------------------------
+# NET (interconnect) events (paper: network simulator had 3 event types)
+# ---------------------------------------------------------------------------
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class ChunkEnqueue(Event):
+    """'+' in ns3 ascii traces: chunk enters a link's tx queue."""
+
+    sim_type: ClassVar[SimType] = SimType.NET
+    kind: ClassVar[str] = "chunk_enqueue"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class ChunkTx(Event):
+    """'-' in ns3 ascii traces: chunk leaves the tx queue onto the wire."""
+
+    sim_type: ClassVar[SimType] = SimType.NET
+    kind: ClassVar[str] = "chunk_tx"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class ChunkRx(Event):
+    """'r' in ns3 ascii traces: chunk received at the far end of a link."""
+
+    sim_type: ClassVar[SimType] = SimType.NET
+    kind: ClassVar[str] = "chunk_rx"
+
+
+ALL_SIM_TYPES = (SimType.HOST, SimType.DEVICE, SimType.NET)

@@ -1,0 +1,267 @@
+"""Exporters (Columbo §3.7): convert Columbo's internal span representation
+into the formats of existing distributed-tracing tools.
+
+* ``JaegerJSONExporter``  — Jaeger UI's JSON (load via "Upload" in the UI).
+* ``ChromeTraceExporter`` — Chrome trace-event format; loads in Perfetto /
+                            chrome://tracing; pid=component, tid=span lane.
+* ``OTLPJSONExporter``    — OpenTelemetry OTLP/JSON resourceSpans.
+* ``ConsoleExporter``     — human-readable tree (useful in tests/examples).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Any, Dict, IO, Iterable, List, Optional
+
+from .span import Span, assemble_traces
+
+PS_PER_US = 1_000_000
+
+
+class Exporter:
+    def export(self, spans: Iterable[Span]) -> None:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+
+
+class JaegerJSONExporter(Exporter):
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.payload: Optional[Dict[str, Any]] = None
+
+    def export(self, spans: Iterable[Span]) -> None:
+        spans = list(spans)
+        procs: Dict[str, Dict[str, Any]] = {}
+        proc_ids: Dict[str, str] = {}
+
+        def proc_id(s: Span) -> str:
+            key = f"{s.sim_type}:{s.component}"
+            if key not in proc_ids:
+                pid = f"p{len(proc_ids) + 1}"
+                proc_ids[key] = pid
+                procs[pid] = {
+                    "serviceName": key,
+                    "tags": [{"key": "sim_type", "type": "string", "value": s.sim_type}],
+                }
+            return proc_ids[key]
+
+        data = []
+        for tid, trace in sorted(assemble_traces(spans).items()):
+            jspans = []
+            for s in trace.spans:
+                refs = []
+                if s.parent is not None:
+                    refs.append(
+                        {
+                            "refType": "CHILD_OF",
+                            "traceID": f"{s.parent.trace_id:032x}",
+                            "spanID": f"{s.parent.span_id:016x}",
+                        }
+                    )
+                for l in s.links:
+                    refs.append(
+                        {
+                            "refType": "FOLLOWS_FROM",
+                            "traceID": f"{l.trace_id:032x}",
+                            "spanID": f"{l.span_id:016x}",
+                        }
+                    )
+                jspans.append(
+                    {
+                        "traceID": s.context.hex_trace(),
+                        "spanID": s.context.hex_span(),
+                        "operationName": s.name,
+                        "references": refs,
+                        "startTime": s.start / PS_PER_US,  # µs
+                        "duration": max(s.duration, 1) / PS_PER_US,
+                        "tags": [
+                            {"key": k, "type": "string", "value": str(v)}
+                            for k, v in s.attrs.items()
+                        ],
+                        "logs": [
+                            {
+                                "timestamp": ts / PS_PER_US,
+                                "fields": [{"key": "event", "type": "string", "value": name}]
+                                + [
+                                    {"key": k, "type": "string", "value": str(v)}
+                                    for k, v in attrs.items()
+                                ],
+                            }
+                            for ts, name, attrs in s.events
+                        ],
+                        "processID": proc_id(s),
+                    }
+                )
+            data.append({"traceID": f"{tid:032x}", "spans": jspans, "processes": procs})
+        self.payload = {"data": data}
+        if self.path:
+            with open(self.path, "w") as f:
+                json.dump(self.payload, f)
+
+
+# ---------------------------------------------------------------------------
+
+
+class ChromeTraceExporter(Exporter):
+    """'X' complete events; pid = component, tid = nesting lane."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.payload: Optional[Dict[str, Any]] = None
+
+    def export(self, spans: Iterable[Span]) -> None:
+        events: List[Dict[str, Any]] = []
+        pids: Dict[str, int] = {}
+        for s in spans:
+            comp = f"{s.sim_type}:{s.component}"
+            pid = pids.setdefault(comp, len(pids) + 1)
+            events.append(
+                {
+                    "name": s.name,
+                    "ph": "X",
+                    "ts": s.start / PS_PER_US,
+                    "dur": max(s.duration, 1) / PS_PER_US,
+                    "pid": pid,
+                    "tid": 1,
+                    "args": {
+                        **{k: str(v) for k, v in s.attrs.items()},
+                        "trace_id": s.context.hex_trace(),
+                        "span_id": s.context.hex_span(),
+                    },
+                }
+            )
+            for ts, name, attrs in s.events:
+                events.append(
+                    {
+                        "name": name,
+                        "ph": "i",
+                        "ts": ts / PS_PER_US,
+                        "pid": pid,
+                        "tid": 1,
+                        "s": "t",
+                        "args": {k: str(v) for k, v in attrs.items()},
+                    }
+                )
+        meta = [
+            {"name": "process_name", "ph": "M", "pid": pid, "args": {"name": comp}}
+            for comp, pid in pids.items()
+        ]
+        self.payload = {"traceEvents": meta + events, "displayTimeUnit": "ms"}
+        if self.path:
+            with open(self.path, "w") as f:
+                json.dump(self.payload, f)
+
+
+# ---------------------------------------------------------------------------
+
+
+class OTLPJSONExporter(Exporter):
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.payload: Optional[Dict[str, Any]] = None
+
+    def export(self, spans: Iterable[Span]) -> None:
+        by_comp: Dict[str, List[Span]] = {}
+        for s in spans:
+            by_comp.setdefault(f"{s.sim_type}:{s.component}", []).append(s)
+        resource_spans = []
+        for comp, ss in sorted(by_comp.items()):
+            resource_spans.append(
+                {
+                    "resource": {
+                        "attributes": [
+                            {"key": "service.name", "value": {"stringValue": comp}}
+                        ]
+                    },
+                    "scopeSpans": [
+                        {
+                            "scope": {"name": "columbo"},
+                            "spans": [
+                                {
+                                    "traceId": s.context.hex_trace(),
+                                    "spanId": s.context.hex_span(),
+                                    **(
+                                        {"parentSpanId": f"{s.parent.span_id:016x}"}
+                                        if s.parent
+                                        else {}
+                                    ),
+                                    "name": s.name,
+                                    "kind": 1,
+                                    # OTLP wants ns since epoch; ps -> ns
+                                    "startTimeUnixNano": s.start // 1000,
+                                    "endTimeUnixNano": max(s.end, s.start + 1000) // 1000,
+                                    "attributes": [
+                                        {"key": k, "value": {"stringValue": str(v)}}
+                                        for k, v in s.attrs.items()
+                                    ],
+                                    "events": [
+                                        {
+                                            "timeUnixNano": ts // 1000,
+                                            "name": name,
+                                            "attributes": [
+                                                {
+                                                    "key": k,
+                                                    "value": {"stringValue": str(v)},
+                                                }
+                                                for k, v in attrs.items()
+                                            ],
+                                        }
+                                        for ts, name, attrs in s.events
+                                    ],
+                                    "links": [
+                                        {
+                                            "traceId": f"{l.trace_id:032x}",
+                                            "spanId": f"{l.span_id:016x}",
+                                        }
+                                        for l in s.links
+                                    ],
+                                }
+                                for s in ss
+                            ],
+                        }
+                    ],
+                }
+            )
+        self.payload = {"resourceSpans": resource_spans}
+        if self.path:
+            with open(self.path, "w") as f:
+                json.dump(self.payload, f)
+
+
+# ---------------------------------------------------------------------------
+
+
+class ConsoleExporter(Exporter):
+    def __init__(self, stream: Optional[IO[str]] = None, max_spans: int = 200):
+        self.stream = stream or sys.stdout
+        self.max_spans = max_spans
+
+    def export(self, spans: Iterable[Span]) -> None:
+        w = self.stream.write
+        printed = 0
+        for tid, trace in sorted(assemble_traces(list(spans)).items()):
+            w(f"trace {tid} [{(trace.end - trace.start) / PS_PER_US:.3f} us, "
+              f"{len(trace.spans)} spans]\n")
+
+            def _tree(span: Span, depth: int) -> None:
+                nonlocal printed
+                if printed >= self.max_spans:
+                    return
+                printed += 1
+                w(
+                    "  " * depth
+                    + f"- {span.name} [{span.component}] "
+                    + f"{span.start / PS_PER_US:.3f}+{span.duration / PS_PER_US:.3f}us"
+                    + (f" links={len(span.links)}" if span.links else "")
+                    + "\n"
+                )
+                for c in sorted(trace.children_of(span), key=lambda s: s.start):
+                    _tree(c, depth + 1)
+
+            for root in sorted(trace.roots(), key=lambda s: s.start):
+                _tree(root, 1)
+            if printed >= self.max_spans:
+                w("  ... (truncated)\n")
+                break

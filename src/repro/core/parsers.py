@@ -1,0 +1,175 @@
+"""Simulator-specific log parsers (Columbo §3.4, 'producers' input side).
+
+Each component simulator writes an *ad-hoc text format* (this is the premise
+of the paper: there is no standardization across simulators).  The three
+formats below deliberately mimic the flavour of the simulators the paper
+used, and the parsers turn each into the standardized type-specific event
+stream of core/events.py:
+
+  device sim  — gem5-flavoured:
+      ``<tick>: system.pod0.chip03: OpBegin: op=fusion.12 flops=1024 ...``
+  host sim    — SimBricks nicbm/i40e-flavoured:
+      ``main_time = <tick>: hostsim-host0: ev=data_load_begin step=3 ...``
+  net sim     — ns3 ascii-trace-flavoured ('+' enqueue, '-' tx, 'r' rx):
+      ``+ 0.001234567890 /IciList/pod0/l3 size=65536 chunk=c42 ...``
+
+A parser is a callable ``line -> Optional[Event]`` plus a ``sim_type``.
+Unparseable lines return None (simulators interleave free-form debug text —
+also true of gem5/ns3).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from .events import (
+    ChunkEnqueue,
+    ChunkRx,
+    ChunkTx,
+    Event,
+    SimType,
+    event_types,
+)
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _coerce(v: str) -> Any:
+    """Fast-ish str -> int/float/str coercion."""
+    try:
+        return int(v)
+    except ValueError:
+        try:
+            return float(v)
+        except ValueError:
+            return v
+
+
+def _parse_kv(parts: list) -> Dict[str, Any]:
+    attrs: Dict[str, Any] = {}
+    for p in parts:
+        eq = p.find("=")
+        if eq > 0:
+            attrs[p[:eq]] = _coerce(p[eq + 1 :])
+    return attrs
+
+
+class LogParser:
+    """Base: callable line parser for one simulator's log format."""
+
+    sim_type: SimType
+
+    def __call__(self, line: str) -> Optional[Event]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# DEVICE: gem5-flavoured
+# ---------------------------------------------------------------------------
+
+# CamelCase class-name -> registered snake_case kind.  The device simulator
+# logs bare gem5-ish names ("DmaRecv"), so strip our "Device" prefix aliases.
+_DEVICE_NAME_TO_CLS = {}
+for _kind, _cls in event_types(SimType.DEVICE).items():
+    _DEVICE_NAME_TO_CLS[_cls.__name__] = _cls
+    if _cls.__name__.startswith("Device"):
+        _DEVICE_NAME_TO_CLS[_cls.__name__[6:]] = _cls
+
+
+class DeviceLogParser(LogParser):
+    """``<tick>: system.<pod>.<chip>: <EventClassName>: k=v k=v ...``"""
+
+    sim_type = SimType.DEVICE
+
+    def __call__(self, line: str) -> Optional[Event]:
+        # fast path: must start with a digit and contain ": system."
+        if not line or not line[0].isdigit():
+            return None
+        try:
+            ts_s, rest = line.split(": ", 1)
+            src_s, rest = rest.split(": ", 1)
+        except ValueError:
+            return None
+        if not src_s.startswith("system."):
+            return None
+        if ": " in rest:
+            name, kv = rest.split(": ", 1)
+            parts = kv.split()
+        else:
+            name, parts = rest.strip(), []
+        cls = _DEVICE_NAME_TO_CLS.get(name)
+        if cls is None:
+            return None
+        # source: "system.pod0.chip03" -> "pod0.chip03"
+        return cls(ts=int(ts_s), source=src_s[7:], attrs=_parse_kv(parts))
+
+
+# ---------------------------------------------------------------------------
+# HOST: SimBricks nicbm-flavoured
+# ---------------------------------------------------------------------------
+
+_HOST_KIND_TO_CLS = event_types(SimType.HOST)
+
+
+class HostLogParser(LogParser):
+    """``main_time = <tick>: hostsim-<host>: ev=<kind> k=v ...``"""
+
+    sim_type = SimType.HOST
+
+    def __call__(self, line: str) -> Optional[Event]:
+        if not line.startswith("main_time = "):
+            return None
+        try:
+            ts_s, rest = line[12:].split(": ", 1)
+            src_s, kv = rest.split(": ", 1)
+        except ValueError:
+            return None
+        if not src_s.startswith("hostsim-"):
+            return None
+        attrs = _parse_kv(kv.split())
+        kind = attrs.pop("ev", None)
+        cls = _HOST_KIND_TO_CLS.get(kind)
+        if cls is None:
+            return None
+        return cls(ts=int(ts_s), source=src_s[8:], attrs=attrs)
+
+
+# ---------------------------------------------------------------------------
+# NET: ns3 ascii-trace-flavoured
+# ---------------------------------------------------------------------------
+
+_NET_MARK_TO_CLS = {"+": ChunkEnqueue, "-": ChunkTx, "r": ChunkRx}
+
+
+class NetLogParser(LogParser):
+    """``<mark> <time_s> <link_path> k=v k=v ...`` with mark in {+,-,r}."""
+
+    sim_type = SimType.NET
+
+    def __call__(self, line: str) -> Optional[Event]:
+        if not line or line[0] not in "+-r" or len(line) < 3 or line[1] != " ":
+            return None
+        parts = line.split()
+        if len(parts) < 3:
+            return None
+        cls = _NET_MARK_TO_CLS[parts[0]]
+        try:
+            ts = int(round(float(parts[1]) * 1_000_000_000_000))  # s -> ps
+        except ValueError:
+            return None
+        link = parts[2]
+        if link.startswith("/"):
+            link = link[1:].replace("/", ".")
+        return cls(ts=ts, source=link, attrs=_parse_kv(parts[3:]))
+
+
+PARSERS = {
+    SimType.DEVICE: DeviceLogParser,
+    SimType.HOST: HostLogParser,
+    SimType.NET: NetLogParser,
+}
+
+
+def parser_for(sim_type: SimType) -> LogParser:
+    return PARSERS[sim_type]()

@@ -1,0 +1,211 @@
+"""Simulator-specific pipelines (Columbo §3.5).
+
+A pipeline = Producer -> [Actor...] -> Consumer.
+
+* Producers read+parse one simulator's log (file, named pipe, or an in-memory
+  iterable) into the type-specific event stream.
+* Actors are optional stream operators (filter / modify / enrich).
+* The Consumer is a SpanWeaver (core/weaver.py) that coalesces events into
+  spans and performs context propagation.
+
+Stages communicate through bounded message queues (paper: "message queues
+that may be distributed over the network").  Two execution modes:
+
+* ``run_sync()``   — single-threaded generator pull; fastest, used by
+                     benchmarks and most tests.
+* ``start()/join()`` — one thread per pipeline, queue-decoupled from the
+                     producer; this is what online mode (§3.8, named pipes)
+                     uses so Columbo runs *in parallel* with the simulation.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+from typing import Callable, Iterable, Iterator, List, Optional, Sequence, Union
+
+from .events import Event
+from .parsers import LogParser
+
+_SENTINEL = object()
+
+
+# ---------------------------------------------------------------------------
+# Producers
+# ---------------------------------------------------------------------------
+
+
+class Producer:
+    """Yields a type-specific event stream."""
+
+    def events(self) -> Iterator[Event]:
+        raise NotImplementedError
+
+
+class LogFileProducer(Producer):
+    """Reads a simulator log file *or named pipe* line by line and parses it.
+
+    Works unchanged for §3.8 online mode: opening a FIFO blocks until the
+    simulator opens the write end, and ``readline`` streams until EOF —
+    no persistence of the log is ever required.
+    """
+
+    def __init__(self, path: Union[str, os.PathLike], parser: LogParser):
+        self.path = os.fspath(path)
+        self.parser = parser
+        self.lines_read = 0
+        self.events_emitted = 0
+
+    def events(self) -> Iterator[Event]:
+        parse = self.parser
+        with open(self.path, "r", buffering=1 << 20) as f:
+            for line in f:
+                self.lines_read += 1
+                ev = parse(line.rstrip("\n"))
+                if ev is not None:
+                    self.events_emitted += 1
+                    yield ev
+
+
+class IterableProducer(Producer):
+    """Wraps an in-memory iterable of events (tests, replay)."""
+
+    def __init__(self, items: Iterable[Event]):
+        self._items = items
+
+    def events(self) -> Iterator[Event]:
+        yield from self._items
+
+
+class LineIterProducer(Producer):
+    """Parses an iterable of raw lines (e.g. a socket, a decompressor)."""
+
+    def __init__(self, lines: Iterable[str], parser: LogParser):
+        self.lines = lines
+        self.parser = parser
+
+    def events(self) -> Iterator[Event]:
+        parse = self.parser
+        for line in self.lines:
+            ev = parse(line)
+            if ev is not None:
+                yield ev
+
+
+# ---------------------------------------------------------------------------
+# Actors
+# ---------------------------------------------------------------------------
+
+
+class Actor:
+    """Stream operator.  ``process`` returns an iterable of events (possibly
+    empty) for each input event; ``flush`` may emit trailing events."""
+
+    def process(self, ev: Event) -> Iterable[Event]:
+        raise NotImplementedError
+
+    def flush(self) -> Iterable[Event]:
+        return ()
+
+
+class Consumer:
+    """Terminal stage (SpanWeaver implements this)."""
+
+    def consume(self, ev: Event) -> None:
+        raise NotImplementedError
+
+    def on_finish(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Pipeline
+# ---------------------------------------------------------------------------
+
+
+class Pipeline:
+    def __init__(
+        self,
+        producer: Producer,
+        actors: Sequence[Actor] = (),
+        consumer: Optional[Consumer] = None,
+        name: str = "",
+        queue_size: int = 65536,
+    ):
+        self.producer = producer
+        self.actors = list(actors)
+        self.consumer = consumer
+        self.name = name or f"pipeline-{id(self):x}"
+        self.queue_size = queue_size
+        self.events_in = 0
+        self.events_out = 0
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- shared stage logic -------------------------------------------------
+
+    def _apply_actors(self, ev: Event) -> Iterator[Event]:
+        stack = [ev]
+        for actor in self.actors:
+            nxt: List[Event] = []
+            for e in stack:
+                nxt.extend(actor.process(e))
+            stack = nxt
+            if not stack:
+                return iter(())
+        return iter(stack)
+
+    def _flush_actors(self) -> Iterator[Event]:
+        # flush each actor, feeding its trailing events through later actors
+        for i, actor in enumerate(self.actors):
+            for ev in actor.flush():
+                stack = [ev]
+                for later in self.actors[i + 1 :]:
+                    nxt: List[Event] = []
+                    for e in stack:
+                        nxt.extend(later.process(e))
+                    stack = nxt
+                yield from stack
+
+    # -- sync mode ------------------------------------------------------------
+
+    def run_sync(self) -> None:
+        consume = self.consumer.consume if self.consumer else (lambda e: None)
+        for ev in self.producer.events():
+            self.events_in += 1
+            for out in self._apply_actors(ev):
+                self.events_out += 1
+                consume(out)
+        for out in self._flush_actors():
+            self.events_out += 1
+            consume(out)
+        if self.consumer:
+            self.consumer.on_finish()
+
+    # -- threaded mode (online analysis, §3.8) --------------------------------
+
+    def start(self) -> "Pipeline":
+        def _run() -> None:
+            try:
+                self.run_sync()
+            except BaseException as e:  # surfaced in join()
+                self._error = e
+
+        self._thread = threading.Thread(target=_run, name=self.name, daemon=True)
+        self._thread.start()
+        return self
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        assert self._thread is not None, "start() first"
+        self._thread.join(timeout)
+        if self._error is not None:
+            raise self._error
+
+
+def make_fifo(path: Union[str, os.PathLike]) -> str:
+    """Create a named pipe for §3.8 online mode (idempotent)."""
+    path = os.fspath(path)
+    if os.path.exists(path):
+        os.remove(path)
+    os.mkfifo(path)
+    return path

@@ -1,0 +1,139 @@
+"""Columbo Scripts (§4): user-composed trace-creation programs.
+
+The paper's Columbo Scripts are small C++ programs composing simulator-
+specific pipelines from predefined building blocks (parsers, actors,
+SpanWeavers, exporters).  Here the same composition is a small Python
+program against :class:`ColumboScript`:
+
+    script = ColumboScript()
+    script.add_log(dev_log_path, SimType.DEVICE, actors=[SymbolizeActor(syms)])
+    script.add_log(host_log_path, SimType.HOST)
+    script.add_log(net_log_path, SimType.NET)
+    spans = script.run()                       # sync
+    script.export(JaegerJSONExporter("trace.json"))
+
+Online mode (§3.8): pass ``online=True`` paths that are named pipes and call
+``run(threaded=True)`` while the simulation is writing.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Union
+
+from .context import ContextRegistry
+from .events import Event, SimType
+from .exporters import Exporter
+from .parsers import parser_for
+from .pipeline import Actor, IterableProducer, LogFileProducer, Pipeline, Producer
+from .span import Span
+from .weaver import (
+    DeviceSpanWeaver,
+    HostSpanWeaver,
+    NetSpanWeaver,
+    SpanWeaver,
+    WEAVERS,
+    finalize_spans,
+)
+
+# Sync execution must honor causal pushes before polls where possible;
+# deferred resolution covers the rest, but running host -> device -> net
+# maximizes eager hits.
+_SYNC_ORDER = {SimType.HOST: 0, SimType.DEVICE: 1, SimType.NET: 2}
+
+
+class ColumboScript:
+    def __init__(self, poll_timeout: float = 0.0) -> None:
+        self.registry = ContextRegistry()
+        self.pipelines: List[Pipeline] = []
+        self.weavers: List[SpanWeaver] = []
+        self.poll_timeout = poll_timeout
+        self._spans: Optional[List[Span]] = None
+        self.finalize_stats: Dict[str, int] = {}
+
+    # -- composition ------------------------------------------------------------
+
+    def add_log(
+        self,
+        path: Union[str, os.PathLike],
+        sim_type: SimType,
+        actors: Sequence[Actor] = (),
+        weaver: Optional[SpanWeaver] = None,
+        **weaver_kwargs,
+    ) -> Pipeline:
+        producer = LogFileProducer(path, parser_for(sim_type))
+        return self.add_pipeline(producer, sim_type, actors, weaver, **weaver_kwargs)
+
+    def add_events(
+        self,
+        events: Iterable[Event],
+        sim_type: SimType,
+        actors: Sequence[Actor] = (),
+        weaver: Optional[SpanWeaver] = None,
+        **weaver_kwargs,
+    ) -> Pipeline:
+        return self.add_pipeline(IterableProducer(events), sim_type, actors, weaver, **weaver_kwargs)
+
+    def add_pipeline(
+        self,
+        producer: Producer,
+        sim_type: SimType,
+        actors: Sequence[Actor] = (),
+        weaver: Optional[SpanWeaver] = None,
+        **weaver_kwargs,
+    ) -> Pipeline:
+        if weaver is None:
+            weaver = WEAVERS[sim_type](
+                self.registry, poll_timeout=self.poll_timeout, **weaver_kwargs
+            )
+        self.weavers.append(weaver)
+        p = Pipeline(producer, actors, weaver, name=f"{sim_type.value}-{len(self.pipelines)}")
+        # annotate for sync ordering
+        p.sim_type = sim_type  # type: ignore[attr-defined]
+        self.pipelines.append(p)
+        return p
+
+    # -- execution ---------------------------------------------------------------
+
+    def run(self, threaded: bool = False) -> List[Span]:
+        if threaded:
+            # online mode: pipelines run in parallel with the simulation; FIFO
+            # producers block until writers appear.  Weavers use blocking polls.
+            for p in self.pipelines:
+                p.start()
+            for p in self.pipelines:
+                p.join()
+        else:
+            for p in sorted(self.pipelines, key=lambda p: _SYNC_ORDER[p.sim_type]):
+                p.run_sync()
+        spans: List[Span] = []
+        for w in self.weavers:
+            spans.extend(w.spans)
+        self.finalize_stats = finalize_spans(spans, self.registry)
+        spans.sort(key=lambda s: (s.context.trace_id, s.start, s.context.span_id))
+        self._spans = spans
+        return spans
+
+    @property
+    def spans(self) -> List[Span]:
+        assert self._spans is not None, "run() first"
+        return self._spans
+
+    def export(self, *exporters: Exporter) -> None:
+        for e in exporters:
+            e.export(self.spans)
+
+    # -- stats --------------------------------------------------------------------
+
+    def stats(self) -> Dict[str, object]:
+        return {
+            "pipelines": {
+                p.name: {"events_in": p.events_in, "events_out": p.events_out}
+                for p in self.pipelines
+            },
+            "context": self.registry.stats(),
+            "finalize": self.finalize_stats,
+            "spans": sum(len(w.spans) for w in self.weavers),
+            "span_types": {
+                w.sim_type.value: dict(w.span_type_counts) for w in self.weavers
+            },
+        }

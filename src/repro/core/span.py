@@ -1,0 +1,134 @@
+"""Span / trace model (Columbo's internal representation, §3.6–3.7).
+
+Deliberately close to OpenTelemetry semantics so exporters are thin:
+a Span has a SpanContext (trace_id, span_id), an optional parent, zero or
+more *links* (causal, non-tree edges — used across simulator boundaries),
+timestamps in picoseconds, attributes, and point-in-time span events.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+_span_counter = itertools.count(1)
+_trace_counter = itertools.count(1)
+
+
+def new_span_id() -> int:
+    return next(_span_counter)
+
+
+def new_trace_id() -> int:
+    return next(_trace_counter)
+
+
+def reset_ids() -> None:
+    """Test hook: deterministic ids."""
+    global _span_counter, _trace_counter
+    _span_counter = itertools.count(1)
+    _trace_counter = itertools.count(1)
+
+
+@dataclass(frozen=True, slots=True)
+class SpanContext:
+    """What gets propagated between SpanWeavers (paper §3.6)."""
+
+    trace_id: int
+    span_id: int
+
+    def hex_trace(self) -> str:
+        return f"{self.trace_id:032x}"
+
+    def hex_span(self) -> str:
+        return f"{self.span_id:016x}"
+
+
+@dataclass(slots=True)
+class Span:
+    name: str
+    start: int                       # ps
+    end: int                         # ps
+    context: SpanContext
+    parent: Optional[SpanContext] = None
+    links: List[SpanContext] = field(default_factory=list)
+    component: str = ""              # component instance ("chip03", "host0", ...)
+    sim_type: str = ""               # host | device | net
+    attrs: Dict[str, Any] = field(default_factory=dict)
+    events: List[Tuple[int, str, Dict[str, Any]]] = field(default_factory=list)
+
+    @property
+    def duration(self) -> int:
+        return self.end - self.start
+
+    def add_event(self, ts: int, name: str, attrs: Optional[Dict[str, Any]] = None) -> None:
+        self.events.append((ts, name, attrs or {}))
+
+    def add_link(self, ctx: SpanContext) -> None:
+        self.links.append(ctx)
+
+
+class SpanBuilder:
+    """Mutable under-construction span held by a SpanWeaver."""
+
+    __slots__ = ("span",)
+
+    def __init__(
+        self,
+        name: str,
+        start: int,
+        trace_id: int,
+        parent: Optional[SpanContext] = None,
+        component: str = "",
+        sim_type: str = "",
+        attrs: Optional[Dict[str, Any]] = None,
+    ) -> None:
+        self.span = Span(
+            name=name,
+            start=start,
+            end=start,
+            context=SpanContext(trace_id=trace_id, span_id=new_span_id()),
+            parent=parent,
+            component=component,
+            sim_type=sim_type,
+            attrs=dict(attrs or {}),
+        )
+
+    @property
+    def context(self) -> SpanContext:
+        return self.span.context
+
+    def finish(self, end: int) -> Span:
+        self.span.end = max(end, self.span.start)
+        return self.span
+
+
+@dataclass
+class Trace:
+    """Assembled view over spans sharing one trace_id."""
+
+    trace_id: int
+    spans: List[Span] = field(default_factory=list)
+
+    def roots(self) -> List[Span]:
+        ids = {s.context.span_id for s in self.spans}
+        return [s for s in self.spans if s.parent is None or s.parent.span_id not in ids]
+
+    def children_of(self, span: Span) -> List[Span]:
+        sid = span.context.span_id
+        return [s for s in self.spans if s.parent is not None and s.parent.span_id == sid]
+
+    @property
+    def start(self) -> int:
+        return min(s.start for s in self.spans)
+
+    @property
+    def end(self) -> int:
+        return max(s.end for s in self.spans)
+
+
+def assemble_traces(spans: Iterable[Span]) -> Dict[int, Trace]:
+    traces: Dict[int, Trace] = {}
+    for s in spans:
+        traces.setdefault(s.context.trace_id, Trace(s.context.trace_id)).spans.append(s)
+    return traces

@@ -1,0 +1,479 @@
+"""SpanWeavers (Columbo §3.5 consumers + §3.6 context propagation).
+
+A SpanWeaver is the terminal stage of one simulator-specific pipeline.  It
+coalesces the type-specific event stream into spans (units of work in that
+simulator) and propagates trace context:
+
+* **intra-weaver** — e.g. a host Step span parents the DataLoad / Dispatch /
+  Checkpoint spans woven from the same stream;
+* **inter-weaver** — across natural boundaries that exist in the real system
+  (host→chip dispatch ≙ PCIe, chip→ICI chunk handoff ≙ Ethernet), via the
+  shared ContextRegistry keyed by ids present in both simulators' logs
+  (dispatch ids, DMA ids, collective ids, chunk ids).
+
+Weavers poll eagerly and fall back to *deferred* resolution (resolved at
+script finish), which makes weaving independent of pipeline scheduling —
+a correctness improvement over strictly-ordered polling that the paper lists
+under "Correct Context Propagation" challenges (§6).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, ClassVar, Dict, List, Optional, Tuple
+
+from .context import ContextRegistry, Key
+from .events import Event, SimType
+from .pipeline import Consumer
+from .span import Span, SpanBuilder, SpanContext, new_trace_id
+
+# ---------------------------------------------------------------------------
+
+
+class SpanWeaver(Consumer):
+    sim_type: ClassVar[SimType]
+    span_types: ClassVar[Tuple[str, ...]] = ()
+
+    def __init__(
+        self,
+        registry: ContextRegistry,
+        poll_timeout: float = 0.0,
+    ) -> None:
+        self.registry = registry
+        self.poll_timeout = poll_timeout
+        self.spans: List[Span] = []
+        self.span_type_counts: Dict[str, int] = {}
+        self.unhandled_events = 0
+        self._handlers: Dict[str, Callable[[Event], None]] = {}
+        for kind in type(self)._kinds():
+            self._handlers[kind] = getattr(self, "_on_" + kind)
+
+    @classmethod
+    def _kinds(cls) -> List[str]:
+        return [m[4:] for m in dir(cls) if m.startswith("_on_")]
+
+    # -- pipeline Consumer interface ------------------------------------------
+
+    def consume(self, ev: Event) -> None:
+        h = self._handlers.get(ev.kind)
+        if h is None:
+            self.unhandled_events += 1
+            return
+        h(ev)
+
+    def on_finish(self) -> None:
+        pass
+
+    # -- helpers ---------------------------------------------------------------
+
+    def emit(self, span: Span) -> None:
+        self.spans.append(span)
+        self.span_type_counts[span.name] = self.span_type_counts.get(span.name, 0) + 1
+
+    def _begin(
+        self,
+        name: str,
+        ev: Event,
+        trace_id: int,
+        parent: Optional[SpanContext],
+        attrs: Optional[Dict[str, Any]] = None,
+    ) -> SpanBuilder:
+        return SpanBuilder(
+            name=name,
+            start=ev.ts,
+            trace_id=trace_id,
+            parent=parent,
+            component=ev.source,
+            sim_type=self.sim_type.value,
+            attrs=attrs,
+        )
+
+    def _parent_or_defer(self, builder: SpanBuilder, key: Key) -> None:
+        """Eager poll; if the upstream context is not yet in the registry,
+        defer resolution to script-finish (order-independent weaving)."""
+        ctx = self.registry.poll(key, timeout=self.poll_timeout or None)
+        if ctx is not None:
+            builder.span.parent = ctx
+            builder.span.context = SpanContext(ctx.trace_id, builder.span.context.span_id)
+        else:
+            self.registry.defer(builder.span, key, mode="parent")
+
+
+# ---------------------------------------------------------------------------
+# HOST runtime weaver — 6 span types (paper Table 1: host = 6)
+# ---------------------------------------------------------------------------
+
+
+class HostSpanWeaver(SpanWeaver):
+    sim_type = SimType.HOST
+    span_types = (
+        "HostStep", "DataLoad", "H2DTransfer", "Dispatch", "Checkpoint",
+        "NtpSync", "HostTimeline",
+    )
+
+    def __init__(self, registry: ContextRegistry, poll_timeout: float = 0.0) -> None:
+        super().__init__(registry, poll_timeout)
+        self._step: Dict[str, SpanBuilder] = {}       # host -> open HostStep
+        self._load: Dict[str, SpanBuilder] = {}
+        self._h2d: Dict[Any, SpanBuilder] = {}        # dma id -> open transfer
+        self._dispatch: Dict[Any, SpanBuilder] = {}   # (host, chip, step, program)
+        self._ckpt: Dict[str, SpanBuilder] = {}
+        self._timeline: Dict[str, SpanBuilder] = {}   # host -> whole-run span
+
+    # one trace per training step, shared by all hosts: first host to begin
+    # the step allocates, the rest adopt (atomic get-or-create on the registry)
+    def _trace_for_step(self, step: Any) -> int:
+        key: Key = ("trace", step)
+        ctx = self.registry.poll(key)
+        if ctx is not None:
+            return ctx.trace_id
+        tid = new_trace_id()
+        self.registry.push(key, SpanContext(trace_id=tid, span_id=0))
+        return tid
+
+    def _cur(self, host: str) -> Optional[SpanBuilder]:
+        return self._step.get(host)
+
+    def _cur_or_timeline(self, ev: Event) -> SpanBuilder:
+        """Current step span, else a lazy per-host whole-run timeline span
+        (hosts outside a training loop, e.g. the NTP testbed's client)."""
+        cur = self._step.get(ev.source)
+        if cur is not None:
+            return cur
+        tl = self._timeline.get(ev.source)
+        if tl is None:
+            tl = self._begin("HostTimeline", ev, new_trace_id(), None, {})
+            self._timeline[ev.source] = tl
+        return tl
+
+    # -- handlers ---------------------------------------------------------------
+
+    def _on_step_begin(self, ev: Event) -> None:
+        tid = self._trace_for_step(ev.attrs.get("step"))
+        b = self._begin("HostStep", ev, tid, None, attrs=dict(ev.attrs))
+        self._step[ev.source] = b
+
+    def _on_step_end(self, ev: Event) -> None:
+        b = self._step.pop(ev.source, None)
+        if b is not None:
+            self.emit(b.finish(ev.ts))
+
+    def _on_data_load_begin(self, ev: Event) -> None:
+        cur = self._cur(ev.source)
+        tid = cur.context.trace_id if cur else new_trace_id()
+        self._load[ev.source] = self._begin(
+            "DataLoad", ev, tid, cur.context if cur else None, dict(ev.attrs)
+        )
+
+    def _on_data_load_end(self, ev: Event) -> None:
+        b = self._load.pop(ev.source, None)
+        if b is not None:
+            b.span.attrs.update(ev.attrs)
+            self.emit(b.finish(ev.ts))
+
+    def _on_dma_h2d_issue(self, ev: Event) -> None:
+        cur = self._cur(ev.source)
+        tid = cur.context.trace_id if cur else new_trace_id()
+        b = self._begin("H2DTransfer", ev, tid, cur.context if cur else None, dict(ev.attrs))
+        dma = ev.attrs.get("dma")
+        self._h2d[dma] = b
+        # natural boundary: the chip's DMA-landing event carries the same id
+        self.registry.push(("h2d", dma), b.context)
+
+    def _on_dma_h2d_complete(self, ev: Event) -> None:
+        b = self._h2d.pop(ev.attrs.get("dma"), None)
+        if b is not None:
+            self.emit(b.finish(ev.ts))
+
+    def _on_dma_d2h_issue(self, ev: Event) -> None:
+        self._on_dma_h2d_issue(ev)  # same span type, direction in attrs
+
+    def _on_dma_d2h_complete(self, ev: Event) -> None:
+        self._on_dma_h2d_complete(ev)
+
+    def _on_program_enqueue(self, ev: Event) -> None:
+        cur = self._cur(ev.source)
+        tid = cur.context.trace_id if cur else new_trace_id()
+        b = self._begin("Dispatch", ev, tid, cur.context if cur else None, dict(ev.attrs))
+        key = (ev.attrs.get("chip"), ev.attrs.get("step"), ev.attrs.get("program"))
+        self._dispatch[key] = b
+        # natural boundary: PCIe-style dispatch — the chip's ProgramStart
+        # event for (chip, step, program) is caused by this span
+        self.registry.push(("dispatch",) + key, b.context)
+
+    def _on_program_retire(self, ev: Event) -> None:
+        key = (ev.attrs.get("chip"), ev.attrs.get("step"), ev.attrs.get("program"))
+        b = self._dispatch.pop(key, None)
+        if b is not None:
+            self.emit(b.finish(ev.ts))
+
+    def _on_ckpt_begin(self, ev: Event) -> None:
+        cur = self._cur(ev.source)
+        tid = cur.context.trace_id if cur else new_trace_id()
+        self._ckpt[ev.source] = self._begin(
+            "Checkpoint", ev, tid, cur.context if cur else None, dict(ev.attrs)
+        )
+
+    def _on_ckpt_shard_write(self, ev: Event) -> None:
+        b = self._ckpt.get(ev.source)
+        if b is not None:
+            b.span.add_event(ev.ts, "shard_write", ev.attrs)
+
+    def _on_ckpt_end(self, ev: Event) -> None:
+        b = self._ckpt.pop(ev.source, None)
+        if b is not None:
+            self.emit(b.finish(ev.ts))
+
+    def _on_ntp_exchange(self, ev: Event) -> None:
+        # t1..t4 are local/remote timestamps in ps; span covers t1..t4
+        cur = self._cur_or_timeline(ev)
+        tid = cur.context.trace_id
+        t1 = int(ev.attrs.get("t1", ev.ts))
+        t4 = int(ev.attrs.get("t4", ev.ts))
+        b = SpanBuilder(
+            "NtpSync", t1, tid, cur.context, ev.source,
+            self.sim_type.value, dict(ev.attrs),
+        )
+        # the request/response packets in the net sim carry (peer, seq)
+        self.registry.push(("ntp", ev.source, ev.attrs.get("seq")), b.context)
+        self.emit(b.finish(t4))
+
+    def _on_clock_read(self, ev: Event) -> None:
+        self._cur_or_timeline(ev).span.add_event(ev.ts, "clock_read", ev.attrs)
+
+    def _on_heartbeat(self, ev: Event) -> None:
+        self._cur_or_timeline(ev).span.add_event(ev.ts, "heartbeat", ev.attrs)
+
+    def _on_host_failure(self, ev: Event) -> None:
+        cur = self._cur_or_timeline(ev)
+        cur.span.add_event(ev.ts, "host_failure", ev.attrs)
+        cur.span.attrs["failed"] = True
+
+    def _on_host_restart(self, ev: Event) -> None:
+        self._cur_or_timeline(ev).span.add_event(ev.ts, "host_restart", ev.attrs)
+
+    def on_finish(self) -> None:
+        for host, b in self._timeline.items():
+            last = max((ts for ts, _, _ in b.span.events), default=b.span.start)
+            self.emit(b.finish(last))
+        self._timeline.clear()
+        for d in (self._step, self._load, self._ckpt):
+            for b in d.values():
+                b.span.attrs["unclosed"] = True
+                self.emit(b.finish(b.span.start))
+            d.clear()
+
+
+# ---------------------------------------------------------------------------
+# DEVICE (chip) weaver — 4 span types
+# ---------------------------------------------------------------------------
+
+
+class DeviceSpanWeaver(SpanWeaver):
+    sim_type = SimType.DEVICE
+    span_types = ("DeviceProgram", "Op", "Collective", "DmaRecv")
+
+    def __init__(
+        self,
+        registry: ContextRegistry,
+        poll_timeout: float = 0.0,
+        op_spans: bool = True,
+    ) -> None:
+        super().__init__(registry, poll_timeout)
+        self.op_spans = op_spans      # "arbitrarily detailed": ops as spans or as span-events
+        self._prog: Dict[str, SpanBuilder] = {}      # chip -> program
+        self._op: Dict[str, SpanBuilder] = {}        # chip -> open op span
+        self._coll: Dict[Tuple[str, Any], SpanBuilder] = {}  # (chip, coll id)
+
+    @staticmethod
+    def _chip_of(source: str) -> str:
+        # "pod0.chip03" -> "chip03" id as logged by host sims
+        return source.rsplit(".", 1)[-1]
+
+    def _on_program_start(self, ev: Event) -> None:
+        b = self._begin("DeviceProgram", ev, new_trace_id(), None, dict(ev.attrs))
+        key = (self._chip_of(ev.source), ev.attrs.get("step"), ev.attrs.get("program"))
+        self._parent_or_defer(b, ("dispatch",) + key)
+        self._prog[ev.source] = b
+
+    def _on_program_end(self, ev: Event) -> None:
+        b = self._prog.pop(ev.source, None)
+        if b is not None:
+            self.emit(b.finish(ev.ts))
+
+    def _on_op_begin(self, ev: Event) -> None:
+        prog = self._prog.get(ev.source)
+        if not self.op_spans:
+            if prog is not None:
+                prog.span.add_event(ev.ts, "op_begin", ev.attrs)
+            return
+        tid = prog.context.trace_id if prog else new_trace_id()
+        self._op[ev.source] = self._begin(
+            "Op", ev, tid, prog.context if prog else None, dict(ev.attrs)
+        )
+
+    def _on_op_end(self, ev: Event) -> None:
+        if not self.op_spans:
+            prog = self._prog.get(ev.source)
+            if prog is not None:
+                prog.span.add_event(ev.ts, "op_end", ev.attrs)
+            return
+        b = self._op.pop(ev.source, None)
+        if b is not None:
+            b.span.attrs.update(ev.attrs)
+            self.emit(b.finish(ev.ts))
+
+    def _sub_event(self, ev: Event, name: str) -> None:
+        tgt = self._op.get(ev.source) or self._prog.get(ev.source)
+        if tgt is not None:
+            tgt.span.add_event(ev.ts, name, ev.attrs)
+
+    def _on_mxu_issue(self, ev: Event) -> None:
+        self._sub_event(ev, "mxu_issue")
+
+    def _on_hbm_read(self, ev: Event) -> None:
+        self._sub_event(ev, "hbm_read")
+
+    def _on_hbm_write(self, ev: Event) -> None:
+        self._sub_event(ev, "hbm_write")
+
+    def _on_collective_start(self, ev: Event) -> None:
+        prog = self._prog.get(ev.source)
+        tid = prog.context.trace_id if prog else new_trace_id()
+        b = self._begin("Collective", ev, tid, prog.context if prog else None, dict(ev.attrs))
+        cid = ev.attrs.get("coll")
+        self._coll[(ev.source, cid)] = b
+        # cross-chip causality: peers and the net weaver key on (coll, chip)
+        self.registry.push(("coll", cid, self._chip_of(ev.source)), b.context)
+
+    def _on_collective_chunk_tx(self, ev: Event) -> None:
+        b = self._coll.get((ev.source, ev.attrs.get("coll")))
+        if b is not None:
+            b.span.add_event(ev.ts, "chunk_tx", ev.attrs)
+            # natural boundary (Ethernet-style): the link transfer for this
+            # chunk is caused by this collective span
+            self.registry.push(("chunk", ev.attrs.get("chunk")), b.context)
+
+    def _on_collective_chunk_rx(self, ev: Event) -> None:
+        b = self._coll.get((ev.source, ev.attrs.get("coll")))
+        if b is not None:
+            b.span.add_event(ev.ts, "chunk_rx", ev.attrs)
+            # causal link back to the wire transfer that delivered the chunk
+            self.registry.defer(b.span, ("link_span", ev.attrs.get("chunk")), mode="link")
+
+    def _on_collective_end(self, ev: Event) -> None:
+        b = self._coll.pop((ev.source, ev.attrs.get("coll")), None)
+        if b is not None:
+            self.emit(b.finish(ev.ts))
+
+    def _on_dma_recv(self, ev: Event) -> None:
+        b = self._begin("DmaRecv", ev, new_trace_id(), None, dict(ev.attrs))
+        self._parent_or_defer(b, ("h2d", ev.attrs.get("dma")))
+        self.emit(b.finish(ev.ts + int(ev.attrs.get("dur", 0))))
+
+    def on_finish(self) -> None:
+        for d in (self._op, self._prog):
+            for b in d.values():
+                b.span.attrs["unclosed"] = True
+                self.emit(b.finish(b.span.start))
+            d.clear()
+        for b in self._coll.values():
+            b.span.attrs["unclosed"] = True
+            self.emit(b.finish(b.span.start))
+        self._coll.clear()
+
+
+# ---------------------------------------------------------------------------
+# NET (interconnect) weaver — 1 span type (paper Table 1: network = 1)
+# ---------------------------------------------------------------------------
+
+
+class NetSpanWeaver(SpanWeaver):
+    sim_type = SimType.NET
+    span_types = ("LinkTransfer",)
+
+    def __init__(self, registry: ContextRegistry, poll_timeout: float = 0.0) -> None:
+        super().__init__(registry, poll_timeout)
+        self._xfer: Dict[Tuple[str, Any], SpanBuilder] = {}  # (link, chunk)
+
+    def _on_chunk_enqueue(self, ev: Event) -> None:
+        ck = ev.attrs.get("chunk")
+        b = self._begin("LinkTransfer", ev, new_trace_id(), None, dict(ev.attrs))
+        # pick the natural-boundary key by what ids the chunk carries:
+        # collective shard -> the sender chip's Collective span; H2D DMA ->
+        # the host's H2DTransfer span; NTP packet -> the client's NtpSync
+        # span; background flows have no cause and stay parentless.
+        if "dma" in ev.attrs:
+            self._parent_or_defer(b, ("h2d", ev.attrs["dma"]))
+        elif ev.attrs.get("proto") == "ntp":
+            self._parent_or_defer(b, ("ntp", ev.attrs.get("peer"), ev.attrs.get("seq")))
+        elif "flow" not in ev.attrs:
+            self._parent_or_defer(b, ("chunk", ck))
+        # let the receiving chip link back to this wire transfer
+        self.registry.push(("link_span", ck), b.context)
+        self._xfer[(ev.source, ck)] = b
+
+    def _on_chunk_tx(self, ev: Event) -> None:
+        b = self._xfer.get((ev.source, ev.attrs.get("chunk")))
+        if b is not None:
+            b.span.add_event(ev.ts, "wire_tx", ev.attrs)
+            # queueing delay = wire_tx.ts - span.start; recorded for analysis
+            b.span.attrs["queue_ps"] = ev.ts - b.span.start
+
+    def _on_chunk_rx(self, ev: Event) -> None:
+        b = self._xfer.pop((ev.source, ev.attrs.get("chunk")), None)
+        if b is not None:
+            self.emit(b.finish(ev.ts))
+
+    def on_finish(self) -> None:
+        for b in self._xfer.values():
+            b.span.attrs["unclosed"] = True
+            self.emit(b.finish(b.span.start))
+        self._xfer.clear()
+
+
+# ---------------------------------------------------------------------------
+# Trace finalization: resolve deferred contexts, then recompute trace ids
+# from the parent graph (handles chains host -> device -> net regardless of
+# pipeline execution order).
+# ---------------------------------------------------------------------------
+
+
+def finalize_spans(spans: List[Span], registry: ContextRegistry) -> Dict[str, int]:
+    stats = registry.resolve_deferred()
+    by_id: Dict[int, Span] = {s.context.span_id: s for s in spans}
+
+    root_trace: Dict[int, int] = {}
+
+    def trace_of(sid: int, _depth: int = 0) -> int:
+        if sid in root_trace:
+            return root_trace[sid]
+        s = by_id.get(sid)
+        if s is None:
+            return -1
+        if s.parent is None or s.parent.span_id not in by_id or _depth > 10000:
+            t = s.context.trace_id
+        else:
+            t = trace_of(s.parent.span_id, _depth + 1)
+        root_trace[sid] = t
+        return t
+
+    for s in spans:
+        t = trace_of(s.context.span_id)
+        if t != s.context.trace_id:
+            s.context = SpanContext(t, s.context.span_id)
+        if s.parent is not None and s.parent.span_id in by_id:
+            pt = trace_of(s.parent.span_id)
+            if pt != s.parent.trace_id:
+                s.parent = SpanContext(pt, s.parent.span_id)
+    return stats
+
+
+WEAVERS = {
+    SimType.HOST: HostSpanWeaver,
+    SimType.DEVICE: DeviceSpanWeaver,
+    SimType.NET: NetSpanWeaver,
+}
+
+
+def span_type_counts() -> Dict[str, int]:
+    """Per-simulator-type span counts — the Table 1 inventory."""
+    return {t.value: len(WEAVERS[t].span_types) for t in SimType}

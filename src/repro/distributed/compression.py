@@ -1,0 +1,91 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Used for the cross-pod (DCN) gradient reduction, where bandwidth — not
+compute — bounds step time.  ``compressed_psum`` is the shard_map building
+block; ``ef_compress_tree``/``ef_decompress_tree`` implement error-feedback
+(the quantization residual is carried to the next step, which keeps SGD
+convergence — tested in tests/test_compression.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array, block: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8: returns (q, scales)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def ef_compress(
+    g: jax.Array, err: Optional[jax.Array] = None, block: int = 256
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Error-feedback compression: returns (q, scales, new_err)."""
+    g32 = g.astype(jnp.float32)
+    if err is not None:
+        g32 = g32 + err
+    q, s = quantize_int8(g32, block)
+    deq = dequantize_int8(q, s, g.shape)
+    return q, s, (g32 - deq)
+
+
+def compressed_psum(x: jax.Array, axis_name: str, block: int = 256) -> jax.Array:
+    """int8-on-the-wire psum for shard_map code paths.
+
+    Quantizes, all-gathers the int8 payload + scales over ``axis_name``,
+    and sums dequantized shards locally: wire traffic is ~4x smaller than a
+    f32 psum (int8 + 1 scale per block).
+    """
+    q, s = quantize_int8(x, block)
+    qs = jax.lax.all_gather(q, axis_name)        # (N, blocks, block) int8
+    ss = jax.lax.all_gather(s, axis_name)
+    deq = qs.astype(jnp.float32) * ss
+    total = deq.sum(axis=0).reshape(-1)
+    n = 1
+    for d in x.shape:
+        n *= d
+    return total[:n].reshape(x.shape)
+
+
+def tree_ef_state(tree: Any) -> Any:
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+
+
+def tree_compressed_psum(
+    grads: Any, err: Any, axis_name: str, block: int = 256
+) -> Tuple[Any, Any]:
+    """Error-feedback compressed psum over a gradient pytree (per leaf)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, new_e = ef_compress(g, e, block)
+        qs = jax.lax.all_gather(q, axis_name)
+        ss = jax.lax.all_gather(s, axis_name)
+        total = (qs.astype(jnp.float32) * ss).sum(axis=0).reshape(-1)
+        n = 1
+        for d in g.shape:
+            n *= d
+        out_g.append(total[:n].reshape(g.shape))
+        out_e.append(new_e)
+    return (
+        jax.tree_util.tree_unflatten(treedef, out_g),
+        jax.tree_util.tree_unflatten(treedef, out_e),
+    )

@@ -1,0 +1,107 @@
+"""Flash-decode — Pallas TPU kernel for single-token attention over a long
+KV cache.
+
+One query row per (batch, head); the grid's last axis walks KV chunks
+sequentially, carrying (m, l, acc) in VMEM scratch — the memory-bound
+decode hot loop streams the cache HBM->VMEM exactly once.
+
+grid = (B, H, S/Bs); q block (1,1,D) stays resident; k/v blocks (1,1,Bs,D).
+``valid_len`` masks unwritten cache slots (SMEM scalar prefetch).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decode_kernel(
+    valid_ref,                       # SMEM (1,) int32
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, bs: int, ns: int,
+):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid = valid_ref[0]
+    k_lo = si * bs
+
+    @pl.when(k_lo < valid)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (1, D) row
+        k = k_ref[0, 0].astype(jnp.float32)                  # (Bs, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                                     # (1, Bs)
+        pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        mask = pos < valid
+        s = jnp.where(mask, s, -jnp.inf)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(mask, jnp.exp(s - m_safe[:, None]), 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(
+    q: jax.Array,            # (B, H, D)
+    k: jax.Array,            # (B, K, S, D)
+    v: jax.Array,
+    valid_len: jax.Array,    # scalar int32
+    scale: Optional[float] = None,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, D = q.shape
+    K, S = k.shape[1], k.shape[2]
+    g = H // K
+    scale = scale if scale is not None else D ** -0.5
+    bs = min(block_s, S)
+    assert S % bs == 0
+    ns = S // bs
+    q4 = q[:, :, None, :]    # (B, H, 1, D)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, bs=bs, ns=ns)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, si, valid: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D), lambda b, h, si, valid: (b, h // g, si, 0)),
+            pl.BlockSpec((1, 1, bs, D), lambda b, h, si, valid: (b, h // g, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D), lambda b, h, si, valid: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(valid_len, jnp.int32).reshape(1), q4, k, v)
+    return out[:, :, 0, :]

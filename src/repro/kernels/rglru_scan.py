@@ -1,0 +1,61 @@
+"""RG-LRU diagonal linear recurrence — Pallas TPU kernel.
+
+h_t = a_t * h_{t-1} + x_t over time, elementwise in the width dim.  The
+recurrence is sequential in t but embarrassingly parallel in (batch, width):
+grid = (B, W/Bw); each program keeps its (L, Bw) tiles of a and x in VMEM
+and a running (Bw,) state, emitting all L outputs.  VMEM budget =
+2 * L * Bw * 4B (+ output), so Bw is chosen so tiles fit ~8 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, x_ref, h0_ref, h_ref, hT_ref, *, L: int):
+    h = h0_ref[0].astype(jnp.float32)          # (Bw,)
+
+    def body(t, h):
+        h = a_ref[0, t].astype(jnp.float32) * h + x_ref[0, t].astype(jnp.float32)
+        h_ref[0, t] = h.astype(h_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, L, body, h)
+    hT_ref[0] = h.astype(hT_ref.dtype)
+
+
+def rglru_scan_fwd(
+    a: jax.Array,            # (B, L, W) f32
+    x: jax.Array,            # (B, L, W) f32
+    h0: jax.Array,           # (B, W) f32
+    block_w: int = 512,
+    interpret: bool = False,
+):
+    B, L, W = a.shape
+    bw = min(block_w, W)
+    assert W % bw == 0
+    nw = W // bw
+    kernel = functools.partial(_rglru_kernel, L=L)
+    h_all, h_T = pl.pallas_call(
+        kernel,
+        grid=(B, nw),
+        in_specs=[
+            pl.BlockSpec((1, L, bw), lambda b, w: (b, 0, w)),
+            pl.BlockSpec((1, L, bw), lambda b, w: (b, 0, w)),
+            pl.BlockSpec((1, bw), lambda b, w: (b, w)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, bw), lambda b, w: (b, 0, w)),
+            pl.BlockSpec((1, bw), lambda b, w: (b, w)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, W), a.dtype),
+            jax.ShapeDtypeStruct((B, W), h0.dtype),
+        ],
+        interpret=interpret,
+    )(a, x, h0)
+    return h_all, h_T

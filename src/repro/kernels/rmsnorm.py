@@ -1,0 +1,39 @@
+"""Fused RMSNorm — Pallas TPU kernel (row blocks, f32 reduction in VMEM)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    n = x * jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (n * (1.0 + s_ref[...].astype(jnp.float32))[None, :]).astype(o_ref.dtype)
+
+
+def rmsnorm_fwd(
+    x: jax.Array,            # (R, D)
+    scale: jax.Array,        # (D,)
+    eps: float = 1e-6,
+    block_r: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    R, D = x.shape
+    br = min(block_r, R)
+    assert R % br == 0
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(R // br,),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda r: (r, 0)),
+            pl.BlockSpec((D,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, D), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
+        interpret=interpret,
+    )(x, scale)

@@ -1,0 +1,64 @@
+"""Mamba-1 selective scan — Pallas TPU kernel.
+
+h_t = a_t * h_{t-1} + bx_t (diagonal in (Di, N)); y_t = sum_N h_t * c_t.
+Sequential in t, parallel in (batch, channel block): grid = (B, Di/Bd).
+Tiles: a/bx (L, Bd, N) stream per time step from VMEM blocks; the state
+(Bd, N) persists in registers across the fori_loop; y (L, Bd) is written
+as it is produced.  The N (state) dim is small (16) and kept whole.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(a_ref, bx_ref, c_ref, h0_ref, y_ref, hT_ref, *, L: int):
+    h = h0_ref[0].astype(jnp.float32)                     # (Bd, N)
+
+    def body(t, h):
+        h = a_ref[0, t].astype(jnp.float32) * h + bx_ref[0, t].astype(jnp.float32)
+        y = jnp.sum(h * c_ref[0, t].astype(jnp.float32)[None, :], axis=1)
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, L, body, h)
+    hT_ref[0] = h.astype(hT_ref.dtype)
+
+
+def ssm_scan_fwd(
+    a: jax.Array,            # (B, L, Di, N)
+    bx: jax.Array,           # (B, L, Di, N)
+    c: jax.Array,            # (B, L, N)
+    h0: jax.Array,           # (B, Di, N)
+    block_d: int = 128,
+    interpret: bool = False,
+):
+    B, L, Di, N = a.shape
+    bd = min(block_d, Di)
+    assert Di % bd == 0
+    nd = Di // bd
+    kernel = functools.partial(_ssm_kernel, L=L)
+    y, h_T = pl.pallas_call(
+        kernel,
+        grid=(B, nd),
+        in_specs=[
+            pl.BlockSpec((1, L, bd, N), lambda b, d: (b, 0, d, 0)),
+            pl.BlockSpec((1, L, bd, N), lambda b, d: (b, 0, d, 0)),
+            pl.BlockSpec((1, L, N), lambda b, d: (b, 0, 0)),
+            pl.BlockSpec((1, bd, N), lambda b, d: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, bd), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, bd, N), lambda b, d: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, Di), a.dtype),
+            jax.ShapeDtypeStruct((B, Di, N), h0.dtype),
+        ],
+        interpret=interpret,
+    )(a, bx, c, h0)
+    return y, h_T

@@ -1,0 +1,12 @@
+from .mesh import best_mesh_for, make_mesh, make_production_mesh
+from .specs import Cell, build_cell
+from .steps import make_step_fn
+
+__all__ = [
+    "Cell",
+    "best_mesh_for",
+    "build_cell",
+    "make_mesh",
+    "make_production_mesh",
+    "make_step_fn",
+]

@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+initialization, and the production meshes need 512 placeholder CPU devices.
+
+Per cell this produces (results/dryrun/<arch>.<shape>.<mesh>[.tag].json):
+
+* memory_analysis()            — proof the program fits per-device HBM
+* cost_analysis()              — HLO FLOPs / bytes (per device)
+* collective_stats()           — per-kind collective operand bytes, parsed
+                                 from the optimized (post-SPMD) HLO text
+* cost-mode (--mode cost)      — depth-1-period and depth-2-period compiles
+                                 with layers AND inner scans unrolled, from
+                                 which exact per-layer costs are derived
+                                 (XLA's cost_analysis does not multiply
+                                 while-loop bodies by trip count; see
+                                 DESIGN.md / EXPERIMENTS.md §Methodology)
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both
+  python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k --mode cost
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from ..configs import ARCHS, SHAPES, get_arch
+from ..models.sharding import sharding_context
+from ..xla.hlo_stats import collective_stats, cost_summary, memory_stats, tpu_adjusted_bytes
+from .mesh import make_production_mesh
+from .specs import build_cell
+from .steps import make_step_fn
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+def _compile_cell(
+    arch: str,
+    shape: str,
+    multi_pod: bool,
+    fsdp: bool = True,
+    zero1: bool = False,
+    parallel_mode: str = "tp",
+    cfg_overrides: Optional[Dict[str, Any]] = None,
+    verbose: bool = True,
+) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = build_cell(arch, shape, mesh, fsdp=fsdp, zero1=zero1,
+                      parallel_mode=parallel_mode, cfg_overrides=cfg_overrides)
+    fn = make_step_fn(cell)
+    t0 = time.time()
+    with mesh:
+        with sharding_context(mesh, cell.rules):
+            kw = {}
+            if cell.out_shardings is not None:
+                kw["out_shardings"] = cell.out_shardings
+            jitted = jax.jit(
+                fn, in_shardings=cell.in_shardings, donate_argnums=cell.donate, **kw
+            )
+            lowered = jitted.lower(*cell.abstract_args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    mem = memory_stats(compiled)
+    cost = cost_summary(compiled)
+    colls = collective_stats(compiled.as_text())
+    n_dev = mesh.devices.size
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(n_dev),
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "cost": cost,
+        "collectives": {
+            "total_bytes": colls["total_bytes"],
+            "wire_bytes": colls["wire_bytes"],
+            "per_kind": colls["per_kind"],
+        },
+        "sharding_fallbacks": {f"{k[0]}[{k[1]}]": v for k, v in cell.rules.fallbacks.items()},
+        "microbatches": cell.microbatches if cell.kind == "train" else None,
+        "kind": cell.kind,
+        "model": {
+            "n_params": cell.cfg.n_params,
+            "n_active_params": cell.cfg.n_active_params,
+        },
+    }
+    if verbose:
+        print(
+            f"[dryrun] {arch:24s} {shape:12s} {rec['mesh']:8s} OK "
+            f"mem/dev={mem['total_bytes'] / 2**30:6.2f}GiB "
+            f"flops/dev={cost['flops']:.3e} coll={colls['total_bytes']:.3e}B "
+            f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)",
+            flush=True,
+        )
+    return rec
+
+
+def _cost_mode_cell(arch: str, shape: str, fsdp: bool = True, zero1: bool = False,
+                    parallel_mode: str = "tp",
+                    cfg_overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Depth-extrapolated exact costs: compile depth=P and depth=2P unrolled."""
+    spec = get_arch(arch)
+    cfg = spec.config_for(shape)
+    P_ = cfg.pattern_period
+    out: Dict[str, Any] = {"arch": arch, "shape": shape, "mode": "cost", "ok": True}
+    variants = {}
+    for depth_periods in (1, 2):
+        overrides = dict(
+            n_layers=depth_periods * P_,
+            scan_layers=False,
+            unroll_inner=True,
+            attn_block_q=2048,
+            scan_chunk=2048,
+        )
+        if cfg_overrides:
+            ov = dict(cfg_overrides)
+            ov.pop("n_layers", None)
+            overrides.update(ov)
+        mesh = make_production_mesh(multi_pod=False)
+        cell = build_cell(arch, shape, mesh, fsdp=fsdp, zero1=zero1,
+                          parallel_mode=parallel_mode, cfg_overrides=overrides)
+        # cost-equivalent: grad-accum is linear in microbatches, but scan
+        # bodies are counted once by cost_analysis -> measure with mb=1
+        cell.microbatches = 1
+        fn = make_step_fn(cell)
+        t0 = time.time()
+        with mesh:
+            with sharding_context(mesh, cell.rules):
+                kw = {}
+                if cell.out_shardings is not None and cell.kind == "train":
+                    kw["out_shardings"] = cell.out_shardings
+                compiled = (
+                    jax.jit(fn, in_shardings=cell.in_shardings,
+                            donate_argnums=cell.donate, **kw)
+                    .lower(*cell.abstract_args)
+                    .compile()
+                )
+        cost = cost_summary(compiled)
+        text = compiled.as_text()
+        colls = collective_stats(text)
+        adj = tpu_adjusted_bytes(text)
+        variants[depth_periods] = {
+            "flops": cost["flops"],
+            "bytes": cost["bytes_accessed"],
+            "tpu_bytes": adj["total"],
+            "coll_bytes": colls["total_bytes"],
+            "wire_bytes": colls["wire_bytes"],
+            "coll_per_kind": {k: v["bytes"] for k, v in colls["per_kind"].items()},
+            "compile_s": round(time.time() - t0, 1),
+        }
+        print(
+            f"[cost] {arch} {shape} depth={depth_periods}P flops={cost['flops']:.3e} "
+            f"coll={colls['total_bytes']:.3e} ({variants[depth_periods]['compile_s']}s)",
+            flush=True,
+        )
+    c1, c2 = variants[1], variants[2]
+    n_periods = cfg.n_layers / P_   # fractional part covers remainder layers
+    extrap = {}
+    for key in ("flops", "bytes", "tpu_bytes", "coll_bytes", "wire_bytes"):
+        per_period = c2[key] - c1[key]
+        outside = c1[key] - per_period
+        extrap[key] = outside + n_periods * per_period
+        extrap[f"{key}_per_period"] = per_period
+        extrap[f"{key}_outside"] = outside
+    extrap["coll_per_kind"] = {
+        k: (c1["coll_per_kind"][k] - (c2["coll_per_kind"][k] - c1["coll_per_kind"][k]))
+        + n_periods * (c2["coll_per_kind"][k] - c1["coll_per_kind"][k])
+        for k in c1["coll_per_kind"]
+    }
+    out["variants"] = variants
+    out["extrapolated"] = extrap
+    out["n_periods"] = n_periods
+    out["microbatches"] = spec.microbatches.get(shape, 1)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--mode", default="full", choices=["full", "cost"])
+    ap.add_argument("--outdir", default=RESULTS_DIR)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--zero1", action="store_true",
+                    help="ZeRO-1: replicate params over data, shard optimizer")
+    ap.add_argument("--parallel-mode", default="tp", choices=["tp", "fsdp_all"])
+    ap.add_argument("--override", default="", help="cfg overrides k=v,k=v (ints/bools)")
+    args = ap.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+
+    overrides: Dict[str, Any] = {}
+    for kv in filter(None, args.override.split(",")):
+        k, v = kv.split("=")
+        overrides[k] = {"true": True, "false": False}.get(v.lower(), None)
+        if overrides[k] is None:
+            try:
+                overrides[k] = int(v)
+            except ValueError:
+                overrides[k] = v
+
+    failures = 0
+    for arch in archs:
+        spec = get_arch(arch)
+        shapes = spec.shape_names() if args.shape == "all" else args.shape.split(",")
+        for shape in shapes:
+            if shape not in spec.shape_names():
+                print(f"[dryrun] {arch} {shape} SKIPPED (not applicable)", flush=True)
+                continue
+            meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+            if args.mode == "cost":
+                meshes = [False]
+            for multi_pod in meshes:
+                tag = f".{args.tag}" if args.tag else ""
+                mesh_name = "2x16x16" if multi_pod else "16x16"
+                suffix = "cost" if args.mode == "cost" else mesh_name
+                path = os.path.join(args.outdir, f"{arch}.{shape}.{suffix}{tag}.json")
+                try:
+                    if args.mode == "cost":
+                        rec = _cost_mode_cell(arch, shape, fsdp=not args.no_fsdp,
+                                              zero1=args.zero1,
+                                              parallel_mode=args.parallel_mode,
+                                              cfg_overrides=overrides or None)
+                    else:
+                        rec = _compile_cell(arch, shape, multi_pod,
+                                            fsdp=not args.no_fsdp,
+                                            zero1=args.zero1,
+                                            parallel_mode=args.parallel_mode,
+                                            cfg_overrides=overrides or None)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    failures += 1
+                    rec = {
+                        "arch": arch, "shape": shape, "mesh": mesh_name,
+                        "ok": False, "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                    print(f"[dryrun] {arch} {shape} {mesh_name} FAILED: {e}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"[dryrun] done, failures={failures}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Serving launcher: batched request serving with a reduced config on CPU.
+
+``python -m repro.launch.serve --arch qwen3-8b --requests 8 --smoke``
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from ..configs import get_arch
+    from ..models import init_params, model_pspecs
+    from ..serving import Request, ServingEngine
+
+    cfg = get_arch(args.arch).config.reduced()
+    params = init_params(jax.random.PRNGKey(0), model_pspecs(cfg))
+    engine = ServingEngine(cfg, params, batch_size=args.batch,
+                           max_seq=args.prompt_len + args.max_new)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(
+            prompt=rng.integers(0, cfg.vocab_size, size=args.prompt_len).astype(np.int32),
+            max_new_tokens=args.max_new,
+            temperature=0.7 if i % 2 else 0.0,
+        )
+        for i in range(args.requests)
+    ]
+    engine.serve(reqs)
+    s = engine.stats
+    print(
+        f"served {s.requests} requests in {s.waves} waves: "
+        f"{s.prefill_tokens} prefill + {s.decode_tokens} decode tokens, "
+        f"{s.tokens_per_s:.0f} tok/s"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Step functions lowered by the dry-run, trainer, and server."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.transformer import decode_step, prefill
+from ..training.train_step import TrainConfig, make_train_step
+from .specs import Cell
+
+
+def make_step_fn(cell: Cell, tc: Optional[TrainConfig] = None) -> Callable:
+    cfg = cell.cfg
+    if cell.kind == "train":
+        tc = tc or TrainConfig(microbatches=cell.microbatches)
+        return make_train_step(cfg, tc)
+
+    if cell.kind == "prefill":
+
+        def prefill_step(params, batch):
+            logits, cache = prefill(
+                cfg, params, tokens=batch.get("tokens"), embeds=batch.get("embeds")
+            )
+            # serving returns last-position logits + populated cache
+            return logits[:, -1, :], cache
+
+        return prefill_step
+
+    def serve_step(params, batch, cache, pos):
+        logits, new_cache = decode_step(cfg, params, batch["tokens"], cache, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, new_cache
+
+    return serve_step

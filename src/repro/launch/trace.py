@@ -1,0 +1,124 @@
+"""Trace launcher — the Columbo end-to-end path for this framework:
+
+1. read a dry-run artifact (or lower one on the fly) for an (arch, shape),
+2. build its device ProgramSpec (real compiled aggregate costs + the real
+   collective schedule),
+3. simulate the multi-pod cluster executing it (component sims write their
+   ad-hoc logs),
+4. run a Columbo Script over the logs,
+5. export Jaeger/Chrome/OTLP traces + print the per-component breakdown.
+
+``python -m repro.launch.trace --arch olmo-1b --shape train_4k --steps 2``
+"""
+import argparse
+import json
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=2)
+    ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--chips-per-pod", type=int, default=4)
+    ap.add_argument("--segments", type=int, default=8)
+    ap.add_argument("--slow-chip", default="", help="chip name to slow, e.g. pod1.chip02")
+    ap.add_argument("--slow-factor", type=float, default=3.0)
+    ap.add_argument("--outdir", default="results/traces")
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    args = ap.parse_args()
+
+    from ..core import (
+        ChromeTraceExporter,
+        ColumboScript,
+        ConsoleExporter,
+        JaegerJSONExporter,
+        OTLPJSONExporter,
+        SimType,
+        assemble_traces,
+        component_breakdown,
+        straggler_report,
+        trace_summary,
+    )
+    from ..sim import run_training_sim
+    from ..sim.workload import OpSpec, ProgramSpec
+
+    # -- build the program from the dry-run artifact ---------------------------
+    rec_path = os.path.join(args.dryrun_dir, f"{args.arch}.{args.shape}.16x16.json")
+    if os.path.exists(rec_path):
+        with open(rec_path) as f:
+            rec = json.load(f)
+        flops = rec["cost"]["flops"]
+        hbm = rec["cost"]["bytes_accessed"]
+        coll_ops = [
+            (k, v["bytes"] / max(v["count"], 1), v["count"])
+            for k, v in rec["collectives"]["per_kind"].items()
+            if v["count"]
+        ]
+        print(f"[trace] program from dry-run artifact {rec_path}")
+    else:
+        flops, hbm, coll_ops = 2e13, 5e11, [("all-gather", 3e7, 16), ("all-reduce", 1e8, 2)]
+        print("[trace] no dry-run artifact found; using a synthetic program")
+
+    ops = []
+    n_seg = args.segments
+    per_seg_coll = []
+    for kind, avg_bytes, count in coll_ops:
+        per_seg_coll.append((kind, avg_bytes, max(1, count // n_seg)))
+    for s in range(n_seg):
+        ops.append(OpSpec(name=f"{args.shape}.seg{s}", kind="compute",
+                          flops=flops / n_seg, bytes=hbm / n_seg))
+        for kind, avg_bytes, per_seg in per_seg_coll:
+            for j in range(min(per_seg, 2)):   # cap events per segment
+                ops.append(OpSpec(name=f"{kind}.s{s}.{j}", kind=kind,
+                                  coll_bytes=avg_bytes))
+    if args.shape == "train_4k":
+        ops.append(OpSpec(name="grad.sync", kind="all-reduce",
+                          coll_bytes=hbm / 64, group="dcn"))
+    program = ProgramSpec(name=args.shape, ops=ops)
+
+    # -- simulate ---------------------------------------------------------------
+    os.makedirs(args.outdir, exist_ok=True)
+    logdir = os.path.join(args.outdir, f"{args.arch}.{args.shape}.logs")
+    scale = {args.slow_chip: args.slow_factor} if args.slow_chip else None
+    cluster = run_training_sim(
+        program, n_steps=args.steps, n_pods=args.pods,
+        chips_per_pod=args.chips_per_pod, outdir=logdir, compute_scale=scale,
+    )
+    print(f"[trace] simulated {args.steps} steps on {args.pods}x{args.chips_per_pod} chips "
+          f"-> {cluster.sim.events_executed} DES events, "
+          f"virtual time {cluster.sim.now/1e12:.3f}s")
+
+    # -- Columbo ------------------------------------------------------------------
+    script = ColumboScript()
+    paths = cluster.log_paths()
+    for p in paths["host"]:
+        script.add_log(p, SimType.HOST)
+    for p in paths["device"]:
+        script.add_log(p, SimType.DEVICE)
+    for p in paths["net"]:
+        script.add_log(p, SimType.NET)
+    spans = script.run()
+
+    base = os.path.join(args.outdir, f"{args.arch}.{args.shape}")
+    script.export(
+        JaegerJSONExporter(base + ".jaeger.json"),
+        ChromeTraceExporter(base + ".chrome.json"),
+        OTLPJSONExporter(base + ".otlp.json"),
+    )
+    print(f"[trace] {trace_summary(spans)}")
+    traces = assemble_traces(spans)
+    first = traces[sorted(traces)[0]]
+    bd = component_breakdown(first)
+    print("[trace] per-component breakdown of step 0 (us):")
+    for comp, us in sorted(bd.items(), key=lambda kv: -kv[1])[:12]:
+        print(f"    {comp:28s} {us:12.1f}")
+    rep = straggler_report(spans)
+    if rep["stragglers"]:
+        print(f"[trace] stragglers detected: {rep['stragglers']}")
+    print(f"[trace] exported {base}.{{jaeger,chrome,otlp}}.json")
+
+
+if __name__ == "__main__":
+    main()

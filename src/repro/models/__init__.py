@@ -1,0 +1,20 @@
+"""Composable pure-JAX model stack for the 10 assigned architectures."""
+from .config import ModelConfig
+from .params import (
+    PSpec,
+    Rules,
+    abstract_params,
+    count_params,
+    init_params,
+    partition_specs,
+)
+from .sharding import constrain, make_rules, sharding_context
+from .transformer import (
+    cache_specs,
+    decode_step,
+    forward,
+    init_cache,
+    model_pspecs,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,190 @@
+"""Model configuration for the composable transformer stack.
+
+One ModelConfig describes any of the 10 assigned architectures: a cyclic
+``block_pattern`` selects per-layer block kinds (attention global/local,
+RG-LRU, Mamba-1), with MoE substituting the MLP where configured.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+BLOCK_KINDS = ("attn", "attn_local", "rglru", "mamba")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+
+    # layer pattern, cycled; e.g. gemma3: 5x local + 1 global
+    block_pattern: Tuple[str, ...] = ("attn",)
+    window: int = 4096              # local-attention window
+    qk_norm: bool = False
+    nonparametric_ln: bool = False  # olmo: LN without scale/bias
+    mlp_act: str = "swiglu"         # swiglu | gelu
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0            # per-expert hidden (granite 512, llama4 8192)
+    shared_expert_d_ff: int = 0     # llama4 shared expert
+    capacity_factor: float = 1.25
+    moe_every: int = 1              # MoE replaces MLP every k-th layer
+
+    # Mamba-1
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    dt_rank: int = 0                # 0 -> ceil(d_model/16)
+
+    # RG-LRU (recurrentgemma)
+    lru_width: int = 0              # 0 -> d_model
+    conv_width: int = 4
+
+    # modality frontend stub: input_specs() provides precomputed embeddings
+    frontend: str = "none"          # none | audio | vision
+
+    # numerics / execution
+    dtype: str = "bfloat16"         # activation/compute dtype
+    param_dtype: str = "float32"
+    remat: str = "full"             # none | full | dots
+    attention_impl: str = "reference"  # reference | pallas
+    kv_cache_dtype: str = "bfloat16"   # bfloat16 | int8 (quantized cache)
+    scan_layers: bool = True
+    logits_f32: bool = True
+    # cost-measurement mode: unroll inner lax.scans (attention KV blocks,
+    # SSM time chunks) into python loops so compiled cost_analysis() FLOPs
+    # are exact (XLA does not multiply while-loop bodies by trip count)
+    unroll_inner: bool = False
+    attn_block_q: int = 1024   # query-block size of the block-causal attention
+    scan_chunk: int = 256      # time-chunk of the SSM/RG-LRU chunked scans
+
+    def __post_init__(self):
+        for b in self.block_pattern:
+            assert b in BLOCK_KINDS, b
+        assert self.family in ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+
+    # -- derived -------------------------------------------------------------------
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // max(self.n_heads, 1)
+
+    @property
+    def resolved_dt_rank(self) -> int:
+        return self.dt_rank if self.dt_rank else math.ceil(self.d_model / 16)
+
+    @property
+    def resolved_lru_width(self) -> int:
+        return self.lru_width if self.lru_width else self.d_model
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def pattern_period(self) -> int:
+        return len(self.block_pattern)
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // self.pattern_period
+
+    @property
+    def n_rest_layers(self) -> int:
+        return self.n_layers % self.pattern_period
+
+    def block_kind(self, layer: int) -> str:
+        return self.block_pattern[layer % self.pattern_period]
+
+    @property
+    def uses_attention(self) -> bool:
+        return any(b.startswith("attn") for b in self.block_pattern)
+
+    @property
+    def pure_global_attention(self) -> bool:
+        return all(b == "attn" for b in self.block_pattern)
+
+    @property
+    def n_params(self) -> float:
+        """Approximate parameter count (used for 6ND model-FLOPs)."""
+        d, v = self.d_model, self.vocab_size
+        total = v * d * (1 if self.tie_embeddings else 2)
+        per_layer = {}
+        hd = self.resolved_head_dim
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        mlp_mult = 3 if self.mlp_act in ("swiglu", "geglu") else 2
+        dense_mlp = mlp_mult * d * self.d_ff
+        moe_mlp = (
+            self.n_experts * mlp_mult * d * self.expert_d_ff
+            + mlp_mult * d * self.shared_expert_d_ff
+            + d * self.n_experts
+        )
+        di, ds, dtr = self.d_inner, self.ssm_state, self.resolved_dt_rank
+        mamba = 2 * d * di + di * self.ssm_conv + di * (dtr + 2 * ds) + dtr * di + di * ds + di + di * d
+        lw = self.resolved_lru_width
+        rglru = 2 * d * lw + lw * self.conv_width + 2 * lw * lw + lw + lw * d
+        for i in range(self.n_layers):
+            kind = self.block_kind(i)
+            if kind in ("attn", "attn_local"):
+                total += attn
+                total += moe_mlp if (self.is_moe and i % self.moe_every == 0) else dense_mlp
+            elif kind == "mamba":
+                total += mamba
+            elif kind == "rglru":
+                total += rglru
+                total += moe_mlp if (self.is_moe and i % self.moe_every == 0) else dense_mlp
+        return float(total)
+
+    @property
+    def n_active_params(self) -> float:
+        """Active params per token (MoE: only top_k experts count)."""
+        if not self.is_moe:
+            return self.n_params
+        d = self.d_model
+        mlp_mult = 3 if self.mlp_act in ("swiglu", "geglu") else 2
+        inactive = (self.n_experts - self.top_k) * mlp_mult * d * self.expert_d_ff
+        n_moe_layers = sum(
+            1
+            for i in range(self.n_layers)
+            if self.block_kind(i).startswith("attn") and i % self.moe_every == 0
+        )
+        return self.n_params - n_moe_layers * inactive
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        small = dict(
+            n_layers=min(self.n_layers, 2 * self.pattern_period),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 4) if self.n_kv_heads > 1 else 1,
+            d_ff=256,
+            vocab_size=512,
+            head_dim=32,
+            window=min(self.window, 64),
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            expert_d_ff=64 if self.expert_d_ff else 0,
+            shared_expert_d_ff=64 if self.shared_expert_d_ff else 0,
+            lru_width=128 if self.lru_width else 0,
+            dt_rank=8,
+            remat="none",
+            name=self.name + "-smoke",
+        )
+        small.update(overrides)
+        return replace(self, **small)

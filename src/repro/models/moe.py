@@ -1,0 +1,95 @@
+"""Mixture-of-Experts block: GShard/Switch-style token-choice top-k routing
+with per-group capacity, einsum dispatch (TPU/GSPMD-friendly: the expert
+dimension shards over "model"/EP and XLA inserts the all-to-alls).
+
+granite-moe-1b: 32 experts, top-8, expert d_ff 512.
+llama4-scout:   16 experts, top-1, expert d_ff 8192 + always-on shared expert.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import mlp, mlp_pspecs
+from .params import PSpec
+
+Params = Dict[str, Any]
+
+
+def moe_pspecs(cfg: ModelConfig) -> Params:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    p: Params = {
+        "router": PSpec((d, E), ("embed", None), init="lecun"),
+        "w_gate": PSpec((E, d, f), ("expert", "embed", None), init="lecun"),
+        "w_up": PSpec((E, d, f), ("expert", "embed", None), init="lecun"),
+        "w_down": PSpec((E, f, d), ("expert", None, "embed"), init="lecun"),
+    }
+    if cfg.shared_expert_d_ff:
+        p["shared"] = mlp_pspecs(cfg, d_ff=cfg.shared_expert_d_ff)
+    return p
+
+
+def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def moe_block(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                      # (B, S, d)
+    group_size: int = 1024,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_load_balance_loss)."""
+    B, S, d = x.shape
+    dt = x.dtype
+    E, k = cfg.n_experts, cfg.top_k
+    Tg = min(group_size, S)
+    G = (B * S) // Tg
+    xg = x.reshape(G, Tg, d)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                 # (G, Tg, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)           # (G, Tg, k)
+    # renormalize the selected gates
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = _capacity(cfg, Tg)
+    counts = jnp.zeros((G, E), jnp.float32)
+    dispatch = jnp.zeros((G, Tg, E, C), dtype=dt)
+    combine = jnp.zeros((G, Tg, E, C), dtype=jnp.float32)
+    for j in range(k):
+        m = jax.nn.one_hot(gate_idx[..., j], E, dtype=jnp.float32)      # (G,Tg,E)
+        pos = jnp.cumsum(m, axis=1) - m + counts[:, None, :]            # slot index
+        keep = (pos < C) * m                                            # (G,Tg,E)
+        counts = counts + keep.sum(axis=1)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)
+        dd = keep[..., None] * pos_oh                                   # (G,Tg,E,C)
+        dispatch = dispatch + dd.astype(dt)
+        combine = combine + gate_vals[..., j, None, None] * dd
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg)              # (G,E,C,d)
+    h_gate = jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"].astype(dt))
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        h_up = jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"].astype(dt))
+        act = jax.nn.silu if cfg.mlp_act == "swiglu" else jax.nn.gelu
+        h = act(h_gate) * h_up
+    else:
+        h = jax.nn.gelu(h_gate)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(dt), expert_out)
+    y = y.reshape(B, S, d)
+
+    if cfg.shared_expert_d_ff:
+        y = y + mlp(cfg, p["shared"], x)
+
+    # Switch-style load-balance aux loss: E * sum_e f_e * P_e
+    f_e = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1)
+    )
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(f_e * p_e)
+    return y, aux

@@ -1,0 +1,141 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block: x -> [linear branch + gate branch] -> temporal conv (width 4) ->
+RG-LRU recurrence -> output projection.
+
+RG-LRU:   r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+          a_t = exp(-c * softplus(Lambda) * r_t)
+          h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Diagonal linear recurrence -> same chunked associative scan as the SSM.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import PSpec
+
+Params = Dict[str, Any]
+_C = 8.0  # Griffin's fixed constant
+
+
+def rglru_pspecs(cfg: ModelConfig) -> Params:
+    d, w = cfg.d_model, cfg.resolved_lru_width
+    return {
+        "in_x": PSpec((d, w), ("embed", "lru"), init="lecun"),
+        "in_gate": PSpec((d, w), ("embed", "lru"), init="lecun"),
+        "conv_w": PSpec((cfg.conv_width, w), (None, "lru"), init="lecun"),
+        "conv_b": PSpec((w,), ("lru",), init="zeros"),
+        "w_a": PSpec((w, w), ("lru", None), init="lecun"),
+        "w_x": PSpec((w, w), ("lru", None), init="lecun"),
+        "lam": PSpec((w,), ("lru",), init="ones"),
+        "out": PSpec((w, d), ("lru", "embed"), init="lecun"),
+    }
+
+
+def _recurrence(a: jax.Array, bx: jax.Array, h0: jax.Array, chunk: int, unroll: bool):
+    """h_t = a_t h_{t-1} + bx_t over axis 1; a, bx: (B, L, w)."""
+    B, L, W = a.shape
+    chunk = min(chunk, L)
+    n = L // chunk
+    assert n * chunk == L
+    a_c = a.reshape(B, n, chunk, W).transpose(1, 0, 2, 3)
+    bx_c = bx.reshape(B, n, chunk, W).transpose(1, 0, 2, 3)
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def step(h, inputs):
+        ac, bc = inputs
+        aa, hh = jax.lax.associative_scan(comb, (ac, bc), axis=1)
+        hh = hh + aa * h[:, None]
+        return hh[:, -1], hh
+
+    if unroll:
+        hs, h = [], h0
+        for i in range(n):
+            h, hh = step(h, (a_c[i], bx_c[i]))
+            hs.append(hh)
+        h_all = jnp.stack(hs, axis=0)
+    else:
+        h, h_all = jax.lax.scan(step, h0, (a_c, bx_c))
+    return h_all.transpose(1, 0, 2, 3).reshape(B, L, W), h
+
+
+def _gates(cfg: ModelConfig, p: Params, u: jax.Array):
+    """a_t (decay) and gated input for the recurrence, in f32."""
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(u32 @ p["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(u32 @ p["w_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u32)
+    return a, gated
+
+
+def rglru_block(
+    cfg: ModelConfig, p: Params, x: jax.Array, chunk: int = 0, return_state: bool = False
+):
+    chunk = chunk or cfg.scan_chunk
+    B, L, d = x.shape
+    dt = x.dtype
+    xs = x @ p["in_x"].astype(dt)
+    gate = jax.nn.gelu(x @ p["in_gate"].astype(dt))
+
+    w = p["conv_w"].astype(dt)
+    dc = w.shape[0]
+    xp = jnp.pad(xs, ((0, 0), (dc - 1, 0), (0, 0)))
+    u = sum(xp[:, i : i + L, :] * w[i] for i in range(dc)) + p["conv_b"].astype(dt)
+
+    a, gated = _gates(cfg, p, u)
+    h0 = jnp.zeros((B, a.shape[-1]), jnp.float32)
+    h_all, h_final = _recurrence(a, gated, h0, chunk, cfg.unroll_inner)
+
+    y = h_all.astype(dt) * gate
+    out = y @ p["out"].astype(dt)
+    if return_state:
+        conv_state = xs[:, L - (dc - 1) :, :] if L >= dc - 1 else jnp.pad(
+            xs, ((0, 0), (dc - 1 - L, 0), (0, 0))
+        )
+        return out, {"conv": conv_state.astype(jnp.dtype(cfg.dtype)), "h": h_final}
+    return out
+
+
+# -- decode ---------------------------------------------------------------------
+
+
+def rglru_state_specs(cfg: ModelConfig, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    w, dc = cfg.resolved_lru_width, cfg.conv_width
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, dc - 1, w), jnp.dtype(cfg.dtype)),
+        "h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+    }
+
+
+def rglru_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                    # (B, 1, d)
+    state: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    dt = x.dtype
+    xs = x[:, 0] @ p["in_x"].astype(dt)                     # (B, w)
+    gate = jax.nn.gelu(x[:, 0] @ p["in_gate"].astype(dt))
+
+    w = p["conv_w"].astype(dt)
+    window = jnp.concatenate([state["conv"].astype(dt), xs[:, None, :]], axis=1)
+    u = jnp.einsum("bcw,cw->bw", window, w) + p["conv_b"].astype(dt)
+
+    a, gated = _gates(cfg, p, u[:, None, :])
+    a, gated = a[:, 0], gated[:, 0]
+    h = a * state["h"] + gated
+
+    y = h.astype(dt) * gate
+    out = (y @ p["out"].astype(dt))[:, None, :]
+    return out, {"conv": window[:, 1:].astype(state["conv"].dtype), "h": h}

@@ -1,0 +1,112 @@
+"""Logical-axis sharding rules + an ambient sharding context.
+
+Model code annotates parameters with logical axes (PSpec.axes) and
+activations via :func:`constrain`.  A Rules table maps logical axes to mesh
+axes; when no sharding context is active (CPU tests), constraints are no-ops.
+
+Default mapping (production mesh ("pod","data","model") or ("data","model")):
+
+  batch        -> ("pod","data")   pure DP across pods (DCN-friendly)
+  vocab/mlp/heads/kv_heads/expert/inner/lru -> "model"  (TP / EP)
+  embed        -> "data" when FSDP (ZeRO-3-style, intra-pod all-gathers)
+  cache_seq    -> "data"           (long-context KV shards, SP)
+
+Dims not divisible by their mesh axes fall back to replication (recorded).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .params import Rules
+
+_ctx = threading.local()
+
+
+def make_rules(
+    mesh: Mesh,
+    fsdp: bool = True,
+    shard_cache_seq: Optional[str] = None,   # mesh axis for KV-cache seq dim
+    extra: Optional[Dict[str, Any]] = None,
+    parallel_mode: str = "tp",               # "tp" | "fsdp_all"
+) -> Rules:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    if parallel_mode == "fsdp_all":
+        # pure-FSDP mapping: NO tensor parallelism — batch shards over
+        # (data, model), parameters fully shard over (data, model) on the
+        # embed dim and gather per layer; eliminates all per-token TP
+        # all-reduces at the cost of per-layer param all-gathers.
+        fs = ("data", "model")
+        rules: Dict[str, Any] = {
+            "vocab": None, "mlp": None, "heads": None, "kv_heads": None,
+            "expert": None, "inner": None, "inner2": None, "lru": None,
+            "embed": fs, "embed_nr": None, "layers": None,
+            "batch": fs, "seq": None,
+            "act_heads": None, "act_kv_heads": None, "act_mlp": None,
+            "act_vocab": None, "act_expert": None,
+            "cache_seq": None,
+        }
+        if extra:
+            rules.update(extra)
+        return Rules(rules, sizes)
+    rules: Dict[str, Any] = {
+        # parameters
+        "vocab": "model",
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "expert": "model",
+        "inner": "model",
+        "inner2": "model",
+        "lru": "model",
+        "embed": "data" if (fsdp and "data" in sizes) else None,
+        "embed_nr": None,
+        "layers": None,
+        # activations
+        "batch": dp,
+        "seq": None,
+        "act_heads": "model",
+        "act_kv_heads": "model",
+        "act_mlp": "model",
+        "act_vocab": "model",
+        "act_expert": "model",
+        "cache_seq": shard_cache_seq if shard_cache_seq in sizes else None,
+    }
+    if extra:
+        rules.update(extra)
+    return Rules(rules, sizes)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: Rules):
+    prev = getattr(_ctx, "value", None)
+    _ctx.value = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.value = prev
+
+
+def current_context() -> Optional[Tuple[Mesh, Rules]]:
+    return getattr(_ctx, "value", None)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint via logical axes; no-op without context."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = rules.act(*logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

@@ -1,0 +1,185 @@
+"""Mamba-1 selective-state-space block (falcon-mamba-7b).
+
+Diagonal linear recurrence  h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t,
+y_t = C_t · h_t + D x_t, gated by silu(z).  Training/prefill runs a chunked
+scan: carry the (B, d_inner, state) state across fixed-size time chunks,
+associative-scan inside each chunk (bounded activation memory).  Decode
+carries (conv window, ssm state).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import PSpec
+
+Params = Dict[str, Any]
+
+
+def mamba_pspecs(cfg: ModelConfig) -> Params:
+    d, di, ds, dtr, dc = (
+        cfg.d_model,
+        cfg.d_inner,
+        cfg.ssm_state,
+        cfg.resolved_dt_rank,
+        cfg.ssm_conv,
+    )
+    return {
+        "in_proj": PSpec((d, 2 * di), ("embed", "inner2"), init="lecun"),
+        "conv_w": PSpec((dc, di), (None, "inner"), init="lecun"),
+        "conv_b": PSpec((di,), ("inner",), init="zeros"),
+        "x_proj": PSpec((di, dtr + 2 * ds), ("inner", None), init="lecun"),
+        "dt_proj": PSpec((dtr, di), (None, "inner"), init="lecun"),
+        "dt_bias": PSpec((di,), ("inner",), init="zeros"),
+        "A_log": PSpec((di, ds), ("inner", None), init="ones"),
+        "D": PSpec((di,), ("inner",), init="ones"),
+        "out_proj": PSpec((di, d), ("inner", "embed"), init="lecun"),
+    }
+
+
+def _ssm_scan_chunked(
+    u: jax.Array,          # (B, L, di)  conv+silu activations
+    delta: jax.Array,      # (B, L, di)  softplus dt
+    b_in: jax.Array,       # (B, L, ds)
+    c_out: jax.Array,      # (B, L, ds)
+    A: jax.Array,          # (di, ds)
+    h0: jax.Array,         # (B, di, ds)
+    chunk: int,
+    unroll: bool,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked selective scan.  The (B, chunk, di, ds)-sized decay/input
+    tensors are built *inside* each chunk step, so nothing O(L * di * ds)
+    ever materializes — peak memory is O(chunk * di * ds) per device.
+    Returns (y (B, L, di) = sum_ds h*c, final state)."""
+    B, L, di = u.shape
+    ds = A.shape[1]
+    chunk = min(chunk, L)
+    n = L // chunk
+    assert n * chunk == L, (L, chunk)
+
+    def to_chunks(x):
+        return x.reshape(B, n, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    xs = (to_chunks(u), to_chunks(delta), to_chunks(b_in), to_chunks(c_out))
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def chunk_step(h, inp):
+        uc, dc, bc, cc = inp                               # (B, chunk, ...)
+        a = jnp.exp(dc[..., None] * A)                     # (B, chunk, di, ds)
+        bx = (dc * uc)[..., None] * bc[:, :, None, :]
+        aa, hh = jax.lax.associative_scan(comb, (a, bx), axis=1)
+        hh = hh + aa * h[:, None]                          # inject carry
+        y = jnp.einsum("bldn,bln->bld", hh, cc)
+        return hh[:, -1], y
+
+    if unroll:
+        ys, h = [], h0
+        for i in range(n):
+            h, y = chunk_step(h, tuple(x[i] for x in xs))
+            ys.append(y)
+        y_all = jnp.stack(ys, axis=0)
+    else:
+        h, y_all = jax.lax.scan(chunk_step, h0, xs)
+    return y_all.swapaxes(0, 1).reshape(B, L, di), h
+
+
+def mamba_block(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                  # (B, L, d)
+    chunk: int = 0,
+    return_state: bool = False,
+) -> Any:
+    B, L, d = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_state
+    dt = x.dtype
+    chunk = chunk or cfg.scan_chunk
+
+    xz = x @ p["in_proj"].astype(dt)
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv over time
+    w = p["conv_w"].astype(dt)                              # (dc, di)
+    dc = w.shape[0]
+    xp = jnp.pad(xs, ((0, 0), (dc - 1, 0), (0, 0)))
+    conv = sum(xp[:, i : i + L, :] * w[i] for i in range(dc)) + p["conv_b"].astype(dt)
+    u = jax.nn.silu(conv)
+
+    proj = u @ p["x_proj"].astype(dt)                       # (B, L, dtr + 2 ds)
+    dtr = cfg.resolved_dt_rank
+    dt_in, b_ssm, c_ssm = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    delta = jax.nn.softplus(dt_in @ p["dt_proj"].astype(dt) + p["dt_bias"].astype(dt))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (di, ds)
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    y, h_final = _ssm_scan_chunked(
+        u.astype(jnp.float32), delta.astype(jnp.float32),
+        b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32),
+        A, h0, chunk, cfg.unroll_inner,
+    )
+    y = y.astype(dt) + u * p["D"].astype(dt)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt)
+    if return_state:
+        dc = p["conv_w"].shape[0]
+        conv_state = xs[:, L - (dc - 1) :, :] if L >= dc - 1 else jnp.pad(
+            xs, ((0, 0), (dc - 1 - L, 0), (0, 0))
+        )
+        state = {"conv": conv_state.astype(jnp.dtype(cfg.dtype)), "ssm": h_final}
+        return out, state
+    return out
+
+
+# -- decode -------------------------------------------------------------------
+
+
+def mamba_state_specs(cfg: ModelConfig, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    di, ds, dc = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, dc - 1, di), jnp.dtype(cfg.dtype)),
+        "ssm": jax.ShapeDtypeStruct((batch, di, ds), jnp.float32),
+    }
+
+
+def mamba_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                  # (B, 1, d)
+    state: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, _, d = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_state
+    dt = x.dtype
+
+    xz = x[:, 0] @ p["in_proj"].astype(dt)                  # (B, 2di)
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    w = p["conv_w"].astype(dt)
+    dc = w.shape[0]
+    window = jnp.concatenate([state["conv"].astype(dt), xs[:, None, :]], axis=1)  # (B, dc, di)
+    conv = jnp.einsum("bcd,cd->bd", window, w) + p["conv_b"].astype(dt)
+    u = jax.nn.silu(conv)
+
+    proj = u @ p["x_proj"].astype(dt)
+    dtr = cfg.resolved_dt_rank
+    dt_in, b_ssm, c_ssm = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    delta = jax.nn.softplus(dt_in @ p["dt_proj"].astype(dt) + p["dt_bias"].astype(dt))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    delta32 = delta.astype(jnp.float32)
+    a = jnp.exp(delta32[..., None] * A)                     # (B, di, ds)
+    bx = (delta32 * u.astype(jnp.float32))[..., None] * b_ssm.astype(jnp.float32)[:, None, :]
+    h = a * state["ssm"] + bx
+
+    y = jnp.einsum("bds,bs->bd", h, c_ssm.astype(jnp.float32)).astype(dt)
+    y = y + u * p["D"].astype(dt)
+    y = y * jax.nn.silu(z)
+    out = (y @ p["out_proj"].astype(dt))[:, None, :]
+    return out, {"conv": window[:, 1:].astype(state["conv"].dtype), "ssm": h}

@@ -1,0 +1,396 @@
+"""Model assembly: pattern-cyclic blocks, scan-over-layer-groups, embeddings,
+LM head; forward (train/prefill) and decode paths with caches.
+
+Layers are grouped by the config's block pattern period and stacked so a
+single ``lax.scan`` executes all full groups (HLO size O(pattern period),
+not O(depth)); remainder layers run unscanned.  Caches mirror the same
+grouping so decode scans carry them as scan xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (
+    apply_norm,
+    attention_pspecs,
+    decode_attention,
+    init_kv_cache,
+    kv_cache_pspec,
+    mlp,
+    mlp_pspecs,
+    multihead_attention,
+    norm_pspec,
+)
+from .moe import moe_block, moe_pspecs
+from .params import PSpec, is_pspec
+from .rglru import rglru_block, rglru_decode, rglru_pspecs, rglru_state_specs
+from .sharding import constrain
+from .ssm import mamba_block, mamba_decode, mamba_pspecs, mamba_state_specs
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Parameter declaration
+# ---------------------------------------------------------------------------
+
+
+def block_pspecs(cfg: ModelConfig, kind: str) -> Params:
+    p: Params = {}
+    n1 = norm_pspec(cfg)
+    if n1 is not None:
+        p["norm1"] = n1
+    if kind in ("attn", "attn_local"):
+        p["attn"] = attention_pspecs(cfg)
+    elif kind == "rglru":
+        p["rglru"] = rglru_pspecs(cfg)
+    elif kind == "mamba":
+        p["mamba"] = mamba_pspecs(cfg)
+        return p  # mamba blocks have no separate MLP
+    n2 = norm_pspec(cfg)
+    if n2 is not None:
+        p["norm2"] = n2
+    if cfg.is_moe:
+        p["moe"] = moe_pspecs(cfg)
+    else:
+        p["mlp"] = mlp_pspecs(cfg)
+    return p
+
+
+def _stack(tree: Any, n: int) -> Any:
+    def f(p: PSpec) -> PSpec:
+        return PSpec((n,) + p.shape, ("layers",) + p.axes, p.init, p.scale, p.dtype)
+
+    return jax.tree_util.tree_map(f, tree, is_leaf=is_pspec)
+
+
+def model_pspecs(cfg: ModelConfig) -> Params:
+    p: Params = {
+        "embed": {"tok": PSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), init="lecun")}
+    }
+    return _with_param_dtype(_model_pspecs_body(cfg, p), cfg)
+
+
+def _with_param_dtype(tree: Params, cfg: ModelConfig) -> Params:
+    """Store parameters in cfg.param_dtype (bf16 halves FSDP gathers and
+    gradient buffers; the optimizer then keeps an f32 master copy)."""
+    if cfg.param_dtype == "float32":
+        return tree
+    dt = jnp.dtype(cfg.param_dtype)
+
+    def f(p: PSpec) -> PSpec:
+        return PSpec(p.shape, p.axes, p.init, p.scale, dt)
+
+    return jax.tree_util.tree_map(f, tree, is_leaf=is_pspec)
+
+
+def _model_pspecs_body(cfg: ModelConfig, p: Params) -> Params:
+    G, P_ = cfg.n_groups, cfg.pattern_period
+    if cfg.scan_layers and G > 0:
+        p["groups"] = {
+            f"b{i}": _stack(block_pspecs(cfg, kind), G)
+            for i, kind in enumerate(cfg.block_pattern)
+        }
+        rest_kinds = [cfg.block_kind(G * P_ + j) for j in range(cfg.n_rest_layers)]
+    else:
+        rest_kinds = [cfg.block_kind(i) for i in range(cfg.n_layers)]
+    p["rest"] = [block_pspecs(cfg, k) for k in rest_kinds]
+    fn = norm_pspec(cfg)
+    if fn is not None:
+        p["final_norm"] = fn
+    if not cfg.tie_embeddings:
+        p["lm_head"] = PSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), init="lecun")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Blocks (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def apply_block(
+    cfg: ModelConfig, kind: str, p: Params, x: jax.Array, positions: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, x, p.get("norm1"))
+    if kind in ("attn", "attn_local"):
+        x = x + multihead_attention(cfg, p["attn"], h, positions, local=(kind == "attn_local"))
+    elif kind == "rglru":
+        x = x + rglru_block(cfg, p["rglru"], h)
+    elif kind == "mamba":
+        return x + mamba_block(cfg, p["mamba"], h), aux
+    x = constrain(x, "batch", None, None)
+    h2 = apply_norm(cfg, x, p.get("norm2"))
+    if "moe" in p:
+        y, aux = moe_block(cfg, p["moe"], h2)
+    else:
+        y = mlp(cfg, p["mlp"], h2)
+    x = x + y
+    return constrain(x, "batch", None, None), aux
+
+
+def _group_body(cfg: ModelConfig, carry, group_params, positions):
+    x, aux = carry
+    for i, kind in enumerate(cfg.block_pattern):
+        x, a = apply_block(cfg, kind, group_params[f"b{i}"], x, positions)
+        aux = aux + a
+    return (x, aux)
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: Optional[jax.Array] = None,       # (B, S) int32
+    embeds: Optional[jax.Array] = None,       # (B, S, d) modality-frontend stub
+    positions: Optional[jax.Array] = None,    # (S,)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S, V), moe_aux)."""
+    if embeds is not None:
+        x = embeds.astype(cfg.dtype)
+        S = x.shape[1]
+    else:
+        x = params["embed"]["tok"].astype(cfg.dtype)[tokens]
+        S = tokens.shape[1]
+    if positions is None:
+        positions = jnp.arange(S)
+    x = constrain(x, "batch", None, None)
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.scan_layers and cfg.n_groups > 0 and "groups" in params:
+        body = _remat(cfg, functools.partial(_group_body, cfg, positions=positions))
+
+        def scan_fn(carry, gp):
+            return body(carry, gp), None
+
+        (x, aux), _ = jax.lax.scan(scan_fn, (x, aux), params["groups"])
+    # remainder layers (and the no-scan path) run unrolled:
+    rest_start = cfg.n_groups * cfg.pattern_period if (cfg.scan_layers and "groups" in params) else 0
+    for j, p_rest in enumerate(params["rest"]):
+        kind = cfg.block_kind(rest_start + j)
+        x, a = apply_block(cfg, kind, p_rest, x, positions)
+        aux = aux + a
+
+    x = apply_norm(cfg, x, params.get("final_norm"))
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.dtype))
+    if cfg.logits_f32:
+        logits = logits.astype(jnp.float32)
+    return constrain(logits, "batch", None, "act_vocab"), aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward + populated decode caches
+# ---------------------------------------------------------------------------
+
+
+def apply_block_prefill(
+    cfg: ModelConfig,
+    kind: str,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    max_seq: int,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    h = apply_norm(cfg, x, p.get("norm1"))
+    if kind in ("attn", "attn_local"):
+        y, cache = multihead_attention(
+            cfg, p["attn"], h, positions, local=(kind == "attn_local"),
+            cache_max_seq=max_seq,
+        )
+        x = x + y
+    elif kind == "rglru":
+        from .rglru import rglru_block as _rg
+
+        y, cache = _rg(cfg, p["rglru"], h, return_state=True)
+        x = x + y
+    elif kind == "mamba":
+        from .ssm import mamba_block as _mb
+
+        y, cache = _mb(cfg, p["mamba"], h, return_state=True)
+        return x + y, cache
+    h2 = apply_norm(cfg, x, p.get("norm2"))
+    if "moe" in p:
+        y, _ = moe_block(cfg, p["moe"], h2)
+    else:
+        y = mlp(cfg, p["mlp"], h2)
+    return x + y, cache
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: Optional[jax.Array] = None,
+    embeds: Optional[jax.Array] = None,
+    max_seq: Optional[int] = None,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Full-sequence forward that also builds the decode cache.
+    Returns (logits (B, S, V), cache sized for ``max_seq`` (default S))."""
+    if embeds is not None:
+        x = embeds.astype(cfg.dtype)
+        S = x.shape[1]
+    else:
+        x = params["embed"]["tok"].astype(cfg.dtype)[tokens]
+        S = tokens.shape[1]
+    max_seq = max_seq or S
+    positions = jnp.arange(S)
+    x = constrain(x, "batch", None, None)
+
+    cache: Dict[str, Any] = {"rest": []}
+    if cfg.scan_layers and cfg.n_groups > 0 and "groups" in params:
+
+        def scan_fn(carry, gp):
+            xc = carry
+            entries = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                xc, c = apply_block_prefill(cfg, kind, gp[f"b{i}"], xc, positions, max_seq)
+                entries[f"b{i}"] = c
+            return xc, entries
+
+        x, groups_cache = jax.lax.scan(scan_fn, x, params["groups"])
+        cache["groups"] = groups_cache
+        rest_start = cfg.n_groups * cfg.pattern_period
+    else:
+        rest_start = 0
+    for j, p_rest in enumerate(params["rest"]):
+        kind = cfg.block_kind(rest_start + j)
+        x, c = apply_block_prefill(cfg, kind, p_rest, x, positions, max_seq)
+        cache["rest"].append(c)
+
+    x = apply_norm(cfg, x, params.get("final_norm"))
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.dtype))
+    if cfg.logits_f32:
+        logits = logits.astype(jnp.float32)
+    return constrain(logits, "batch", None, "act_vocab"), cache
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+
+def _cache_entry_spec(cfg: ModelConfig, kind: str, batch: int, max_seq: int):
+    if kind == "attn":
+        return kv_cache_pspec(cfg, batch, local=False, max_seq=max_seq)
+    if kind == "attn_local":
+        return kv_cache_pspec(cfg, batch, local=True, max_seq=max_seq)
+    if kind == "rglru":
+        return rglru_state_specs(cfg, batch)
+    if kind == "mamba":
+        return mamba_state_specs(cfg, batch)
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    """Abstract cache pytree mirroring the grouped layer structure."""
+    out: Dict[str, Any] = {}
+    G = cfg.n_groups
+
+    def stack_specs(tree):
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((G,) + s.shape, s.dtype), tree
+        )
+
+    if cfg.scan_layers and G > 0:
+        out["groups"] = {
+            f"b{i}": stack_specs(_cache_entry_spec(cfg, kind, batch, max_seq))
+            for i, kind in enumerate(cfg.block_pattern)
+        }
+        rest_kinds = [cfg.block_kind(G * cfg.pattern_period + j) for j in range(cfg.n_rest_layers)]
+    else:
+        rest_kinds = [cfg.block_kind(i) for i in range(cfg.n_layers)]
+    out["rest"] = [_cache_entry_spec(cfg, k, batch, max_seq) for k in rest_kinds]
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_specs(cfg, batch, max_seq)
+    )
+
+
+def apply_block_decode(
+    cfg: ModelConfig,
+    kind: str,
+    p: Params,
+    x: jax.Array,              # (B, 1, d)
+    cache: Dict[str, jax.Array],
+    pos: jax.Array,            # scalar
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    h = apply_norm(cfg, x, p.get("norm1"))
+    if kind in ("attn", "attn_local"):
+        y, cache = decode_attention(cfg, p["attn"], h, cache, pos, local=(kind == "attn_local"))
+        x = x + y
+    elif kind == "rglru":
+        y, cache = rglru_decode(cfg, p["rglru"], h, cache)
+        x = x + y
+    elif kind == "mamba":
+        y, cache = mamba_decode(cfg, p["mamba"], h, cache)
+        return x + y, cache
+    h2 = apply_norm(cfg, x, p.get("norm2"))
+    if "moe" in p:
+        y, _ = moe_block(cfg, p["moe"], h2)
+    else:
+        y = mlp(cfg, p["mlp"], h2)
+    return x + y, cache
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,                 # (B, 1) int32
+    cache: Dict[str, Any],
+    pos: jax.Array,                    # scalar int32
+    embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One token for every sequence in the batch.  Returns (logits, cache)."""
+    if embeds is not None:
+        x = embeds.astype(cfg.dtype)
+    else:
+        x = params["embed"]["tok"].astype(cfg.dtype)[tokens]
+    x = constrain(x, "batch", None, None)
+
+    new_cache: Dict[str, Any] = {"rest": []}
+    if cfg.scan_layers and cfg.n_groups > 0 and "groups" in params:
+
+        def scan_fn(carry, xs):
+            xc = carry
+            gp, gc = xs
+            gc_new = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                xc, c = apply_block_decode(cfg, kind, gp[f"b{i}"], xc, gc[f"b{i}"], pos)
+                gc_new[f"b{i}"] = c
+            return xc, gc_new
+
+        x, groups_cache = jax.lax.scan(scan_fn, x, (params["groups"], cache["groups"]))
+        new_cache["groups"] = groups_cache
+        rest_start = cfg.n_groups * cfg.pattern_period
+    else:
+        rest_start = 0
+    for j, p_rest in enumerate(params["rest"]):
+        kind = cfg.block_kind(rest_start + j)
+        x, c = apply_block_decode(cfg, kind, p_rest, x, cache["rest"][j], pos)
+        new_cache["rest"].append(c)
+
+    x = apply_norm(cfg, x, params.get("final_norm"))
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.dtype))
+    if cfg.logits_f32:
+        logits = logits.astype(jnp.float32)
+    return constrain(logits, "batch", None, "act_vocab"), new_cache

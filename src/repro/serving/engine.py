@@ -1,0 +1,130 @@
+"""Batched serving engine: request queue -> prefill -> lockstep batched
+decode with greedy/temperature sampling, EOS + max-length termination.
+
+The engine serves fixed-size batch waves (static batching): requests are
+grouped into waves of ``batch_size``, each wave shares one KV cache and
+decodes in lockstep — the pattern the decode_32k dry-run cells lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..models.transformer import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0           # 0 = greedy
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: Optional[np.ndarray] = None
+    latency_s: float = 0.0
+
+
+@dataclasses.dataclass
+class EngineStats:
+    waves: int = 0
+    requests: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return (self.prefill_tokens + self.decode_tokens) / max(self.wall_s, 1e-9)
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        batch_size: int = 4,
+        max_seq: int = 512,
+        rng_seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.batch_size = batch_size
+        self.max_seq = max_seq
+        self._key = jax.random.PRNGKey(rng_seed)
+        self.stats = EngineStats()
+
+        self._prefill = jax.jit(
+            lambda p, toks: prefill(cfg, p, tokens=toks, max_seq=max_seq)
+        )
+
+        def _decode(p, toks, cache, pos, key, temps):
+            logits, cache = decode_step(cfg, p, toks, cache, pos)
+            logits = logits[:, 0, :]
+            greedy = jnp.argmax(logits, axis=-1)
+            sampled = jax.random.categorical(key, logits / jnp.maximum(temps, 1e-6)[:, None])
+            nxt = jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+            return nxt[:, None], cache
+
+        self._decode = jax.jit(_decode, donate_argnums=(2,))
+
+    # -- wave execution -------------------------------------------------------
+
+    def _run_wave(self, wave: List[Request]) -> None:
+        t0 = time.time()
+        B = self.batch_size
+        S = max(len(r.prompt) for r in wave)
+        prompts = np.zeros((B, S), np.int32)
+        for i, r in enumerate(wave):
+            prompts[i, S - len(r.prompt):] = r.prompt  # left-pad into lockstep
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts))
+        self.stats.prefill_tokens += B * S
+
+        temps = jnp.asarray(
+            [r.temperature for r in wave] + [0.0] * (B - len(wave)), jnp.float32
+        )
+        max_new = max(r.max_new_tokens for r in wave)
+        toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        outputs = [[] for _ in range(B)]
+        done = np.zeros(B, bool)
+        first = np.asarray(toks)
+        for i, r in enumerate(wave):
+            outputs[i].append(int(first[i, 0]))
+            if (r.eos_id is not None and first[i, 0] == r.eos_id) or r.max_new_tokens <= 1:
+                done[i] = True
+
+        for step in range(1, max_new):
+            if all(done[: len(wave)]):
+                break
+            self._key, sub = jax.random.split(self._key)
+            toks, cache = self._decode(
+                self.params, toks, cache, jnp.int32(S + step - 1), sub, temps
+            )
+            self.stats.decode_tokens += int(B)
+            host = np.asarray(toks)[:, 0]
+            for i, r in enumerate(wave):
+                if done[i]:
+                    continue
+                outputs[i].append(int(host[i]))
+                if (r.eos_id is not None and host[i] == r.eos_id) or len(outputs[i]) >= r.max_new_tokens:
+                    done[i] = True
+            if all(done[: len(wave)]):
+                break
+
+        dt = time.time() - t0
+        for i, r in enumerate(wave):
+            r.output = np.asarray(outputs[i][: r.max_new_tokens], np.int32)
+            r.latency_s = dt
+        self.stats.waves += 1
+        self.stats.requests += len(wave)
+        self.stats.wall_s += dt
+
+    def serve(self, requests: List[Request]) -> List[Request]:
+        for i in range(0, len(requests), self.batch_size):
+            self._run_wave(requests[i : i + self.batch_size])
+        return requests

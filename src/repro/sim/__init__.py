@@ -1,0 +1,21 @@
+"""Modular full-system simulation of the multi-pod TPU testbed.
+
+Component simulators (each writing its own ad-hoc log format):
+* devicesim — chips (gem5 role): op timeline under a roofline cost model
+* hostsim   — host runtime (SimBricks host/NIC role): input pipeline, DMA,
+              dispatch, checkpoints, clocks + NTP
+* netsim    — interconnect (ns3 role): ICI/DCN/PCIe links, chunk transfers,
+              background traffic
+
+cluster.ClusterOrchestrator assembles them (SimBricks role); workload builds
+device programs from compiled XLA artifacts or synthetic specs.
+"""
+from .clock import LogWriter, Sim
+from .cluster import ClusterOrchestrator, FailurePlan, run_ntp_sim, run_training_sim
+from .devicesim import CollectiveInstance, DeviceSim
+from .hostsim import HostClock, HostSim
+from .netsim import NetSim
+from .topology import Link, Topology, ntp_testbed, tpu_cluster
+from .workload import OpSpec, ProgramSpec, program_from_compiled, synthetic_program
+
+__all__ = [k for k in dir() if not k.startswith("_")]

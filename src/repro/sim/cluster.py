@@ -1,0 +1,264 @@
+"""Cluster orchestrator — the SimBricks role: assemble component simulators
+into one full-system simulation and run it.
+
+Owns the global virtual clock, the topology, one DeviceSim per pod, one
+HostSim per host, one NetSim, and the collective rendezvous table.  Writes
+each simulator's log to its own file (or named pipe, §3.8), which are the
+*only* interface Columbo consumes.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .clock import LogWriter, Sim
+from .devicesim import ClusterLike, CollectiveInstance, DeviceSim
+from .hostsim import HostClock, HostSim
+from .netsim import NetSim
+from .topology import Topology, ntp_testbed, tpu_cluster
+from .workload import OpSpec, ProgramSpec
+
+
+@dataclass
+class FailurePlan:
+    host: str
+    fail_at_ps: int
+    restart_after_ps: int
+    restored_step: int = 0
+
+
+class ClusterOrchestrator(ClusterLike):
+    def __init__(
+        self,
+        topo: Topology,
+        outdir: Optional[str] = None,
+        compute_scale: Optional[Dict[str, float]] = None,
+        host_kwargs: Optional[Dict] = None,
+        clock_params: Optional[Dict[str, Tuple[int, float]]] = None,  # host -> (offset_ps, drift_ppm)
+        online_pipes: bool = False,
+    ) -> None:
+        self.sim = Sim()
+        self.topo = topo
+        self.outdir = outdir
+        self.online_pipes = online_pipes
+        if outdir:
+            os.makedirs(outdir, exist_ok=True)
+        self._logs: List[LogWriter] = []
+
+        self.net = NetSim(self.sim, topo, self._mklog("net.log"))
+
+        self.device_sims: Dict[int, DeviceSim] = {}
+        self._chip2dev: Dict[str, DeviceSim] = {}
+        for pod, chips in topo.pods.items():
+            dev = DeviceSim(
+                self.sim, self, pod, chips, self._mklog(f"device-pod{pod}.log"),
+                compute_scale=compute_scale,
+            )
+            self.device_sims[pod] = dev
+            for c in chips:
+                self._chip2dev[c] = dev
+
+        clock_params = clock_params or {}
+        hk = host_kwargs or {}
+        self.hosts: Dict[str, HostSim] = {}
+        for pod, chips in topo.pods.items():
+            name = topo.host_name(pod)
+            off, drift = clock_params.get(name, (0, 0.0))
+            self.hosts[name] = HostSim(
+                self.sim, self, name, self._mklog(f"host-{name}.log"),
+                chips=chips, clock=HostClock(off, drift), **hk,
+            )
+        # hosts that exist in the topology but have no chips (NTP testbed)
+        for name in topo.hosts:
+            if name not in self.hosts:
+                off, drift = clock_params.get(name, (0, 0.0))
+                self.hosts[name] = HostSim(
+                    self.sim, self, name, self._mklog(f"host-{name}.log"),
+                    chips=[], clock=HostClock(off, drift), **hk,
+                )
+
+        self._collectives: Dict[Tuple, CollectiveInstance] = {}
+        self._coll_seq = 0
+
+    # -- log management -----------------------------------------------------------------
+
+    def _mklog(self, fname: str) -> LogWriter:
+        if self.outdir:
+            path = os.path.join(self.outdir, fname)
+            if self.online_pipes:
+                # §3.8: logs go to named pipes; Columbo must already be
+                # reading (open of a FIFO's write end blocks until then).
+                import stat
+
+                if not (os.path.exists(path) and stat.S_ISFIFO(os.stat(path).st_mode)):
+                    if os.path.exists(path):
+                        os.remove(path)
+                    os.mkfifo(path)
+                lw = LogWriter(path)
+            else:
+                lw = LogWriter(path)
+        else:
+            lw = LogWriter()
+        self._logs.append(lw)
+        return lw
+
+    def log_paths(self) -> Dict[str, List[str]]:
+        """sim_type -> list of log paths (input for a ColumboScript)."""
+        assert self.outdir is not None
+        out: Dict[str, List[str]] = {"host": [], "device": [], "net": []}
+        for lw in self._logs:
+            if lw.path is None:
+                continue
+            base = os.path.basename(lw.path)
+            if base.startswith("host-"):
+                out["host"].append(lw.path)
+            elif base.startswith("device-"):
+                out["device"].append(lw.path)
+            else:
+                out["net"].append(lw.path)
+        return out
+
+    def close(self) -> None:
+        for lw in self._logs:
+            lw.close()
+
+    # -- ClusterLike interface -------------------------------------------------------------
+
+    def device_sim_for(self, chip: str) -> DeviceSim:
+        return self._chip2dev[chip]
+
+    def get_collective(self, chip: str, op: OpSpec, step: int) -> CollectiveInstance:
+        """Rendezvous: all chips of a ring group share one instance.
+
+        * group="ici": ring over the chips of the *caller's pod* (one
+          instance per pod), modeling per-axis intra-pod rings.
+        * group="dcn": ring over the caller's homologue chip in every pod
+          (cross-pod gradient path through hosts + DCN links; all homologue
+          rings share the same DCN links, modeling contention).
+        """
+        if op.group == "dcn":
+            pod = next(p for p, chips in self.topo.pods.items() if chip in chips)
+            i = self.topo.pods[pod].index(chip)
+            ring = [chips[i] for chips in self.topo.pods.values()]
+            key = ("dcn", op.kind, op.name, step, i)
+        else:
+            pod = next(p for p, chips in self.topo.pods.items() if chip in chips)
+            ring = list(self.topo.pods[pod])
+            key = ("ici", pod, op.kind, op.name, step)
+        inst = self._collectives.get(key)
+        if inst is None:
+            self._coll_seq += 1
+            cid = f"{op.kind[:2]}{self._coll_seq}.{op.name}.s{step}"
+            inst = CollectiveInstance(self, cid, op.kind, ring, op.coll_bytes)
+            self._collectives[key] = inst
+        return inst
+
+    def dispatch(
+        self,
+        host: HostSim,
+        chip: str,
+        program: ProgramSpec,
+        step: int,
+        on_done: Callable[[str, int], None],
+    ) -> None:
+        """Host -> chip program dispatch (PCIe natural boundary)."""
+        dev = self.device_sim_for(chip)
+        # small dispatch latency over PCIe (command, not payload)
+        self.sim.after(
+            500_000, lambda: dev.run_program(chip, program, step, lambda t: on_done(chip, t))
+        )
+
+    # -- failure injection --------------------------------------------------------------------
+
+    def inject_failure(self, plan: FailurePlan) -> None:
+        h = self.hosts[plan.host]
+        self.sim.at(plan.fail_at_ps, h.fail)
+        self.sim.at(plan.fail_at_ps + plan.restart_after_ps, lambda: h.restart(plan.restored_step))
+
+    # -- run --------------------------------------------------------------------------------
+
+    def run(self, until: Optional[int] = None) -> int:
+        self.sim.run(until=until)
+        self.close()
+        return self.sim.now
+
+
+# -------------------------------------------------------------------------------------------
+# Convenience entry points
+# -------------------------------------------------------------------------------------------
+
+
+def run_training_sim(
+    program: ProgramSpec,
+    n_steps: int = 2,
+    n_pods: int = 2,
+    chips_per_pod: int = 4,
+    outdir: Optional[str] = None,
+    compute_scale: Optional[Dict[str, float]] = None,
+    bg_traffic_link: Optional[str] = None,
+    bg_rate: float = 40e9,
+    ckpt_every: int = 0,
+    failure: Optional[FailurePlan] = None,
+) -> ClusterOrchestrator:
+    """Simulate n_steps of a training program on a multi-pod testbed."""
+    topo = tpu_cluster(n_pods=n_pods, chips_per_pod=chips_per_pod)
+    cluster = ClusterOrchestrator(
+        topo, outdir=outdir, compute_scale=compute_scale,
+        host_kwargs={"ckpt_every": ckpt_every},
+    )
+    if bg_traffic_link is not None:
+        link = topo.links[bg_traffic_link]
+        cluster.net.start_bulk_flow(link.a, link.b, bg_rate, segment_bytes=1 << 20, flow_id="bulk0")
+    if failure is not None:
+        cluster.inject_failure(failure)
+    # stop background flows (so the event queue drains) once every host with
+    # chips has finished its steps
+    training_hosts = [h for h in cluster.hosts.values() if h.chips]
+    remaining = {"n": len(training_hosts)}
+
+    def _one_done() -> None:
+        remaining["n"] -= 1
+        if remaining["n"] == 0:
+            cluster.net.stop_all_flows()
+
+    for h in training_hosts:
+        h.run_steps(program, n_steps, on_all_done=_one_done)
+        h.start_heartbeats(every_ps=50_000_000_000, n=max(2, n_steps * 2))
+    cluster.run()
+    return cluster
+
+
+def run_ntp_sim(
+    background: bool,
+    sim_seconds: float = 30.0,
+    poll_s: float = 1.0,
+    outdir: Optional[str] = None,
+    client_offset_ps: int = 5_000_000,     # client starts 5 us ahead
+    client_drift_ppm: float = 8.0,
+    server_drift_ppm: float = -3.0,
+    bg_rate: float = 1.2e9,                # ~saturates the 1.25 GB/s link
+) -> ClusterOrchestrator:
+    """The paper's §5 case study: NTP sync with/without background traffic."""
+    topo = ntp_testbed()
+    cluster = ClusterOrchestrator(
+        topo,
+        outdir=outdir,
+        clock_params={
+            "client": (client_offset_ps, client_drift_ppm),
+            "server": (0, server_drift_ppm),
+        },
+    )
+    horizon = int(sim_seconds * 1e12)
+    client = cluster.hosts["client"]
+    server = cluster.hosts["server"]
+    n_polls = int(sim_seconds / poll_s) - 1
+    client.start_ntp_client(server, every_ps=int(poll_s * 1e12), n=n_polls)
+    client.start_clock_reads(every_ps=int(poll_s * 1e12 / 2), n=2 * n_polls)
+    server.start_clock_reads(every_ps=int(poll_s * 1e12 / 2), n=2 * n_polls)
+    if background:
+        cluster.net.start_bulk_flow(
+            "bgsrc", "bgsink", bg_rate, segment_bytes=1 << 20, stop_ps=horizon
+        )
+    cluster.run(until=horizon)
+    return cluster

@@ -1,0 +1,295 @@
+"""Accelerator-chip simulator (the gem5 role in the paper's testbed).
+
+One DeviceSim instance simulates all chips of one pod (one "simulator
+process" per pod, as SimBricks runs one gem5 per host) and writes a
+gem5-flavoured log::
+
+    <tick>: system.pod0.chip03: OpBegin: op=op12 name=layer3.fwdbwd flops=... step=2
+    <tick>: system.pod0.chip03: CollectiveChunkTx: coll=ar.5 chunk=c42 ...
+
+Chips execute a ProgramSpec op list serially under a roofline cost model
+(compute time = max(flops/MXU, bytes/HBM) + fixed overhead).  Collectives
+run as ring algorithms whose chunks travel through the interconnect
+simulator — cross-simulator causality therefore flows through the same
+natural boundaries as in a real system (and as in the paper): the
+chip→interconnect chunk handoff, and the host→chip dispatch.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .clock import LogWriter, Sim
+from .netsim import NetSim
+from .topology import Topology
+from .workload import OpSpec, ProgramSpec
+
+_COLL_ROUND_FACTORS = {
+    # kind -> (rounds(N), chunk_bytes(B, N))
+    "all-reduce": (lambda n: 2 * (n - 1), lambda b, n: b / n),
+    "reduce-scatter": (lambda n: n - 1, lambda b, n: b / n),
+    "all-gather": (lambda n: n - 1, lambda b, n: b),
+    "collective-permute": (lambda n: 1, lambda b, n: b),
+}
+
+
+class CollectiveInstance:
+    """One in-flight collective over a ring group of chips."""
+
+    _ids = itertools.count()
+
+    def __init__(
+        self,
+        cluster: "ClusterLike",
+        coll_id: str,
+        kind: str,
+        participants: List[str],
+        op_bytes: float,
+    ) -> None:
+        self.cluster = cluster
+        self.coll_id = coll_id
+        self.kind = kind
+        self.ring = participants
+        self.n = len(participants)
+        self.idx = {c: i for i, c in enumerate(participants)}
+        self.op_bytes = op_bytes
+        if kind == "all-to-all":
+            self.rounds = self.n - 1
+            self.chunk_bytes = max(1, int(op_bytes / max(self.n, 1)))
+        else:
+            rf, cf = _COLL_ROUND_FACTORS[kind]
+            self.rounds = max(1, rf(self.n)) if self.n > 1 else 0
+            self.chunk_bytes = max(1, int(cf(op_bytes, self.n)))
+        self.arrived: Dict[str, bool] = {}
+        self.sent: Dict[str, int] = {c: 0 for c in participants}
+        self.recv: Dict[str, int] = {c: 0 for c in participants}
+        self.resume: Dict[str, Callable[[], None]] = {}
+        self.done: Dict[str, bool] = {c: False for c in participants}
+        self._chunk_seq = itertools.count()
+
+    # -- entry point from the device sim -------------------------------------------
+
+    def arrive(self, chip: str, resume: Callable[[], None]) -> None:
+        assert chip not in self.arrived, (
+            f"{chip} arrived twice at collective {self.coll_id} — two program "
+            f"ops rendezvoused on one instance (op name/kind collision?)"
+        )
+        self.arrived[chip] = True
+        self.resume[chip] = resume
+        if self.n <= 1 or self.rounds == 0:
+            self._finish(chip)
+            return
+        if self.kind == "all-to-all":
+            # direct sends to every peer (multi-hop routes model congestion)
+            for j in range(1, self.n):
+                dst = self.ring[(self.idx[chip] + j) % self.n]
+                self._send(chip, dst, round_no=j - 1)
+        else:
+            self._pump(chip)
+        # chunks may have been delivered before this chip reached the
+        # collective (late arrival): re-check completion now
+        if self.recv[chip] >= self.rounds and not self.done[chip]:
+            self._finish(chip)
+
+    # -- ring machinery --------------------------------------------------------------
+
+    def _pump(self, chip: str) -> None:
+        """Issue every currently-eligible ring send for ``chip``."""
+        while (
+            self.sent[chip] < self.rounds
+            and self.sent[chip] <= self.recv[chip]
+            and self.arrived.get(chip)
+        ):
+            r = self.sent[chip]
+            self.sent[chip] += 1
+            dst = self.ring[(self.idx[chip] + 1) % self.n]
+            self._send(chip, dst, round_no=r)
+
+    def _send(self, src: str, dst: str, round_no: int) -> None:
+        cid = f"{self.coll_id}.k{next(self._chunk_seq)}"
+        dev = self.cluster.device_sim_for(src)
+        dev.log_event(
+            src,
+            "CollectiveChunkTx",
+            coll=self.coll_id,
+            chunk=cid,
+            dst=dst,
+            round=round_no,
+            size=self.chunk_bytes,
+        )
+        self.cluster.net.transfer(
+            src,
+            dst,
+            self.chunk_bytes,
+            meta={"coll": self.coll_id, "round": round_no, "src": src, "dst": dst},
+            on_delivered=lambda t, d=dst, r=round_no, c=cid: self._on_recv(d, r, c),
+            chunk_id=cid,
+        )
+
+    def _on_recv(self, chip: str, round_no: int, cid: str) -> None:
+        self.recv[chip] += 1
+        dev = self.cluster.device_sim_for(chip)
+        dev.log_event(
+            chip, "CollectiveChunkRx", coll=self.coll_id, chunk=cid, round=round_no,
+            size=self.chunk_bytes,
+        )
+        if self.recv[chip] >= self.rounds:
+            if self.arrived.get(chip) and not self.done[chip]:
+                self._finish(chip)
+        elif self.kind != "all-to-all":
+            self._pump(chip)
+
+    def _finish(self, chip: str) -> None:
+        self.done[chip] = True
+        cb = self.resume.pop(chip, None)
+        if cb is not None:
+            cb()
+
+    def maybe_finish_late(self, chip: str, resume: Callable[[], None]) -> bool:
+        """For async waits: True if already complete for ``chip`` (without
+        registering or invoking ``resume``); otherwise registers ``resume``."""
+        if self.done.get(chip):
+            return True
+        if not self.arrived.get(chip):
+            # async start happened earlier; arriving now
+            self.arrived[chip] = True
+            self._pump(chip)
+            if self.recv[chip] >= self.rounds:
+                self.done[chip] = True
+                return True
+        self.resume[chip] = resume
+        return False
+
+
+class ClusterLike:
+    """Interface the collective engine needs from the cluster orchestrator."""
+
+    net: NetSim
+
+    def device_sim_for(self, chip: str) -> "DeviceSim":
+        raise NotImplementedError
+
+    def get_collective(self, chip: str, op: OpSpec, step: int) -> CollectiveInstance:
+        raise NotImplementedError
+
+
+class DeviceSim:
+    """All chips of one pod; writes one gem5-flavoured log."""
+
+    def __init__(
+        self,
+        sim: Sim,
+        cluster: ClusterLike,
+        pod: int,
+        chips: List[str],
+        log: LogWriter,
+        compute_scale: Optional[Dict[str, float]] = None,
+    ) -> None:
+        self.sim = sim
+        self.cluster = cluster
+        self.pod = pod
+        self.chips = chips
+        self.log = log
+        self.chip_spec = cluster.topo.chip  # type: ignore[attr-defined]
+        self.compute_scale = compute_scale or {}
+        self._async: Dict[Tuple[str, str, int], CollectiveInstance] = {}
+        self.ops_executed = 0
+
+    # -- logging (gem5 flavour) -------------------------------------------------------
+
+    def log_event(self, chip: str, ev_name: str, **attrs) -> None:
+        kv = " ".join(f"{k}={v}" for k, v in attrs.items())
+        self.log.write(f"{self.sim.now}: system.{chip}: {ev_name}: {kv}")
+
+    # -- program execution --------------------------------------------------------------
+
+    def run_program(
+        self,
+        chip: str,
+        program: ProgramSpec,
+        step: int,
+        on_done: Callable[[int], None],
+    ) -> None:
+        self.log_event(chip, "ProgramStart", program=program.name, step=step)
+        self._exec(chip, program, step, 0, on_done)
+
+    def _exec(
+        self,
+        chip: str,
+        program: ProgramSpec,
+        step: int,
+        idx: int,
+        on_done: Callable[[int], None],
+    ) -> None:
+        if idx >= len(program.ops):
+            self.log_event(chip, "ProgramEnd", program=program.name, step=step)
+            on_done(self.sim.now)
+            return
+        op = program.ops[idx]
+        nxt = lambda: self._exec(chip, program, step, idx + 1, on_done)
+        if op.kind == "compute":
+            self._exec_compute(chip, op, idx, step, nxt)
+        elif op.kind == "wait":
+            inst = self._async.pop((chip, op.wait_for or "", step), None)
+            if inst is None:
+                nxt()
+            else:
+
+                def _done_wait(inst=inst) -> None:
+                    self.log_event(chip, "CollectiveEnd", coll=inst.coll_id, step=step)
+                    nxt()
+
+                if inst.maybe_finish_late(chip, _done_wait):
+                    _done_wait()
+        else:
+            self._exec_collective(chip, op, step, nxt)
+
+    def _exec_compute(
+        self, chip: str, op: OpSpec, idx: int, step: int, nxt: Callable[[], None]
+    ) -> None:
+        c = self.chip_spec
+        scale = self.compute_scale.get(chip, 1.0)
+        t_flops = op.flops / c.flops_per_ps if op.flops else 0.0
+        t_bytes = op.bytes / c.hbm_bytes_per_ps if op.bytes else 0.0
+        dur = int(max(t_flops, t_bytes) * scale) + c.op_overhead_ps
+        self.log_event(
+            chip, "OpBegin", op=f"op{idx}", name=op.name, flops=int(op.flops),
+            bytes=int(op.bytes), step=step,
+        )
+        if t_flops >= t_bytes and op.flops:
+            self.log_event(chip, "MxuIssue", op=f"op{idx}", busy_ps=int(t_flops * scale))
+        if op.bytes:
+            self.log_event(chip, "HbmRead", op=f"op{idx}", bytes=int(op.bytes * 0.6))
+            self.log_event(chip, "HbmWrite", op=f"op{idx}", bytes=int(op.bytes * 0.4))
+        self.ops_executed += 1
+
+        def _end() -> None:
+            self.log_event(chip, "OpEnd", op=f"op{idx}", name=op.name, step=step)
+            nxt()
+
+        self.sim.after(dur, _end)
+
+    def _exec_collective(
+        self, chip: str, op: OpSpec, step: int, nxt: Callable[[], None]
+    ) -> None:
+        inst = self.cluster.get_collective(chip, op, step)
+        self.log_event(
+            chip, "CollectiveStart", coll=inst.coll_id, kind=op.kind,
+            bytes=int(op.coll_bytes), step=step, ring=inst.n,
+        )
+        if op.async_start:
+            self._async[(chip, op.name, step)] = inst
+            inst.arrive(chip, lambda: None)
+            nxt()
+            return
+
+        def _done() -> None:
+            self.log_event(chip, "CollectiveEnd", coll=inst.coll_id, step=step)
+            nxt()
+
+        inst.arrive(chip, _done)
+
+    # -- DMA landing (PCIe natural boundary, device side) --------------------------------
+
+    def dma_landed(self, chip: str, dma_id: str, nbytes: int) -> None:
+        self.log_event(chip, "DmaRecv", dma=dma_id, bytes=nbytes)

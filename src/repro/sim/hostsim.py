@@ -1,0 +1,273 @@
+"""Host-runtime simulator (the SimBricks host/NIC-driver role).
+
+Simulates the training framework's host side: input pipeline, H2D DMA,
+program dispatch (the PCIe mmio-write analogue), checkpointing, heartbeats —
+and, for the paper's §5 case study, a local system clock with drift plus an
+NTP/chrony-style synchronization loop whose packets travel through the
+interconnect simulator.
+
+Log format (SimBricks nicbm flavour)::
+
+    main_time = <tick>: hostsim-host0: ev=step_begin step=3
+    main_time = <tick>: hostsim-host0: ev=program_enqueue chip=chip00 step=3 program=train_step
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Dict, List, Optional
+
+from .clock import LogWriter, Sim
+from .netsim import NetSim
+from .topology import Topology
+from .workload import ProgramSpec
+
+NTP_PACKET_BYTES = 90
+
+
+class HostClock:
+    """Local system clock: local(t) = t + offset + drift*t, slewable.
+
+    ``offset`` is the true offset from the global clock (ground truth the
+    simulation knows but a real system would not, §1 advantage iii).
+    """
+
+    def __init__(self, offset_ps: int = 0, drift_ppm: float = 0.0) -> None:
+        self.base_offset = float(offset_ps)
+        self.drift = drift_ppm * 1e-6
+        self.slew_total = 0.0
+
+    def local(self, t: int) -> int:
+        return int(t + self.base_offset + self.drift * t + self.slew_total)
+
+    def true_offset(self, t: int) -> int:
+        return self.local(t) - t
+
+    def slew(self, delta_ps: float) -> None:
+        """chrony-style gradual correction (applied instantaneously here;
+        the slew *decision* cadence is what the case study examines)."""
+        self.slew_total += delta_ps
+
+
+class HostSim:
+    """One training host (or NTP client/server in the testbed topology)."""
+
+    def __init__(
+        self,
+        sim: Sim,
+        cluster: "ClusterOrchestrator",
+        name: str,
+        log: LogWriter,
+        chips: Optional[List[str]] = None,
+        clock: Optional[HostClock] = None,
+        data_load_ps: int = 2_000_000_000,      # 2 ms synthetic input pipeline
+        batch_bytes_per_chip: int = 4 << 20,
+        ckpt_every: int = 0,
+        ckpt_shard_bytes: int = 64 << 20,
+        disk_bw: float = 2e9,
+    ) -> None:
+        self.sim = sim
+        self.cluster = cluster
+        self.name = name
+        self.log = log
+        self.chips = chips or []
+        self.clock = clock or HostClock()
+        self.data_load_ps = data_load_ps
+        self.batch_bytes_per_chip = batch_bytes_per_chip
+        self.ckpt_every = ckpt_every
+        self.ckpt_shard_bytes = ckpt_shard_bytes
+        self.disk_bw = disk_bw
+        self._dma_ids = itertools.count()
+        self._step_cb: Optional[Callable[[int], None]] = None
+        self.steps_done = 0
+        self.failed = False
+
+    # -- logging ----------------------------------------------------------------------
+
+    def log_event(self, kind: str, **attrs) -> None:
+        kv = " ".join(f"{k}={v}" for k, v in attrs.items())
+        self.log.write(f"main_time = {self.sim.now}: hostsim-{self.name}: ev={kind} {kv}")
+
+    # -- training-step loop --------------------------------------------------------------
+
+    def run_steps(
+        self,
+        program: ProgramSpec,
+        n_steps: int,
+        on_all_done: Optional[Callable[[], None]] = None,
+    ) -> None:
+        self._run_step(program, 0, n_steps, on_all_done)
+
+    def _run_step(
+        self,
+        program: ProgramSpec,
+        step: int,
+        n_steps: int,
+        on_all_done: Optional[Callable[[], None]],
+    ) -> None:
+        if step >= n_steps:
+            if on_all_done:
+                on_all_done()
+            return
+        if self.failed:
+            # parked; restart() re-enters the loop
+            self._resume = lambda: self._run_step(program, step, n_steps, on_all_done)
+            return
+        self.log_event("step_begin", step=step)
+        self.log_event("data_load_begin", step=step)
+
+        def _after_load() -> None:
+            self.log_event("data_load_end", step=step, bytes=self.batch_bytes_per_chip * len(self.chips))
+            pending = {"n": len(self.chips)}
+
+            def _chip_ready(chip: str) -> None:
+                self.log_event("program_enqueue", chip=_short(chip), step=step, program=program.name)
+                self.cluster.dispatch(self, chip, program, step, _chip_done)
+
+            def _chip_done(chip: str, t: int) -> None:
+                self.log_event("program_retire", chip=_short(chip), step=step, program=program.name)
+                pending["n"] -= 1
+                if pending["n"] == 0:
+                    self._finish_step(program, step, n_steps, on_all_done)
+
+            for chip in self.chips:
+                dma = f"d{next(self._dma_ids)}.{self.name}"
+                self.log_event("dma_h2d_issue", dma=dma, chip=_short(chip), bytes=self.batch_bytes_per_chip)
+                self.cluster.net.transfer(
+                    self.name,
+                    chip,
+                    self.batch_bytes_per_chip,
+                    meta={"dma": dma},
+                    on_delivered=lambda t, c=chip, d=dma: (
+                        self.cluster.device_sim_for(c).dma_landed(c, d, self.batch_bytes_per_chip),
+                        self.log_event("dma_h2d_complete", dma=d, chip=_short(c)),
+                        _chip_ready(c),
+                    ),
+                )
+
+        self.sim.after(self.data_load_ps, _after_load)
+
+    def _finish_step(
+        self,
+        program: ProgramSpec,
+        step: int,
+        n_steps: int,
+        on_all_done: Optional[Callable[[], None]],
+    ) -> None:
+        def _next() -> None:
+            self.log_event("step_end", step=step)
+            self.steps_done += 1
+            self._run_step(program, step + 1, n_steps, on_all_done)
+
+        if self.ckpt_every and (step + 1) % self.ckpt_every == 0:
+            self.log_event("ckpt_begin", step=step)
+            n_shards = max(1, len(self.chips))
+            shard_ps = int(self.ckpt_shard_bytes / (self.disk_bw / 1e12))
+
+            def _write(i: int) -> None:
+                if i >= n_shards:
+                    self.log_event("ckpt_end", step=step)
+                    _next()
+                    return
+                self.log_event("ckpt_shard_write", step=step, shard=i, bytes=self.ckpt_shard_bytes)
+                self.sim.after(shard_ps, lambda: _write(i + 1))
+
+            _write(0)
+        else:
+            _next()
+
+    # -- failure injection ------------------------------------------------------------------
+
+    def fail(self) -> None:
+        self.failed = True
+        self.log_event("host_failure")
+
+    def restart(self, restored_step: int) -> None:
+        self.failed = False
+        self.log_event("host_restart", restored_step=restored_step)
+        if hasattr(self, "_resume"):
+            cb = self._resume
+            del self._resume
+            cb()
+
+    # -- clock reads + NTP (case study §5) ---------------------------------------------------
+
+    def start_clock_reads(self, every_ps: int, n: Optional[int] = None) -> None:
+        count = itertools.count()
+
+        def _read() -> None:
+            i = next(count)
+            if n is not None and i >= n:
+                return
+            self.log_event("clock_read", local=self.clock.local(self.sim.now))
+            self.sim.after(every_ps, _read)
+
+        self.sim.after(every_ps, _read)
+
+    def start_ntp_client(
+        self,
+        server: "HostSim",
+        every_ps: int = 1_000_000_000_000,   # 1 s
+        n: Optional[int] = None,
+        gain: float = 0.5,
+        server_proc_ps: int = 50_000_000,    # 50 us server processing
+    ) -> None:
+        """chrony/NTP: request -> server -> response; estimate offset
+        ((t2-t1)+(t3-t4))/2 and slew by -gain*estimate."""
+        count = itertools.count()
+
+        def _poll() -> None:
+            i = next(count)
+            if n is not None and i >= n:
+                return
+            t1 = self.clock.local(self.sim.now)
+
+            def _at_server(_t: int) -> None:
+                t2 = server.clock.local(self.sim.now)
+
+                def _respond() -> None:
+                    t3 = server.clock.local(self.sim.now)
+
+                    def _at_client(_t2: int) -> None:
+                        t4 = self.clock.local(self.sim.now)
+                        est = ((t2 - t1) + (t3 - t4)) / 2
+                        true_off = server.clock.true_offset(self.sim.now) - self.clock.true_offset(self.sim.now)
+                        self.log_event(
+                            "ntp_exchange",
+                            t1=t1, t2=t2, t3=t3, t4=t4,
+                            est_off=int(est), true_off=int(true_off), seq=i,
+                        )
+                        self.clock.slew(gain * est)
+
+                    self.cluster.net.transfer(
+                        server.name, self.name, NTP_PACKET_BYTES,
+                        meta={"proto": "ntp", "dir": "resp", "seq": i, "peer": self.name},
+                        on_delivered=_at_client,
+                    )
+
+                self.sim.after(server_proc_ps, _respond)
+
+            self.cluster.net.transfer(
+                self.name, server.name, NTP_PACKET_BYTES,
+                meta={"proto": "ntp", "dir": "req", "seq": i, "peer": self.name},
+                on_delivered=_at_server,
+            )
+            self.sim.after(every_ps, _poll)
+
+        self.sim.after(every_ps, _poll)
+
+    def start_heartbeats(self, every_ps: int = 10_000_000_000, n: Optional[int] = None) -> None:
+        count = itertools.count()
+
+        def _hb() -> None:
+            i = next(count)
+            if n is not None and i >= n:
+                return
+            self.log_event("heartbeat", seq=i)
+            self.sim.after(every_ps, _hb)
+
+        self.sim.after(every_ps, _hb)
+
+
+def _short(chip: str) -> str:
+    """'pod0.chip03' -> 'chip03' (hosts address chips by local id)."""
+    return chip.rsplit(".", 1)[-1]

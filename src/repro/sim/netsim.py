@@ -1,0 +1,138 @@
+"""Interconnect simulator (the ns3 role in the paper's testbed).
+
+Simulates ICI / DCN / PCIe / Ethernet links with FIFO tx queues and fixed
+propagation latency, moves "chunks" (collective shards, DMA buffers, NTP
+packets, background-traffic segments) along multi-link routes, and writes an
+ns3-ascii-flavoured log::
+
+    + <t_s> /<LinkPath> chunk=<id> size=<bytes> ...     (enqueued)
+    - <t_s> /<LinkPath> chunk=<id> ...                  (starts on the wire)
+    r <t_s> /<LinkPath> chunk=<id> ...                  (received at far end)
+
+Background traffic (paper §5 scenario 2) is a BulkSend-style flow that
+saturates a link with back-to-back segments, inducing queueing delay for
+everything sharing the link.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Dict, List, Optional
+
+from .clock import LogWriter, Sim
+from .topology import Link, Topology
+
+PS_PER_S = 1_000_000_000_000
+
+
+def _fmt_s(ps: int) -> str:
+    return f"{ps / PS_PER_S:.12f}"
+
+
+class NetSim:
+    def __init__(self, sim: Sim, topo: Topology, log: LogWriter) -> None:
+        self.sim = sim
+        self.topo = topo
+        self.log = log
+        self._chunk_ids = itertools.count()
+        self.chunks_delivered = 0
+        self.bytes_delivered = 0
+        self.flows_stopped = False
+
+    # -- core transfer -----------------------------------------------------------
+
+    def transfer(
+        self,
+        src: str,
+        dst: str,
+        nbytes: int,
+        meta: Optional[Dict] = None,
+        on_delivered: Optional[Callable[[int], None]] = None,
+        chunk_id: Optional[str] = None,
+        quiet: bool = False,
+    ) -> str:
+        """Send nbytes src->dst along the static route; calls on_delivered(t)."""
+        cid = chunk_id or f"c{next(self._chunk_ids)}"
+        route = self.topo.route(src, dst)
+        meta = meta or {}
+        self._hop(cid, route, 0, nbytes, meta, on_delivered, quiet)
+        return cid
+
+    def _hop(
+        self,
+        cid: str,
+        route: List[str],
+        i: int,
+        nbytes: int,
+        meta: Dict,
+        on_delivered: Optional[Callable[[int], None]],
+        quiet: bool,
+    ) -> None:
+        link = self.topo.links[route[i]]
+        now = self.sim.now
+        if not quiet:
+            self._log_mark("+", link, cid, nbytes, meta)
+        start = max(now, link.busy_until)
+        tx_ps = int(nbytes / link.bytes_per_ps)
+        link.busy_until = start + tx_ps
+        link.bytes_tx += nbytes
+
+        def _on_wire() -> None:
+            if not quiet:
+                self._log_mark("-", link, cid, nbytes, meta)
+
+        self.sim.at(start, _on_wire)
+        arrive = start + tx_ps + link.latency_ps
+
+        def _on_rx() -> None:
+            if not quiet:
+                self._log_mark("r", link, cid, nbytes, meta)
+            if i + 1 < len(route):
+                self._hop(cid, route, i + 1, nbytes, meta, on_delivered, quiet)
+            else:
+                self.chunks_delivered += 1
+                self.bytes_delivered += nbytes
+                if on_delivered is not None:
+                    on_delivered(self.sim.now)
+
+        self.sim.at(arrive, _on_rx)
+
+    def _log_mark(self, mark: str, link: Link, cid: str, nbytes: int, meta: Dict) -> None:
+        extra = " ".join(f"{k}={v}" for k, v in meta.items())
+        self.log.write(
+            f"{mark} {_fmt_s(self.sim.now)} /{link.name.replace('.', '/')} "
+            f"chunk={cid} size={nbytes}" + (f" {extra}" if extra else "")
+        )
+
+    # -- background traffic (BulkSend analogue) -----------------------------------
+
+    def start_bulk_flow(
+        self,
+        src: str,
+        dst: str,
+        rate_bytes_per_s: float,
+        segment_bytes: int = 65536,
+        start_ps: int = 0,
+        stop_ps: Optional[int] = None,
+        flow_id: str = "bg0",
+    ) -> None:
+        interval_ps = int(segment_bytes / (rate_bytes_per_s / PS_PER_S))
+        seq = itertools.count()
+
+        def _send() -> None:
+            if self.flows_stopped or (stop_ps is not None and self.sim.now >= stop_ps):
+                return
+            self.transfer(
+                src,
+                dst,
+                segment_bytes,
+                meta={"flow": flow_id, "seq": next(seq)},
+                quiet=False,
+            )
+            self.sim.after(interval_ps, _send)
+
+        self.sim.at(start_ps, _send)
+
+    def stop_all_flows(self) -> None:
+        """Stops background flows at their next tick (lets training sims
+        drain and terminate once the workload completes)."""
+        self.flows_stopped = True

@@ -1,0 +1,152 @@
+"""Simulated testbed topologies (nodes + links + routes).
+
+Two families:
+* ``ntp_testbed()``   — the paper's §5 topology: client/server hosts behind
+                        two switches, background traffic on the inter-switch
+                        link.
+* ``tpu_cluster()``   — a multi-pod TPU testbed: per-pod ICI ring of chips,
+                        one host per pod (PCIe to each chip), DCN between
+                        hosts.
+
+Routing is static shortest-path (BFS), cached per (src, dst).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from ..hw import V5E, ChipSpec, PS_PER_S
+
+
+@dataclass
+class Link:
+    name: str                    # e.g. "ici.pod0.l3", "dcn.h0h1", "pcie.pod0.c2"
+    a: str
+    b: str
+    bw: float                    # bytes/s
+    latency_ps: int = 500_000    # 0.5us default
+    # runtime state (owned by netsim)
+    busy_until: int = 0
+    bytes_tx: int = 0
+    queue_len: int = 0
+
+    @property
+    def bytes_per_ps(self) -> float:
+        return self.bw / PS_PER_S
+
+
+@dataclass
+class Topology:
+    name: str
+    chip: ChipSpec = field(default_factory=lambda: V5E)
+    nodes: List[str] = field(default_factory=list)
+    links: Dict[str, Link] = field(default_factory=dict)
+    adj: Dict[str, List[Tuple[str, str]]] = field(default_factory=dict)  # node -> [(peer, link)]
+    pods: Dict[int, List[str]] = field(default_factory=dict)             # pod -> chip node names
+    hosts: List[str] = field(default_factory=list)
+    _routes: Dict[Tuple[str, str], List[str]] = field(default_factory=dict)
+
+    def add_node(self, n: str) -> None:
+        if n not in self.adj:
+            self.nodes.append(n)
+            self.adj[n] = []
+
+    def add_link(self, name: str, a: str, b: str, bw: float, latency_ps: int = 500_000) -> Link:
+        self.add_node(a)
+        self.add_node(b)
+        l = Link(name, a, b, bw, latency_ps)
+        self.links[name] = l
+        self.adj[a].append((b, name))
+        self.adj[b].append((a, name))
+        return l
+
+    def route(self, src: str, dst: str) -> List[str]:
+        """BFS shortest path, returned as list of link names."""
+        key = (src, dst)
+        r = self._routes.get(key)
+        if r is not None:
+            return r
+        prev: Dict[str, Tuple[str, str]] = {}
+        frontier = [src]
+        seen = {src}
+        while frontier and dst not in prev and dst != src:
+            nxt = []
+            for u in frontier:
+                for v, ln in self.adj[u]:
+                    if v not in seen:
+                        seen.add(v)
+                        prev[v] = (u, ln)
+                        nxt.append(v)
+            frontier = nxt
+        path: List[str] = []
+        cur = dst
+        while cur != src:
+            if cur not in prev:
+                raise ValueError(f"no route {src} -> {dst}")
+            u, ln = prev[cur]
+            path.append(ln)
+            cur = u
+        path.reverse()
+        self._routes[key] = path
+        return path
+
+    # -- id helpers ---------------------------------------------------------------
+
+    @staticmethod
+    def chip_name(pod: int, idx: int) -> str:
+        return f"pod{pod}.chip{idx:02d}"
+
+    @staticmethod
+    def host_name(pod: int) -> str:
+        return f"host{pod}"
+
+
+def ntp_testbed(
+    link_bw: float = 1.25e9,          # 10 Gbps, ns3-ish
+    latency_ps: int = 5_000_000,      # 5 us per hop
+) -> Topology:
+    """Paper §5: client - sw1 - sw2 - server (+ bg src/sink on sw1/sw2)."""
+    t = Topology(name="ntp_testbed")
+    t.add_link("eth.client_sw1", "client", "sw1", link_bw, latency_ps)
+    t.add_link("eth.sw1_sw2", "sw1", "sw2", link_bw, latency_ps)
+    t.add_link("eth.sw2_server", "sw2", "server", link_bw, latency_ps)
+    t.add_link("eth.bgsrc_sw1", "bgsrc", "sw1", link_bw, latency_ps)
+    t.add_link("eth.bgsink_sw2", "bgsink", "sw2", link_bw, latency_ps)
+    t.hosts = ["client", "server", "bgsrc", "bgsink"]
+    return t
+
+
+def tpu_cluster(
+    n_pods: int = 2,
+    chips_per_pod: int = 8,
+    chip: ChipSpec = V5E,
+    ici_latency_ps: int = 1_000_000,    # 1 us hop
+    dcn_latency_ps: int = 10_000_000,   # 10 us hop
+) -> Topology:
+    """Multi-pod testbed: ICI ring per pod, PCIe host links, DCN host mesh.
+
+    (The production 16x16 pod is a 2D torus; the simulated testbed uses a
+    ring per pod — collective *schedules* are modeled per ring group, which
+    matches how multi-axis collectives decompose into per-axis rings.)
+    """
+    t = Topology(name=f"tpu_{n_pods}x{chips_per_pod}", chip=chip)
+    for p in range(n_pods):
+        host = t.host_name(p)
+        chips = [t.chip_name(p, i) for i in range(chips_per_pod)]
+        t.pods[p] = chips
+        t.hosts.append(host)
+        for i, c in enumerate(chips):
+            # bidirectional ICI ring: one link per neighbor pair
+            nxt = chips[(i + 1) % chips_per_pod]
+            t.add_link(f"ici.pod{p}.l{i}", c, nxt, chip.ici_link_bw, ici_latency_ps)
+            t.add_link(f"pcie.pod{p}.c{i}", host, c, chip.pcie_bw, 2_000_000)
+    for p in range(n_pods):
+        for q in range(p + 1, n_pods):
+            t.add_link(
+                f"dcn.h{p}h{q}",
+                t.host_name(p),
+                t.host_name(q),
+                chip.dcn_bw_per_host,
+                dcn_latency_ps,
+            )
+    return t

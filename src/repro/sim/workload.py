@@ -1,0 +1,137 @@
+"""Workload specs for the device simulator.
+
+A ProgramSpec is the op timeline one chip executes per step.  It can be built
+
+* **from a compiled XLA artifact** (``program_from_compiled``) — aggregate
+  FLOPs/bytes from ``cost_analysis()`` sliced into per-layer segments, with
+  the *actual* collective schedule parsed from the optimized HLO placed at
+  its position in program order.  This is the full-system-simulation step:
+  the simulated chips execute what the real compiler produced.
+* **synthetically** (``synthetic_program``) — for tests and the case study.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+from ..xla.hlo_stats import collective_stats, cost_summary
+
+
+@dataclass(frozen=True)
+class OpSpec:
+    name: str
+    kind: str = "compute"         # compute | all-reduce | all-gather | reduce-scatter
+                                  # | all-to-all | collective-permute | wait
+    flops: float = 0.0            # per device
+    bytes: float = 0.0            # HBM bytes touched, per device
+    coll_bytes: float = 0.0       # collective operand bytes, per device
+    group: str = "ici"            # which ring group executes it: "ici" | "dcn"
+    async_start: bool = False     # start collective without blocking
+    wait_for: Optional[str] = None  # for kind="wait": name of async collective
+
+
+@dataclass
+class ProgramSpec:
+    name: str
+    ops: List[OpSpec] = field(default_factory=list)
+
+    @property
+    def total_flops(self) -> float:
+        return sum(o.flops for o in self.ops)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(o.bytes for o in self.ops)
+
+    @property
+    def collectives(self) -> List[OpSpec]:
+        return [o for o in self.ops if o.kind not in ("compute", "wait")]
+
+    def symbols(self) -> Dict[str, str]:
+        """op id -> human name (for the SymbolizeActor)."""
+        return {f"op{i}": o.name for i, o in enumerate(self.ops)}
+
+
+def program_from_compiled(
+    compiled: Any,
+    name: str = "train_step",
+    n_segments: int = 16,
+    dcn_axis_bytes_fraction: float = 0.0,
+    hlo_text: Optional[str] = None,
+) -> ProgramSpec:
+    """Slice a compiled module's aggregate cost into a traceable op timeline.
+
+    Not cycle-accurate (we do not schedule individual HLO ops): compute cost
+    is spread uniformly over ``n_segments`` layer-like segments, and each
+    parsed collective is placed after segment ``round(i/n_coll * n_segments)``
+    preserving program order.  Aggregates (FLOPs, HBM bytes, collective bytes
+    and their kinds/counts) are exactly the compiled module's.
+    """
+    cost = cost_summary(compiled)
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    colls = collective_stats(text)["ops"]
+
+    seg_flops = cost["flops"] / n_segments
+    seg_bytes = cost["bytes_accessed"] / n_segments
+
+    ops: List[OpSpec] = []
+    n_coll = len(colls)
+    placed = 0
+    for seg in range(n_segments):
+        ops.append(
+            OpSpec(name=f"{name}.seg{seg}", kind="compute", flops=seg_flops, bytes=seg_bytes)
+        )
+        # place collectives whose order position maps into this segment
+        while placed < n_coll and (placed + 1) * n_segments <= (seg + 1) * n_coll:
+            c = colls[placed]
+            group = "dcn" if dcn_axis_bytes_fraction > 0 and placed % 2 == 1 else "ici"
+            ops.append(
+                OpSpec(
+                    name=c["name"],
+                    kind=c["kind"],
+                    coll_bytes=float(c["bytes"]),
+                    group=group,
+                )
+            )
+            placed += 1
+    for c in colls[placed:]:
+        ops.append(OpSpec(name=c["name"], kind=c["kind"], coll_bytes=float(c["bytes"])))
+    return ProgramSpec(name=name, ops=ops)
+
+
+def synthetic_program(
+    name: str = "train_step",
+    n_layers: int = 4,
+    layer_flops: float = 5e12,
+    layer_bytes: float = 2e9,
+    grad_bytes: float = 1e9,
+    overlap_grad_reduce: bool = False,
+    cross_pod: bool = True,
+) -> ProgramSpec:
+    """A miniature training step: n layers of compute + per-layer all-gather
+    (FSDP-style) + one gradient all-reduce (optionally async/overlapped,
+    optionally on the cross-pod DCN group)."""
+    ops: List[OpSpec] = []
+    for i in range(n_layers):
+        ops.append(
+            OpSpec(name=f"layer{i}.ag", kind="all-gather", coll_bytes=layer_bytes / 8)
+        )
+        ops.append(
+            OpSpec(name=f"layer{i}.fwdbwd", kind="compute", flops=layer_flops, bytes=layer_bytes)
+        )
+    ar = OpSpec(
+        name="grad.ar",
+        kind="all-reduce",
+        coll_bytes=grad_bytes,
+        group="dcn" if cross_pod else "ici",
+        async_start=overlap_grad_reduce,
+    )
+    if overlap_grad_reduce:
+        # start the reduce before the optimizer segment, wait at the end
+        ops.append(ar)
+        ops.append(OpSpec(name="optimizer", kind="compute", flops=layer_flops / 4, bytes=grad_bytes))
+        ops.append(OpSpec(name="grad.ar.wait", kind="wait", wait_for="grad.ar"))
+    else:
+        ops.append(ar)
+        ops.append(OpSpec(name="optimizer", kind="compute", flops=layer_flops / 4, bytes=grad_bytes))
+    return ProgramSpec(name=name, ops=ops)

@@ -1,0 +1,11 @@
+from .optimizer import AdamWConfig, adamw_update, global_norm, init_opt_state, lr_at
+from .train_step import (
+    TrainConfig,
+    abstract_train_state,
+    cross_entropy,
+    init_train_state,
+    make_loss_fn,
+    make_train_step,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,124 @@
+"""AdamW from scratch (no optax) with fully-sharded optimizer state.
+
+State pytrees mirror the parameter tree, so the same PartitionSpecs shard
+them (ZeRO-style: with FSDP rules the m/v moments shard over data+model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    schedule: str = "cosine"     # cosine | linear | constant
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    else:
+        frac = jnp.clip(
+            (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        if cfg.schedule == "cosine":
+            decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        else:
+            decay = 1.0 - (1 - cfg.min_lr_ratio) * frac
+    return cfg.lr * warm * decay
+
+
+def _has_low_precision(params: Any) -> bool:
+    return any(
+        jnp.dtype(getattr(l, "dtype", jnp.float32)) != jnp.float32
+        for l in jax.tree_util.tree_leaves(params)
+    )
+
+
+def init_opt_state(params: Any) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    out = {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+    }
+    if _has_low_precision(params):
+        # bf16 params: f32 master copy lives (sharded) in the optimizer
+        out["master"] = jax.tree_util.tree_map(
+            lambda p: jnp.asarray(p, jnp.float32), params
+        )
+    return out
+
+
+def abstract_opt_state(params: Any) -> Dict[str, Any]:
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    out = {
+        "m": jax.tree_util.tree_map(z, params),
+        "v": jax.tree_util.tree_map(z, params),
+    }
+    if _has_low_precision(params):
+        out["master"] = jax.tree_util.tree_map(z, params)
+    return out
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    params: Any,
+    grads: Any,
+    opt_state: Dict[str, Any],
+    step: jax.Array,
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+    lr = lr_at(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        p32 = master if master is not None else p.astype(jnp.float32)
+        p_new32 = p32 - lr * (update + cfg.weight_decay * p32)
+        return p_new32.astype(p.dtype), m, v, p_new32
+
+    has_master = "master" in opt_state
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_ma = (
+        treedef.flatten_up_to(opt_state["master"]) if has_master else [None] * len(flat_p)
+    )
+    out = [upd(*args) for args in zip(flat_p, flat_g, flat_m, flat_v, flat_ma)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_opt = {
+        "m": jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]),
+        "v": jax.tree_util.tree_unflatten(treedef, [o[2] for o in out]),
+    }
+    if has_master:
+        new_opt["master"] = jax.tree_util.tree_unflatten(treedef, [o[3] for o in out])
+    return new_p, new_opt, {"grad_norm": gnorm, "lr": lr}

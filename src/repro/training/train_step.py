@@ -1,0 +1,106 @@
+"""Training step: CE loss (vocab-sharding-friendly), microbatch gradient
+accumulation, AdamW, donated state — the function every dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.transformer import forward
+from .optimizer import AdamWConfig, abstract_opt_state, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    microbatches: int = 1
+    moe_aux_weight: float = 0.01
+    z_loss_weight: float = 1e-4
+
+
+def cross_entropy(
+    logits: jax.Array,          # (B, S, V) f32, possibly vocab-sharded
+    labels: jax.Array,          # (B, S) int32
+) -> Tuple[jax.Array, jax.Array]:
+    """Mean CE + mean log-Z (for z-loss).  One-hot einsum keeps the label
+    lookup a contraction (GSPMD-partitionable over the sharded vocab dim)."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)          # (B, S)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    return jnp.mean(logz - gold), jnp.mean(jnp.square(logz))
+
+
+def make_loss_fn(cfg: ModelConfig, tc: TrainConfig):
+    def loss_fn(params, batch: Dict[str, jax.Array]):
+        logits, aux = forward(
+            cfg,
+            params,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+        )
+        ce, z = cross_entropy(logits, batch["labels"])
+        loss = ce + tc.moe_aux_weight * aux + tc.z_loss_weight * z
+        return loss, {"ce": ce, "moe_aux": aux, "z": z}
+
+    return loss_fn
+
+
+def init_train_state(cfg: ModelConfig, params: Any) -> Dict[str, Any]:
+    return {"params": params, "opt": init_opt_state(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(params_abs: Any) -> Dict[str, Any]:
+    return {
+        "params": params_abs,
+        "opt": abstract_opt_state(params_abs),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    loss_fn = make_loss_fn(cfg, tc)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jax.Array]):
+        params = state["params"]
+        mb = tc.microbatches
+        if mb > 1:
+
+            def mb_reshape(x):
+                b = x.shape[0]
+                return x.reshape((mb, b // mb) + x.shape[1:])
+
+            batches = jax.tree_util.tree_map(mb_reshape, batch)
+
+            def acc_step(acc, mbatch):
+                (loss, metrics), grads = grad_fn(params, mbatch)
+                acc_g, acc_l, acc_m = acc
+                acc_g = jax.tree_util.tree_map(jnp.add, acc_g, grads)
+                return (acc_g, acc_l + loss, {k: acc_m[k] + v for k, v in metrics.items()}), None
+
+            zeros_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            init = (zeros_g, jnp.zeros((), jnp.float32), {
+                "ce": jnp.zeros(()), "moe_aux": jnp.zeros(()), "z": jnp.zeros(())})
+            (grads, loss, metrics), _ = jax.lax.scan(acc_step, init, batches)
+            grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+            loss = loss / mb
+            metrics = {k: v / mb for k, v in metrics.items()}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            tc.adamw, params, grads, state["opt"], state["step"]
+        )
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        out_metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_state, out_metrics
+
+    return train_step

@@ -1,0 +1,8 @@
+from .hlo_stats import (
+    COLLECTIVE_KINDS,
+    collective_stats,
+    cost_summary,
+    parse_shape_bytes,
+)
+
+__all__ = ["COLLECTIVE_KINDS", "collective_stats", "cost_summary", "parse_shape_bytes"]

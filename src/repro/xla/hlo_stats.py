@@ -1,0 +1,261 @@
+"""Static analysis of compiled XLA artifacts.
+
+Extracts the quantities the roofline analysis and the device simulator need:
+
+* ``cost_summary(compiled)``      — HLO FLOPs + bytes from cost_analysis()
+* ``collective_stats(hlo_text)``  — per-kind collective operand bytes parsed
+                                    from the *optimized* (post-SPMD) HLO text
+                                    (``compiled.as_text()``), since GSPMD
+                                    inserts collectives only after partitioning.
+
+Byte counts are **per-device** (an SPMD module is the per-device program).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVE_KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# matches e.g.:  "... = bf16[8,128]{1,0} all-gather-start(bf16[8,16]{1,0} %p), ..."
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes appearing in ``shape_str``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        bpe = _DTYPE_BYTES.get(dtype)
+        if bpe is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * bpe
+    return total
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Parse per-kind collective bytes from optimized (post-SPMD) HLO text.
+
+    Optimized HLO omits operand shapes, so operand bytes are derived from the
+    *result* shape and the replica group size N:
+
+        all-reduce          operand = result
+        all-gather          operand = result / N
+        reduce-scatter      operand = result * N
+        all-to-all          operand = result
+        collective-permute  operand = result
+
+    ``wire_bytes`` additionally models per-device bytes on the interconnect
+    under ring algorithms: AR 2(N-1)/N * B_result, AG/RS (N-1)/N * B_full,
+    A2A (N-1)/N * B, CP = B.  ``-done`` ops are skipped (async pairs would
+    double-count); for ``-start`` tuples the last tuple element (the output
+    buffer) is used.  All quantities are per device.
+    """
+    per_kind: Dict[str, Dict[str, int]] = {
+        k: {"count": 0, "bytes": 0, "wire_bytes": 0} for k in COLLECTIVE_KINDS
+    }
+    ops: List[Dict[str, Any]] = []
+    for line in hlo_text.splitlines():
+        if "all-" not in line and "reduce-scatter" not in line and "collective-permute" not in line:
+            continue
+        if "-done" in line:
+            continue
+        # require "<name> = <shape(s)> <kind>(" form: search after the '='
+        # (the instruction NAME itself contains the kind, e.g. %all-reduce.1)
+        eq = line.find("=")
+        if eq == -1:
+            continue
+        m = _COLL_RE.search(line, eq + 1)
+        if m is None:
+            continue
+        kind = m.group(1)
+        shapes = _SHAPE_RE.findall(line[eq + 1 : m.start()])
+        if not shapes:
+            continue
+        dtype, dims = shapes[-1]  # last tuple element = output buffer
+        bpe = _DTYPE_BYTES.get(dtype, 0)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        result_bytes = n * bpe
+        gsize = _group_size(line)
+        if kind == "all-gather":
+            operand = result_bytes // max(gsize, 1)
+            wire = int(result_bytes * (gsize - 1) / max(gsize, 1))
+        elif kind == "reduce-scatter":
+            operand = result_bytes * gsize
+            wire = int(operand * (gsize - 1) / max(gsize, 1))
+        elif kind == "all-reduce":
+            operand = result_bytes
+            wire = int(2 * result_bytes * (gsize - 1) / max(gsize, 1))
+        elif kind == "all-to-all":
+            operand = result_bytes
+            wire = int(result_bytes * (gsize - 1) / max(gsize, 1))
+        else:  # collective-permute
+            operand = result_bytes
+            wire = result_bytes
+        per_kind[kind]["count"] += 1
+        per_kind[kind]["bytes"] += operand
+        per_kind[kind]["wire_bytes"] += wire
+        name = line.strip().split(" ", 1)[0].lstrip("%")
+        ops.append(
+            {"name": name, "kind": kind, "bytes": operand, "wire_bytes": wire,
+             "group_size": gsize, "async": bool(m.group(2))}
+        )
+    total = sum(v["bytes"] for v in per_kind.values())
+    wire_total = sum(v["wire_bytes"] for v in per_kind.values())
+    return {
+        "per_kind": per_kind,
+        "total_bytes": total,
+        "wire_bytes": wire_total,
+        "ops": ops,
+    }
+
+
+# ops that move HBM bytes on TPU even under aggressive fusion; pure
+# elementwise ops (convert/add/mul/select/...) fuse into producers/consumers
+# and are excluded — XLA:CPU leaves them unfused, which inflates
+# cost_analysis()'s "bytes accessed" ~20-50x vs TPU behaviour.
+_TRAFFIC_OPS = {
+    "dot", "convolution", "fusion", "reduce", "reduce-window", "scatter",
+    "gather", "sort", "transpose", "copy", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "pad", "reverse", "custom-call",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+}
+
+_OP_LINE_RE = re.compile(r"^\s*(?:ROOT\s+)?(%\S+) = (.+?) ([a-z][a-z0-9-]*)\(")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+
+
+def tpu_adjusted_bytes(hlo_text: str) -> Dict[str, float]:
+    """TPU-fusion-adjusted HBM bytes from optimized HLO text.
+
+    Counts operand+output bytes of entry-computation instructions whose op
+    kind is in _TRAFFIC_OPS (operand shapes resolved via the producing
+    instruction's result shape).  Fusion-internal instructions are inside
+    separate computations and therefore not double counted.
+    """
+    # name -> result bytes, for every instruction in the module
+    sizes: Dict[str, int] = {}
+    entry_lines: List[str] = []
+    in_entry = False
+    depth = 0
+    for line in hlo_text.splitlines():
+        m = _OP_LINE_RE.match(line)
+        if m:
+            name, shapes, op = m.groups()
+            sizes[name] = parse_shape_bytes(shapes)
+        stripped = line.strip()
+        if stripped.startswith("ENTRY "):
+            in_entry = True
+            depth = 0
+        if in_entry:
+            depth += stripped.count("{") - stripped.count("}")
+            if m:
+                entry_lines.append(line)
+            if depth <= 0 and "}" in stripped and not stripped.startswith("ENTRY"):
+                in_entry = False
+
+    total = 0
+    per_kind: Dict[str, int] = {}
+    for line in entry_lines:
+        m = _OP_LINE_RE.match(line)
+        if m is None:
+            continue
+        name, shapes, op = m.groups()
+        base = op.split(".")[0]
+        if base not in _TRAFFIC_OPS:
+            continue
+        out_b = sizes.get(name, 0)
+        # operand bytes: resolve %names inside the call parens
+        lparen = line.find("(", m.end(3) - 1)
+        rparen = line.find("), ", lparen)
+        seg = line[lparen: rparen if rparen != -1 else None]
+        operands = [t for t in _OPERAND_RE.findall(seg) if t != name]
+        op_b = sum(sizes.get(t, 0) for t in operands)
+        if base == "dynamic-update-slice" and len(operands) >= 2:
+            # in-place slice update (donated buffers alias): traffic is the
+            # update slice written + read, not the whole buffer
+            upd = sizes.get(operands[1], 0)
+            out_b, op_b = upd, upd
+        total += out_b + op_b
+        per_kind[base] = per_kind.get(base, 0) + out_b + op_b
+    return {"total": float(total), "per_kind": per_kind}
+
+
+def cost_summary(compiled: Any) -> Dict[str, float]:
+    """FLOPs / bytes-accessed from compiled.cost_analysis() (per device)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", ca.get("bytes_accessed", 0.0)))
+    out = {"flops": flops, "bytes_accessed": bytes_accessed}
+    # operand/output split if present
+    for k, v in ca.items():
+        if isinstance(v, (int, float)) and k.startswith("bytes accessed"):
+            out[k] = float(v)
+    return out
+
+
+def memory_stats(compiled: Any) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out: Dict[str, float] = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    out["total_bytes"] = (
+        out.get("argument_size_in_bytes", 0.0)
+        + out.get("output_size_in_bytes", 0.0)
+        + out.get("temp_size_in_bytes", 0.0)
+        - out.get("alias_size_in_bytes", 0.0)
+    )
+    return out

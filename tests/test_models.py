@@ -1,0 +1,119 @@
+"""Per-arch smoke tests (reduced configs) + decode/prefill equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_arch
+from repro.models import (
+    ModelConfig,
+    forward,
+    init_cache,
+    init_params,
+    model_pspecs,
+)
+from repro.models.transformer import decode_step, prefill
+from repro.training import AdamWConfig, TrainConfig, init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_forward_and_train_step(arch, rng):
+    """Reduced same-family config: one forward + one train step on CPU,
+    asserting output shapes and no NaNs (assignment requirement)."""
+    cfg = get_arch(arch).config.reduced()
+    params = init_params(rng, model_pspecs(cfg))
+    B, S = 2, 4 * cfg.window if cfg.window < 16 else 64
+    S = min(S, 64)
+    batch = {"labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+    if cfg.frontend != "none":
+        batch["embeds"] = 0.02 * jax.random.normal(rng, (B, S, cfg.d_model))
+    else:
+        batch["tokens"] = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+
+    logits, aux = jax.jit(
+        lambda p, b: forward(cfg, p, tokens=b.get("tokens"), embeds=b.get("embeds"))
+    )(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: NaNs in logits"
+
+    tc = TrainConfig(adamw=AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10))
+    state = init_train_state(cfg, params)
+    step = jax.jit(make_train_step(cfg, tc), donate_argnums=(0,))
+    state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(state["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "gemma3-27b", "recurrentgemma-2b",
+                                  "falcon-mamba-7b", "granite-moe-1b-a400m"])
+def test_arch_decode_matches_forward(arch, rng):
+    cfg = dataclasses.replace(
+        get_arch(arch).config.reduced(),
+        dtype="float32", kv_cache_dtype="float32", logits_f32=True,
+    )
+    params = init_params(rng, model_pspecs(cfg))
+    B, S = 2, 16
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    full, _ = jax.jit(lambda p, t: forward(cfg, p, t))(params, toks)
+    cache = init_cache(cfg, B, S)
+    dec = jax.jit(lambda p, t, c, pos: decode_step(cfg, p, t, c, pos))
+    for i in range(S):
+        lg, cache = dec(params, toks[:, i : i + 1], cache, jnp.int32(i))
+        err = float(jnp.max(jnp.abs(lg[:, 0] - full[:, i])))
+        assert err < 5e-3, f"{arch} step {i}: {err}"
+
+
+@pytest.mark.parametrize("arch", ["gemma3-27b", "recurrentgemma-2b", "falcon-mamba-7b"])
+def test_arch_prefill_then_decode(arch, rng):
+    cfg = dataclasses.replace(
+        get_arch(arch).config.reduced(),
+        dtype="float32", kv_cache_dtype="float32", logits_f32=True,
+    )
+    params = init_params(rng, model_pspecs(cfg))
+    B, S, P = 2, 16, 12
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    full, _ = jax.jit(lambda p, t: forward(cfg, p, t))(params, toks)
+    lg_pf, cache = jax.jit(lambda p, t: prefill(cfg, p, t, max_seq=S))(params, toks[:, :P])
+    assert float(jnp.max(jnp.abs(lg_pf - full[:, :P]))) < 5e-3
+    dec = jax.jit(lambda p, t, c, pos: decode_step(cfg, p, t, c, pos))
+    for i in range(P, S):
+        lg, cache = dec(params, toks[:, i : i + 1], cache, jnp.int32(i))
+        assert float(jnp.max(jnp.abs(lg[:, 0] - full[:, i]))) < 5e-3
+
+
+def test_int8_kv_cache_close_to_bf16(rng):
+    cfg = get_arch("qwen3-8b").config.reduced()
+    cfg_f = dataclasses.replace(cfg, dtype="float32", kv_cache_dtype="float32")
+    cfg_q = dataclasses.replace(cfg, dtype="float32", kv_cache_dtype="int8")
+    params = init_params(rng, model_pspecs(cfg_f))
+    B, S = 2, 16
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    caches = {k: init_cache(c, B, S) for k, c in [("f", cfg_f), ("q", cfg_q)]}
+    outs = {}
+    for key, c in [("f", cfg_f), ("q", cfg_q)]:
+        dec = jax.jit(lambda p, t, ca, pos, c=c: decode_step(c, p, t, ca, pos))
+        cache = caches[key]
+        for i in range(8):
+            lg, cache = dec(params, toks[:, i : i + 1], cache, jnp.int32(i))
+        outs[key] = lg
+    # int8 cache tracks the exact cache closely (top-1 agreement)
+    assert jnp.argmax(outs["f"][:, 0], -1).tolist() == jnp.argmax(outs["q"][:, 0], -1).tolist()
+
+
+def test_param_count_estimates_match_declared_tree():
+    """cfg.n_params (analytic, used for MODEL_FLOPS) ~ actual tree size."""
+    from repro.models.params import count_params
+
+    for arch in ARCHS:
+        cfg = get_arch(arch).config
+        declared = count_params(model_pspecs(cfg))
+        analytic = cfg.n_params
+        ratio = declared / analytic
+        assert 0.9 < ratio < 1.12, f"{arch}: declared={declared:.3e} analytic={analytic:.3e}"

@@ -1,0 +1,75 @@
+"""DES collective-engine invariants (regression tests for two real bugs:
+late-arrival completion and op-name rendezvous collisions)."""
+import tempfile
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.sim import ClusterOrchestrator, run_training_sim, tpu_cluster
+from repro.sim.workload import OpSpec, ProgramSpec
+
+
+def _run(prog, chips=4, pods=1, scale=None, bg=False):
+    with tempfile.TemporaryDirectory() as d:
+        kw = {}
+        if bg:
+            kw.update(bg_traffic_link="dcn.h0h1", bg_rate=15e9)
+        cl = run_training_sim(prog, n_steps=1, n_pods=pods, chips_per_pod=chips,
+                              outdir=d, compute_scale=scale, **kw)
+        return cl
+
+
+@pytest.mark.parametrize("kind", ["all-reduce", "all-gather", "reduce-scatter",
+                                  "all-to-all", "collective-permute"])
+def test_every_collective_kind_completes(kind):
+    prog = ProgramSpec("p", [
+        OpSpec("c0", "compute", 1e9, 1e8),
+        OpSpec(f"{kind}.x", kind, coll_bytes=1e7),
+        OpSpec("c1", "compute", 1e9, 1e8),
+    ])
+    cl = _run(prog)
+    assert all(h.steps_done == 1 for h in cl.hosts.values() if h.chips)
+    for inst in cl._collectives.values():
+        assert all(inst.done.values()), inst.coll_id
+
+
+@given(st.lists(st.floats(min_value=0.25, max_value=8.0), min_size=4, max_size=4))
+@settings(max_examples=20, deadline=None)
+def test_collectives_complete_under_any_straggler_skew(scales):
+    """Late arrivals (chunks delivered before a chip reaches the collective)
+    must still complete — regression for the arrive/recv race."""
+    prog = ProgramSpec("p", [
+        OpSpec("c0", "compute", 2e9, 1e8),
+        OpSpec("ar", "all-reduce", coll_bytes=2e7),
+        OpSpec("cp", "collective-permute", coll_bytes=1e6),
+        OpSpec("c1", "compute", 1e9, 1e8),
+    ])
+    scale = {f"pod0.chip{i:02d}": s for i, s in enumerate(scales)}
+    cl = _run(prog, chips=4, scale=scale)
+    assert all(h.steps_done == 1 for h in cl.hosts.values() if h.chips)
+    for inst in cl._collectives.values():
+        assert all(inst.done.values())
+
+
+def test_same_prefix_collective_kinds_do_not_collide():
+    """all-reduce/all-gather/all-to-all with identical op names must use
+    distinct rendezvous instances — regression for the kind-collision
+    deadlock (assertion in CollectiveInstance.arrive guards it)."""
+    prog = ProgramSpec("p", [
+        OpSpec("al.0", "all-reduce", coll_bytes=1e6),
+        OpSpec("al.0", "all-gather", coll_bytes=1e6),
+        OpSpec("al.0", "all-to-all", coll_bytes=1e6),
+    ])
+    cl = _run(prog)
+    assert all(h.steps_done == 1 for h in cl.hosts.values() if h.chips)
+    assert len(cl._collectives) == 3
+
+
+def test_cross_pod_collective_under_background_traffic_completes():
+    prog = ProgramSpec("p", [
+        OpSpec("c0", "compute", 2e9, 1e8),
+        OpSpec("gs", "all-reduce", coll_bytes=5e7, group="dcn"),
+    ])
+    cl = _run(prog, chips=2, pods=2, bg=True)
+    assert all(h.steps_done == 1 for h in cl.hosts.values() if h.chips)

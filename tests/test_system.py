@@ -1,0 +1,226 @@
+"""End-to-end behaviour tests: full-system simulation -> Columbo -> traces.
+
+These exercise the paper's complete loop — component simulators writing
+ad-hoc logs, type-specific pipelines, weaving with cross-simulator context
+propagation, export, and the analyses of §5.
+"""
+import json
+import os
+import threading
+
+import pytest
+
+from repro.core import (
+    ChromeTraceExporter,
+    ColumboScript,
+    JaegerJSONExporter,
+    SimType,
+    assemble_traces,
+    clock_offset_series,
+    component_breakdown,
+    critical_path,
+    make_fifo,
+    ntp_estimated_offsets,
+    straggler_report,
+    trace_summary,
+)
+from repro.sim import (
+    FailurePlan,
+    run_ntp_sim,
+    run_training_sim,
+    synthetic_program,
+)
+
+
+def _weave(cluster, sim_types=("host", "device", "net")):
+    script = ColumboScript()
+    paths = cluster.log_paths()
+    for st_name in sim_types:
+        for p in paths[st_name]:
+            script.add_log(p, SimType(st_name))
+    return script, script.run()
+
+
+@pytest.fixture(scope="module")
+def train_run(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("trainsim"))
+    prog = synthetic_program(n_layers=2, layer_flops=5e11, layer_bytes=2e8, grad_bytes=1e8)
+    cluster = run_training_sim(prog, n_steps=2, n_pods=2, chips_per_pod=4, outdir=d)
+    script, spans = _weave(cluster)
+    return cluster, script, spans
+
+
+def test_training_sim_one_trace_per_step(train_run):
+    _, _, spans = train_run
+    traces = assemble_traces(spans)
+    step_traces = [
+        t for t in traces.values() if any(s.name == "HostStep" for s in t.spans)
+    ]
+    # one end-to-end trace per training step (idle-heartbeat HostTimeline
+    # traces are separate roots by design)
+    assert len(step_traces) == 2
+
+
+def test_training_sim_no_orphans(train_run):
+    _, script, _ = train_run
+    assert script.finalize_stats["orphans"] == 0
+
+
+def test_training_sim_cross_simulator_causality(train_run):
+    _, _, spans = train_run
+    by_id = {s.context.span_id: s for s in spans}
+    # every DeviceProgram hangs under a host Dispatch (PCIe boundary)
+    progs = [s for s in spans if s.name == "DeviceProgram"]
+    assert progs
+    for p in progs:
+        assert p.parent is not None and by_id[p.parent.span_id].name == "Dispatch"
+    # every collective-caused LinkTransfer hangs under a device Collective
+    links = [s for s in spans if s.name == "LinkTransfer" and "coll" in s.attrs]
+    assert links
+    for l in links:
+        assert l.parent is not None and by_id[l.parent.span_id].name == "Collective"
+
+
+def test_training_sim_breakdown_and_critical_path(train_run):
+    _, _, spans = train_run
+    traces = assemble_traces(spans)
+    t0 = traces[min(traces)]
+    bd = component_breakdown(t0)
+    assert sum(bd.values()) > 0
+    assert any(k.startswith("device:") for k in bd)
+    cp = critical_path(t0)
+    assert cp and cp[0].name == "HostStep"
+    assert all(
+        cp[i + 1].parent and cp[i + 1].parent.span_id == cp[i].context.span_id
+        for i in range(len(cp) - 1)
+    )
+
+
+def test_straggler_detection_via_traces(tmp_path):
+    prog = synthetic_program(n_layers=2, layer_flops=5e11, layer_bytes=2e8, grad_bytes=1e8)
+    cluster = run_training_sim(
+        prog, n_steps=1, n_pods=2, chips_per_pod=4, outdir=str(tmp_path),
+        compute_scale={"pod1.chip02": 3.0},
+    )
+    _, spans = _weave(cluster)
+    rep = straggler_report(spans, span_name="Op")
+    assert rep["stragglers"] == ["pod1.chip02"]
+
+
+def test_failure_injection_visible_in_trace(tmp_path):
+    prog = synthetic_program(n_layers=1, layer_flops=2e11, layer_bytes=1e8, grad_bytes=1e8)
+    cluster = run_training_sim(
+        prog, n_steps=2, n_pods=2, chips_per_pod=2, outdir=str(tmp_path),
+        failure=FailurePlan(host="host1", fail_at_ps=int(3e9), restart_after_ps=int(8e10)),
+    )
+    _, spans = _weave(cluster, sim_types=("host",))
+    failed = [s for s in spans if s.attrs.get("failed")]
+    assert failed and failed[0].component == "host1"
+    # failure marks the in-flight step span; the restart lands on host1's
+    # timeline (the step it un-parks is a fresh span)
+    names = [n for s in spans if s.component == "host1" for _, n, _ in s.events]
+    assert "host_failure" in names and "host_restart" in names
+
+
+def test_checkpoint_spans_appear(tmp_path):
+    prog = synthetic_program(n_layers=1, layer_flops=2e11, layer_bytes=1e8, grad_bytes=1e8)
+    cluster = run_training_sim(
+        prog, n_steps=2, n_pods=1, chips_per_pod=2, outdir=str(tmp_path), ckpt_every=1,
+    )
+    _, spans = _weave(cluster, sim_types=("host",))
+    ckpts = [s for s in spans if s.name == "Checkpoint"]
+    assert len(ckpts) == 2
+    assert all(any(n == "shard_write" for _, n, _ in s.events) for s in ckpts)
+
+
+# ---------------------------------------------------------------------------
+# §5 case study: clock sync under background traffic
+# ---------------------------------------------------------------------------
+
+
+def test_ntp_case_study_reproduces_paper_phenomenon(tmp_path):
+    base = run_ntp_sim(background=False, sim_seconds=8.0, outdir=str(tmp_path / "base"))
+    _, spans_b = _weave(base, sim_types=("host", "net"))
+    bg = run_ntp_sim(background=True, sim_seconds=8.0, outdir=str(tmp_path / "bg"))
+    _, spans_g = _weave(bg, sim_types=("host", "net"))
+
+    skew_b = [abs(o) for _, o in clock_offset_series(spans_b, "client", "server")[2:]]
+    skew_g = [abs(o) for _, o in clock_offset_series(spans_g, "client", "server")[2:]]
+    assert skew_b and skew_g
+    # Fig. 4: background traffic makes synchronization substantially worse
+    assert max(skew_g) > 2.0 * max(skew_b)
+
+    # Fig. 5: chrony's own estimates exist in both scenarios
+    assert len(ntp_estimated_offsets(spans_b, "client")) >= 5
+    assert len(ntp_estimated_offsets(spans_g, "client")) >= 5
+
+
+def test_ntp_breakdown_blames_contended_link(tmp_path):
+    bg = run_ntp_sim(background=True, sim_seconds=6.0, outdir=str(tmp_path))
+    _, spans = _weave(bg, sim_types=("host", "net"))
+    # queueing delay on the inter-switch link dominates NTP packet transfers
+    ntp_links = [s for s in spans if s.name == "LinkTransfer" and s.attrs.get("proto") == "ntp"]
+    assert ntp_links
+    q = {}
+    for s in ntp_links:
+        q.setdefault(s.component, []).append(s.attrs.get("queue_ps", 0))
+    mean_q = {c: sum(v) / len(v) for c, v in q.items()}
+    worst = max(mean_q, key=mean_q.get)
+    assert worst == "eth.sw1_sw2"  # the link the bulk flow saturates
+
+
+# ---------------------------------------------------------------------------
+# §3.8 online mode: named pipes, Columbo running in parallel
+# ---------------------------------------------------------------------------
+
+
+def test_online_mode_with_named_pipes(tmp_path):
+    d = str(tmp_path)
+    prog = synthetic_program(n_layers=1, layer_flops=2e11, layer_bytes=1e8, grad_bytes=5e7)
+    pipe_paths = {
+        "host": [os.path.join(d, "host-host0.log")],
+        "device": [os.path.join(d, "device-pod0.log")],
+        "net": [os.path.join(d, "net.log")],
+    }
+    for ps in pipe_paths.values():
+        for p in ps:
+            make_fifo(p)
+
+    script = ColumboScript(poll_timeout=5.0)
+    for st_name, ps in pipe_paths.items():
+        for p in ps:
+            script.add_log(p, SimType(st_name))
+    for p in script.pipelines:
+        p.start()
+
+    def _simulate():
+        run_training_sim(prog, n_steps=1, n_pods=1, chips_per_pod=2, outdir=d)
+
+    t = threading.Thread(target=_simulate)
+    t.start()
+    t.join(timeout=120)
+    for p in script.pipelines:
+        p.join(timeout=60)
+    spans = []
+    for w in script.weavers:
+        spans.extend(w.spans)
+    from repro.core import finalize_spans
+
+    stats = finalize_spans(spans, script.registry)
+    assert len(spans) > 10
+    assert stats["orphans"] == 0
+    traces = assemble_traces(spans)
+    step_traces = [t for t in traces.values() if any(s.name == "HostStep" for s in t.spans)]
+    assert len(step_traces) == 1
+
+
+def test_exporters_from_full_run(train_run, tmp_path):
+    _, script, spans = train_run
+    jp = str(tmp_path / "t.jaeger.json")
+    cp = str(tmp_path / "t.chrome.json")
+    JaegerJSONExporter(jp).export(spans)
+    ChromeTraceExporter(cp).export(spans)
+    jd = json.load(open(jp))
+    assert len(jd["data"]) >= 2   # 2 step traces (+ idle-heartbeat timelines)
+    cd = json.load(open(cp))
+    assert len(cd["traceEvents"]) > len(spans)
