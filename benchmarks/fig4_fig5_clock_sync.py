@@ -11,17 +11,17 @@ import time
 
 
 def _scenario(background: bool, seconds: float = 10.0):
-    from repro.core import ColumboScript, SimType, clock_offset_series, ntp_estimated_offsets
+    from repro.core import TraceSession, clock_offset_series, ntp_estimated_offsets
     from repro.sim import run_ntp_sim
 
     with tempfile.TemporaryDirectory() as d:
         cl = run_ntp_sim(background=background, sim_seconds=seconds, outdir=d)
-        script = ColumboScript()
+        session = TraceSession()
         for p in cl.log_paths()["host"]:
-            script.add_log(p, SimType.HOST)
+            session.add_log(p, "host")
         for p in cl.log_paths()["net"]:
-            script.add_log(p, SimType.NET)
-        spans = script.run()
+            session.add_log(p, "net")
+        spans = session.run()
     skew = [o for _, o in clock_offset_series(spans, "client", "server")[2:]]
     est = [o for _, o in ntp_estimated_offsets(spans, "client")[2:]]
     return skew, est

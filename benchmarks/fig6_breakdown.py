@@ -13,17 +13,17 @@ from collections import defaultdict
 
 
 def _ntp_breakdown(background: bool):
-    from repro.core import ColumboScript, SimType
+    from repro.core import TraceSession
     from repro.sim import run_ntp_sim
 
     with tempfile.TemporaryDirectory() as d:
         cl = run_ntp_sim(background=background, sim_seconds=8.0, outdir=d)
-        script = ColumboScript()
+        session = TraceSession()
         for p in cl.log_paths()["host"]:
-            script.add_log(p, SimType.HOST)
+            session.add_log(p, "host")
         for p in cl.log_paths()["net"]:
-            script.add_log(p, SimType.NET)
-        spans = script.run()
+            session.add_log(p, "net")
+        spans = session.run()
     per = defaultdict(lambda: defaultdict(list))  # direction -> component -> [us]
     for s in spans:
         if s.name == "LinkTransfer" and s.attrs.get("proto") == "ntp":
@@ -54,7 +54,7 @@ def run():
             )
 
     # TPU-native analogue: straggler chip shows up in the step breakdown
-    from repro.core import ColumboScript, SimType, assemble_traces, component_breakdown, straggler_report
+    from repro.core import TraceSession, assemble_traces, component_breakdown, straggler_report
     from repro.sim import run_training_sim, synthetic_program
 
     t0 = time.perf_counter()
@@ -62,11 +62,11 @@ def run():
     with tempfile.TemporaryDirectory() as d:
         cl = run_training_sim(prog, n_steps=1, n_pods=2, chips_per_pod=4, outdir=d,
                               compute_scale={"pod1.chip02": 3.0})
-        script = ColumboScript()
+        session = TraceSession()
         for st_name, ps in cl.log_paths().items():
             for p in ps:
-                script.add_log(p, SimType(st_name))
-        spans = script.run()
+                session.add_log(p, st_name)
+        spans = session.run()
     us = (time.perf_counter() - t0) * 1e6
     rep = straggler_report(spans, span_name="Op")
     rows.append(

@@ -9,7 +9,7 @@ import time
 
 
 def run():
-    from repro.core import ColumboScript, SimType, make_fifo
+    from repro.core import TraceSession, make_fifo
     from repro.sim import run_training_sim, synthetic_program
 
     rows = []
@@ -23,12 +23,10 @@ def run():
         for ps in names.values():
             for p in ps:
                 make_fifo(p)
-        script = ColumboScript(poll_timeout=5.0)
+        session = TraceSession(poll_timeout=5.0)
         for k, ps in names.items():
             for p in ps:
-                script.add_log(p, SimType(k))
-        for p in script.pipelines:
-            p.start()
+                session.add_log(p, k)
         t0 = time.perf_counter()
         sim_holder = {}
 
@@ -39,17 +37,11 @@ def run():
 
         th = threading.Thread(target=_sim)
         th.start()
+        spans = session.run(mode="threaded", join_timeout=60)
         th.join()
-        for p in script.pipelines:
-            p.join(timeout=60)
-        spans = []
-        for w in script.weavers:
-            spans.extend(w.spans)
-        from repro.core import finalize_spans
-
-        stats = finalize_spans(spans, script.registry)
+        stats = session.finalize_stats
         dt = time.perf_counter() - t0
-        n_events = sum(p.events_in for p in script.pipelines)
+        n_events = sum(p.events_in for p in session.pipelines)
         rows.append(
             ("online.named_pipes", dt * 1e6,
              f"{n_events/dt:,.0f} ev/s spans={len(spans)} orphans={stats['orphans']} "

@@ -29,7 +29,7 @@ def _gen_device_log(path: str, n_ops: int) -> int:
 
 
 def run():
-    from repro.core import ColumboScript, LogFileProducer, Pipeline, SimType, parser_for
+    from repro.core import LogFileProducer, Pipeline, SimType, TraceSession, parser_for
 
     rows = []
     n_ops = 100_000
@@ -57,12 +57,28 @@ def run():
 
         # parse + weave + finalize
         t0 = time.perf_counter()
-        script = ColumboScript()
-        script.add_log(path, SimType.DEVICE)
-        spans = script.run()
+        spans = TraceSession().add_log(path, SimType.DEVICE).run()
         dt = time.perf_counter() - t0
         rows.append(
             ("pipeline.parse_weave", dt * 1e6,
              f"{(3*n_ops+2)/dt:,.0f} ev/s {len(spans):,} spans {size_mb/dt:.1f} MB/s")
+        )
+
+        # sharded: the same log split into 4 contiguous shards, merged back
+        # into one weaver (the multipod-scale input path)
+        shard_paths = [os.path.join(d, f"device.shard{i}.log") for i in range(4)]
+        with open(path) as f:
+            all_lines = f.readlines()
+        per = (len(all_lines) + 3) // 4
+        for i, sp in enumerate(shard_paths):
+            with open(sp, "w") as f:
+                f.writelines(all_lines[i * per:(i + 1) * per])
+        t0 = time.perf_counter()
+        sharded = TraceSession().add_shards(shard_paths, SimType.DEVICE).run()
+        dt = time.perf_counter() - t0
+        rows.append(
+            ("pipeline.parse_weave_sharded4", dt * 1e6,
+             f"{(3*n_ops+2)/dt:,.0f} ev/s {len(sharded):,} spans "
+             f"match={'yes' if len(sharded) == len(spans) else 'NO'}")
         )
     return rows

@@ -2,6 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (one per measurement).
 
+  smoke      — CI pre-flight: tiny sim -> TraceSpec weave -> invariants
   table1     — §4 Table 1: event/span type inventory per simulator type
   fig4_fig5  — §5 Fig. 4/5: clock skew + chrony estimates, both scenarios
   fig6       — §5 Fig. 6: per-component breakdown (+ straggler analogue)
@@ -22,10 +23,12 @@ def main() -> None:
         online_mode,
         pipeline_tput,
         roofline,
+        smoke,
         table1_coverage,
     )
 
     benches = {
+        "smoke": smoke.run,
         "table1": table1_coverage.run,
         "fig4_fig5": fig4_fig5_clock_sync.run,
         "fig6": fig6_breakdown.run,

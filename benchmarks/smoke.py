@@ -1,0 +1,51 @@
+"""Smoke target: the smallest end-to-end proof that the tracing stack is
+alive — simulate a tiny 1-pod training step, weave it through a declarative
+TraceSpec (sharded device input + streaming JSONL export), and check the
+invariants CI cares about.  Runs in a few seconds; invoked as
+
+    PYTHONPATH=src python -m benchmarks.run smoke
+
+and by scripts/tier1.sh as the builder/CI pre-flight.
+"""
+import os
+import tempfile
+import time
+
+
+def run():
+    from repro.core import SourceSpec, SpanJSONLExporter, TraceSpec
+    from repro.sim import run_training_sim, synthetic_program
+
+    t0 = time.perf_counter()
+    prog = synthetic_program(n_layers=1, layer_flops=2e11, layer_bytes=1e8, grad_bytes=5e7)
+    with tempfile.TemporaryDirectory() as d:
+        cl = run_training_sim(prog, n_steps=1, n_pods=1, chips_per_pod=2, outdir=d)
+        jsonl = os.path.join(d, "spans.jsonl")
+        exporter = SpanJSONLExporter(jsonl)
+        spec = TraceSpec(
+            sources=[
+                SourceSpec(sim_type=st, path=p)
+                for st, paths in sorted(cl.log_paths().items())
+                for p in paths
+            ],
+            exporters=[exporter],
+        )
+        session = spec.run()
+        spans = session.spans
+        n_lines = sum(1 for _ in open(jsonl))
+        dt = time.perf_counter() - t0
+        ok = (
+            len(spans) > 10
+            and session.finalize_stats["orphans"] == 0
+            and n_lines == len(spans)
+            and any(s.name == "HostStep" for s in spans)
+        )
+        if not ok:
+            raise RuntimeError(
+                f"smoke invariants failed: spans={len(spans)} "
+                f"orphans={session.finalize_stats.get('orphans')} jsonl={n_lines}"
+            )
+    return [
+        ("smoke.e2e_trace", dt * 1e6,
+         f"spans={len(spans)} orphans=0 jsonl_lines={n_lines} OK"),
+    ]

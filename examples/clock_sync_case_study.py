@@ -14,9 +14,9 @@ import tempfile
 from collections import defaultdict
 
 from repro.core import (
-    ColumboScript,
     JaegerJSONExporter,
-    SimType,
+    SourceSpec,
+    TraceSpec,
     clock_offset_series,
     ntp_estimated_offsets,
 )
@@ -25,11 +25,12 @@ from repro.sim import run_ntp_sim
 
 def scenario(background: bool, outdir: str):
     cluster = run_ntp_sim(background=background, sim_seconds=15.0, outdir=outdir)
-    script = ColumboScript()
-    for sim_type, paths in cluster.log_paths().items():
-        for p in paths:
-            script.add_log(p, SimType(sim_type))
-    return script.run()
+    spec = TraceSpec(sources=[
+        SourceSpec(sim_type=st, path=p)
+        for st, paths in sorted(cluster.log_paths().items())
+        for p in paths
+    ])
+    return spec.run().spans
 
 
 def main() -> None:

@@ -16,8 +16,7 @@ import os
 
 from repro.core import (
     ChromeTraceExporter,
-    ColumboScript,
-    SimType,
+    TraceSession,
     assemble_traces,
     component_breakdown,
     straggler_report,
@@ -67,12 +66,13 @@ def main() -> None:
         compute_scale={"pod1.chip01": 3.0},
         bg_traffic_link="dcn.h0h1", bg_rate=20e9,
     )
-    script = ColumboScript()
-    for sim_type, paths in cluster.log_paths().items():
+    session = TraceSession().attach(
+        ChromeTraceExporter(os.path.join(args.out, "trace.chrome.json"))
+    )
+    for paths in cluster.log_paths().values():
         for p in paths:
-            script.add_log(p, SimType(sim_type))
-    spans = script.run()
-    ChromeTraceExporter(os.path.join(args.out, "trace.chrome.json")).export(spans)
+            session.add_log(p)   # sim type auto-detected from the log tag
+    spans = session.run()
 
     rep = straggler_report(spans, span_name="Op")
     print(f"\nstraggler report: flagged={rep['stragglers']}")

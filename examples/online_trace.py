@@ -7,7 +7,7 @@ import os
 import tempfile
 import threading
 
-from repro.core import ColumboScript, SimType, assemble_traces, make_fifo, trace_summary
+from repro.core import TraceSession, assemble_traces, make_fifo, trace_summary
 from repro.sim import run_training_sim, synthetic_program
 
 
@@ -24,28 +24,22 @@ def main() -> None:
                 make_fifo(p)
         print("named pipes created; starting Columbo readers (they block on open)")
 
-        script = ColumboScript(poll_timeout=5.0)
+        session = TraceSession(poll_timeout=5.0)
         for k, ps in names.items():
             for p in ps:
-                script.add_log(p, SimType(k))
-        for p in script.pipelines:
-            p.start()
+                session.add_log(p, k)   # FIFOs can't be sniffed: type is explicit
 
         print("starting the simulation (writers connect to the pipes)")
         t = threading.Thread(
             target=lambda: run_training_sim(prog, n_steps=2, n_pods=1, chips_per_pod=4, outdir=d)
         )
         t.start()
+        # threaded mode: one reader thread per pipe, running in parallel
+        # with the simulation; run() joins them and finalizes the weave
+        spans = session.run(mode="threaded", join_timeout=60)
         t.join()
-        for p in script.pipelines:
-            p.join(timeout=60)
 
-        spans = []
-        for w in script.weavers:
-            spans.extend(w.spans)
-        from repro.core import finalize_spans
-
-        stats = finalize_spans(spans, script.registry)
+        stats = session.finalize_stats
         print(f"\nstreamed weave complete: {trace_summary(spans)}")
         print(f"orphans: {stats['orphans']} (0 = every cross-simulator edge resolved)")
         print("log files on disk?", any(os.path.getsize(p) > 0 for ps in names.values()

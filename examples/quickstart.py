@@ -12,10 +12,9 @@ import tempfile
 
 from repro.core import (
     ChromeTraceExporter,
-    ColumboScript,
     ConsoleExporter,
     JaegerJSONExporter,
-    SimType,
+    TraceSession,
     assemble_traces,
     component_breakdown,
     critical_path,
@@ -39,20 +38,20 @@ def main() -> None:
     print(f"simulated {cluster.sim.events_executed} DES events, "
           f"virtual time {cluster.sim.now / 1e12 * 1e3:.2f} ms")
 
-    # 3. Columbo Script: one pipeline per simulator log
-    script = ColumboScript()
-    for sim_type, paths in cluster.log_paths().items():
+    # 3. TraceSession: one pipeline per simulator log; the sim type comes
+    #    from the registry tag each simulator writes into its log, and the
+    #    attached exporters consume spans as they stream out of run()
+    session = TraceSession()
+    for paths in cluster.log_paths().values():
         for p in paths:
-            script.add_log(p, SimType(sim_type))
-    spans = script.run()
-    print("weave:", trace_summary(spans))
-    print("context:", script.stats()["context"], "finalize:", script.stats()["finalize"])
-
-    # 4. export to standard tracing tools
-    script.export(
+            session.add_log(p)              # sim type auto-detected
+    session.attach(
         JaegerJSONExporter(os.path.join(outdir, "trace.jaeger.json")),
         ChromeTraceExporter(os.path.join(outdir, "trace.chrome.json")),
     )
+    spans = session.run()
+    print("weave:", trace_summary(spans))
+    print("context:", session.stats()["context"], "finalize:", session.stats()["finalize"])
     print(f"wrote {outdir}/trace.jaeger.json (Jaeger UI) and trace.chrome.json (Perfetto)")
 
     # 5. analysis: breakdown + critical path of step 0

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the exact command the builder and CI both run.
+# Pins PYTHONPATH=src and the default "-m 'not slow'" pytest profile
+# (from pyproject.toml), then the end-to-end smoke benchmark.
+#
+#   scripts/tier1.sh            # tier-1 tests + smoke
+#   scripts/tier1.sh --full     # include slow model/serving tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--full" ]]; then
+    python -m pytest -m "" -x -q
+else
+    python -m pytest -x -q
+fi
+
+python -m benchmarks.run smoke

@@ -6,9 +6,11 @@ Public API surface of the paper's contribution (§3):
 * parsers:   simulator-specific log-format parsers
 * pipeline:  producer -> actors -> SpanWeaver pipelines (+ online mode)
 * weaver:    span weaving + implicit context propagation
-* exporters: Jaeger / Chrome trace / OTLP / console
+* exporters: streaming Jaeger / Chrome trace / OTLP / JSONL / console
 * analysis:  breakdowns, critical path, clock + straggler diagnostics
-* script:    the ColumboScript composition API
+* registry:  pluggable SimulatorRegistry (custom sim types, no core edits)
+* session:   TraceSpec (declarative) + TraceSession (fluent) composition
+* script:    deprecated ColumboScript shim over TraceSession
 """
 from .actors import (
     FilterActor,
@@ -32,23 +34,47 @@ from .analysis import (
     trace_summary,
 )
 from .context import ContextRegistry
-from .events import Event, SimType, event_type_counts, event_types
+from .errors import (
+    ColumboError,
+    SessionNotRunError,
+    SessionStateError,
+    TraceSpecError,
+    UnknownSimTypeError,
+)
+from .events import Event, SimType, event_type_counts, event_types, sim_type_value
 from .exporters import (
     ChromeTraceExporter,
     ConsoleExporter,
     Exporter,
     JaegerJSONExporter,
     OTLPJSONExporter,
+    SpanJSONLExporter,
 )
-from .parsers import DeviceLogParser, HostLogParser, NetLogParser, parser_for
+from .parsers import DeviceLogParser, HostLogParser, LogParser, NetLogParser, parser_for
 from .pipeline import (
     IterableProducer,
     LineIterProducer,
     LogFileProducer,
+    MergedProducer,
     Pipeline,
     make_fifo,
 )
+from .registry import (
+    DEFAULT_REGISTRY,
+    SimulatorRegistry,
+    SimulatorSpec,
+    register_simulator,
+    simulator_for,
+)
 from .script import ColumboScript
+from .session import (
+    ExecutionEngine,
+    ExecutionPolicy,
+    SourceSpec,
+    TraceSession,
+    TraceSpec,
+    sniff_sim_type,
+)
 from .span import Span, SpanContext, Trace, assemble_traces, reset_ids
 from .weaver import (
     DeviceSpanWeaver,

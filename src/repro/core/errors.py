@@ -1,0 +1,45 @@
+"""Typed exceptions for the Columbo core.
+
+The original ``ColumboScript`` surfaced misuse as bare ``assert`` failures
+and ``KeyError`` lookups.  The ``TraceSession`` API raises structured
+exceptions instead so callers can distinguish composition errors (an
+unregistered simulator type) from lifecycle errors (reading spans before
+``run()``).
+
+``UnknownSimTypeError`` deliberately subclasses ``KeyError`` so code that
+guarded the old ``WEAVERS[sim_type]`` / ``_SYNC_ORDER[sim_type]`` lookups
+with ``except KeyError`` keeps working.
+"""
+from __future__ import annotations
+
+
+class ColumboError(Exception):
+    """Base class for all Columbo core errors."""
+
+
+class TraceSpecError(ColumboError):
+    """A declarative TraceSpec / SourceSpec is malformed."""
+
+
+class SessionStateError(ColumboError):
+    """An operation was attempted in the wrong session lifecycle state
+    (e.g. adding sources after ``run()``, or running twice)."""
+
+
+class SessionNotRunError(SessionStateError):
+    """Results were requested before ``run()`` completed."""
+
+
+class UnknownSimTypeError(ColumboError, KeyError):
+    """A simulator type has no registration in the SimulatorRegistry."""
+
+    def __init__(self, sim_type: object, registered: object = None) -> None:
+        self.sim_type = sim_type
+        self.registered = registered
+        msg = f"unknown simulator type {sim_type!r}"
+        if registered:
+            msg += f"; registered: {sorted(registered)}"
+        super().__init__(msg)
+
+    def __str__(self) -> str:  # KeyError quotes its arg; keep the message
+        return self.args[0]

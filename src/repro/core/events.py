@@ -23,33 +23,45 @@ PS_PER_S = 1_000_000_000_000
 
 
 class SimType(str, Enum):
-    """Simulator *types* (paper §3.4): the unit of event-stream standardization."""
+    """Built-in simulator *types* (paper §3.4): the unit of event-stream
+    standardization.  Custom types (a storage sim, a DPU sim, ...) are plain
+    strings registered through ``core.registry.register_simulator``; every
+    core API accepts either a ``SimType`` member or a bare string."""
 
     HOST = "host"        # host runtime: input pipeline, dispatch, DMA, ckpt
     DEVICE = "device"    # accelerator chip: op timeline, HBM, collectives
     NET = "net"          # interconnect: ICI/DCN links, chunk transfers
 
 
+def sim_type_value(sim_type) -> str:
+    """Canonical string name of a simulator type (``SimType`` or str)."""
+    if isinstance(sim_type, Enum):
+        return sim_type.value
+    return str(sim_type)
+
+
 # ---------------------------------------------------------------------------
 # Event base + registry
 # ---------------------------------------------------------------------------
 
-_EVENT_REGISTRY: Dict[SimType, Dict[str, Type["Event"]]] = {t: {} for t in SimType}
+# Keyed by the canonical string value so user-registered simulator types
+# participate without core edits (SimType is a str-enum: either spells work).
+_EVENT_REGISTRY: Dict[str, Dict[str, Type["Event"]]] = {t.value: {} for t in SimType}
 
 
 def register_event(cls: Type["Event"]) -> Type["Event"]:
     """Class decorator: add an event type to its simulator type's registry."""
-    _EVENT_REGISTRY[cls.sim_type][cls.kind] = cls
+    _EVENT_REGISTRY.setdefault(sim_type_value(cls.sim_type), {})[cls.kind] = cls
     return cls
 
 
-def event_types(sim_type: SimType) -> Dict[str, Type["Event"]]:
-    return dict(_EVENT_REGISTRY[sim_type])
+def event_types(sim_type) -> Dict[str, Type["Event"]]:
+    return dict(_EVENT_REGISTRY.get(sim_type_value(sim_type), {}))
 
 
 def event_type_counts() -> Dict[str, int]:
     """Per-simulator-type event counts — the Table 1 inventory."""
-    return {t.value: len(_EVENT_REGISTRY[t]) for t in SimType}
+    return {t: len(kinds) for t, kinds in _EVENT_REGISTRY.items()}
 
 
 @dataclass(slots=True)

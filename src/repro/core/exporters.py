@@ -5,7 +5,18 @@ into the formats of existing distributed-tracing tools.
 * ``ChromeTraceExporter`` — Chrome trace-event format; loads in Perfetto /
                             chrome://tracing; pid=component, tid=span lane.
 * ``OTLPJSONExporter``    — OpenTelemetry OTLP/JSON resourceSpans.
+* ``SpanJSONLExporter``   — one JSON object per span per line, written as
+                            spans stream through (constant memory).
 * ``ConsoleExporter``     — human-readable tree (useful in tests/examples).
+
+Exporters are *streaming consumers*: the execution engine calls
+``begin()`` once, ``consume(span)`` per span, and ``finish()`` at the end,
+so an exporter never has to hold the whole trace in memory (the paper's
+"100s of GB of logs" concern).  Formats that need global grouping
+(Jaeger/OTLP assemble per-trace/per-resource envelopes) inherit the
+buffering default; incremental formats (Chrome events, JSONL) override the
+hooks.  The classic ``export(spans)`` one-shot entry point remains and is
+defined in terms of the streaming hooks.
 """
 from __future__ import annotations
 
@@ -19,7 +30,36 @@ PS_PER_US = 1_000_000
 
 
 class Exporter:
+    """Base streaming consumer.  Subclasses either override ``_export``
+    (buffered formats — they receive the full span list) or override the
+    ``begin/consume/finish`` hooks directly (incremental formats)."""
+
+    _buf: Optional[List[Span]] = None
+
+    # -- streaming protocol -----------------------------------------------------
+
+    def begin(self) -> None:
+        self._buf = []
+
+    def consume(self, span: Span) -> None:
+        if self._buf is None:
+            self.begin()
+        self._buf.append(span)
+
+    def finish(self) -> None:
+        buf, self._buf = self._buf or [], None
+        self._export(buf)
+
+    # -- one-shot entry point ---------------------------------------------------
+
     def export(self, spans: Iterable[Span]) -> None:
+        self.begin()
+        for s in spans:
+            self.consume(s)
+        self.finish()
+
+    def _export(self, spans: List[Span]) -> None:
+        """Buffered-format hook; incremental exporters never reach it."""
         raise NotImplementedError
 
 
@@ -31,8 +71,7 @@ class JaegerJSONExporter(Exporter):
         self.path = path
         self.payload: Optional[Dict[str, Any]] = None
 
-    def export(self, spans: Iterable[Span]) -> None:
-        spans = list(spans)
+    def _export(self, spans: List[Span]) -> None:
         procs: Dict[str, Dict[str, Any]] = {}
         proc_ids: Dict[str, str] = {}
 
@@ -105,50 +144,59 @@ class JaegerJSONExporter(Exporter):
 
 
 class ChromeTraceExporter(Exporter):
-    """'X' complete events; pid = component, tid = nesting lane."""
+    """'X' complete events; pid = component, tid = nesting lane.
+
+    Incremental: each span converts to its trace events in ``consume`` —
+    only the converted dicts accumulate, never the spans."""
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
         self.payload: Optional[Dict[str, Any]] = None
+        self._events: List[Dict[str, Any]] = []
+        self._pids: Dict[str, int] = {}
 
-    def export(self, spans: Iterable[Span]) -> None:
-        events: List[Dict[str, Any]] = []
-        pids: Dict[str, int] = {}
-        for s in spans:
-            comp = f"{s.sim_type}:{s.component}"
-            pid = pids.setdefault(comp, len(pids) + 1)
-            events.append(
+    def begin(self) -> None:
+        self._events = []
+        self._pids = {}
+
+    def consume(self, s: Span) -> None:
+        comp = f"{s.sim_type}:{s.component}"
+        pid = self._pids.setdefault(comp, len(self._pids) + 1)
+        self._events.append(
+            {
+                "name": s.name,
+                "ph": "X",
+                "ts": s.start / PS_PER_US,
+                "dur": max(s.duration, 1) / PS_PER_US,
+                "pid": pid,
+                "tid": 1,
+                "args": {
+                    **{k: str(v) for k, v in s.attrs.items()},
+                    "trace_id": s.context.hex_trace(),
+                    "span_id": s.context.hex_span(),
+                },
+            }
+        )
+        for ts, name, attrs in s.events:
+            self._events.append(
                 {
-                    "name": s.name,
-                    "ph": "X",
-                    "ts": s.start / PS_PER_US,
-                    "dur": max(s.duration, 1) / PS_PER_US,
+                    "name": name,
+                    "ph": "i",
+                    "ts": ts / PS_PER_US,
                     "pid": pid,
                     "tid": 1,
-                    "args": {
-                        **{k: str(v) for k, v in s.attrs.items()},
-                        "trace_id": s.context.hex_trace(),
-                        "span_id": s.context.hex_span(),
-                    },
+                    "s": "t",
+                    "args": {k: str(v) for k, v in attrs.items()},
                 }
             )
-            for ts, name, attrs in s.events:
-                events.append(
-                    {
-                        "name": name,
-                        "ph": "i",
-                        "ts": ts / PS_PER_US,
-                        "pid": pid,
-                        "tid": 1,
-                        "s": "t",
-                        "args": {k: str(v) for k, v in attrs.items()},
-                    }
-                )
+
+    def finish(self) -> None:
         meta = [
             {"name": "process_name", "ph": "M", "pid": pid, "args": {"name": comp}}
-            for comp, pid in pids.items()
+            for comp, pid in self._pids.items()
         ]
-        self.payload = {"traceEvents": meta + events, "displayTimeUnit": "ms"}
+        self.payload = {"traceEvents": meta + self._events, "displayTimeUnit": "ms"}
+        self._events = []
         if self.path:
             with open(self.path, "w") as f:
                 json.dump(self.payload, f)
@@ -162,7 +210,7 @@ class OTLPJSONExporter(Exporter):
         self.path = path
         self.payload: Optional[Dict[str, Any]] = None
 
-    def export(self, spans: Iterable[Span]) -> None:
+    def _export(self, spans: List[Span]) -> None:
         by_comp: Dict[str, List[Span]] = {}
         for s in spans:
             by_comp.setdefault(f"{s.sim_type}:{s.component}", []).append(s)
@@ -233,15 +281,62 @@ class OTLPJSONExporter(Exporter):
 # ---------------------------------------------------------------------------
 
 
+class SpanJSONLExporter(Exporter):
+    """One JSON object per span per line, written incrementally.
+
+    The constant-memory exporter for multipod-scale runs: nothing buffers
+    beyond the current span, so trace size is bounded by disk, not RAM.
+    Lines are self-contained and ingestible by log pipelines (BigQuery,
+    DuckDB, jq)."""
+
+    def __init__(self, path_or_stream):
+        if hasattr(path_or_stream, "write"):
+            self.path, self._stream = None, path_or_stream
+        else:
+            self.path, self._stream = path_or_stream, None
+        self._out: Optional[IO[str]] = None
+        self.spans_written = 0
+
+    def begin(self) -> None:
+        self._out = self._stream or open(self.path, "w", buffering=1 << 20)
+        self.spans_written = 0
+
+    def consume(self, s: Span) -> None:
+        rec = {
+            "trace_id": s.context.hex_trace(),
+            "span_id": s.context.hex_span(),
+            "parent_id": f"{s.parent.span_id:016x}" if s.parent else None,
+            "name": s.name,
+            "sim_type": s.sim_type,
+            "component": s.component,
+            "start_us": s.start / PS_PER_US,
+            "duration_us": max(s.duration, 1) / PS_PER_US,
+            "attrs": {k: str(v) for k, v in s.attrs.items()},
+            "n_events": len(s.events),
+            "links": [f"{l.span_id:016x}" for l in s.links],
+        }
+        self._out.write(json.dumps(rec))
+        self._out.write("\n")
+        self.spans_written += 1
+
+    def finish(self) -> None:
+        if self._out is not None and self._stream is None:
+            self._out.close()
+        self._out = None
+
+
+# ---------------------------------------------------------------------------
+
+
 class ConsoleExporter(Exporter):
     def __init__(self, stream: Optional[IO[str]] = None, max_spans: int = 200):
         self.stream = stream or sys.stdout
         self.max_spans = max_spans
 
-    def export(self, spans: Iterable[Span]) -> None:
+    def _export(self, spans: List[Span]) -> None:
         w = self.stream.write
         printed = 0
-        for tid, trace in sorted(assemble_traces(list(spans)).items()):
+        for tid, trace in sorted(assemble_traces(spans).items()):
             w(f"trace {tid} [{(trace.end - trace.start) / PS_PER_US:.3f} us, "
               f"{len(trace.spans)} spans]\n")
 

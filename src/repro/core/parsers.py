@@ -164,6 +164,8 @@ class NetLogParser(LogParser):
         return cls(ts=ts, source=link, attrs=_parse_kv(parts[3:]))
 
 
+# Retained for backward compatibility; the authoritative binding lives in
+# core/registry.py where user code can add simulator types at runtime.
 PARSERS = {
     SimType.DEVICE: DeviceLogParser,
     SimType.HOST: HostLogParser,
@@ -171,5 +173,10 @@ PARSERS = {
 }
 
 
-def parser_for(sim_type: SimType) -> LogParser:
-    return PARSERS[sim_type]()
+def parser_for(sim_type) -> LogParser:
+    """Instantiate the registered parser for ``sim_type`` (``SimType`` or
+    str, including user-registered custom types).  Raises
+    :class:`~repro.core.errors.UnknownSimTypeError` for unknown types."""
+    from .registry import DEFAULT_REGISTRY  # late import: registry registers us
+
+    return DEFAULT_REGISTRY.make_parser(sim_type)

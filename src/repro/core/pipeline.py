@@ -67,6 +67,29 @@ class LogFileProducer(Producer):
                     yield ev
 
 
+class MergedProducer(Producer):
+    """Timestamp-ordered k-way merge over shard producers.
+
+    Sharded execution (multipod-scale inputs): one simulator type's log may
+    arrive as N shards — per-pod files, rotated segments, object-store
+    chunks.  Each shard is internally time-ordered (simulators log in
+    virtual-time order), so a heap merge reconstructs the single coherent
+    stream one weaver can consume; span output is identical to weaving the
+    unsharded log.  Ties break toward the earlier-listed shard, preserving
+    original order for contiguous splits.
+    """
+
+    def __init__(self, producers: Sequence[Producer]):
+        self.producers = list(producers)
+
+    def events(self) -> Iterator[Event]:
+        import heapq
+
+        yield from heapq.merge(
+            *(p.events() for p in self.producers), key=lambda ev: ev.ts
+        )
+
+
 class IterableProducer(Producer):
     """Wraps an in-memory iterable of events (tests, replay)."""
 

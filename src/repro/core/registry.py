@@ -1,0 +1,162 @@
+"""Pluggable simulator registry.
+
+The paper's modularity argument ("Modular Full-System Simulation") only
+holds if a new simulator *type* — a storage simulator, a DPU simulator —
+can join the composition without editing core files.  This module replaces
+the three hardcoded lookup tables the original API carried
+(``WEAVERS`` in weaver.py, ``PARSERS``/``parser_for`` in parsers.py and
+``_SYNC_ORDER`` in script.py) with one registry binding a simulator type to:
+
+* a **parser factory** — log line -> typed Event (producers' input side),
+* a **weaver factory** — ``(ContextRegistry, **options) -> SpanWeaver``,
+* a **sync priority**  — offline-sync ordering hint: lower runs earlier, so
+  context *pushes* (host dispatch ids, DMA ids) happen before the *polls*
+  of downstream simulators; deferred resolution covers whatever is left.
+
+Registering a custom type end to end::
+
+    from repro.core import register_simulator
+
+    register_simulator(
+        "storage",
+        parser=StorageLogParser,
+        weaver=StorageSpanWeaver,
+        sync_priority=30,          # after host (0), before analysis-only sims
+    )
+    session.add_log("storage.log", "storage")   # now just works
+
+``SimulatorRegistry`` instances can also be created per-session to scope a
+registration to one ``TraceSession`` without touching the process-wide
+default.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, TYPE_CHECKING
+
+from .errors import UnknownSimTypeError
+from .events import SimType, sim_type_value
+
+if TYPE_CHECKING:  # avoid import cycles; factories are duck-typed anyway
+    from .context import ContextRegistry
+    from .parsers import LogParser
+    from .weaver import SpanWeaver
+
+# Priority bands: builtins occupy 0/10/20; custom types default to 100 so
+# they run after every context-pushing builtin unless they say otherwise.
+DEFAULT_SYNC_PRIORITY = 100
+
+
+@dataclass(frozen=True)
+class SimulatorSpec:
+    """Everything the engine needs to know about one simulator type."""
+
+    sim_type: str
+    parser: Callable[[], "LogParser"]
+    weaver: Callable[..., "SpanWeaver"]
+    sync_priority: int = DEFAULT_SYNC_PRIORITY
+    description: str = ""
+
+
+class SimulatorRegistry:
+    """Binds simulator types to their parser/weaver factories + sync hints."""
+
+    def __init__(self, specs: Iterable[SimulatorSpec] = ()) -> None:
+        self._specs: Dict[str, SimulatorSpec] = {}
+        for spec in specs:
+            self._specs[spec.sim_type] = spec
+
+    # -- registration -----------------------------------------------------------
+
+    def register(
+        self,
+        sim_type,
+        parser: Callable[[], "LogParser"],
+        weaver: Callable[..., "SpanWeaver"],
+        sync_priority: int = DEFAULT_SYNC_PRIORITY,
+        description: str = "",
+        replace: bool = False,
+    ) -> SimulatorSpec:
+        value = sim_type_value(sim_type)
+        if not replace and value in self._specs:
+            raise ValueError(
+                f"simulator type {value!r} already registered; pass replace=True to override"
+            )
+        spec = SimulatorSpec(value, parser, weaver, sync_priority, description)
+        self._specs[value] = spec
+        return spec
+
+    def unregister(self, sim_type) -> None:
+        self._specs.pop(sim_type_value(sim_type), None)
+
+    # -- lookup -----------------------------------------------------------------
+
+    def get(self, sim_type) -> SimulatorSpec:
+        value = sim_type_value(sim_type)
+        spec = self._specs.get(value)
+        if spec is None:
+            raise UnknownSimTypeError(value, registered=self._specs.keys())
+        return spec
+
+    def __contains__(self, sim_type) -> bool:
+        return sim_type_value(sim_type) in self._specs
+
+    def sim_types(self) -> List[str]:
+        return sorted(self._specs)
+
+    def make_parser(self, sim_type) -> "LogParser":
+        return self.get(sim_type).parser()
+
+    def make_weaver(self, sim_type, context: "ContextRegistry", **options) -> "SpanWeaver":
+        return self.get(sim_type).weaver(context, **options)
+
+    def sync_priority(self, sim_type) -> int:
+        """Ordering hint; lenient for types woven with an explicit weaver
+        (they never needed a registration to run)."""
+        spec = self._specs.get(sim_type_value(sim_type))
+        return spec.sync_priority if spec is not None else DEFAULT_SYNC_PRIORITY
+
+    def copy(self) -> "SimulatorRegistry":
+        """Session-local registry seeded with the current registrations."""
+        return SimulatorRegistry(self._specs.values())
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default, pre-populated with the paper's three simulator types.
+# ---------------------------------------------------------------------------
+
+
+def _builtin_specs() -> List[SimulatorSpec]:
+    from .parsers import DeviceLogParser, HostLogParser, NetLogParser
+    from .weaver import DeviceSpanWeaver, HostSpanWeaver, NetSpanWeaver
+
+    return [
+        SimulatorSpec(SimType.HOST.value, HostLogParser, HostSpanWeaver, 0,
+                      "host runtime: steps, data load, dispatch, DMA, ckpt, NTP"),
+        SimulatorSpec(SimType.DEVICE.value, DeviceLogParser, DeviceSpanWeaver, 10,
+                      "accelerator chip: programs, ops, HBM, collectives"),
+        SimulatorSpec(SimType.NET.value, NetLogParser, NetSpanWeaver, 20,
+                      "interconnect: ICI/DCN link transfers"),
+    ]
+
+
+DEFAULT_REGISTRY = SimulatorRegistry(_builtin_specs())
+
+
+def register_simulator(
+    sim_type,
+    parser: Callable[[], "LogParser"],
+    weaver: Callable[..., "SpanWeaver"],
+    sync_priority: int = DEFAULT_SYNC_PRIORITY,
+    description: str = "",
+    replace: bool = False,
+) -> SimulatorSpec:
+    """Register a simulator type on the process-wide default registry."""
+    return DEFAULT_REGISTRY.register(
+        sim_type, parser, weaver, sync_priority, description, replace
+    )
+
+
+def simulator_for(sim_type) -> SimulatorSpec:
+    """Look up a simulator type on the process-wide default registry."""
+    return DEFAULT_REGISTRY.get(sim_type)

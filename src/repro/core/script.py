@@ -1,139 +1,97 @@
-"""Columbo Scripts (§4): user-composed trace-creation programs.
+"""Deprecated ``ColumboScript`` shim over :class:`~repro.core.session.TraceSession`.
 
-The paper's Columbo Scripts are small C++ programs composing simulator-
-specific pipelines from predefined building blocks (parsers, actors,
-SpanWeavers, exporters).  Here the same composition is a small Python
-program against :class:`ColumboScript`:
+The paper's Columbo Scripts (§4) are user-composed trace-creation programs:
+small programs wiring simulator-specific pipelines (parser -> actors ->
+SpanWeaver -> exporter) into one end-to-end trace.  That role is now played
+by the declarative :class:`~repro.core.session.TraceSpec` and the fluent
+:class:`~repro.core.session.TraceSession`, which add a pluggable
+:class:`~repro.core.registry.SimulatorRegistry` (custom simulator types
+without core edits), sharded log inputs, streaming export, and typed
+lifecycle errors.
 
-    script = ColumboScript()
-    script.add_log(dev_log_path, SimType.DEVICE, actors=[SymbolizeActor(syms)])
-    script.add_log(host_log_path, SimType.HOST)
-    script.add_log(net_log_path, SimType.NET)
-    spans = script.run()                       # sync
-    script.export(JaegerJSONExporter("trace.json"))
+Migrating::
 
-Online mode (§3.8): pass ``online=True`` paths that are named pipes and call
-``run(threaded=True)`` while the simulation is writing.
+    # old                                    # new
+    script = ColumboScript()                 session = TraceSession()
+    script.add_log(p, SimType.HOST)          session.add_log(p, "host")
+    spans = script.run()                     spans = session.run()
+    script.export(JaegerJSONExporter(f))     session.export(JaegerJSONExporter(f))
+    script.run(threaded=True)                session.run(mode="threaded")
+
+or declaratively::
+
+    session = TraceSpec.from_dict({
+        "sources": [{"sim_type": "host", "path": p}],
+        "exporters": [JaegerJSONExporter(f)],
+    }).run()
+
+``ColumboScript`` remains as a thin shim so existing scripts keep working
+unmodified; it emits a :class:`DeprecationWarning` and preserves the two
+behavioural quirks of the old class: ``add_*`` return the created
+``Pipeline`` (not ``self``) and ``run`` takes ``threaded=`` (not ``mode=``).
+State misuse now raises the same typed exceptions as ``TraceSession``
+(``SessionNotRunError`` instead of the historic bare assert).
 """
 from __future__ import annotations
 
 import os
-from typing import Dict, Iterable, List, Optional, Sequence, Union
+import warnings
+from typing import Any, Iterable, List, Optional, Sequence, Union
 
-from .context import ContextRegistry
-from .events import Event, SimType
-from .exporters import Exporter
-from .parsers import parser_for
-from .pipeline import Actor, IterableProducer, LogFileProducer, Pipeline, Producer
+from .events import Event
+from .pipeline import Actor, Pipeline, Producer
+from .session import TraceSession
 from .span import Span
-from .weaver import (
-    DeviceSpanWeaver,
-    HostSpanWeaver,
-    NetSpanWeaver,
-    SpanWeaver,
-    WEAVERS,
-    finalize_spans,
-)
-
-# Sync execution must honor causal pushes before polls where possible;
-# deferred resolution covers the rest, but running host -> device -> net
-# maximizes eager hits.
-_SYNC_ORDER = {SimType.HOST: 0, SimType.DEVICE: 1, SimType.NET: 2}
+from .weaver import SpanWeaver
 
 
-class ColumboScript:
+class ColumboScript(TraceSession):
+    """Deprecated alias for :class:`TraceSession` with the historic calling
+    conventions.  Prefer ``TraceSession`` / ``TraceSpec`` in new code."""
+
     def __init__(self, poll_timeout: float = 0.0) -> None:
-        self.registry = ContextRegistry()
-        self.pipelines: List[Pipeline] = []
-        self.weavers: List[SpanWeaver] = []
-        self.poll_timeout = poll_timeout
-        self._spans: Optional[List[Span]] = None
-        self.finalize_stats: Dict[str, int] = {}
+        warnings.warn(
+            "ColumboScript is deprecated; use repro.core.TraceSession "
+            "(or a declarative repro.core.TraceSpec)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        super().__init__(poll_timeout=poll_timeout)
 
-    # -- composition ------------------------------------------------------------
+    # Historic contract: add_* return the created Pipeline.
 
     def add_log(
         self,
         path: Union[str, os.PathLike],
-        sim_type: SimType,
+        sim_type=None,
         actors: Sequence[Actor] = (),
         weaver: Optional[SpanWeaver] = None,
-        **weaver_kwargs,
+        **weaver_kwargs: Any,
     ) -> Pipeline:
-        producer = LogFileProducer(path, parser_for(sim_type))
-        return self.add_pipeline(producer, sim_type, actors, weaver, **weaver_kwargs)
+        super().add_log(path, sim_type, actors, weaver, **weaver_kwargs)
+        return self.pipelines[-1]
 
     def add_events(
         self,
         events: Iterable[Event],
-        sim_type: SimType,
+        sim_type,
         actors: Sequence[Actor] = (),
         weaver: Optional[SpanWeaver] = None,
-        **weaver_kwargs,
+        **weaver_kwargs: Any,
     ) -> Pipeline:
-        return self.add_pipeline(IterableProducer(events), sim_type, actors, weaver, **weaver_kwargs)
+        super().add_events(events, sim_type, actors, weaver, **weaver_kwargs)
+        return self.pipelines[-1]
 
     def add_pipeline(
         self,
         producer: Producer,
-        sim_type: SimType,
+        sim_type,
         actors: Sequence[Actor] = (),
         weaver: Optional[SpanWeaver] = None,
-        **weaver_kwargs,
+        **weaver_kwargs: Any,
     ) -> Pipeline:
-        if weaver is None:
-            weaver = WEAVERS[sim_type](
-                self.registry, poll_timeout=self.poll_timeout, **weaver_kwargs
-            )
-        self.weavers.append(weaver)
-        p = Pipeline(producer, actors, weaver, name=f"{sim_type.value}-{len(self.pipelines)}")
-        # annotate for sync ordering
-        p.sim_type = sim_type  # type: ignore[attr-defined]
-        self.pipelines.append(p)
-        return p
-
-    # -- execution ---------------------------------------------------------------
+        self._check_building("add_pipeline")
+        return self.engine.add_pipeline(producer, sim_type, actors, weaver, **weaver_kwargs)
 
     def run(self, threaded: bool = False) -> List[Span]:
-        if threaded:
-            # online mode: pipelines run in parallel with the simulation; FIFO
-            # producers block until writers appear.  Weavers use blocking polls.
-            for p in self.pipelines:
-                p.start()
-            for p in self.pipelines:
-                p.join()
-        else:
-            for p in sorted(self.pipelines, key=lambda p: _SYNC_ORDER[p.sim_type]):
-                p.run_sync()
-        spans: List[Span] = []
-        for w in self.weavers:
-            spans.extend(w.spans)
-        self.finalize_stats = finalize_spans(spans, self.registry)
-        spans.sort(key=lambda s: (s.context.trace_id, s.start, s.context.span_id))
-        self._spans = spans
-        return spans
-
-    @property
-    def spans(self) -> List[Span]:
-        assert self._spans is not None, "run() first"
-        return self._spans
-
-    def export(self, *exporters: Exporter) -> None:
-        for e in exporters:
-            e.export(self.spans)
-
-    # -- stats --------------------------------------------------------------------
-
-    def stats(self) -> Dict[str, object]:
-        return {
-            "pipelines": {
-                p.name: {"events_in": p.events_in, "events_out": p.events_out}
-                for p in self.pipelines
-            },
-            "context": self.registry.stats(),
-            "finalize": self.finalize_stats,
-            "spans": sum(len(w.spans) for w in self.weavers),
-            "span_types": {
-                w.sim_type.value: dict(w.span_type_counts) for w in self.weavers
-            },
-        }
+        return super().run(mode="threaded" if threaded else "sync")

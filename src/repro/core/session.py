@@ -1,0 +1,505 @@
+"""Declarative trace composition: ``TraceSpec`` -> ``TraceSession`` ->
+``ExecutionEngine``.
+
+The paper's Columbo Scripts compose simulator-specific pipelines (parser ->
+actors -> SpanWeaver -> exporter) into end-to-end traces.  This module is
+the composition API's second generation:
+
+* :class:`TraceSpec` — a declarative description (dataclass or plain dict)
+  of sources, actors, exporters and execution policy.  Specs are inert
+  data: build them in config files, ship them over the wire, diff them.
+* :class:`TraceSession` — the fluent imperative builder (successor to
+  ``ColumboScript``) with structured, exception-raising state transitions.
+* :class:`ExecutionEngine` — one engine behind both, unifying offline-sync,
+  threaded-online, and *sharded* execution (N time-ordered log shards per
+  simulator type merge into one weaver), with streaming export: attached
+  exporters consume spans incrementally instead of post-hoc lists.
+
+Simulator types resolve through a :class:`~repro.core.registry.
+SimulatorRegistry`, so custom types (storage sims, DPU sims) registered by
+user code weave exactly like the built-in host/device/net trio::
+
+    spec = TraceSpec.from_dict({
+        "sources": [
+            {"sim_type": "host",   "path": "logs/host-host0.log"},
+            {"sim_type": "device", "paths": ["logs/dev-0.log", "logs/dev-1.log"]},
+            {"sim_type": "net",    "path": "logs/net.log"},
+        ],
+        "policy": {"mode": "sync"},
+    })
+    session = spec.build()
+    spans = session.run()
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
+
+from .context import ContextRegistry
+from .errors import SessionNotRunError, SessionStateError, TraceSpecError
+from .events import Event, sim_type_value
+from .exporters import Exporter
+from .pipeline import (
+    Actor,
+    IterableProducer,
+    LineIterProducer,
+    LogFileProducer,
+    MergedProducer,
+    Pipeline,
+    Producer,
+)
+from .registry import DEFAULT_REGISTRY, SimulatorRegistry
+from .span import Span
+from .weaver import SpanWeaver, finalize_spans
+
+# ---------------------------------------------------------------------------
+# Log tagging (sim side writes "# columbo sim_type=<type>" as its first line)
+# ---------------------------------------------------------------------------
+
+SIM_TYPE_TAG = "# columbo sim_type="
+
+
+def sniff_sim_type(path: Union[str, os.PathLike]) -> Optional[str]:
+    """Read a log's leading lines for the simulator-type tag the component
+    sims emit.  Returns None when untagged (or when ``path`` is a FIFO —
+    sniffing a pipe would consume the stream)."""
+    path = os.fspath(path)
+    try:
+        import stat
+
+        if stat.S_ISFIFO(os.stat(path).st_mode):
+            return None
+        with open(path, "r") as f:
+            for _ in range(5):
+                line = f.readline()
+                if not line:
+                    break
+                if line.startswith(SIM_TYPE_TAG):
+                    return line[len(SIM_TYPE_TAG):].strip()
+    except OSError:
+        return None
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Declarative spec
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SourceSpec:
+    """One simulator-specific pipeline, declaratively.
+
+    Exactly one of ``path`` / ``paths`` / ``events`` / ``lines`` supplies
+    the producer; ``paths`` (>= 1 shard) requests sharded execution — the
+    shards merge in timestamp order into a single weaver for the type."""
+
+    sim_type: str
+    path: Optional[Union[str, os.PathLike]] = None
+    paths: Optional[Sequence[Union[str, os.PathLike]]] = None
+    events: Optional[Iterable[Event]] = None
+    lines: Optional[Iterable[str]] = None
+    actors: Sequence[Actor] = ()
+    weaver: Optional[SpanWeaver] = None
+    weaver_options: Dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        supplied = [
+            name
+            for name, v in (
+                ("path", self.path),
+                ("paths", self.paths),
+                ("events", self.events),
+                ("lines", self.lines),
+            )
+            if v is not None
+        ]
+        if len(supplied) != 1:
+            raise TraceSpecError(
+                f"SourceSpec needs exactly one of path/paths/events/lines, got {supplied or 'none'}"
+            )
+        self.sim_type = sim_type_value(self.sim_type)
+
+
+@dataclass
+class ExecutionPolicy:
+    """How the engine runs the pipelines.
+
+    * ``mode="sync"``     — single-threaded, ordered by each simulator
+      type's registered sync priority (context pushes before polls).
+    * ``mode="threaded"`` — one thread per pipeline, for §3.8 online mode
+      (named-pipe producers block until the simulation writes).
+    * ``poll_timeout``    — blocking-poll timeout for online weaving.
+    """
+
+    mode: str = "sync"
+    poll_timeout: float = 0.0
+
+    _MODES = ("sync", "threaded")
+
+    def __post_init__(self) -> None:
+        if self.mode not in self._MODES:
+            raise TraceSpecError(f"unknown execution mode {self.mode!r}; one of {self._MODES}")
+
+
+@dataclass
+class TraceSpec:
+    """Declarative description of a whole trace-creation run."""
+
+    sources: List[SourceSpec] = field(default_factory=list)
+    exporters: Sequence[Exporter] = ()
+    policy: ExecutionPolicy = field(default_factory=ExecutionPolicy)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "TraceSpec":
+        """Build a spec from plain dicts (config files, JSON, CLI)."""
+        try:
+            sources = [
+                s if isinstance(s, SourceSpec) else SourceSpec(**s)
+                for s in d.get("sources", ())
+            ]
+            pol = d.get("policy", ExecutionPolicy())
+            if isinstance(pol, dict):
+                pol = ExecutionPolicy(**pol)
+        except TypeError as e:
+            raise TraceSpecError(str(e)) from e
+        return cls(sources=sources, exporters=list(d.get("exporters", ())), policy=pol)
+
+    def build(self, simulators: Optional[SimulatorRegistry] = None) -> "TraceSession":
+        """Materialize the spec into a ready-to-run session."""
+        session = TraceSession(
+            simulators=simulators, poll_timeout=self.policy.poll_timeout
+        )
+        for src in self.sources:
+            session.add_source(src)
+        session.attach(*self.exporters)
+        return session
+
+    def run(self, simulators: Optional[SimulatorRegistry] = None) -> "TraceSession":
+        """Build + run; returns the finished session (spans, stats)."""
+        session = self.build(simulators)
+        session.run(mode=self.policy.mode)
+        return session
+
+
+# ---------------------------------------------------------------------------
+# Execution engine
+# ---------------------------------------------------------------------------
+
+
+class ExecutionEngine:
+    """Runs a set of simulator-specific pipelines and streams the woven
+    spans to exporters.  One code path serves offline-sync, threaded-online
+    and sharded inputs; ``TraceSession`` (and the deprecated
+    ``ColumboScript`` shim) sit on top."""
+
+    def __init__(
+        self,
+        simulators: Optional[SimulatorRegistry] = None,
+        poll_timeout: float = 0.0,
+    ) -> None:
+        self.simulators = simulators or DEFAULT_REGISTRY
+        self.context = ContextRegistry()
+        self.poll_timeout = poll_timeout
+        self.pipelines: List[Pipeline] = []
+        self.weavers: List[SpanWeaver] = []
+        self.finalize_stats: Dict[str, int] = {}
+
+    def add_pipeline(
+        self,
+        producer: Producer,
+        sim_type,
+        actors: Sequence[Actor] = (),
+        weaver: Optional[SpanWeaver] = None,
+        **weaver_options: Any,
+    ) -> Pipeline:
+        value = sim_type_value(sim_type)
+        if weaver is None:
+            # raises UnknownSimTypeError for unregistered types — the typed
+            # successor of the old bare WEAVERS[sim_type] KeyError
+            weaver = self.simulators.make_weaver(
+                value, self.context, poll_timeout=self.poll_timeout, **weaver_options
+            )
+        self.weavers.append(weaver)
+        p = Pipeline(producer, actors, weaver, name=f"{value}-{len(self.pipelines)}")
+        p.sim_type = value  # type: ignore[attr-defined]  # sync-ordering tag
+        self.pipelines.append(p)
+        return p
+
+    # -- execution ---------------------------------------------------------------
+
+    def execute(self, mode: str = "sync", join_timeout: Optional[float] = None) -> List[Span]:
+        if mode == "threaded":
+            # online mode: pipelines run in parallel with the simulation;
+            # FIFO producers block until writers appear, weavers block-poll.
+            # join_timeout bounds the wait on a wedged writer (the reader
+            # threads are daemons); whatever was woven still finalizes.
+            for p in self.pipelines:
+                p.start()
+            for p in self.pipelines:
+                p.join(timeout=join_timeout)
+        elif mode == "sync":
+            # honor causal pushes before polls where possible; deferred
+            # resolution covers the rest.  Stable sort keeps insertion
+            # order within one simulator type.
+            for p in sorted(
+                self.pipelines, key=lambda p: self.simulators.sync_priority(p.sim_type)
+            ):
+                p.run_sync()
+        else:
+            raise TraceSpecError(f"unknown execution mode {mode!r}")
+        spans: List[Span] = []
+        for w in self.weavers:
+            spans.extend(w.spans)
+        self.finalize_stats = finalize_spans(spans, self.context)
+        spans.sort(key=lambda s: (s.context.trace_id, s.start, s.context.span_id))
+        return spans
+
+    def stream_to(self, spans: Sequence[Span], exporters: Sequence[Exporter]) -> None:
+        """Fan finished spans out to exporters incrementally.  Exporters are
+        isolated from each other: one raising mid-stream still lets the rest
+        write their output, and its own ``finish()`` runs so partial output
+        flushes instead of sitting in an open buffer.  The first error
+        re-raises after every exporter has had its chance."""
+        errors: List[Exception] = []
+        for e in exporters:
+            try:
+                e.begin()
+                try:
+                    for s in spans:
+                        e.consume(s)
+                except Exception as ex:
+                    errors.append(ex)
+                    try:
+                        e.finish()
+                    except Exception:
+                        pass
+                else:
+                    e.finish()
+            except Exception as ex:
+                errors.append(ex)
+        if errors:
+            raise errors[0]
+
+
+# ---------------------------------------------------------------------------
+# Session (fluent successor to ColumboScript)
+# ---------------------------------------------------------------------------
+
+
+class _State(Enum):
+    BUILDING = "building"
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+
+
+class TraceSession:
+    """Fluent trace-composition session over one :class:`ExecutionEngine`.
+
+    Lifecycle: compose (``add_*``/``attach``) -> ``run()`` -> read
+    (``spans``/``stats``/``export``).  Out-of-order use raises
+    :class:`SessionStateError` / :class:`SessionNotRunError` rather than
+    tripping asserts.
+    """
+
+    def __init__(
+        self,
+        simulators: Optional[SimulatorRegistry] = None,
+        poll_timeout: float = 0.0,
+    ) -> None:
+        self.engine = ExecutionEngine(simulators, poll_timeout=poll_timeout)
+        self.poll_timeout = poll_timeout
+        self._exporters: List[Exporter] = []
+        self._state = _State.BUILDING
+        self._spans: Optional[List[Span]] = None
+
+    # -- backward-compatible views over the engine --------------------------------
+
+    @property
+    def simulators(self) -> SimulatorRegistry:
+        return self.engine.simulators
+
+    @property
+    def registry(self) -> ContextRegistry:
+        """The shared ContextRegistry (historic ColumboScript name)."""
+        return self.engine.context
+
+    @property
+    def pipelines(self) -> List[Pipeline]:
+        return self.engine.pipelines
+
+    @property
+    def weavers(self) -> List[SpanWeaver]:
+        return self.engine.weavers
+
+    @property
+    def finalize_stats(self) -> Dict[str, int]:
+        return self.engine.finalize_stats
+
+    @property
+    def state(self) -> str:
+        return self._state.value
+
+    # -- composition ------------------------------------------------------------
+
+    def _check_building(self, what: str) -> None:
+        if self._state is not _State.BUILDING:
+            hint = (
+                "create a fresh TraceSession"
+                if self._state is _State.FAILED
+                else "compose before run()"
+            )
+            raise SessionStateError(
+                f"cannot {what}: session is {self._state.value} ({hint})"
+            )
+
+    def add_log(
+        self,
+        path: Union[str, os.PathLike],
+        sim_type=None,
+        actors: Sequence[Actor] = (),
+        weaver: Optional[SpanWeaver] = None,
+        **weaver_options: Any,
+    ) -> "TraceSession":
+        """One simulator log file (or named pipe).  ``sim_type=None``
+        auto-detects from the ``# columbo sim_type=`` tag the component
+        simulators write."""
+        self._check_building("add_log")
+        if sim_type is None:
+            sim_type = sniff_sim_type(path)
+            if sim_type is None:
+                raise TraceSpecError(
+                    f"{os.fspath(path)!r} carries no sim-type tag; pass sim_type explicitly"
+                )
+        producer = LogFileProducer(path, self._parser(sim_type, weaver))
+        self.engine.add_pipeline(producer, sim_type, actors, weaver, **weaver_options)
+        return self
+
+    def add_shards(
+        self,
+        paths: Sequence[Union[str, os.PathLike]],
+        sim_type,
+        actors: Sequence[Actor] = (),
+        weaver: Optional[SpanWeaver] = None,
+        **weaver_options: Any,
+    ) -> "TraceSession":
+        """N time-ordered log shards of one simulator, merged into a single
+        coherent stream feeding one weaver (multipod-scale inputs)."""
+        self._check_building("add_shards")
+        if not paths:
+            raise TraceSpecError("add_shards needs at least one shard path")
+        producer = MergedProducer(
+            [LogFileProducer(p, self._parser(sim_type, weaver)) for p in paths]
+        )
+        self.engine.add_pipeline(producer, sim_type, actors, weaver, **weaver_options)
+        return self
+
+    def add_events(
+        self,
+        events: Iterable[Event],
+        sim_type,
+        actors: Sequence[Actor] = (),
+        weaver: Optional[SpanWeaver] = None,
+        **weaver_options: Any,
+    ) -> "TraceSession":
+        """An in-memory event iterable (tests, replay)."""
+        self._check_building("add_events")
+        self.engine.add_pipeline(
+            IterableProducer(events), sim_type, actors, weaver, **weaver_options
+        )
+        return self
+
+    def add_lines(
+        self,
+        lines: Iterable[str],
+        sim_type,
+        actors: Sequence[Actor] = (),
+        weaver: Optional[SpanWeaver] = None,
+        **weaver_options: Any,
+    ) -> "TraceSession":
+        """An iterable of raw log lines (sockets, decompressors)."""
+        self._check_building("add_lines")
+        producer = LineIterProducer(lines, self._parser(sim_type, weaver))
+        self.engine.add_pipeline(producer, sim_type, actors, weaver, **weaver_options)
+        return self
+
+    def add_source(self, src: SourceSpec) -> "TraceSession":
+        """Materialize one declarative :class:`SourceSpec`."""
+        kw = dict(actors=src.actors, weaver=src.weaver, **src.weaver_options)
+        if src.path is not None:
+            return self.add_log(src.path, src.sim_type, **kw)
+        if src.paths is not None:
+            return self.add_shards(src.paths, src.sim_type, **kw)
+        if src.events is not None:
+            return self.add_events(src.events, src.sim_type, **kw)
+        return self.add_lines(src.lines, src.sim_type, **kw)
+
+    def attach(self, *exporters: Exporter) -> "TraceSession":
+        """Attach streaming exporters; they consume spans as ``run()``
+        finishes weaving, span by span."""
+        self._check_building("attach exporters")
+        self._exporters.extend(exporters)
+        return self
+
+    def _parser(self, sim_type, weaver: Optional[SpanWeaver]):
+        """Parser for a source.  When an explicit weaver accompanies an
+        unregistered type we still need a parser, so the lookup is strict
+        only for registry-backed weaving."""
+        if weaver is not None and sim_type not in self.simulators:
+            raise TraceSpecError(
+                f"sim type {sim_type_value(sim_type)!r} is unregistered; "
+                "log/line sources need a registered parser"
+            )
+        return self.simulators.make_parser(sim_type)
+
+    # -- execution ---------------------------------------------------------------
+
+    def run(self, mode: str = "sync", join_timeout: Optional[float] = None) -> List[Span]:
+        """Execute all pipelines, finalize context propagation, stream the
+        spans to attached exporters, and return them.  ``join_timeout``
+        bounds the per-pipeline wait in threaded mode."""
+        self._check_building("run")
+        self._state = _State.RUNNING
+        try:
+            spans = self.engine.execute(mode=mode, join_timeout=join_timeout)
+        except Exception:
+            # a partial run leaves woven spans inside the weavers, so a
+            # retry on the same session would double-count: terminal state
+            self._state = _State.FAILED
+            raise
+        self._spans = spans
+        self._state = _State.DONE
+        if self._exporters:
+            self.engine.stream_to(spans, self._exporters)
+        return spans
+
+    @property
+    def spans(self) -> List[Span]:
+        if self._spans is None:
+            raise SessionNotRunError("no spans yet: call run() first")
+        return self._spans
+
+    def export(self, *exporters: Exporter) -> None:
+        """Post-hoc export (streams the finished spans through)."""
+        self.engine.stream_to(self.spans, exporters)
+
+    # -- stats --------------------------------------------------------------------
+
+    def stats(self) -> Dict[str, object]:
+        return {
+            "state": self._state.value,
+            "pipelines": {
+                p.name: {"events_in": p.events_in, "events_out": p.events_out}
+                for p in self.pipelines
+            },
+            "context": self.registry.stats(),
+            "finalize": dict(self.finalize_stats),
+            "spans": sum(len(w.spans) for w in self.weavers),
+            "span_types": {
+                sim_type_value(w.sim_type): dict(w.span_type_counts)
+                for w in self.weavers
+            },
+        }

@@ -21,7 +21,7 @@ from __future__ import annotations
 from typing import Any, Callable, ClassVar, Dict, List, Optional, Tuple
 
 from .context import ContextRegistry, Key
-from .events import Event, SimType
+from .events import Event, SimType, sim_type_value
 from .pipeline import Consumer
 from .span import Span, SpanBuilder, SpanContext, new_trace_id
 
@@ -82,7 +82,7 @@ class SpanWeaver(Consumer):
             trace_id=trace_id,
             parent=parent,
             component=ev.source,
-            sim_type=self.sim_type.value,
+            sim_type=sim_type_value(self.sim_type),
             attrs=attrs,
         )
 
@@ -194,14 +194,16 @@ class HostSpanWeaver(SpanWeaver):
         tid = cur.context.trace_id if cur else new_trace_id()
         b = self._begin("Dispatch", ev, tid, cur.context if cur else None, dict(ev.attrs))
         key = (ev.attrs.get("chip"), ev.attrs.get("step"), ev.attrs.get("program"))
-        self._dispatch[key] = b
+        # local state is host-qualified: chip ids are only unique within a
+        # host, and one weaver may consume several hosts' merged streams
+        self._dispatch[(ev.source,) + key] = b
         # natural boundary: PCIe-style dispatch — the chip's ProgramStart
         # event for (chip, step, program) is caused by this span
         self.registry.push(("dispatch",) + key, b.context)
 
     def _on_program_retire(self, ev: Event) -> None:
         key = (ev.attrs.get("chip"), ev.attrs.get("step"), ev.attrs.get("program"))
-        b = self._dispatch.pop(key, None)
+        b = self._dispatch.pop((ev.source,) + key, None)
         if b is not None:
             self.emit(b.finish(ev.ts))
 
@@ -230,7 +232,7 @@ class HostSpanWeaver(SpanWeaver):
         t4 = int(ev.attrs.get("t4", ev.ts))
         b = SpanBuilder(
             "NtpSync", t1, tid, cur.context, ev.source,
-            self.sim_type.value, dict(ev.attrs),
+            sim_type_value(self.sim_type), dict(ev.attrs),
         )
         # the request/response packets in the net sim carry (peer, seq)
         self.registry.push(("ntp", ev.source, ev.attrs.get("seq")), b.context)
@@ -467,6 +469,8 @@ def finalize_spans(spans: List[Span], registry: ContextRegistry) -> Dict[str, in
     return stats
 
 
+# Retained for backward compatibility; the authoritative binding lives in
+# core/registry.py where user code can add simulator types at runtime.
 WEAVERS = {
     SimType.HOST: HostSpanWeaver,
     SimType.DEVICE: DeviceSpanWeaver,

@@ -5,8 +5,8 @@
    collective schedule),
 3. simulate the multi-pod cluster executing it (component sims write their
    ad-hoc logs),
-4. run a Columbo Script over the logs,
-5. export Jaeger/Chrome/OTLP traces + print the per-component breakdown.
+4. run a declarative TraceSpec over the tagged logs,
+5. stream Jaeger/Chrome/OTLP/JSONL traces + print the per-component breakdown.
 
 ``python -m repro.launch.trace --arch olmo-1b --shape train_4k --steps 2``
 """
@@ -31,11 +31,11 @@ def main() -> None:
 
     from ..core import (
         ChromeTraceExporter,
-        ColumboScript,
-        ConsoleExporter,
         JaegerJSONExporter,
         OTLPJSONExporter,
-        SimType,
+        SourceSpec,
+        SpanJSONLExporter,
+        TraceSpec,
         assemble_traces,
         component_breakdown,
         straggler_report,
@@ -90,23 +90,23 @@ def main() -> None:
           f"-> {cluster.sim.events_executed} DES events, "
           f"virtual time {cluster.sim.now/1e12:.3f}s")
 
-    # -- Columbo ------------------------------------------------------------------
-    script = ColumboScript()
-    paths = cluster.log_paths()
-    for p in paths["host"]:
-        script.add_log(p, SimType.HOST)
-    for p in paths["device"]:
-        script.add_log(p, SimType.DEVICE)
-    for p in paths["net"]:
-        script.add_log(p, SimType.NET)
-    spans = script.run()
-
+    # -- Columbo: declarative spec over the tagged simulator logs ----------------
     base = os.path.join(args.outdir, f"{args.arch}.{args.shape}")
-    script.export(
-        JaegerJSONExporter(base + ".jaeger.json"),
-        ChromeTraceExporter(base + ".chrome.json"),
-        OTLPJSONExporter(base + ".otlp.json"),
+    spec = TraceSpec(
+        sources=[
+            SourceSpec(sim_type=st, paths=ps) if len(ps) > 1
+            else SourceSpec(sim_type=st, path=ps[0])
+            for st, ps in sorted(cluster.log_paths().items())
+        ],
+        exporters=[
+            JaegerJSONExporter(base + ".jaeger.json"),
+            ChromeTraceExporter(base + ".chrome.json"),
+            OTLPJSONExporter(base + ".otlp.json"),
+            SpanJSONLExporter(base + ".spans.jsonl"),
+        ],
     )
+    session = spec.run()
+    spans = session.spans
     print(f"[trace] {trace_summary(spans)}")
     traces = assemble_traces(spans)
     first = traces[sorted(traces)[0]]
@@ -117,7 +117,7 @@ def main() -> None:
     rep = straggler_report(spans)
     if rep["stragglers"]:
         print(f"[trace] stragglers detected: {rep['stragglers']}")
-    print(f"[trace] exported {base}.{{jaeger,chrome,otlp}}.json")
+    print(f"[trace] exported {base}.{{jaeger,chrome,otlp}}.json + .spans.jsonl")
 
 
 if __name__ == "__main__":

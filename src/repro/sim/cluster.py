@@ -46,13 +46,13 @@ class ClusterOrchestrator(ClusterLike):
             os.makedirs(outdir, exist_ok=True)
         self._logs: List[LogWriter] = []
 
-        self.net = NetSim(self.sim, topo, self._mklog("net.log"))
+        self.net = NetSim(self.sim, topo, self._mklog("net.log", "net"))
 
         self.device_sims: Dict[int, DeviceSim] = {}
         self._chip2dev: Dict[str, DeviceSim] = {}
         for pod, chips in topo.pods.items():
             dev = DeviceSim(
-                self.sim, self, pod, chips, self._mklog(f"device-pod{pod}.log"),
+                self.sim, self, pod, chips, self._mklog(f"device-pod{pod}.log", "device"),
                 compute_scale=compute_scale,
             )
             self.device_sims[pod] = dev
@@ -66,7 +66,7 @@ class ClusterOrchestrator(ClusterLike):
             name = topo.host_name(pod)
             off, drift = clock_params.get(name, (0, 0.0))
             self.hosts[name] = HostSim(
-                self.sim, self, name, self._mklog(f"host-{name}.log"),
+                self.sim, self, name, self._mklog(f"host-{name}.log", "host"),
                 chips=chips, clock=HostClock(off, drift), **hk,
             )
         # hosts that exist in the topology but have no chips (NTP testbed)
@@ -74,7 +74,7 @@ class ClusterOrchestrator(ClusterLike):
             if name not in self.hosts:
                 off, drift = clock_params.get(name, (0, 0.0))
                 self.hosts[name] = HostSim(
-                    self.sim, self, name, self._mklog(f"host-{name}.log"),
+                    self.sim, self, name, self._mklog(f"host-{name}.log", "host"),
                     chips=[], clock=HostClock(off, drift), **hk,
                 )
 
@@ -83,7 +83,7 @@ class ClusterOrchestrator(ClusterLike):
 
     # -- log management -----------------------------------------------------------------
 
-    def _mklog(self, fname: str) -> LogWriter:
+    def _mklog(self, fname: str, sim_type: str) -> LogWriter:
         if self.outdir:
             path = os.path.join(self.outdir, fname)
             if self.online_pipes:
@@ -100,23 +100,24 @@ class ClusterOrchestrator(ClusterLike):
                 lw = LogWriter(path)
         else:
             lw = LogWriter()
+        # tag the log for registry lookup: parsers skip the comment line,
+        # and TraceSession.add_log(path) auto-detects the simulator type
+        lw.write(f"# columbo sim_type={sim_type}")
+        lw.sim_type = sim_type
         self._logs.append(lw)
         return lw
 
     def log_paths(self) -> Dict[str, List[str]]:
-        """sim_type -> list of log paths (input for a ColumboScript)."""
+        """sim_type -> log paths (input for a TraceSession/TraceSpec).
+        Keys come from each simulator's registry tag, not a hardcoded
+        trio, so clusters extended with custom simulator types compose
+        without edits here."""
         assert self.outdir is not None
-        out: Dict[str, List[str]] = {"host": [], "device": [], "net": []}
+        out: Dict[str, List[str]] = {}
         for lw in self._logs:
             if lw.path is None:
                 continue
-            base = os.path.basename(lw.path)
-            if base.startswith("host-"):
-                out["host"].append(lw.path)
-            elif base.startswith("device-"):
-                out["device"].append(lw.path)
-            else:
-                out["net"].append(lw.path)
+            out.setdefault(lw.sim_type, []).append(lw.path)
         return out
 
     def close(self) -> None:

@@ -1,0 +1,60 @@
+"""Optional-``hypothesis`` shim so the suite collects on minimal installs.
+
+The property-based tests use hypothesis (declared in requirements-dev.txt /
+the ``dev`` extra in pyproject.toml), but a bare ``pip install -e .`` must
+still collect and run the example-based majority of the suite.  Importing
+``given``/``settings``/``st`` from here yields the real library when
+available; otherwise stand-ins that *skip* each property test at call time
+(the per-test equivalent of ``pytest.importorskip``) while every other test
+in the module keeps running.
+"""
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def decorate(fn):
+            def skipper(*args, **kwargs):
+                pytest.skip("hypothesis not installed (pip install -r requirements-dev.txt)")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return decorate
+
+    def settings(*_args, **_kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate
+
+    class _AnyStrategy:
+        """Accepts any strategy construction; tests never run, so the
+        returned placeholders are never drawn from."""
+
+        def __getattr__(self, name):
+            def strategy(*args, **kwargs):
+                return _AnyStrategy()
+
+            return strategy
+
+        def __call__(self, *args, **kwargs):
+            return _AnyStrategy()
+
+        def filter(self, *_a, **_k):
+            return self
+
+        def map(self, *_a, **_k):
+            return self
+
+    st = _AnyStrategy()
+
+    class HealthCheck:
+        all = staticmethod(lambda: [])

@@ -5,6 +5,10 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+# minutes of jit compiles across every arch: excluded from the tier-1
+# profile (pyproject addopts -m "not slow"); run with pytest -m ""
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCHS, get_arch
 from repro.models import (
     ModelConfig,

@@ -6,6 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# long-running engine/decode loops: excluded from the tier-1 profile
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_arch
 from repro.models import forward, init_params, model_pspecs
 from repro.serving import Request, ServingEngine

@@ -3,8 +3,7 @@ late-arrival completion and op-name rendezvous collisions)."""
 import tempfile
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.sim import ClusterOrchestrator, run_training_sim, tpu_cluster
 from repro.sim.workload import OpSpec, ProgramSpec

@@ -1,0 +1,431 @@
+"""Tests for the declarative TraceSpec / TraceSession API, the pluggable
+SimulatorRegistry (custom simulator types without core edits), sharded
+execution, streaming export, and the typed lifecycle exceptions."""
+import json
+import os
+from collections import Counter
+from typing import ClassVar
+
+import pytest
+
+from repro.core import (
+    ChromeTraceExporter,
+    ColumboScript,
+    ContextRegistry,
+    Event,
+    ExecutionPolicy,
+    Exporter,
+    SessionNotRunError,
+    SessionStateError,
+    SimType,
+    SimulatorRegistry,
+    SourceSpec,
+    SpanJSONLExporter,
+    TraceSession,
+    TraceSpec,
+    TraceSpecError,
+    UnknownSimTypeError,
+    assemble_traces,
+    register_simulator,
+)
+from repro.core.events import (
+    DmaH2DComplete,
+    DmaH2DIssue,
+    HostStepBegin,
+    HostStepEnd,
+    register_event,
+)
+from repro.core.parsers import LogParser, _parse_kv
+from repro.core.weaver import SpanWeaver
+from repro.sim import run_training_sim, synthetic_program
+
+
+# ---------------------------------------------------------------------------
+# A complete fourth simulator type — defined here, outside repro.core, to
+# prove the registry extension point (a storage simulator whose IO requests
+# are caused by host-side DMA issues, the paper's "natural boundary" idea).
+# ---------------------------------------------------------------------------
+
+STORAGE = "storage"
+
+
+@register_event
+class StorageIoBegin(Event):
+    sim_type: ClassVar[str] = STORAGE
+    kind: ClassVar[str] = "io_begin"
+
+
+@register_event
+class StorageIoEnd(Event):
+    sim_type: ClassVar[str] = STORAGE
+    kind: ClassVar[str] = "io_end"
+
+
+class StorageLogParser(LogParser):
+    """``STOR <ts> <dev> <kind> k=v ...`` — yet another ad-hoc format."""
+
+    sim_type = STORAGE
+
+    def __call__(self, line):
+        if not line.startswith("STOR "):
+            return None
+        parts = line.split()
+        if len(parts) < 4:
+            return None
+        kind = parts[3]
+        cls = {"io_begin": StorageIoBegin, "io_end": StorageIoEnd}.get(kind)
+        if cls is None:
+            return None
+        return cls(ts=int(parts[1]), source=parts[2], attrs=_parse_kv(parts[4:]))
+
+
+class StorageSpanWeaver(SpanWeaver):
+    sim_type = STORAGE
+    span_types = ("StorageIO",)
+
+    def __init__(self, registry, poll_timeout: float = 0.0):
+        super().__init__(registry, poll_timeout)
+        self._open = {}
+
+    def _on_io_begin(self, ev):
+        from repro.core.span import new_trace_id
+
+        b = self._begin("StorageIO", ev, new_trace_id(), None, dict(ev.attrs))
+        # natural boundary: the host's DMA issue carries the same dma id
+        if "dma" in ev.attrs:
+            self._parent_or_defer(b, ("h2d", ev.attrs["dma"]))
+        self._open[(ev.source, ev.attrs.get("io"))] = b
+
+    def _on_io_end(self, ev):
+        b = self._open.pop((ev.source, ev.attrs.get("io")), None)
+        if b is not None:
+            self.emit(b.finish(ev.ts))
+
+    def on_finish(self):
+        for b in self._open.values():
+            b.span.attrs["unclosed"] = True
+            self.emit(b.finish(b.span.start))
+        self._open.clear()
+
+
+def _storage_registry() -> SimulatorRegistry:
+    """Session-local registry: the default three + the storage sim."""
+    from repro.core import DEFAULT_REGISTRY
+
+    reg = DEFAULT_REGISTRY.copy()
+    reg.register(STORAGE, parser=StorageLogParser, weaver=StorageSpanWeaver,
+                 sync_priority=30)
+    return reg
+
+
+HOST_EVENTS = [
+    HostStepBegin(ts=0, source="host0", attrs={"step": 0}),
+    DmaH2DIssue(ts=100, source="host0", attrs={"dma": "d1", "bytes": 4096}),
+    DmaH2DComplete(ts=500, source="host0", attrs={"dma": "d1"}),
+    HostStepEnd(ts=1000, source="host0", attrs={"step": 0}),
+]
+
+STORAGE_LOG = (
+    "storage-sim boot: ignore this free-form banner\n"
+    "STOR 150 ssd0 io_begin io=i1 dma=d1 bytes=4096\n"
+    "STOR 400 ssd0 io_end io=i1\n"
+)
+
+
+# ---------------------------------------------------------------------------
+# Custom simulator type end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_custom_sim_type_weaves_with_cross_weaver_context(tmp_path):
+    log = tmp_path / "storage.log"
+    log.write_text(STORAGE_LOG)
+
+    session = TraceSession(simulators=_storage_registry())
+    session.add_events(list(HOST_EVENTS), SimType.HOST)
+    session.add_log(log, STORAGE)
+    spans = session.run()
+
+    io = [s for s in spans if s.name == "StorageIO"]
+    h2d = [s for s in spans if s.name == "H2DTransfer"]
+    assert len(io) == 1 and len(h2d) == 1
+    # cross-weaver propagation resolved via the shared ContextRegistry:
+    # the storage IO span parents under the host's H2DTransfer span
+    assert io[0].parent is not None
+    assert io[0].parent.span_id == h2d[0].context.span_id
+    assert io[0].context.trace_id == h2d[0].context.trace_id
+    assert session.finalize_stats["orphans"] == 0
+
+
+def test_custom_sim_type_via_global_registration(tmp_path):
+    """register_simulator on the process-wide default; clean up after."""
+    from repro.core import DEFAULT_REGISTRY
+
+    register_simulator(STORAGE, parser=StorageLogParser,
+                       weaver=StorageSpanWeaver, sync_priority=30)
+    try:
+        log = tmp_path / "storage.log"
+        log.write_text(STORAGE_LOG)
+        spans = TraceSession().add_log(log, STORAGE).run()
+        assert [s.name for s in spans] == ["StorageIO"]
+        # parser_for resolves the custom type too
+        from repro.core import parser_for
+
+        assert parser_for(STORAGE).sim_type == STORAGE
+    finally:
+        DEFAULT_REGISTRY.unregister(STORAGE)
+
+
+def test_custom_sim_type_in_declarative_spec(tmp_path):
+    log = tmp_path / "storage.log"
+    log.write_text(STORAGE_LOG)
+    spec = TraceSpec.from_dict(
+        {
+            "sources": [
+                {"sim_type": "host", "events": list(HOST_EVENTS)},
+                {"sim_type": STORAGE, "path": str(log)},
+            ],
+        }
+    )
+    session = spec.run(simulators=_storage_registry())
+    io = [s for s in session.spans if s.name == "StorageIO"]
+    assert io and io[0].parent is not None
+
+
+# ---------------------------------------------------------------------------
+# Typed exceptions / lifecycle state machine
+# ---------------------------------------------------------------------------
+
+
+def test_spans_before_run_raises_typed_error():
+    with pytest.raises(SessionNotRunError):
+        TraceSession().spans
+
+
+def test_unknown_sim_type_raises_typed_error():
+    with pytest.raises(UnknownSimTypeError) as ei:
+        TraceSession().add_events([], "dpu")
+    assert isinstance(ei.value, KeyError)  # old except-KeyError guards survive
+    assert "dpu" in str(ei.value)
+
+
+def test_compose_after_run_raises_state_error():
+    session = TraceSession()
+    session.add_events(list(HOST_EVENTS), SimType.HOST)
+    session.run()
+    with pytest.raises(SessionStateError):
+        session.add_events([], SimType.HOST)
+    with pytest.raises(SessionStateError):
+        session.run()
+
+
+def test_failed_run_is_terminal_not_retryable(tmp_path):
+    """A partial run leaves woven spans in the weavers; retrying on the
+    same session would double-count them, so failure is terminal."""
+    session = TraceSession()
+    session.add_events(list(HOST_EVENTS), SimType.HOST)
+    session.add_log(tmp_path / "missing.log", "host")
+    with pytest.raises(FileNotFoundError):
+        session.run()
+    assert session.state == "failed"
+    with pytest.raises(SessionStateError):
+        session.run()
+
+
+def test_source_spec_validates_exactly_one_input():
+    with pytest.raises(TraceSpecError):
+        SourceSpec(sim_type="host")
+    with pytest.raises(TraceSpecError):
+        SourceSpec(sim_type="host", path="a.log", events=[])
+    with pytest.raises(TraceSpecError):
+        ExecutionPolicy(mode="warp")
+
+
+def test_columbo_script_shim_is_deprecated_but_works():
+    with pytest.warns(DeprecationWarning):
+        script = ColumboScript()
+    p = script.add_events(list(HOST_EVENTS), SimType.HOST)
+    assert p is script.pipelines[-1]  # historic contract: returns Pipeline
+    with pytest.raises(SessionNotRunError):  # typed, not assert
+        script.spans
+    spans = script.run()
+    assert any(s.name == "HostStep" for s in spans)
+    assert script.spans is spans
+
+
+# ---------------------------------------------------------------------------
+# Sharded execution: N shards per sim type == single-log execution
+# ---------------------------------------------------------------------------
+
+
+def _shard_file(path: str, n: int, outdir: str):
+    """Split a log into n contiguous shards (time order preserved)."""
+    with open(path) as f:
+        lines = f.readlines()
+    per = (len(lines) + n - 1) // n
+    out = []
+    for i in range(n):
+        sp = os.path.join(outdir, f"{os.path.basename(path)}.shard{i}")
+        with open(sp, "w") as f:
+            f.writelines(lines[i * per:(i + 1) * per])
+        out.append(sp)
+    return out
+
+
+def test_sharded_execution_matches_single_log(tmp_path):
+    prog = synthetic_program(n_layers=2, layer_flops=5e11, layer_bytes=2e8,
+                             grad_bytes=1e8)
+    cluster = run_training_sim(prog, n_steps=1, n_pods=2, chips_per_pod=4,
+                               outdir=str(tmp_path / "logs"))
+    paths = cluster.log_paths()
+
+    base = TraceSession()
+    for st_name, ps in paths.items():
+        for p in ps:
+            base.add_log(p, st_name)
+    base_spans = base.run()
+
+    sharded = TraceSession()
+    shard_dir = str(tmp_path / "shards")
+    os.makedirs(shard_dir)
+    for st_name, ps in paths.items():
+        for p in ps:
+            sharded.add_shards(_shard_file(p, 4, shard_dir), st_name)
+    sharded_spans = sharded.run()
+
+    assert len(sharded_spans) == len(base_spans)
+    assert Counter(s.name for s in sharded_spans) == Counter(
+        s.name for s in base_spans
+    )
+    assert sharded.finalize_stats["orphans"] == 0
+    # weaver fan-in: one weaver per source (4 shards -> 1), not per shard
+    assert len(sharded.weavers) == len(base.weavers)
+    # causality still resolves across the sharded boundary
+    by_id = {s.context.span_id: s for s in sharded_spans}
+    progs = [s for s in sharded_spans if s.name == "DeviceProgram"]
+    assert progs and all(
+        p.parent is not None and by_id[p.parent.span_id].name == "Dispatch"
+        for p in progs
+    )
+
+
+# ---------------------------------------------------------------------------
+# Streaming export
+# ---------------------------------------------------------------------------
+
+
+def test_attached_exporters_stream_during_run(tmp_path):
+    jsonl = str(tmp_path / "spans.jsonl")
+    chrome = str(tmp_path / "trace.chrome.json")
+    je, ce = SpanJSONLExporter(jsonl), ChromeTraceExporter(chrome)
+    session = (
+        TraceSession()
+        .add_events(list(HOST_EVENTS), SimType.HOST)
+        .attach(je, ce)
+    )
+    spans = session.run()
+    assert je.spans_written == len(spans) > 0
+    recs = [json.loads(l) for l in open(jsonl)]
+    assert {r["name"] for r in recs} == {s.name for s in spans}
+    assert all(r["span_id"] for r in recs)
+    data = json.load(open(chrome))
+    assert any(e["ph"] == "X" for e in data["traceEvents"])
+
+
+class _BoomExporter(Exporter):
+    def begin(self):
+        pass
+
+    def consume(self, span):
+        raise RuntimeError("boom")
+
+    def finish(self):
+        pass
+
+
+def test_exporter_failure_does_not_starve_other_exporters(tmp_path):
+    jsonl = str(tmp_path / "s.jsonl")
+    je = SpanJSONLExporter(jsonl)
+    session = (
+        TraceSession()
+        .add_events(list(HOST_EVENTS), SimType.HOST)
+        .attach(_BoomExporter(), je)
+    )
+    with pytest.raises(RuntimeError, match="boom"):
+        session.run()
+    # the healthy exporter still flushed its complete output
+    assert sum(1 for _ in open(jsonl)) == len(session.spans) > 0
+
+
+def test_merged_host_streams_keep_per_host_dispatch_state(tmp_path):
+    """Distinct hosts share chip ids after pod-stripping; one weaver over
+    their merged streams must not cross open Dispatch spans (regression:
+    _dispatch was keyed without the source host)."""
+    prog = synthetic_program(n_layers=1, layer_flops=2e11, layer_bytes=1e8,
+                             grad_bytes=5e7)
+    cluster = run_training_sim(prog, n_steps=1, n_pods=2, chips_per_pod=2,
+                               outdir=str(tmp_path))
+    paths = cluster.log_paths()
+
+    per_log = TraceSession()
+    for st_name, ps in sorted(paths.items()):
+        for p in ps:
+            per_log.add_log(p, st_name)
+    a = per_log.run()
+
+    merged = TraceSession()
+    for st_name, ps in sorted(paths.items()):
+        merged.add_shards(ps, st_name)
+    b = merged.run()
+
+    assert Counter(s.name for s in b) == Counter(s.name for s in a)
+    assert sorted(s.duration for s in b if s.name == "Dispatch") == sorted(
+        s.duration for s in a if s.name == "Dispatch"
+    )
+
+
+def test_declarative_spec_matches_imperative(tmp_path):
+    prog = synthetic_program(n_layers=1, layer_flops=2e11, layer_bytes=1e8,
+                             grad_bytes=5e7)
+    cluster = run_training_sim(prog, n_steps=1, n_pods=1, chips_per_pod=2,
+                               outdir=str(tmp_path))
+    paths = cluster.log_paths()
+
+    imperative = TraceSession()
+    for st_name, ps in sorted(paths.items()):
+        for p in ps:
+            imperative.add_log(p, st_name)
+    spans_a = imperative.run()
+
+    spec = TraceSpec(
+        sources=[
+            SourceSpec(sim_type=st_name, path=p)
+            for st_name, ps in sorted(paths.items())
+            for p in ps
+        ],
+        policy=ExecutionPolicy(mode="sync"),
+    )
+    spans_b = spec.run().spans
+    assert Counter(s.name for s in spans_b) == Counter(s.name for s in spans_a)
+    assert len(assemble_traces(spans_b)) == len(assemble_traces(spans_a))
+
+
+def test_add_log_autodetects_tagged_sim_type(tmp_path):
+    prog = synthetic_program(n_layers=1, layer_flops=2e11, layer_bytes=1e8,
+                             grad_bytes=5e7)
+    cluster = run_training_sim(prog, n_steps=1, n_pods=1, chips_per_pod=2,
+                               outdir=str(tmp_path))
+    session = TraceSession()
+    for ps in cluster.log_paths().values():
+        for p in ps:
+            session.add_log(p)  # no sim_type: sniffed from the log tag
+    spans = session.run()
+    assert {s.sim_type for s in spans} == {"host", "device", "net"}
+    assert session.finalize_stats["orphans"] == 0
+
+
+def test_add_log_untagged_without_sim_type_raises(tmp_path):
+    p = tmp_path / "mystery.log"
+    p.write_text("no tag here\n")
+    with pytest.raises(TraceSpecError):
+        TraceSession().add_log(p)

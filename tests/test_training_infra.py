@@ -8,8 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
+
+# trainer loops, checkpoint round-trips and multi-device subprocesses:
+# excluded from the tier-1 profile (pyproject addopts -m "not slow")
+pytestmark = pytest.mark.slow
 
 from repro.checkpoint import CheckpointManager
 from repro.data import DataConfig, SyntheticLM
