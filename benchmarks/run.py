@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows (one per measurement).
   pipeline   — §3.5: log->span processing throughput
   online     — §3.8: named-pipe online mode
   roofline   — §Roofline terms per (arch x shape) from dry-run artifacts
+  scenarios  — fault-injection loop: inject -> simulate -> weave -> diagnose
 """
 import sys
 import time
@@ -23,6 +24,7 @@ def main() -> None:
         online_mode,
         pipeline_tput,
         roofline,
+        scenario_sweep,
         smoke,
         table1_coverage,
     )
@@ -35,6 +37,7 @@ def main() -> None:
         "pipeline": pipeline_tput.run,
         "online": online_mode.run,
         "roofline": roofline.run,
+        "scenarios": scenario_sweep.run,
     }
     print("name,us_per_call,derived")
     failures = 0

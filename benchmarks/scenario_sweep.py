@@ -1,0 +1,37 @@
+"""Scenario sweep: wall-clock cost of the fault-injection loop per scenario.
+
+For every library scenario (sim/scenarios.py) this measures the full
+pipeline — seeded fault injection + DES simulation + TraceSpec weave +
+diagnose() — and reports one row per scenario:
+
+    scenario.<name>,<us_per_run>,spans=<n> diag=<classes> OK|MISSED
+
+The sweep doubles as a correctness gate for the perf numbers: a scenario
+whose injected fault class is not named by diagnose() reports MISSED and
+fails the run, so a "fast" regression that breaks attribution cannot hide.
+
+    PYTHONPATH=src python -m benchmarks.run scenarios
+"""
+import time
+
+
+def run():
+    from repro.sim.scenarios import SCENARIOS
+
+    rows = []
+    missed = []
+    for name, spec in SCENARIOS.items():
+        t0 = time.perf_counter()
+        r = spec.run()
+        dt = time.perf_counter() - t0
+        verdict = "OK" if r.ok else "MISSED"
+        if not r.ok:
+            missed.append(name)
+        diag = "+".join(r.detected) or "clean"
+        rows.append(
+            (f"scenario.{name}", dt * 1e6,
+             f"spans={len(r.spans)} diag={diag} {verdict}")
+        )
+    if missed:
+        raise RuntimeError(f"scenarios missed their diagnosis: {missed}")
+    return rows

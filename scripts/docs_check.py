@@ -1,0 +1,139 @@
+"""Documentation checks (run via scripts/docs_check.sh; part of tier-1).
+
+Two failure classes, both cheap and deterministic:
+
+1. **Broken intra-repo references** in README.md and docs/*.md:
+   - markdown links ``[text](path)`` whose target is a repo path that does
+     not exist (external http(s)/mailto links and pure #anchors are skipped);
+   - ``[[file:line]]`` code anchors whose file is missing or whose line
+     number exceeds the file's length.
+
+2. **Code blocks that don't import**: every ```python fenced block must
+   compile, and its top-level ``import``/``from`` statements must execute
+   (doctest-style smoke with PYTHONPATH=src) — so the docs can't drift
+   ahead of the API they document.  Full blocks are not executed: examples
+   legitimately reference runtime artifacts (log files, clusters).
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MD_LINK = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+CODE_ANCHOR = re.compile(r"\[\[([^\]\s:]+):(\d+)\]\]")
+FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+def _doc_files():
+    out = [os.path.join(REPO, "README.md")]
+    out.extend(sorted(glob.glob(os.path.join(REPO, "docs", "*.md"))))
+    return [p for p in out if os.path.exists(p)]
+
+
+def _strip_code_blocks(text: str) -> str:
+    """Remove fenced blocks so link checks don't trip on code."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            out.append(line)
+    return "\n".join(out)
+
+
+def check_links(path: str, text: str):
+    errors = []
+    base = os.path.dirname(path)
+    prose = _strip_code_blocks(text)
+    for target in MD_LINK.findall(prose):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        # resolve relative to the doc, then to the repo root
+        if not (
+            os.path.exists(os.path.join(base, rel))
+            or os.path.exists(os.path.join(REPO, rel))
+        ):
+            errors.append(f"{os.path.relpath(path, REPO)}: broken link -> {target}")
+    for fname, line_s in CODE_ANCHOR.findall(text):
+        fpath = os.path.join(REPO, fname)
+        if not os.path.exists(fpath):
+            errors.append(
+                f"{os.path.relpath(path, REPO)}: anchor [[{fname}:{line_s}]] "
+                f"-> file missing"
+            )
+            continue
+        n_lines = sum(1 for _ in open(fpath, "rb"))
+        if int(line_s) > n_lines:
+            errors.append(
+                f"{os.path.relpath(path, REPO)}: anchor [[{fname}:{line_s}]] "
+                f"-> only {n_lines} lines"
+            )
+    return errors
+
+
+def _python_blocks(text: str):
+    blocks, cur, lang, start = [], None, None, 0
+    for i, line in enumerate(text.splitlines(), 1):
+        m = FENCE.match(line)
+        if m and cur is None:
+            lang, cur, start = m.group(1).lower(), [], i
+        elif m:
+            if lang == "python":
+                blocks.append((start, "\n".join(cur)))
+            cur, lang = None, None
+        elif cur is not None:
+            cur.append(line)
+    return blocks
+
+
+def check_code_blocks(path: str, text: str):
+    import ast
+
+    errors = []
+    rel = os.path.relpath(path, REPO)
+    for start, block in _python_blocks(text):
+        try:
+            tree = ast.parse(block, filename=f"{rel}:{start}")
+        except SyntaxError as e:
+            errors.append(f"{rel}:{start}: python block does not compile: {e}")
+            continue
+        imports = [
+            node for node in tree.body if isinstance(node, (ast.Import, ast.ImportFrom))
+        ]
+        if not imports:
+            continue
+        src = "\n".join(ast.unparse(node) for node in imports)
+        try:
+            exec(compile(src, f"{rel}:{start}<imports>", "exec"),
+                 {"__name__": f"docs_check_{start}"})
+        except Exception as e:  # noqa: BLE001 - any import failure is a doc bug
+            errors.append(f"{rel}:{start}: doc imports fail: {type(e).__name__}: {e}")
+    return errors
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    errors = []
+    for path in _doc_files():
+        text = open(path).read()
+        errors.extend(check_links(path, text))
+        errors.extend(check_code_blocks(path, text))
+    if errors:
+        print("docs_check: FAILED")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"docs_check: OK ({len(_doc_files())} docs checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Documentation checks: broken intra-repo links / [[file:line]] anchors in
+# README.md + docs/*.md, and python code blocks that don't compile or whose
+# imports fail.  Part of scripts/tier1.sh; also runnable standalone:
+#
+#   scripts/docs_check.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python scripts/docs_check.py

@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 verification — the exact command the builder and CI both run.
 # Pins PYTHONPATH=src and the default "-m 'not slow'" pytest profile
-# (from pyproject.toml), then the end-to-end smoke benchmark.
+# (from pyproject.toml), then the end-to-end smoke benchmark and the
+# documentation checks (broken doc links / non-importing doc code blocks).
 #
-#   scripts/tier1.sh            # tier-1 tests + smoke
+#   scripts/tier1.sh            # tier-1 tests + smoke + docs checks
 #   scripts/tier1.sh --full     # include slow model/serving tests
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -17,3 +18,5 @@ else
 fi
 
 python -m benchmarks.run smoke
+
+scripts/docs_check.sh

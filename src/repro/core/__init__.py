@@ -24,9 +24,12 @@ from .actors import (
     TimeWindowActor,
 )
 from .analysis import (
+    Diagnosis,
+    Finding,
     clock_offset_series,
     component_breakdown,
     critical_path,
+    diagnose,
     ntp_estimated_offsets,
     ntp_path_asymmetry,
     span_name_breakdown,

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import statistics
 from collections import defaultdict
+from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .span import Span, Trace, assemble_traces
@@ -29,24 +30,36 @@ PS_PER_US = 1_000_000
 def component_breakdown(trace: Trace, leaf_only: bool = True) -> Dict[str, float]:
     """Map component -> µs of span time in this trace.
 
-    With ``leaf_only`` (default), a span only contributes the part of its
-    duration not covered by its children, so the breakdown sums to ~the
-    trace's critical-path-ish total instead of double counting.
+    With ``leaf_only`` (default), a span only contributes the parts of its
+    duration not covered by its children, and a component's total is the
+    *merged union* of those leaf intervals — overlapping sibling spans
+    (async collectives, queued link transfers) count their overlap once, so
+    each component's number is the wall-clock time it was busy instead of a
+    double-counted sum.
     """
-    out: Dict[str, float] = defaultdict(float)
+    if not leaf_only:
+        out: Dict[str, float] = defaultdict(float)
+        for s in trace.spans:
+            out[f"{s.sim_type}:{s.component}"] += s.duration / PS_PER_US
+        return dict(out)
     children: Dict[int, List[Span]] = defaultdict(list)
     for s in trace.spans:
         if s.parent is not None:
             children[s.parent.span_id].append(s)
+    leaf_ivals: Dict[str, List[Tuple[int, int]]] = defaultdict(list)
     for s in trace.spans:
-        dur = s.duration
-        if leaf_only and children.get(s.context.span_id):
-            covered = _union_len(
-                [(c.start, c.end) for c in children[s.context.span_id]], s.start, s.end
+        kids = children.get(s.context.span_id)
+        if kids:
+            covered = _merge_ivals([(c.start, c.end) for c in kids], s.start, s.end)
+            leaf_ivals[f"{s.sim_type}:{s.component}"].extend(
+                _subtract_ivals((s.start, s.end), covered)
             )
-            dur = max(0, dur - covered)
-        out[f"{s.sim_type}:{s.component}"] += dur / PS_PER_US
-    return dict(out)
+        else:
+            leaf_ivals[f"{s.sim_type}:{s.component}"].append((s.start, s.end))
+    return {
+        comp: sum(b - a for a, b in _merge_ivals(ivals)) / PS_PER_US
+        for comp, ivals in leaf_ivals.items()
+    }
 
 
 def span_name_breakdown(trace: Trace) -> Dict[str, float]:
@@ -56,22 +69,43 @@ def span_name_breakdown(trace: Trace) -> Dict[str, float]:
     return dict(out)
 
 
-def _union_len(ivals: List[Tuple[int, int]], lo: int, hi: int) -> int:
-    ivals = sorted((max(a, lo), min(b, hi)) for a, b in ivals)
-    total = 0
-    cur_a, cur_b = None, None
-    for a, b in ivals:
+def _merge_ivals(
+    ivals: Iterable[Tuple[int, int]],
+    lo: Optional[int] = None,
+    hi: Optional[int] = None,
+) -> List[Tuple[int, int]]:
+    """Sorted, disjoint union of intervals, optionally clamped to [lo, hi]."""
+    clamped = (
+        (a if lo is None else max(a, lo), b if hi is None else min(b, hi))
+        for a, b in ivals
+    )
+    merged: List[Tuple[int, int]] = []
+    for a, b in sorted(clamped):
         if b <= a:
             continue
-        if cur_b is None or a > cur_b:
-            if cur_b is not None:
-                total += cur_b - cur_a
-            cur_a, cur_b = a, b
+        if merged and a <= merged[-1][1]:
+            if b > merged[-1][1]:
+                merged[-1] = (merged[-1][0], b)
         else:
-            cur_b = max(cur_b, b)
-    if cur_b is not None:
-        total += cur_b - cur_a
-    return total
+            merged.append((a, b))
+    return merged
+
+
+def _subtract_ivals(
+    span: Tuple[int, int], covered: List[Tuple[int, int]]
+) -> List[Tuple[int, int]]:
+    """Parts of ``span`` not covered by the merged intervals ``covered``."""
+    out: List[Tuple[int, int]] = []
+    cur = span[0]
+    for a, b in covered:
+        if a > cur:
+            out.append((cur, min(a, span[1])))
+        cur = max(cur, b)
+        if cur >= span[1]:
+            break
+    if cur < span[1]:
+        out.append((cur, span[1]))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -208,3 +242,287 @@ def trace_summary(spans: Sequence[Span]) -> Dict[str, Any]:
         "linked_spans": sum(1 for s in spans if s.links),
         "parented_spans": sum(1 for s in spans if s.parent is not None),
     }
+
+
+# ---------------------------------------------------------------------------
+# diagnose(): attribute trace anomalies to fault classes
+# ---------------------------------------------------------------------------
+#
+# The detection half of the fault-injection loop (sim/faults.py is the
+# injection half).  Every rule works purely from the woven spans — no access
+# to the injected ground truth — and emits findings tagged with the same
+# fault-class names the faults carry, so a scenario can assert the
+# round-trip: inject F, weave, diagnose, find F's class.
+
+
+@dataclass
+class Finding:
+    """One attributed anomaly: a fault class pinned to a component."""
+
+    fault_class: str          # one of sim.faults.FAULT_CLASSES
+    component: str            # "ici.pod0.l1", "pod1.chip02", "host0", ...
+    rule: str                 # which detector fired
+    severity: float           # rule-specific magnitude; bigger = worse
+    evidence: Dict[str, Any] = field(default_factory=dict)
+
+    def __str__(self) -> str:
+        ev = ", ".join(f"{k}={v}" for k, v in self.evidence.items())
+        return (
+            f"[{self.fault_class}] {self.component} (rule={self.rule}, "
+            f"severity={self.severity:.2f}{'; ' + ev if ev else ''})"
+        )
+
+
+@dataclass
+class Diagnosis:
+    """diagnose() output: ranked findings + trace-level context."""
+
+    findings: List[Finding] = field(default_factory=list)
+    critical_paths: Dict[int, str] = field(default_factory=dict)  # trace -> top component
+
+    @property
+    def fault_classes(self) -> List[str]:
+        out: List[str] = []
+        for f in self.findings:
+            if f.fault_class not in out:
+                out.append(f.fault_class)
+        return out
+
+    def __contains__(self, fault_class: str) -> bool:
+        return fault_class in self.fault_classes
+
+    def summary(self) -> str:
+        if not self.findings:
+            return "no anomalies attributed (healthy trace)"
+        return "\n".join(str(f) for f in self.findings)
+
+
+def diagnose(
+    spans: Sequence[Span],
+    k: float = 4.0,
+    clock_threshold_us: float = 1.0,
+    reorder_min_samples: int = 8,
+    reorder_min_fraction: float = 0.05,
+) -> Diagnosis:
+    """Attribute anomalies in a woven trace set back to fault classes.
+
+    Rules (each independent, all trace-derived):
+
+    * **device stragglers** — per-chip k-MAD outliers over ``Op`` span
+      durations -> ``device_slowdown``; a pod whose chips are uniformly
+      slow (pod-level k-MAD, >= 3 pods) -> ``straggler_pod``.
+    * **link service time** — per-link median wire time per byte (measured
+      from the ``wire_tx`` span event to span end, i.e. excluding queueing),
+      k-MAD outliers within a link family (ici/dcn/pcie/eth) ->
+      ``link_degradation``.
+    * **drops** — ``chunk_drop`` span events on a link -> ``link_loss``.
+    * **arrival inversions** — a link whose transfers complete out of
+      enqueue order (impossible on a healthy FIFO link) -> ``link_reorder``.
+    * **host stalls** — ``gc_stall`` span events -> ``host_pause``.
+    * **clock excursions** — host clock_read offsets vs the simulation's
+      ground-truth global clock exceed ``clock_threshold_us`` ->
+      ``clock_fault`` (classified step vs drift).
+
+    Critical-path context: for each step trace, the component owning the
+    largest share of the critical path is recorded in
+    ``Diagnosis.critical_paths``; findings on a component that also
+    dominates a critical path get their evidence annotated (the
+    "critical-path shift" signal).
+    """
+    d = Diagnosis()
+    d.findings.extend(_diagnose_device(spans, k))
+    d.findings.extend(_diagnose_links(spans, k, reorder_min_samples, reorder_min_fraction))
+    d.findings.extend(_diagnose_host_stalls(spans))
+    d.findings.extend(_diagnose_clocks(spans, clock_threshold_us))
+    d.critical_paths = _critical_path_components(spans)
+    cp_components = set(d.critical_paths.values())
+    for f in d.findings:
+        for comp in cp_components:
+            if f.component in comp:
+                f.evidence["on_critical_path"] = comp
+    d.findings.sort(key=lambda f: -f.severity)
+    return d
+
+
+def _mad_outliers(
+    per_key: Dict[str, float], k: float, min_keys: int = 3
+) -> List[Tuple[str, float, float]]:
+    """(key, value, median) for values > median + k * MAD.  MAD degenerates
+    to 1% of the median when all values agree, so identical-by-construction
+    healthy populations never flag."""
+    if len(per_key) < min_keys:
+        return []
+    med = statistics.median(per_key.values())
+    mad = statistics.median(abs(v - med) for v in per_key.values()) or max(med * 0.01, 1e-9)
+    return sorted(
+        ((c, v, med) for c, v in per_key.items() if v > med + k * mad),
+        key=lambda t: -t[1],
+    )
+
+
+def _diagnose_device(spans: Sequence[Span], k: float) -> List[Finding]:
+    durs: Dict[str, List[int]] = defaultdict(list)
+    for s in spans:
+        if s.name == "Op":
+            durs[s.component].append(s.duration)
+    if not durs:
+        return []
+    per_chip = {c: statistics.median(v) / PS_PER_US for c, v in durs.items()}
+    findings = [
+        Finding(
+            "device_slowdown", chip, "op_kmad", v / med,
+            {"median_op_us": round(v, 1), "fleet_median_us": round(med, 1)},
+        )
+        for chip, v, med in _mad_outliers(per_chip, k)
+    ]
+    # pod-level: median of each pod's chip medians ("pod1.chip02" -> "pod1")
+    pods: Dict[str, List[float]] = defaultdict(list)
+    for chip, v in per_chip.items():
+        if "." in chip:
+            pods[chip.split(".", 1)[0]].append(v)
+    per_pod = {p: statistics.median(v) for p, v in pods.items()}
+    for pod, v, med in _mad_outliers(per_pod, k):
+        findings.append(
+            Finding(
+                "straggler_pod", pod, "pod_kmad", v / med,
+                {"pod_median_op_us": round(v, 1), "fleet_median_us": round(med, 1),
+                 "chips": sum(1 for c in per_chip if c.startswith(pod + "."))},
+            )
+        )
+    return findings
+
+
+def _link_family(link: str) -> str:
+    return link.split(".", 1)[0]
+
+
+def _diagnose_links(
+    spans: Sequence[Span], k: float, reorder_min_samples: int, reorder_min_fraction: float
+) -> List[Finding]:
+    findings: List[Finding] = []
+    per_link: Dict[str, List[Span]] = defaultdict(list)
+    for s in spans:
+        if s.name == "LinkTransfer":
+            per_link[s.component].append(s)
+
+    # -- service time per byte (k-MAD within a link family) -------------------
+    per_byte: Dict[str, Dict[str, float]] = defaultdict(dict)   # family -> link -> med
+    for link, ss in per_link.items():
+        samples = []
+        for s in ss:
+            size = s.attrs.get("size")
+            if not isinstance(size, int) or size < 4096:
+                continue
+            wire_start = next((ts for ts, n, _ in s.events if n == "wire_tx"), s.start)
+            wire_ps = s.end - wire_start
+            if wire_ps > 0:
+                samples.append(wire_ps / size)
+        if samples:
+            per_byte[_link_family(link)][link] = statistics.median(samples)
+    for family, links in per_byte.items():
+        for link, v, med in _mad_outliers(links, k):
+            findings.append(
+                Finding(
+                    "link_degradation", link, "wire_time_kmad", v / med,
+                    {"ps_per_byte": round(v, 3), "family_median": round(med, 3),
+                     "family": family},
+                )
+            )
+
+    # -- drops -> loss ---------------------------------------------------------
+    for link, ss in per_link.items():
+        n_drops = sum(int(s.attrs.get("drops", 0)) for s in ss)
+        if n_drops:
+            findings.append(
+                Finding(
+                    "link_loss", link, "chunk_drops", n_drops / len(ss),
+                    {"drops": n_drops, "transfers": len(ss)},
+                )
+            )
+
+    # -- arrival inversions -> reordering -------------------------------------
+    for link, ss in per_link.items():
+        ordered = sorted(ss, key=lambda s: (s.start, s.context.span_id))
+        if len(ordered) < reorder_min_samples:
+            continue
+        inversions = sum(
+            1
+            for a, b in zip(ordered, ordered[1:])
+            if a.start < b.start and b.end < a.end
+        )
+        frac = inversions / (len(ordered) - 1)
+        if frac >= reorder_min_fraction:
+            findings.append(
+                Finding(
+                    "link_reorder", link, "arrival_inversions", frac,
+                    {"inversions": inversions, "transfers": len(ordered)},
+                )
+            )
+    return findings
+
+
+def _diagnose_host_stalls(spans: Sequence[Span]) -> List[Finding]:
+    stalls: Dict[str, List[Tuple[int, Dict[str, Any]]]] = defaultdict(list)
+    for s in spans:
+        if s.sim_type != "host":
+            continue
+        for ts, name, attrs in s.events:
+            if name == "gc_stall":
+                stalls[s.component].append((ts, attrs))
+    return [
+        Finding(
+            "host_pause", host, "gc_stall_events",
+            sum(int(a.get("dur", 0)) for _, a in evs) / PS_PER_US,
+            {"stalls": len(evs),
+             "total_stall_us": round(sum(int(a.get("dur", 0)) for _, a in evs) / PS_PER_US, 1),
+             "causes": sorted({str(a.get("cause", "?")) for _, a in evs})},
+        )
+        for host, evs in stalls.items()
+    ]
+
+
+def _diagnose_clocks(spans: Sequence[Span], threshold_us: float) -> List[Finding]:
+    reads: Dict[str, List[Tuple[int, int]]] = defaultdict(list)
+    for s in spans:
+        if s.sim_type != "host":
+            continue
+        for ts, name, attrs in s.events:
+            if name == "clock_read" and "local" in attrs:
+                reads[s.component].append((ts, int(attrs["local"])))
+    findings = []
+    for host, rr in sorted(reads.items()):
+        rr.sort()
+        offsets = [(ts, (local - ts) / PS_PER_US) for ts, local in rr]
+        max_abs = max((abs(o) for _, o in offsets), default=0.0)
+        if max_abs < threshold_us or len(offsets) < 2:
+            continue
+        jumps = [abs(b[1] - a[1]) for a, b in zip(offsets, offsets[1:])]
+        span_ps = offsets[-1][0] - offsets[0][0]
+        # ppm = (delta offset ps) / (elapsed ps) * 1e6
+        slope_ppm = (
+            (offsets[-1][1] - offsets[0][1]) * PS_PER_US / span_ps * 1e6 if span_ps else 0.0
+        )
+        kind = "step" if max(jumps) > 0.5 * max_abs else "drift"
+        findings.append(
+            Finding(
+                "clock_fault", host, f"clock_{kind}", max_abs,
+                {"max_offset_us": round(max_abs, 2), "slope_ppm": round(slope_ppm, 1),
+                 "kind": kind},
+            )
+        )
+    return findings
+
+
+def _critical_path_components(spans: Sequence[Span]) -> Dict[int, str]:
+    """trace_id -> 'sim_type:component' owning the largest critical-path
+    share, for step traces (the paper's critical-path-shift signal)."""
+    out: Dict[int, str] = {}
+    for tid, trace in assemble_traces(spans).items():
+        if not any(s.name == "HostStep" for s in trace.spans):
+            continue
+        share: Dict[str, int] = defaultdict(int)
+        for s in critical_path(trace):
+            share[f"{s.sim_type}:{s.component}"] += s.duration
+        if share:
+            out[tid] = max(share, key=share.get)
+    return out

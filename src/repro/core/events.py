@@ -207,6 +207,16 @@ class NtpExchange(Event):
 
 @register_event
 @dataclass(slots=True, repr=False)
+class GcStall(Event):
+    """Host runtime pause (GC / page fault / scheduler stall): the input
+    pipeline freezes for ``dur`` ps before the step's data load proceeds."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "gc_stall"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
 class HostFailure(Event):
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "host_failure"
@@ -348,6 +358,16 @@ class ChunkRx(Event):
 
     sim_type: ClassVar[SimType] = SimType.NET
     kind: ClassVar[str] = "chunk_rx"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class ChunkDrop(Event):
+    """'d' in ns3 ascii traces: chunk dropped on the wire (the link-layer
+    retransmits it, so delivery still happens — delayed)."""
+
+    sim_type: ClassVar[SimType] = SimType.NET
+    kind: ClassVar[str] = "chunk_drop"
 
 
 ALL_SIM_TYPES = (SimType.HOST, SimType.DEVICE, SimType.NET)

@@ -22,6 +22,7 @@ from __future__ import annotations
 from typing import Any, Dict, Optional
 
 from .events import (
+    ChunkDrop,
     ChunkEnqueue,
     ChunkRx,
     ChunkTx,
@@ -139,16 +140,16 @@ class HostLogParser(LogParser):
 # NET: ns3 ascii-trace-flavoured
 # ---------------------------------------------------------------------------
 
-_NET_MARK_TO_CLS = {"+": ChunkEnqueue, "-": ChunkTx, "r": ChunkRx}
+_NET_MARK_TO_CLS = {"+": ChunkEnqueue, "-": ChunkTx, "r": ChunkRx, "d": ChunkDrop}
 
 
 class NetLogParser(LogParser):
-    """``<mark> <time_s> <link_path> k=v k=v ...`` with mark in {+,-,r}."""
+    """``<mark> <time_s> <link_path> k=v k=v ...`` with mark in {+,-,r,d}."""
 
     sim_type = SimType.NET
 
     def __call__(self, line: str) -> Optional[Event]:
-        if not line or line[0] not in "+-r" or len(line) < 3 or line[1] != " ":
+        if not line or line[0] not in "+-rd" or len(line) < 3 or line[1] != " ":
             return None
         parts = line.split()
         if len(parts) < 3:

@@ -244,6 +244,13 @@ class HostSpanWeaver(SpanWeaver):
     def _on_heartbeat(self, ev: Event) -> None:
         self._cur_or_timeline(ev).span.add_event(ev.ts, "heartbeat", ev.attrs)
 
+    def _on_gc_stall(self, ev: Event) -> None:
+        cur = self._cur_or_timeline(ev)
+        cur.span.add_event(ev.ts, "gc_stall", ev.attrs)
+        cur.span.attrs["stall_ps"] = int(cur.span.attrs.get("stall_ps", 0)) + int(
+            ev.attrs.get("dur", 0)
+        )
+
     def _on_host_failure(self, ev: Event) -> None:
         cur = self._cur_or_timeline(ev)
         cur.span.add_event(ev.ts, "host_failure", ev.attrs)
@@ -419,6 +426,12 @@ class NetSpanWeaver(SpanWeaver):
             b.span.add_event(ev.ts, "wire_tx", ev.attrs)
             # queueing delay = wire_tx.ts - span.start; recorded for analysis
             b.span.attrs["queue_ps"] = ev.ts - b.span.start
+
+    def _on_chunk_drop(self, ev: Event) -> None:
+        b = self._xfer.get((ev.source, ev.attrs.get("chunk")))
+        if b is not None:
+            b.span.add_event(ev.ts, "chunk_drop", ev.attrs)
+            b.span.attrs["drops"] = int(b.span.attrs.get("drops", 0)) + 1
 
     def _on_chunk_rx(self, ev: Event) -> None:
         b = self._xfer.pop((ev.source, ev.attrs.get("chunk")), None)

@@ -9,10 +9,37 @@
 5. stream Jaeger/Chrome/OTLP/JSONL traces + print the per-component breakdown.
 
 ``python -m repro.launch.trace --arch olmo-1b --shape train_4k --steps 2``
+
+Fault scenarios (sim/scenarios.py) run through the same path:
+
+``python -m repro.launch.trace --scenario throttled_chip --seed 7``
+``python -m repro.launch.trace --list-scenarios``
 """
 import argparse
 import json
 import os
+
+
+def _run_scenario(args) -> None:
+    from ..core import ChromeTraceExporter, SpanJSONLExporter, trace_summary
+    from ..sim.scenarios import get_scenario
+
+    spec = get_scenario(args.scenario)
+    os.makedirs(args.outdir, exist_ok=True)
+    base = os.path.join(args.outdir, f"scenario.{spec.name}")
+    run = spec.run(
+        outdir=base + ".logs",
+        seed=args.seed,
+        exporters=(
+            ChromeTraceExporter(base + ".chrome.json"),
+            SpanJSONLExporter(base + ".spans.jsonl"),
+        ),
+    )
+    print(f"[trace] {trace_summary(run.spans)}")
+    print(run.report())
+    print(f"[trace] exported {base}.chrome.json + .spans.jsonl (logs in {base}.logs/)")
+    if not run.ok:
+        raise SystemExit(1)
 
 
 def main() -> None:
@@ -25,9 +52,24 @@ def main() -> None:
     ap.add_argument("--segments", type=int, default=8)
     ap.add_argument("--slow-chip", default="", help="chip name to slow, e.g. pod1.chip02")
     ap.add_argument("--slow-factor", type=float, default=3.0)
+    ap.add_argument("--scenario", default="",
+                    help="run a named fault scenario from sim/scenarios.py instead")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="override the scenario's fault-plan seed")
+    ap.add_argument("--list-scenarios", action="store_true")
     ap.add_argument("--outdir", default="results/traces")
     ap.add_argument("--dryrun-dir", default="results/dryrun")
     args = ap.parse_args()
+
+    if args.list_scenarios:
+        from ..sim.scenarios import SCENARIOS
+
+        for name, spec in SCENARIOS.items():
+            print(f"{name:24s} {spec.description}")
+        return
+    if args.scenario:
+        _run_scenario(args)
+        return
 
     from ..core import (
         ChromeTraceExporter,
@@ -117,6 +159,13 @@ def main() -> None:
     rep = straggler_report(spans)
     if rep["stragglers"]:
         print(f"[trace] stragglers detected: {rep['stragglers']}")
+    from ..core import diagnose
+
+    diag = diagnose(spans)
+    if diag.findings:
+        print("[trace] diagnose():")
+        for f in diag.findings:
+            print(f"    {f}")
     print(f"[trace] exported {base}.{{jaeger,chrome,otlp}}.json + .spans.jsonl")
 
 

@@ -13,8 +13,28 @@ device programs from compiled XLA artifacts or synthetic specs.
 from .clock import LogWriter, Sim
 from .cluster import ClusterOrchestrator, FailurePlan, run_ntp_sim, run_training_sim
 from .devicesim import CollectiveInstance, DeviceSim
+from .faults import (
+    FAULT_CLASSES,
+    ChunkReorder,
+    ClockDrift,
+    ClockStep,
+    DeviceSlowdown,
+    FaultPlan,
+    FaultSpec,
+    HostPause,
+    LinkDegradation,
+    LinkLoss,
+    StragglerPod,
+)
 from .hostsim import HostClock, HostSim
-from .netsim import NetSim
+from .netsim import LinkFault, NetSim
+from .scenarios import (
+    SCENARIOS,
+    ScenarioRun,
+    ScenarioSpec,
+    get_scenario,
+    list_scenarios,
+)
 from .topology import Link, Topology, ntp_testbed, tpu_cluster
 from .workload import OpSpec, ProgramSpec, program_from_compiled, synthetic_program
 

@@ -190,6 +190,30 @@ class ClusterOrchestrator(ClusterLike):
 # -------------------------------------------------------------------------------------------
 
 
+def drive_training_hosts(
+    cluster: ClusterOrchestrator,
+    program: ProgramSpec,
+    n_steps: int,
+    per_host: Optional[Callable[[HostSim], None]] = None,
+) -> None:
+    """Arm every chip-bearing host with ``n_steps`` of ``program`` and stop
+    background flows once the last host finishes (so the event queue
+    drains).  ``per_host`` optionally starts per-host telemetry
+    (heartbeats, clock reads).  The caller still runs ``cluster.run()``."""
+    training_hosts = [h for h in cluster.hosts.values() if h.chips]
+    remaining = {"n": len(training_hosts)}
+
+    def _one_done() -> None:
+        remaining["n"] -= 1
+        if remaining["n"] == 0:
+            cluster.net.stop_all_flows()
+
+    for h in training_hosts:
+        h.run_steps(program, n_steps, on_all_done=_one_done)
+        if per_host is not None:
+            per_host(h)
+
+
 def run_training_sim(
     program: ProgramSpec,
     n_steps: int = 2,
@@ -213,19 +237,12 @@ def run_training_sim(
         cluster.net.start_bulk_flow(link.a, link.b, bg_rate, segment_bytes=1 << 20, flow_id="bulk0")
     if failure is not None:
         cluster.inject_failure(failure)
-    # stop background flows (so the event queue drains) once every host with
-    # chips has finished its steps
-    training_hosts = [h for h in cluster.hosts.values() if h.chips]
-    remaining = {"n": len(training_hosts)}
-
-    def _one_done() -> None:
-        remaining["n"] -= 1
-        if remaining["n"] == 0:
-            cluster.net.stop_all_flows()
-
-    for h in training_hosts:
-        h.run_steps(program, n_steps, on_all_done=_one_done)
-        h.start_heartbeats(every_ps=50_000_000_000, n=max(2, n_steps * 2))
+    drive_training_hosts(
+        cluster, program, n_steps,
+        per_host=lambda h: h.start_heartbeats(
+            every_ps=50_000_000_000, n=max(2, n_steps * 2)
+        ),
+    )
     cluster.run()
     return cluster
 

@@ -1,0 +1,314 @@
+"""Composable, deterministic fault injection for the full-system testbed.
+
+The paper's payoff is diagnosing *anomalous* requests that aggregate tools
+miss; this module is the injection half of that loop.  Each fault is a small
+frozen dataclass that knows how to schedule itself onto a running
+:class:`~repro.sim.cluster.ClusterOrchestrator`:
+
+* :class:`LinkDegradation` / :class:`LinkLoss` / :class:`ChunkReorder` —
+  interconnect faults (netsim): bandwidth collapse, lossy wire with
+  link-layer retransmission, in-flight reordering via propagation jitter.
+* :class:`HostPause` / :class:`ClockDrift` / :class:`ClockStep` — host
+  runtime faults (hostsim + clock): GC-style stalls, oscillator drift,
+  hard clock steps.
+* :class:`DeviceSlowdown` / :class:`StragglerPod` — accelerator faults
+  (devicesim / cluster): thermal throttling of one chip, a uniformly slow
+  pod.
+
+A :class:`FaultPlan` bundles faults with one integer seed.  Every random
+draw a fault makes comes from a ``random.Random`` derived deterministically
+from ``(seed, fault index)``, and the DES kernel executes events in a fixed
+order — so one seed reproduces the *byte-identical* simulator logs (and
+therefore byte-identical woven traces).
+
+Each fault class carries a ``fault_class`` tag; ``core.analysis.diagnose``
+emits findings tagged with the same names, closing the loop from injection
+to detection (asserted per scenario in ``tests/test_scenarios.py``).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import ClassVar, List, Optional, Sequence, Tuple, TYPE_CHECKING
+
+from .netsim import LinkFault
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .cluster import ClusterOrchestrator
+
+# Fault classes diagnose() knows how to attribute.  Kept as module constants
+# so rules and faults cannot drift apart silently.
+LINK_DEGRADATION = "link_degradation"
+LINK_LOSS = "link_loss"
+LINK_REORDER = "link_reorder"
+HOST_PAUSE = "host_pause"
+CLOCK_FAULT = "clock_fault"
+DEVICE_SLOWDOWN = "device_slowdown"
+STRAGGLER_POD = "straggler_pod"
+
+FAULT_CLASSES = (
+    LINK_DEGRADATION, LINK_LOSS, LINK_REORDER, HOST_PAUSE, CLOCK_FAULT,
+    DEVICE_SLOWDOWN, STRAGGLER_POD,
+)
+
+
+class FaultSpec:
+    """Base class: a declarative fault that schedules itself on a cluster.
+
+    Subclasses are frozen dataclasses (inert, hashable, diffable — same
+    philosophy as :class:`~repro.core.session.TraceSpec`) and implement
+    ``schedule(cluster, rng)``; ``rng`` is this fault's private seeded
+    stream, supplied by the owning :class:`FaultPlan`.
+    """
+
+    fault_class: ClassVar[str]
+
+    def schedule(self, cluster: "ClusterOrchestrator", rng: random.Random) -> None:
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return f"{type(self).__name__}({self.fault_class})"
+
+
+# ---------------------------------------------------------------------------
+# Interconnect faults (netsim)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LinkDegradation(FaultSpec):
+    """Collapse one link's bandwidth by ``bw_factor`` for a time window."""
+
+    fault_class: ClassVar[str] = LINK_DEGRADATION
+
+    link: str
+    bw_factor: float = 0.1
+    start_ps: int = 0
+    stop_ps: Optional[int] = None
+
+    def schedule(self, cluster: "ClusterOrchestrator", rng: random.Random) -> None:
+        net = cluster.net
+        if self.link not in cluster.topo.links:
+            raise KeyError(f"unknown link {self.link!r}")
+        cluster.sim.at(self.start_ps, lambda: net.scale_link_bw(self.link, self.bw_factor))
+        if self.stop_ps is not None:
+            cluster.sim.at(self.stop_ps, lambda: net.scale_link_bw(self.link, 1 / self.bw_factor))
+
+    def describe(self) -> str:
+        return f"link {self.link} bandwidth x{self.bw_factor}"
+
+
+@dataclass(frozen=True)
+class LinkLoss(FaultSpec):
+    """Drop chunks on one link with probability ``drop_prob``; the link
+    layer retransmits after ``retransmit_ps`` (delivery delayed, not lost,
+    so collectives still terminate)."""
+
+    fault_class: ClassVar[str] = LINK_LOSS
+
+    link: str
+    drop_prob: float = 0.25
+    retransmit_ps: int = 0          # 0 -> 2x the chunk's wire time
+    start_ps: int = 0
+    stop_ps: Optional[int] = None
+
+    def schedule(self, cluster: "ClusterOrchestrator", rng: random.Random) -> None:
+        cluster.net.install_link_fault(
+            self.link,
+            LinkFault(
+                loss_prob=self.drop_prob,
+                retransmit_ps=self.retransmit_ps,
+                start_ps=self.start_ps,
+                stop_ps=self.stop_ps,
+                rng=rng,
+            ),
+        )
+
+    def describe(self) -> str:
+        return f"link {self.link} loss p={self.drop_prob}"
+
+
+@dataclass(frozen=True)
+class ChunkReorder(FaultSpec):
+    """In-flight reordering: uniform propagation jitter in [0, jitter_ps)
+    per chunk breaks the link's natural FIFO arrival order."""
+
+    fault_class: ClassVar[str] = LINK_REORDER
+
+    link: str
+    jitter_ps: int = 1_000_000_000      # 1 ms
+    start_ps: int = 0
+    stop_ps: Optional[int] = None
+
+    def schedule(self, cluster: "ClusterOrchestrator", rng: random.Random) -> None:
+        cluster.net.install_link_fault(
+            self.link,
+            LinkFault(
+                jitter_ps=self.jitter_ps,
+                start_ps=self.start_ps,
+                stop_ps=self.stop_ps,
+                rng=rng,
+            ),
+        )
+
+    def describe(self) -> str:
+        return f"link {self.link} jitter<{self.jitter_ps}ps"
+
+
+# ---------------------------------------------------------------------------
+# Host runtime faults (hostsim + clock)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HostPause(FaultSpec):
+    """GC-style runtime stall: the host freezes for ``pause_ps`` at its next
+    step boundary after ``at_ps`` (logged as a ``gc_stall`` event)."""
+
+    fault_class: ClassVar[str] = HOST_PAUSE
+
+    host: str
+    pause_ps: int
+    at_ps: int = 0
+    kind: str = "gc"
+
+    def schedule(self, cluster: "ClusterOrchestrator", rng: random.Random) -> None:
+        h = cluster.hosts[self.host]
+        cluster.sim.at(self.at_ps, lambda: h.inject_stall(self.pause_ps, self.kind))
+
+    def describe(self) -> str:
+        return f"{self.host} pauses {self.pause_ps}ps ({self.kind})"
+
+
+@dataclass(frozen=True)
+class ClockDrift(FaultSpec):
+    """The host's oscillator starts drifting at ``drift_ppm`` from ``at_ps``
+    (continuous in local time — no step at the switch point)."""
+
+    fault_class: ClassVar[str] = CLOCK_FAULT
+
+    host: str
+    drift_ppm: float
+    at_ps: int = 0
+
+    def schedule(self, cluster: "ClusterOrchestrator", rng: random.Random) -> None:
+        clk = cluster.hosts[self.host].clock
+        cluster.sim.at(self.at_ps, lambda: clk.set_drift(self.drift_ppm, cluster.sim.now))
+
+    def describe(self) -> str:
+        return f"{self.host} clock drifts {self.drift_ppm}ppm"
+
+
+@dataclass(frozen=True)
+class ClockStep(FaultSpec):
+    """A hard clock step of ``step_ps`` at ``at_ps`` (bad NTP step, VM
+    migration, firmware hiccup)."""
+
+    fault_class: ClassVar[str] = CLOCK_FAULT
+
+    host: str
+    step_ps: int
+    at_ps: int = 0
+
+    def schedule(self, cluster: "ClusterOrchestrator", rng: random.Random) -> None:
+        clk = cluster.hosts[self.host].clock
+        cluster.sim.at(self.at_ps, lambda: clk.step(self.step_ps))
+
+    def describe(self) -> str:
+        return f"{self.host} clock steps {self.step_ps}ps"
+
+
+# ---------------------------------------------------------------------------
+# Accelerator faults (devicesim / cluster)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DeviceSlowdown(FaultSpec):
+    """Thermal throttle: one chip's compute slows by ``factor`` for a
+    window (multiplies any pre-existing compute scale)."""
+
+    fault_class: ClassVar[str] = DEVICE_SLOWDOWN
+
+    chip: str
+    factor: float = 3.0
+    start_ps: int = 0
+    stop_ps: Optional[int] = None
+
+    def schedule(self, cluster: "ClusterOrchestrator", rng: random.Random) -> None:
+        dev = cluster.device_sim_for(self.chip)
+
+        def _throttle() -> None:
+            dev.compute_scale[self.chip] = dev.compute_scale.get(self.chip, 1.0) * self.factor
+
+        def _restore() -> None:
+            dev.compute_scale[self.chip] = dev.compute_scale.get(self.chip, 1.0) / self.factor
+
+        cluster.sim.at(self.start_ps, _throttle)
+        if self.stop_ps is not None:
+            cluster.sim.at(self.stop_ps, _restore)
+
+    def describe(self) -> str:
+        return f"chip {self.chip} compute x{self.factor}"
+
+
+@dataclass(frozen=True)
+class StragglerPod(FaultSpec):
+    """Every chip of one pod runs ``factor`` slower (bad rack: shared
+    cooling or power fabric)."""
+
+    fault_class: ClassVar[str] = STRAGGLER_POD
+
+    pod: int
+    factor: float = 2.5
+    start_ps: int = 0
+    stop_ps: Optional[int] = None
+
+    def schedule(self, cluster: "ClusterOrchestrator", rng: random.Random) -> None:
+        for chip in cluster.topo.pods[self.pod]:
+            DeviceSlowdown(chip, self.factor, self.start_ps, self.stop_ps).schedule(cluster, rng)
+
+    def describe(self) -> str:
+        return f"pod{self.pod} compute x{self.factor}"
+
+
+# ---------------------------------------------------------------------------
+# The plan: faults + one seed = a reproducible run
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """An ordered set of faults plus the seed that makes them reproducible.
+
+    Each fault draws from its own ``random.Random`` keyed by
+    ``(seed, index)``, so adding or removing one fault does not perturb the
+    random streams of the others, and the same plan + seed reproduces
+    byte-identical simulator logs.
+    """
+
+    faults: Tuple[FaultSpec, ...] = ()
+    seed: int = 0
+
+    def schedule(self, cluster: "ClusterOrchestrator") -> None:
+        for i, f in enumerate(self.faults):
+            f.schedule(cluster, self.rng_for(i))
+
+    def rng_for(self, index: int) -> random.Random:
+        # int seeds hash stably across processes (unlike PYTHONHASHSEED-ed
+        # strings), so derive per-fault streams arithmetically
+        return random.Random(self.seed * 1_000_003 + index * 7_919 + 17)
+
+    def with_seed(self, seed: int) -> "FaultPlan":
+        return FaultPlan(self.faults, seed)
+
+    def fault_classes(self) -> List[str]:
+        """Unique injected fault classes, in injection order."""
+        out: List[str] = []
+        for f in self.faults:
+            if f.fault_class not in out:
+                out.append(f.fault_class)
+        return out
+
+    def describe(self) -> List[str]:
+        return [f.describe() for f in self.faults]

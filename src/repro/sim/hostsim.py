@@ -47,6 +47,17 @@ class HostClock:
         the slew *decision* cadence is what the case study examines)."""
         self.slew_total += delta_ps
 
+    def step(self, delta_ps: float) -> None:
+        """Fault hook: a hard clock step (NTP stepping, VM migration)."""
+        self.slew_total += delta_ps
+
+    def set_drift(self, drift_ppm: float, now_ps: int) -> None:
+        """Fault hook: change the oscillator's drift rate from ``now_ps``
+        onward without a discontinuity in local time."""
+        new = drift_ppm * 1e-6
+        self.base_offset += (self.drift - new) * now_ps
+        self.drift = new
+
 
 class HostSim:
     """One training host (or NTP client/server in the testbed topology)."""
@@ -80,6 +91,8 @@ class HostSim:
         self._step_cb: Optional[Callable[[int], None]] = None
         self.steps_done = 0
         self.failed = False
+        self._stall_ps = 0
+        self._stall_kind = "gc"
 
     # -- logging ----------------------------------------------------------------------
 
@@ -114,6 +127,13 @@ class HostSim:
             return
         self.log_event("step_begin", step=step)
         self.log_event("data_load_begin", step=step)
+        wait_ps = self.data_load_ps
+        if self._stall_ps:
+            # injected runtime pause (sim/faults.py HostPause): the input
+            # pipeline freezes before this step's batch is ready
+            self.log_event("gc_stall", step=step, dur=self._stall_ps, cause=self._stall_kind)
+            wait_ps += self._stall_ps
+            self._stall_ps = 0
 
         def _after_load() -> None:
             self.log_event("data_load_end", step=step, bytes=self.batch_bytes_per_chip * len(self.chips))
@@ -144,7 +164,7 @@ class HostSim:
                     ),
                 )
 
-        self.sim.after(self.data_load_ps, _after_load)
+        self.sim.after(wait_ps, _after_load)
 
     def _finish_step(
         self,
@@ -176,6 +196,13 @@ class HostSim:
             _next()
 
     # -- failure injection ------------------------------------------------------------------
+
+    def inject_stall(self, dur_ps: int, kind: str = "gc") -> None:
+        """Fault hook: pause the host runtime for ``dur_ps`` at the next
+        step boundary (GC pause, page-fault storm, scheduler stall).  The
+        stall is logged as a ``gc_stall`` event inside the affected step."""
+        self._stall_ps += int(dur_ps)
+        self._stall_kind = kind
 
     def fail(self) -> None:
         self.failed = True

@@ -16,6 +16,8 @@ everything sharing the link.
 from __future__ import annotations
 
 import itertools
+import random
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 from .clock import LogWriter, Sim
@@ -28,6 +30,34 @@ def _fmt_s(ps: int) -> str:
     return f"{ps / PS_PER_S:.12f}"
 
 
+@dataclass
+class LinkFault:
+    """Runtime fault state installed on one link (see sim/faults.py).
+
+    * ``loss_prob``     — per-chunk probability the wire copy is dropped;
+      the link layer retransmits after ``retransmit_ps``, so delivery still
+      happens (collectives terminate) but late, and a ``d`` mark is logged.
+    * ``jitter_ps``     — uniform extra propagation delay in [0, jitter_ps),
+      breaking the link's natural FIFO arrival order (in-flight reordering).
+
+    Draws come from the fault's own seeded ``rng``; the DES executes in a
+    deterministic order, so the same seed reproduces the same byte stream.
+    """
+
+    loss_prob: float = 0.0
+    retransmit_ps: int = 0
+    jitter_ps: int = 0
+    start_ps: int = 0
+    stop_ps: Optional[int] = None
+    # seeded default so direct install_link_fault() users keep the
+    # reproducibility contract; FaultPlan supplies per-fault streams
+    rng: random.Random = field(default_factory=lambda: random.Random(0))
+    drops: int = 0
+
+    def active(self, now: int) -> bool:
+        return now >= self.start_ps and (self.stop_ps is None or now < self.stop_ps)
+
+
 class NetSim:
     def __init__(self, sim: Sim, topo: Topology, log: LogWriter) -> None:
         self.sim = sim
@@ -36,7 +66,24 @@ class NetSim:
         self._chunk_ids = itertools.count()
         self.chunks_delivered = 0
         self.bytes_delivered = 0
+        self.chunks_dropped = 0
         self.flows_stopped = False
+        self.link_faults: Dict[str, List[LinkFault]] = {}
+
+    # -- fault hooks (driven by sim/faults.py) ------------------------------------
+
+    def install_link_fault(self, link_name: str, fault: LinkFault) -> LinkFault:
+        """Attach loss / jitter behaviour to one link.  Multiple faults on a
+        link compose (each consulted per chunk)."""
+        if link_name not in self.topo.links:
+            raise KeyError(f"unknown link {link_name!r}")
+        self.link_faults.setdefault(link_name, []).append(fault)
+        return fault
+
+    def scale_link_bw(self, link_name: str, factor: float) -> None:
+        """Degrade (or restore) a link's bandwidth in place, effective for
+        chunks that start transmitting after ``sim.now``."""
+        self.topo.links[link_name].bw *= factor
 
     # -- core transfer -----------------------------------------------------------
 
@@ -82,6 +129,20 @@ class NetSim:
 
         self.sim.at(start, _on_wire)
         arrive = start + tx_ps + link.latency_ps
+        for fault in self.link_faults.get(link.name, ()):
+            if not fault.active(now):
+                continue
+            if fault.loss_prob and fault.rng.random() < fault.loss_prob:
+                fault.drops += 1
+                self.chunks_dropped += 1
+                retrans = fault.retransmit_ps or 2 * (tx_ps + link.latency_ps)
+                if not quiet:
+                    # ns3-style 'd' mark: the wire copy is lost at tx time;
+                    # the link layer retransmits, delaying arrival
+                    self.sim.at(start, lambda l=link: self._log_mark("d", l, cid, nbytes, meta))
+                arrive += retrans
+            if fault.jitter_ps:
+                arrive += fault.rng.randrange(fault.jitter_ps)
 
         def _on_rx() -> None:
             if not quiet:

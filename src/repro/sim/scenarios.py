@@ -1,0 +1,285 @@
+"""ScenarioSpec: declarative fault scenarios + the curated library.
+
+A :class:`ScenarioSpec` composes a testbed topology, a workload, a seeded
+:class:`~repro.sim.faults.FaultPlan`, and the expected diagnosis into one
+inert, reproducible object (the scenario-level sibling of
+:class:`~repro.core.session.TraceSpec`).  ``run()`` closes the paper's loop
+end to end:
+
+    simulate (faults injected) -> ad-hoc logs -> TraceSpec weave
+        -> ``core.analysis.diagnose`` -> findings vs expectation
+
+The curated library (``SCENARIOS``) ships one named scenario per fault
+class plus a healthy baseline; ``docs/scenarios.md`` is the cookbook that
+documents each one's trace signature and the rule that catches it.
+
+    from repro.sim.scenarios import get_scenario
+
+    run = get_scenario("throttled_chip").run()
+    print(run.report())
+    assert run.ok           # expected fault classes ⊆ diagnosed classes
+
+Reproducibility contract: the DES kernel is deterministic and every random
+draw comes from the plan's seeded streams, so the same scenario + seed
+yields byte-identical simulator logs *and* byte-identical span JSONL
+(``run.span_jsonl``) — asserted property-style in ``tests/test_scenarios.py``.
+"""
+from __future__ import annotations
+
+import io
+import tempfile
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .cluster import ClusterOrchestrator, drive_training_hosts
+from .faults import (
+    ChunkReorder,
+    ClockDrift,
+    ClockStep,
+    DeviceSlowdown,
+    FaultPlan,
+    FaultSpec,
+    HostPause,
+    LinkDegradation,
+    LinkLoss,
+    StragglerPod,
+)
+from .topology import tpu_cluster
+from .workload import ProgramSpec, synthetic_program
+
+PS_PER_MS = 1_000_000_000
+
+
+def _default_program() -> ProgramSpec:
+    """Small 2-layer FSDP-ish step: per-layer all-gather + compute on the
+    ICI rings, one cross-pod gradient all-reduce on the DCN."""
+    return synthetic_program(
+        n_layers=2, layer_flops=5e11, layer_bytes=2e8, grad_bytes=1e8
+    )
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """Topology + workload + fault plan + expected diagnosis, declaratively."""
+
+    name: str
+    description: str
+    faults: Tuple[FaultSpec, ...] = ()
+    expected: Optional[Tuple[str, ...]] = None    # None -> derived from faults
+    signature: str = ""                           # trace signature, for the cookbook
+    seed: int = 0
+    n_steps: int = 2
+    n_pods: int = 2
+    chips_per_pod: int = 4
+    program: Callable[[], ProgramSpec] = _default_program
+    clock_read_every_ps: int = 2 * PS_PER_MS
+    clock_reads: int = 30
+
+    @property
+    def expected_classes(self) -> Tuple[str, ...]:
+        """Fault classes diagnose() must name (override via ``expected``)."""
+        if self.expected is not None:
+            return self.expected
+        return tuple(self.fault_plan().fault_classes())
+
+    def fault_plan(self, seed: Optional[int] = None) -> FaultPlan:
+        return FaultPlan(self.faults, self.seed if seed is None else seed)
+
+    def with_seed(self, seed: int) -> "ScenarioSpec":
+        return replace(self, seed=seed)
+
+    # -- execution ---------------------------------------------------------------
+
+    def simulate(self, outdir: str, seed: Optional[int] = None) -> ClusterOrchestrator:
+        """Run only the full-system simulation; logs land in ``outdir``."""
+        topo = tpu_cluster(n_pods=self.n_pods, chips_per_pod=self.chips_per_pod)
+        cluster = ClusterOrchestrator(topo, outdir=outdir)
+        self.fault_plan(seed).schedule(cluster)
+        drive_training_hosts(
+            cluster, self.program(), self.n_steps,
+            # clock telemetry: offsets vs the sim's ground-truth global clock
+            per_host=lambda h: h.start_clock_reads(
+                every_ps=self.clock_read_every_ps, n=self.clock_reads
+            ),
+        )
+        cluster.run()
+        return cluster
+
+    def run(
+        self,
+        outdir: Optional[str] = None,
+        seed: Optional[int] = None,
+        exporters: Tuple = (),
+    ) -> "ScenarioRun":
+        """Simulate, weave through a TraceSpec, diagnose.
+
+        ``outdir=None`` simulates into a temporary directory that is removed
+        after weaving; pass a path to keep the raw simulator logs.  Extra
+        ``exporters`` (Chrome trace, Jaeger, ...) stream alongside the
+        always-on in-memory SpanJSONL exporter.
+        """
+        # late import: repro.core must not depend on repro.sim
+        from ..core import SourceSpec, SpanJSONLExporter, TraceSpec, reset_ids
+        from ..core.analysis import diagnose
+
+        plan = self.fault_plan(seed)
+        tmp = None
+        if outdir is None:
+            tmp = tempfile.TemporaryDirectory(prefix=f"scenario-{self.name}-")
+            outdir = tmp.name
+        try:
+            cluster = self.simulate(outdir, seed=plan.seed)
+            # deterministic ids => same seed reproduces byte-identical JSONL
+            reset_ids()
+            buf = io.StringIO()
+            spec = TraceSpec(
+                sources=[
+                    SourceSpec(sim_type=st, paths=ps) if len(ps) > 1
+                    else SourceSpec(sim_type=st, path=ps[0])
+                    for st, ps in sorted(cluster.log_paths().items())
+                ],
+                exporters=[SpanJSONLExporter(buf), *exporters],
+            )
+            session = spec.run()
+        finally:
+            if tmp is not None:
+                tmp.cleanup()
+                outdir = None
+        return ScenarioRun(
+            scenario=self,
+            plan=plan,
+            cluster=cluster,
+            session=session,
+            spans=session.spans,
+            diagnosis=diagnose(session.spans),
+            span_jsonl=buf.getvalue(),
+            outdir=outdir,
+        )
+
+
+@dataclass
+class ScenarioRun:
+    """Everything one scenario execution produced."""
+
+    scenario: ScenarioSpec
+    plan: FaultPlan
+    cluster: ClusterOrchestrator
+    session: object                    # TraceSession
+    spans: List
+    diagnosis: object                  # core.analysis.Diagnosis
+    span_jsonl: str
+    outdir: Optional[str] = None
+
+    @property
+    def detected(self) -> Tuple[str, ...]:
+        return tuple(self.diagnosis.fault_classes)
+
+    @property
+    def ok(self) -> bool:
+        """Round-trip verdict: every injected fault class was diagnosed,
+        and a fault-free scenario produced no findings."""
+        expected = self.scenario.expected_classes
+        if not expected:
+            return not self.diagnosis.findings
+        return set(expected) <= set(self.detected)
+
+    def report(self) -> str:
+        lines = [
+            f"scenario {self.scenario.name!r} (seed={self.plan.seed}): "
+            f"{self.scenario.description}",
+            f"  injected : {self.plan.describe() or ['none']}",
+            f"  expected : {list(self.scenario.expected_classes) or ['(clean)']}",
+            f"  diagnosed: {list(self.detected) or ['(clean)']}   "
+            f"[{'OK' if self.ok else 'MISSED'}]",
+        ]
+        for f in self.diagnosis.findings:
+            lines.append(f"    {f}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# The curated library — one named scenario per fault class + a baseline.
+# docs/scenarios.md documents each entry's trace signature in detail.
+# ---------------------------------------------------------------------------
+
+_LIBRARY: Tuple[ScenarioSpec, ...] = (
+    ScenarioSpec(
+        name="healthy_baseline",
+        description="no faults — the control run every other scenario is read against",
+        signature="uniform Op durations, FIFO links, zero clock offset; "
+                  "diagnose() returns no findings",
+    ),
+    ScenarioSpec(
+        name="degraded_ici_link",
+        description="one intra-pod ICI link drops to 8% bandwidth (flaky cable)",
+        faults=(LinkDegradation(link="ici.pod0.l1", bw_factor=0.08),),
+        signature="LinkTransfer wire time per byte on ici.pod0.l1 is a k-MAD "
+                  "outlier vs the other ICI links; collectives crossing it stretch",
+    ),
+    ScenarioSpec(
+        name="lossy_dcn",
+        description="cross-pod DCN link drops 30% of chunks; link layer retransmits",
+        faults=(LinkLoss(link="dcn.h0h1", drop_prob=0.3, retransmit_ps=2 * PS_PER_MS),),
+        signature="chunk_drop events on dcn.h0h1 LinkTransfer spans; gradient "
+                  "all-reduce tail latency inflates by the retransmit delay",
+    ),
+    ScenarioSpec(
+        name="reordered_ici",
+        description="in-flight reordering: up to 3 ms propagation jitter on one ICI link",
+        faults=(ChunkReorder(link="ici.pod0.l0", jitter_ps=3 * PS_PER_MS),),
+        signature="transfers on ici.pod0.l0 complete out of enqueue order "
+                  "(impossible on a healthy FIFO link) — arrival-inversion rule fires",
+    ),
+    ScenarioSpec(
+        name="gc_pause_host0",
+        description="host0's runtime freezes 30 ms mid-run (GC-style stall)",
+        faults=(HostPause(host="host0", pause_ps=30 * PS_PER_MS, at_ps=1_000_000),),
+        signature="a gc_stall span event inside host0's affected HostStep; that "
+                  "step's DataLoad span stretches by the stall",
+    ),
+    ScenarioSpec(
+        name="stepped_clock_host1",
+        description="host1's clock steps +150 µs at t=5 ms (bad NTP step / VM migration)",
+        faults=(ClockStep(host="host1", step_ps=150_000_000, at_ps=5 * PS_PER_MS),),
+        signature="host1 clock_read offsets vs the global clock jump by 150 µs "
+                  "in one sample — classified kind=step",
+    ),
+    ScenarioSpec(
+        name="drifting_clock_host1",
+        description="host1's oscillator drifts at 800 ppm from t=0",
+        faults=(ClockDrift(host="host1", drift_ppm=800.0),),
+        signature="host1 clock_read offsets grow linearly (~0.8 µs/ms) — "
+                  "classified kind=drift with the fitted slope in evidence",
+    ),
+    ScenarioSpec(
+        name="throttled_chip",
+        description="pod1.chip02 thermally throttles to 1/3 compute for the whole run",
+        faults=(DeviceSlowdown(chip="pod1.chip02", factor=3.0),),
+        signature="pod1.chip02's median Op duration is a k-MAD outlier across "
+                  "chips; every collective it joins stretches to match",
+    ),
+    ScenarioSpec(
+        name="straggler_pod2",
+        description="all of pod2 runs 2.5x slow (bad rack: cooling/power)",
+        faults=(StragglerPod(pod=2, factor=2.5),),
+        n_pods=3,
+        chips_per_pod=2,
+        signature="pod2's chips are uniformly slow: per-pod median Op duration "
+                  "k-MAD outlier (pod rule needs >= 3 pods)",
+    ),
+)
+
+SCENARIOS: Dict[str, ScenarioSpec] = {s.name: s for s in _LIBRARY}
+
+
+def list_scenarios() -> List[str]:
+    return list(SCENARIOS)
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; available: {', '.join(SCENARIOS)}"
+        ) from None

@@ -1,0 +1,215 @@
+"""Fault-injection scenarios: round-trip (inject F -> diagnose names F's
+fault class), seeded reproducibility, and the diagnose()/breakdown rules.
+
+The round-trip assertions are the acceptance contract of the ScenarioSpec
+framework: every library scenario's injected fault classes must appear in
+``diagnose()``'s findings, the healthy baseline must produce none, and the
+same seed must reproduce byte-identical SpanJSONL output.
+"""
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import component_breakdown, diagnose
+from repro.core.span import Span, SpanContext, Trace
+from repro.sim import (
+    ChunkReorder,
+    FaultPlan,
+    LinkLoss,
+    ScenarioSpec,
+    get_scenario,
+    list_scenarios,
+    synthetic_program,
+)
+from repro.sim.scenarios import SCENARIOS
+
+
+# ---------------------------------------------------------------------------
+# Round-trip: every library scenario's injected faults are diagnosed
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def scenario_runs():
+    """Run the whole library once; individual tests assert against it."""
+    return {name: spec.run() for name, spec in SCENARIOS.items()}
+
+
+@pytest.mark.parametrize("name", list(SCENARIOS))
+def test_scenario_roundtrip(scenario_runs, name):
+    run = scenario_runs[name]
+    expected = set(run.scenario.expected_classes)
+    assert expected <= set(run.detected), (
+        f"scenario {name}: injected {sorted(expected)} but diagnose() found "
+        f"{list(run.detected)}\n{run.diagnosis.summary()}"
+    )
+    assert run.ok
+
+
+def test_healthy_baseline_is_clean(scenario_runs):
+    run = scenario_runs["healthy_baseline"]
+    assert run.diagnosis.findings == []
+
+
+def test_findings_point_at_the_faulty_component(scenario_runs):
+    by_class = {
+        "degraded_ici_link": ("link_degradation", "ici.pod0.l1"),
+        "lossy_dcn": ("link_loss", "dcn.h0h1"),
+        "reordered_ici": ("link_reorder", "ici.pod0.l0"),
+        "gc_pause_host0": ("host_pause", "host0"),
+        "stepped_clock_host1": ("clock_fault", "host1"),
+        "throttled_chip": ("device_slowdown", "pod1.chip02"),
+        "straggler_pod2": ("straggler_pod", "pod2"),
+    }
+    for name, (fault_class, component) in by_class.items():
+        found = [
+            f for f in scenario_runs[name].diagnosis.findings
+            if f.fault_class == fault_class
+        ]
+        assert any(f.component == component for f in found), (
+            f"{name}: {fault_class} findings {found} miss component {component}"
+        )
+
+
+def test_scenario_weave_has_no_orphans(scenario_runs):
+    for name, run in scenario_runs.items():
+        assert run.session.finalize_stats["orphans"] == 0, name
+
+
+def test_same_seed_reproduces_byte_identical_jsonl(scenario_runs):
+    # second run of a scenario whose faults consume randomness
+    again = SCENARIOS["lossy_dcn"].run()
+    assert again.span_jsonl == scenario_runs["lossy_dcn"].span_jsonl
+
+
+def test_different_seed_changes_the_trace(scenario_runs):
+    other = SCENARIOS["lossy_dcn"].run(seed=1234)
+    assert other.span_jsonl != scenario_runs["lossy_dcn"].span_jsonl
+
+
+def test_library_covers_every_fault_class():
+    from repro.sim.faults import FAULT_CLASSES
+
+    covered = set()
+    for name in list_scenarios():
+        covered.update(get_scenario(name).expected_classes)
+    assert covered == set(FAULT_CLASSES)
+
+
+def test_get_scenario_unknown_name():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("no_such_scenario")
+
+
+# ---------------------------------------------------------------------------
+# Property: any seeded FaultPlan is reproducible
+# ---------------------------------------------------------------------------
+
+# deliberately randomness-heavy: loss draws + jitter draws on busy links
+_MICRO = ScenarioSpec(
+    name="micro_repro",
+    description="tiny randomness-heavy scenario for the reproducibility property",
+    faults=(
+        LinkLoss(link="dcn.h0h1", drop_prob=0.4, retransmit_ps=1_000_000_000),
+        ChunkReorder(link="ici.pod0.l0", jitter_ps=2_000_000_000),
+    ),
+    n_steps=1,
+    chips_per_pod=2,
+    clock_reads=4,
+    program=lambda: synthetic_program(
+        n_layers=1, layer_flops=2e11, layer_bytes=1e8, grad_bytes=5e7
+    ),
+)
+
+
+@given(st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=5, deadline=None)
+def test_fault_plan_reproducible_for_any_seed(seed):
+    first = _MICRO.run(seed=seed)
+    second = _MICRO.run(seed=seed)
+    assert first.span_jsonl, "scenario produced no spans"
+    assert first.span_jsonl == second.span_jsonl
+
+
+def test_fault_plan_rng_streams_independent_per_fault():
+    plan = FaultPlan(_MICRO.faults, seed=7)
+    a0, b0 = plan.rng_for(0), plan.rng_for(1)
+    assert [a0.random() for _ in range(4)] != [b0.random() for _ in range(4)]
+    # re-deriving yields the same stream
+    assert plan.rng_for(0).random() == FaultPlan(_MICRO.faults, seed=7).rng_for(0).random()
+
+
+# ---------------------------------------------------------------------------
+# component_breakdown: overlapping sibling children count their overlap once
+# ---------------------------------------------------------------------------
+
+
+def _span(name, start, end, sid, parent=None, component="c0", sim_type="host"):
+    return Span(
+        name=name, start=start, end=end,
+        context=SpanContext(trace_id=1, span_id=sid),
+        parent=parent, component=component, sim_type=sim_type,
+    )
+
+
+def test_component_breakdown_overlapping_children_regression():
+    parent = _span("Step", 0, 100_000_000, 1)
+    # overlapping siblings (async collective overlapped with compute):
+    # [10, 50] and [30, 80] cover [10, 80] = 70 of the parent
+    a = _span("A", 10_000_000, 50_000_000, 2, parent=parent.context)
+    b = _span("B", 30_000_000, 80_000_000, 3, parent=parent.context)
+    bd = component_breakdown(Trace(1, [parent, a, b]))
+    # parent leaf = [0,10]+[80,100] = 30; children union = 70 -> 100 total,
+    # i.e. exactly the busy wall-clock (the old sum double-counted [30,50])
+    assert bd == {"host:c0": 100.0}
+
+
+def test_component_breakdown_disjoint_children_unchanged():
+    parent = _span("Step", 0, 100_000_000, 1)
+    a = _span("A", 10_000_000, 30_000_000, 2, parent=parent.context)
+    b = _span("B", 40_000_000, 80_000_000, 3, parent=parent.context)
+    bd = component_breakdown(Trace(1, [parent, a, b]))
+    assert bd == {"host:c0": 100.0}
+    # leaf_only=False still reports the plain sum
+    flat = component_breakdown(Trace(1, [parent, a, b]), leaf_only=False)
+    assert flat == {"host:c0": 160.0}
+
+
+def test_component_breakdown_separates_components():
+    parent = _span("Step", 0, 100_000_000, 1)
+    child = _span("Op", 20_000_000, 60_000_000, 2, parent=parent.context,
+                  component="chip0", sim_type="device")
+    bd = component_breakdown(Trace(1, [parent, child]))
+    assert bd == {"host:c0": 60.0, "device:chip0": 40.0}
+
+
+# ---------------------------------------------------------------------------
+# diagnose() unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_diagnose_empty_and_healthy():
+    assert diagnose([]).findings == []
+    healthy = [
+        _span("Op", i * 10, i * 10 + 5, 10 + i, component=f"pod0.chip{i:02d}",
+              sim_type="device")
+        for i in range(4)
+    ]
+    assert diagnose(healthy).findings == []
+
+
+def test_diagnose_flags_the_slow_chip():
+    spans = []
+    sid = 1
+    for step in range(3):
+        for i in range(6):
+            dur = 30_000_000 if i != 2 else 95_000_000
+            start = step * 1_000_000_000
+            spans.append(
+                _span("Op", start, start + dur, sid,
+                      component=f"pod{i % 2}.chip{i:02d}", sim_type="device")
+            )
+            sid += 1
+    diag = diagnose(spans)
+    assert [f.component for f in diag.findings if f.fault_class == "device_slowdown"] \
+        == ["pod0.chip02"]
