@@ -1,0 +1,203 @@
+"""Engine performance benchmark — the repo's perf baseline (BENCH_engine.json).
+
+Three measurements, smallest to largest scope:
+
+* ``kernel``    — raw DES dispatch rate: events/sec through a bare
+                  :class:`repro.sim.engine.EventKernel` (256 interleaved
+                  self-rescheduling timers, no simulator work).
+* ``topology``  — full-system simulation events/sec at 8/64/256-pod
+                  fat-tree testbeds (``scale(pods=N)``): one training step
+                  with a cross-pod DCN all-reduce, in-memory logs.
+* ``sweep``     — end-to-end ``(scenario, seed)`` sweep wall-time at
+                  ``--jobs 1/4/8`` (simulate + weave + diagnose + shards).
+
+Results land in ``BENCH_engine.json`` (schema ``columbo.engine_bench/v1``,
+validated in ``tests/test_sweep.py``); the recorded baseline and the exact
+reproduction commands live in ``docs/performance.md``.
+
+    python -m benchmarks.engine_bench                 # full baseline (~2 min)
+    python -m benchmarks.engine_bench --smoke         # tier-1 pre-flight (~10 s)
+    python -m benchmarks.engine_bench --out my.json --jobs 1,2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import tempfile
+import time
+
+SCHEMA = "columbo.engine_bench/v1"
+
+SMOKE_TOPOLOGY_PODS = (4, 8)
+FULL_TOPOLOGY_PODS = (8, 64, 256)
+
+
+def bench_kernel(n_events: int = 200_000, n_timers: int = 256) -> dict:
+    """Raw kernel dispatch rate: ``n_timers`` interleaved self-rescheduling
+    timers with co-prime-ish intervals (a worst-ish-case heap mix), run
+    until ``n_events`` have executed."""
+    from repro.sim.engine import EventKernel
+
+    k = EventKernel()
+    done = [0]
+
+    def make(i: int):
+        interval = 1_000 + 7 * i
+
+        def fire() -> None:
+            done[0] += 1
+            if done[0] < n_events:
+                k.after(interval, fire)
+
+        return fire
+
+    timers = [make(i) for i in range(n_timers)]
+    t0 = time.perf_counter()
+    for i, fire in enumerate(timers):
+        k.after(1_000 + 7 * i, fire)
+    k.run(max_events=n_events)
+    wall = time.perf_counter() - t0
+    return {
+        "n_events": k.events_executed,
+        "n_timers": n_timers,
+        "wall_s": round(wall, 4),
+        "events_per_sec": round(k.events_executed / wall) if wall else 0,
+    }
+
+
+def bench_topology(pods_list=FULL_TOPOLOGY_PODS, chips_per_pod: int = 2,
+                   n_steps: int = 1) -> list:
+    """Full-system simulation throughput per fat-tree size: one training
+    step (per-layer ICI all-gather + cross-pod DCN gradient all-reduce),
+    logs kept in memory so disk I/O stays out of the measurement."""
+    from repro.sim.cluster import ClusterOrchestrator, drive_training_hosts
+    from repro.sim.topology import scale
+    from repro.sim.workload import synthetic_program
+
+    rows = []
+    for pods in pods_list:
+        program = synthetic_program(
+            n_layers=1, layer_flops=5e11, layer_bytes=2e8, grad_bytes=1e8
+        )
+        t0 = time.perf_counter()
+        topo = scale(pods=pods, chips_per_pod=chips_per_pod)
+        cluster = ClusterOrchestrator(topo)
+        drive_training_hosts(cluster, program, n_steps)
+        cluster.run()
+        wall = time.perf_counter() - t0
+        ev = cluster.sim.events_executed
+        rows.append({
+            "pods": pods,
+            "chips": pods * chips_per_pod,
+            "links": len(topo.links),
+            "events": ev,
+            "wall_s": round(wall, 3),
+            "events_per_sec": round(ev / wall) if wall else 0,
+            "virtual_s": round(cluster.sim.now / 1e12, 4),
+        })
+    return rows
+
+
+def bench_sweep(jobs_list=(1, 4, 8), scenarios=None, seeds=(0, 1, 2, 3),
+                **overrides) -> dict:
+    """End-to-end sweep wall-time per ``--jobs`` setting (same grid each
+    time; cells are seed-pinned so outputs are identical modulo shard
+    order — only the wall clock moves).  The full grid runs the curated
+    library at 4 pods x 3 steps so each cell carries enough simulation to
+    amortize worker startup (tiny cells measure pool overhead, not the
+    engine)."""
+    from repro.sim.sweep import SweepSpec, run_sweep
+
+    if scenarios is None:
+        spec = SweepSpec.library(seeds=tuple(seeds), **overrides)
+    else:
+        spec = SweepSpec(scenarios=tuple(scenarios), seeds=tuple(seeds), **overrides)
+    cells = len(spec.cells())
+    by_jobs = {}
+    events = spans = 0
+    for jobs in jobs_list:
+        with tempfile.TemporaryDirectory(prefix="engine-bench-sweep-") as d:
+            t0 = time.perf_counter()
+            result = run_sweep(spec, d, jobs=jobs)
+            by_jobs[str(jobs)] = round(time.perf_counter() - t0, 3)
+            events = sum(c.stats.events for c in result.cells)
+            spans = sum(c.stats.n_spans for c in result.cells)
+    return {
+        "cells": cells,
+        "scenarios": list(spec.scenarios),
+        "seeds": list(spec.seeds),
+        "events_total": events,
+        "spans_total": spans,
+        "wall_s_by_jobs": by_jobs,
+    }
+
+
+def collect(smoke: bool = False, jobs_list=(1, 4, 8)) -> dict:
+    """Run all three benches and assemble the BENCH_engine.json payload."""
+    if smoke:
+        kernel = bench_kernel(n_events=20_000)
+        topo = bench_topology(SMOKE_TOPOLOGY_PODS)
+        sweep = bench_sweep(jobs_list=(1, 2),
+                            scenarios=("healthy_baseline", "throttled_chip"),
+                            seeds=(0,))
+    else:
+        kernel = bench_kernel()
+        topo = bench_topology()
+        sweep = bench_sweep(jobs_list=jobs_list, n_pods=4, n_steps=3)
+    return {
+        "schema": SCHEMA,
+        "smoke": smoke,
+        "host": {
+            "python": sys.version.split()[0],
+            "platform": platform.platform(),
+        },
+        "kernel": kernel,
+        "topology_scaling": topo,
+        "sweep": sweep,
+    }
+
+
+def run():
+    """``benchmarks.run`` harness hook: smoke-sized rows (name, us, derived)."""
+    payload = collect(smoke=True)
+    yield ("engine.kernel", 1e6 / max(payload["kernel"]["events_per_sec"], 1),
+           f"{payload['kernel']['events_per_sec']}ev/s")
+    for row in payload["topology_scaling"]:
+        yield (f"engine.sim.pods{row['pods']}",
+               row["wall_s"] * 1e6, f"{row['events_per_sec']}ev/s")
+    for jobs, wall in payload["sweep"]["wall_s_by_jobs"].items():
+        yield (f"engine.sweep.jobs{jobs}", wall * 1e6,
+               f"{payload['sweep']['cells']}cells")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI pre-flight (~10s)")
+    ap.add_argument("--out", default="BENCH_engine.json",
+                    help="where to write the JSON payload")
+    ap.add_argument("--jobs", default="1,4,8",
+                    help="comma list of sweep --jobs settings to time")
+    args = ap.parse_args()
+    jobs_list = tuple(int(j) for j in args.jobs.split(",") if j.strip())
+    payload = collect(smoke=args.smoke, jobs_list=jobs_list)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    k = payload["kernel"]
+    print(f"[engine_bench] kernel: {k['events_per_sec']:,} events/s "
+          f"({k['n_events']} events in {k['wall_s']}s)")
+    for row in payload["topology_scaling"]:
+        print(f"[engine_bench] sim pods={row['pods']:<4d} links={row['links']:<6d} "
+              f"{row['events']:>9,} events in {row['wall_s']:>7.3f}s "
+              f"-> {row['events_per_sec']:,} events/s")
+    for jobs, wall in payload["sweep"]["wall_s_by_jobs"].items():
+        print(f"[engine_bench] sweep jobs={jobs}: {wall}s "
+              f"({payload['sweep']['cells']} cells)")
+    print(f"[engine_bench] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

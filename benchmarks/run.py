@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows (one per measurement).
   online     — §3.8: named-pipe online mode
   roofline   — §Roofline terms per (arch x shape) from dry-run artifacts
   scenarios  — fault-injection loop: inject -> simulate -> weave -> diagnose
+  engine     — DES kernel + sweep perf (smoke sizes; full run:
+               ``python -m benchmarks.engine_bench``)
 """
 import sys
 import time
@@ -19,6 +21,7 @@ import traceback
 def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     from . import (
+        engine_bench,
         fig4_fig5_clock_sync,
         fig6_breakdown,
         online_mode,
@@ -38,6 +41,7 @@ def main() -> None:
         "online": online_mode.run,
         "roofline": roofline.run,
         "scenarios": scenario_sweep.run,
+        "engine": engine_bench.run,
     }
     print("name,us_per_call,derived")
     failures = 0

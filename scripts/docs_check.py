@@ -1,6 +1,6 @@
 """Documentation checks (run via scripts/docs_check.sh; part of tier-1).
 
-Two failure classes, both cheap and deterministic:
+Four failure classes, all cheap and deterministic:
 
 1. **Broken intra-repo references** in README.md and docs/*.md:
    - markdown links ``[text](path)`` whose target is a repo path that does
@@ -8,14 +8,25 @@ Two failure classes, both cheap and deterministic:
    - ``[[file:line]]`` code anchors whose file is missing or whose line
      number exceeds the file's length.
 
-2. **Code blocks that don't import**: every ```python fenced block must
+2. **Stale code anchors**: a ``[[file:line]]`` anchor is normally preceded
+   in the prose by the backtick-quoted symbol it points at (e.g.
+   "`NetSim` in [[src/repro/sim/netsim.py:64]]"); the anchored line must
+   still *contain* one of the nearby quoted symbols, so anchors rot loudly
+   when code moves instead of silently pointing mid-function.
+
+3. **Code blocks that don't import**: every ```python fenced block must
    compile, and its top-level ``import``/``from`` statements must execute
    (doctest-style smoke with PYTHONPATH=src) — so the docs can't drift
    ahead of the API they document.  Full blocks are not executed: examples
    legitimately reference runtime artifacts (log files, clusters).
+
+4. **Docstring coverage**: every public top-level function and class in
+   ``src/repro/sim`` and ``src/repro/core`` (the documented API surface)
+   must carry a docstring.
 """
 from __future__ import annotations
 
+import ast
 import glob
 import os
 import re
@@ -26,6 +37,13 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 MD_LINK = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
 CODE_ANCHOR = re.compile(r"\[\[([^\]\s:]+):(\d+)\]\]")
 FENCE = re.compile(r"^```(\w*)\s*$")
+QUOTED_SYMBOL = re.compile(r"`([A-Za-z_][A-Za-z0-9_.]*)`")
+
+# symbol-search window: how far back from an anchor to look for the
+# backtick-quoted names it belongs to (roughly one doc bullet/sentence)
+ANCHOR_CONTEXT_CHARS = 250
+
+DOCSTRING_DIRS = ("src/repro/sim", "src/repro/core")
 
 
 def _doc_files():
@@ -50,6 +68,7 @@ def check_links(path: str, text: str):
     errors = []
     base = os.path.dirname(path)
     prose = _strip_code_blocks(text)
+    file_lines: dict = {}   # anchored file -> its lines (read once per doc)
     for target in MD_LINK.findall(prose):
         if target.startswith(("http://", "https://", "mailto:", "#")):
             continue
@@ -62,7 +81,8 @@ def check_links(path: str, text: str):
             or os.path.exists(os.path.join(REPO, rel))
         ):
             errors.append(f"{os.path.relpath(path, REPO)}: broken link -> {target}")
-    for fname, line_s in CODE_ANCHOR.findall(text):
+    for m in CODE_ANCHOR.finditer(text):
+        fname, line_s = m.group(1), m.group(2)
         fpath = os.path.join(REPO, fname)
         if not os.path.exists(fpath):
             errors.append(
@@ -70,12 +90,27 @@ def check_links(path: str, text: str):
                 f"-> file missing"
             )
             continue
-        n_lines = sum(1 for _ in open(fpath, "rb"))
-        if int(line_s) > n_lines:
+        lines = file_lines.get(fname)
+        if lines is None:
+            lines = file_lines[fname] = open(fpath).read().splitlines()
+        if int(line_s) > len(lines):
             errors.append(
                 f"{os.path.relpath(path, REPO)}: anchor [[{fname}:{line_s}]] "
-                f"-> only {n_lines} lines"
+                f"-> only {len(lines)} lines"
             )
+            continue
+        # stale-anchor check: the anchored line must contain one of the
+        # backtick-quoted symbols in the prose just before the anchor
+        window = text[max(0, m.start() - ANCHOR_CONTEXT_CHARS):m.start()]
+        symbols = QUOTED_SYMBOL.findall(window)
+        if symbols:
+            target = lines[int(line_s) - 1]
+            if not any(sym.rsplit(".", 1)[-1] in target for sym in symbols):
+                errors.append(
+                    f"{os.path.relpath(path, REPO)}: stale anchor "
+                    f"[[{fname}:{line_s}]] -> line does not mention any of "
+                    f"{sorted(set(symbols))} (is: {target.strip()[:60]!r})"
+                )
     return errors
 
 
@@ -119,13 +154,42 @@ def check_code_blocks(path: str, text: str):
     return errors
 
 
+def check_docstrings():
+    """Public top-level functions/classes in the API dirs need docstrings."""
+    errors = []
+    for d in DOCSTRING_DIRS:
+        for path in sorted(glob.glob(os.path.join(REPO, d, "*.py"))):
+            rel = os.path.relpath(path, REPO)
+            try:
+                tree = ast.parse(open(path).read(), filename=rel)
+            except SyntaxError as e:
+                errors.append(f"{rel}: does not parse: {e}")
+                continue
+            for node in tree.body:
+                if not isinstance(
+                    node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+                ):
+                    continue
+                if node.name.startswith("_"):
+                    continue
+                if ast.get_docstring(node) is None:
+                    kind = "class" if isinstance(node, ast.ClassDef) else "function"
+                    errors.append(
+                        f"{rel}:{node.lineno}: public {kind} "
+                        f"{node.name!r} has no docstring"
+                    )
+    return errors
+
+
 def main() -> int:
+    """Run every check over README.md + docs/*.md; non-zero on failure."""
     sys.path.insert(0, os.path.join(REPO, "src"))
     errors = []
     for path in _doc_files():
         text = open(path).read()
         errors.extend(check_links(path, text))
         errors.extend(check_code_blocks(path, text))
+    errors.extend(check_docstrings())
     if errors:
         print("docs_check: FAILED")
         for e in errors:

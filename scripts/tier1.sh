@@ -19,4 +19,9 @@ fi
 
 python -m benchmarks.run smoke
 
+# engine perf harness pre-flight: tiny sizes, validates that the bench
+# itself still runs end to end (schema is asserted in tests/test_sweep.py)
+mkdir -p results
+python -m benchmarks.engine_bench --smoke --out results/BENCH_engine.smoke.json
+
 scripts/docs_check.sh

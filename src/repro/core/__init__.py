@@ -24,14 +24,18 @@ from .actors import (
     TimeWindowActor,
 )
 from .analysis import (
+    AggregateReport,
     Diagnosis,
     Finding,
+    RunStats,
+    aggregate,
     clock_offset_series,
     component_breakdown,
     critical_path,
     diagnose,
     ntp_estimated_offsets,
     ntp_path_asymmetry,
+    percentile,
     span_name_breakdown,
     straggler_report,
     trace_summary,
@@ -52,6 +56,8 @@ from .exporters import (
     JaegerJSONExporter,
     OTLPJSONExporter,
     SpanJSONLExporter,
+    iter_span_records,
+    merge_span_jsonl,
 )
 from .parsers import DeviceLogParser, HostLogParser, LogParser, NetLogParser, parser_for
 from .pipeline import (

@@ -48,6 +48,8 @@ class TimeWindowActor(FilterActor):
 
 
 class SourceFilterActor(FilterActor):
+    """Keep events from the named component instances only."""
+
     def __init__(self, sources: Sequence[str]):
         srcset = set(sources)
         super().__init__(lambda e: e.source in srcset)

@@ -8,16 +8,19 @@ framework exposes as telemetry:
 * clock-offset series from host clock_read events vs. the simulation's
   ground-truth global clock (Fig. 4) and NTP-estimated offsets (Fig. 5);
 * critical path through a trace;
-* straggler detection across per-chip/per-pod spans (k·MAD outliers).
+* straggler detection across per-chip/per-pod spans (k·MAD outliers);
+* ``aggregate()`` — fleet-level statistics over *many* runs (sweep cells):
+  per-component latency percentiles, per-fault-class detection and
+  false-positive rates, critical-path frequency tables.
 """
 from __future__ import annotations
 
 import statistics
-from collections import defaultdict
+from collections import Counter, defaultdict
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
-from .span import Span, Trace, assemble_traces
+from .span import Span, SpanContext, Trace, assemble_traces
 
 PS_PER_US = 1_000_000
 
@@ -63,6 +66,7 @@ def component_breakdown(trace: Trace, leaf_only: bool = True) -> Dict[str, float
 
 
 def span_name_breakdown(trace: Trace) -> Dict[str, float]:
+    """Map span name -> summed µs of span time in this trace."""
     out: Dict[str, float] = defaultdict(float)
     for s in trace.spans:
         out[s.name] += s.duration / PS_PER_US
@@ -215,7 +219,14 @@ def straggler_report(
     span_name: str = "DeviceProgram",
     k: float = 4.0,
 ) -> Dict[str, Any]:
-    """Flag components whose span durations are > median + k * MAD."""
+    """Flag components whose span durations are > median + k * MAD.
+
+    Degenerate samples are guarded the same way as :func:`_mad_outliers`:
+    fewer than 3 components, or a non-positive median (so the 1%-of-median
+    MAD fallback would collapse to ~0 and flag everything), yield an empty
+    straggler list instead of a division-by-zero or an
+    everything-is-an-outlier verdict on tiny topologies.
+    """
     durs: Dict[str, List[int]] = defaultdict(list)
     for s in spans:
         if s.name == span_name:
@@ -224,6 +235,8 @@ def straggler_report(
         return {"stragglers": [], "median_us": 0.0, "per_component_us": {}}
     per_comp = {c: statistics.median(v) / PS_PER_US for c, v in durs.items()}
     med = statistics.median(per_comp.values())
+    if len(per_comp) < 3 or med <= 0:
+        return {"stragglers": [], "median_us": med, "per_component_us": per_comp}
     mad = statistics.median(abs(v - med) for v in per_comp.values()) or max(med * 0.01, 1e-9)
     stragglers = sorted(
         (c for c, v in per_comp.items() if v > med + k * mad),
@@ -233,6 +246,7 @@ def straggler_report(
 
 
 def trace_summary(spans: Sequence[Span]) -> Dict[str, Any]:
+    """Shape-of-the-weave counters (spans, traces, links, parents)."""
     traces = assemble_traces(spans)
     return {
         "n_spans": len(spans),
@@ -349,10 +363,18 @@ def _mad_outliers(
 ) -> List[Tuple[str, float, float]]:
     """(key, value, median) for values > median + k * MAD.  MAD degenerates
     to 1% of the median when all values agree, so identical-by-construction
-    healthy populations never flag."""
+    healthy populations never flag.
+
+    Guards against degenerate samples: fewer than ``min_keys`` members
+    (median/MAD of 1–2 values can only say "they differ", not which one is
+    anomalous), and a non-positive median (the 1%-of-median MAD fallback
+    would collapse to ~0, flag every positive value, and later divide
+    severities by zero)."""
     if len(per_key) < min_keys:
         return []
     med = statistics.median(per_key.values())
+    if med <= 0:
+        return []
     mad = statistics.median(abs(v - med) for v in per_key.values()) or max(med * 0.01, 1e-9)
     return sorted(
         ((c, v, med) for c, v in per_key.items() if v > med + k * mad),
@@ -526,3 +548,302 @@ def _critical_path_components(spans: Sequence[Span]) -> Dict[int, str]:
         if share:
             out[tid] = max(share, key=share.get)
     return out
+
+
+# ---------------------------------------------------------------------------
+# aggregate(): fleet-level statistics over many runs (the sweep's analysis)
+# ---------------------------------------------------------------------------
+#
+# A single trace answers "what happened in this run"; a sweep answers "how
+# does the fleet behave across scenarios and seeds" (the aggregate-driven
+# view of Anand et al.).  Each sweep cell pre-reduces its spans into a
+# small, JSON-serializable RunStats; aggregate() merges any number of them
+# into per-component latency percentiles, per-fault-class detection /
+# false-positive rates, and critical-path frequency tables.
+
+
+def percentile(samples: Sequence[float], q: float) -> float:
+    """Deterministic linear-interpolation percentile (``q`` in [0, 100])."""
+    s = sorted(samples)
+    if not s:
+        return 0.0
+    pos = (len(s) - 1) * q / 100.0
+    lo = int(pos)
+    hi = min(lo + 1, len(s) - 1)
+    return s[lo] + (s[hi] - s[lo]) * (pos - lo)
+
+
+@dataclass
+class RunStats:
+    """One run's pre-reduced statistics — the unit :func:`aggregate` merges.
+
+    Built in-process from woven spans (:meth:`from_spans`, what sweep
+    workers do) or offline from a SpanJSONL shard (:meth:`from_jsonl`,
+    re-aggregating archived sweeps); both paths are deterministic and
+    JSON-round-trippable (:meth:`to_dict` / :meth:`from_dict`).
+    """
+
+    scenario: str
+    seed: int
+    expected: Tuple[str, ...] = ()     # injected fault classes (ground truth)
+    detected: Tuple[str, ...] = ()     # fault classes diagnose() reported
+    wall_s: float = 0.0                # host wall-clock spent simulating+weaving
+    events: int = 0                    # DES events the kernel executed
+    n_spans: int = 0
+    component_us: Dict[str, List[float]] = field(default_factory=dict)
+    critical_components: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        """Detection verdict: every injected class diagnosed (clean runs
+        must diagnose nothing)."""
+        if not self.expected:
+            return not self.detected
+        return set(self.expected) <= set(self.detected)
+
+    @classmethod
+    def from_spans(
+        cls,
+        spans: Sequence[Span],
+        scenario: str = "",
+        seed: int = 0,
+        expected: Sequence[str] = (),
+        detected: Optional[Sequence[str]] = None,
+        wall_s: float = 0.0,
+        events: int = 0,
+    ) -> "RunStats":
+        """Reduce woven spans (``detected=None`` runs :func:`diagnose`)."""
+        if detected is None:
+            detected = diagnose(spans).fault_classes
+        comp: Dict[str, List[float]] = defaultdict(list)
+        for s in spans:
+            # 1 ps floor matches what SpanJSONLExporter publishes, so stats
+            # built from live spans and from shard files agree exactly
+            comp[f"{s.sim_type}:{s.component}"].append(max(s.duration, 1) / PS_PER_US)
+        return cls(
+            scenario=scenario,
+            seed=seed,
+            expected=tuple(expected),
+            detected=tuple(detected),
+            wall_s=wall_s,
+            events=events,
+            n_spans=len(spans),
+            component_us=dict(comp),
+            critical_components=list(_critical_path_components(spans).values()),
+        )
+
+    @classmethod
+    def from_jsonl(
+        cls,
+        path: str,
+        scenario: str = "",
+        seed: int = 0,
+        expected: Sequence[str] = (),
+        detected: Sequence[str] = (),
+    ) -> "RunStats":
+        """Reduce a SpanJSONL shard file (one JSON span per line).
+
+        Detection verdicts are not recomputable from JSONL (diagnosis needs
+        span events), so ``expected``/``detected`` come from the sweep's
+        summary; latency percentiles and critical paths are recomputed from
+        the records themselves.
+        """
+        from .exporters import iter_span_records
+
+        records = list(iter_span_records(path))
+        comp: Dict[str, List[float]] = defaultdict(list)
+        for r in records:
+            comp[f"{r['sim_type']}:{r['component']}"].append(float(r["duration_us"]))
+        spans = _records_to_spans(records)
+        return cls(
+            scenario=scenario,
+            seed=seed,
+            expected=tuple(expected),
+            detected=tuple(detected),
+            n_spans=len(records),
+            component_us=dict(comp),
+            critical_components=list(_critical_path_components(spans).values()),
+        )
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-serializable form (sweep.json cell payload)."""
+        return {
+            "scenario": self.scenario,
+            "seed": self.seed,
+            "expected": list(self.expected),
+            "detected": list(self.detected),
+            "wall_s": self.wall_s,
+            "events": self.events,
+            "n_spans": self.n_spans,
+            "component_us": self.component_us,
+            "critical_components": self.critical_components,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "RunStats":
+        """Inverse of :meth:`to_dict`."""
+        return cls(
+            scenario=d["scenario"],
+            seed=int(d["seed"]),
+            expected=tuple(d.get("expected", ())),
+            detected=tuple(d.get("detected", ())),
+            wall_s=float(d.get("wall_s", 0.0)),
+            events=int(d.get("events", 0)),
+            n_spans=int(d.get("n_spans", 0)),
+            component_us={k: list(v) for k, v in d.get("component_us", {}).items()},
+            critical_components=list(d.get("critical_components", ())),
+        )
+
+
+def _records_to_spans(records: Sequence[Dict[str, Any]]) -> List[Span]:
+    """Rehydrate SpanJSONL records into lightweight :class:`Span` objects
+    (times in µs rather than ps — only relative comparisons matter to the
+    analyses), so record-based paths reuse the span-based walks instead of
+    maintaining dict-shaped mirrors of them."""
+    spans: List[Span] = []
+    for r in records:
+        tid = int(r["trace_id"], 16)
+        parent = (
+            SpanContext(trace_id=tid, span_id=int(r["parent_id"], 16))
+            if r.get("parent_id")
+            else None
+        )
+        start = float(r["start_us"])
+        spans.append(
+            Span(
+                name=r["name"],
+                start=start,
+                end=start + float(r["duration_us"]),
+                context=SpanContext(trace_id=tid, span_id=int(r["span_id"], 16)),
+                parent=parent,
+                component=r["component"],
+                sim_type=r["sim_type"],
+            )
+        )
+    return spans
+
+
+@dataclass
+class AggregateReport:
+    """What :func:`aggregate` returns: the sweep-level rollup."""
+
+    n_runs: int
+    scenarios: List[str]
+    ok_runs: int
+    component_latency: Dict[str, Dict[str, float]]   # comp -> n/p50/p90/p99/max (µs)
+    detection: Dict[str, Dict[str, Any]]             # fault class -> rate table
+    critical_path_freq: Dict[str, Dict[str, float]]  # comp -> count/fraction
+    wall_s_total: float = 0.0
+    events_total: int = 0
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-serializable form (written as aggregate.json by sweeps)."""
+        return {
+            "n_runs": self.n_runs,
+            "scenarios": self.scenarios,
+            "ok_runs": self.ok_runs,
+            "wall_s_total": self.wall_s_total,
+            "events_total": self.events_total,
+            "component_latency": self.component_latency,
+            "detection": self.detection,
+            "critical_path_freq": self.critical_path_freq,
+        }
+
+    def report(self, top: int = 12) -> str:
+        """Human-readable rollup (the sweep CLI prints this)."""
+        lines = [
+            f"aggregate over {self.n_runs} runs "
+            f"({len(self.scenarios)} scenarios; {self.ok_runs}/{self.n_runs} diagnosed as expected; "
+            f"{self.events_total} DES events, {self.wall_s_total:.2f}s wall)",
+            "  per-component span latency (us), top by p99:",
+            f"    {'component':30s} {'n':>6s} {'p50':>10s} {'p90':>10s} {'p99':>10s} {'max':>10s}",
+        ]
+        ranked = sorted(
+            self.component_latency.items(), key=lambda kv: -kv[1]["p99"]
+        )[:top]
+        for comp, st in ranked:
+            lines.append(
+                f"    {comp:30s} {st['n']:6.0f} {st['p50']:10.1f} {st['p90']:10.1f} "
+                f"{st['p99']:10.1f} {st['max']:10.1f}"
+            )
+        if self.detection:
+            lines.append("  fault-class detection (injected vs diagnosed):")
+            lines.append(
+                f"    {'class':18s} {'injected':>8s} {'found':>6s} {'rate':>6s} "
+                f"{'clean':>6s} {'fp':>4s} {'fp_rate':>8s}"
+            )
+            for fc, d in sorted(self.detection.items()):
+                rate = "-" if d["detection_rate"] is None else f"{d['detection_rate']:.2f}"
+                fpr = "-" if d["false_positive_rate"] is None else f"{d['false_positive_rate']:.2f}"
+                lines.append(
+                    f"    {fc:18s} {d['injected_runs']:8d} {d['detected']:6d} {rate:>6s} "
+                    f"{d['clean_runs']:6d} {d['false_positives']:4d} {fpr:>8s}"
+                )
+        if self.critical_path_freq:
+            lines.append("  critical-path leader frequency (per step trace):")
+            for comp, d in list(self.critical_path_freq.items())[:top]:
+                lines.append(f"    {comp:30s} {d['count']:6.0f}  ({d['fraction']:.0%})")
+        return "\n".join(lines)
+
+
+def aggregate(runs: Iterable[RunStats]) -> AggregateReport:
+    """Merge many runs' :class:`RunStats` into one :class:`AggregateReport`.
+
+    * **per-component latency percentiles** — p50/p90/p99/max of span
+      durations pooled across runs, keyed ``sim_type:component``;
+    * **detection / false-positive rates** — for every fault class seen in
+      any run's expected or detected set: the fraction of injected runs
+      where it was diagnosed, and the fraction of clean runs where it was
+      diagnosed anyway;
+    * **critical-path frequency** — how often each component led a step
+      trace's critical path, pooled across runs.
+    """
+    runs = list(runs)
+    comp: Dict[str, List[float]] = defaultdict(list)
+    for r in runs:
+        for c, samples in r.component_us.items():
+            comp[c].extend(samples)
+    component_latency = {
+        c: {
+            "n": float(len(v)),
+            "p50": percentile(v, 50),
+            "p90": percentile(v, 90),
+            "p99": percentile(v, 99),
+            "max": max(v),
+        }
+        for c, v in sorted(comp.items())
+    }
+    classes = sorted({fc for r in runs for fc in (*r.expected, *r.detected)})
+    detection: Dict[str, Dict[str, Any]] = {}
+    for fc in classes:
+        injected = [r for r in runs if fc in r.expected]
+        clean = [r for r in runs if fc not in r.expected]
+        hits = sum(1 for r in injected if fc in r.detected)
+        fps = sum(1 for r in clean if fc in r.detected)
+        detection[fc] = {
+            "injected_runs": len(injected),
+            "detected": hits,
+            "detection_rate": hits / len(injected) if injected else None,
+            "clean_runs": len(clean),
+            "false_positives": fps,
+            "false_positive_rate": fps / len(clean) if clean else None,
+        }
+    cp = Counter(c for r in runs for c in r.critical_components)
+    total = sum(cp.values())
+    critical_path_freq = {
+        c: {"count": float(n), "fraction": n / total} for c, n in cp.most_common()
+    }
+    scenarios: List[str] = []
+    for r in runs:
+        if r.scenario not in scenarios:
+            scenarios.append(r.scenario)
+    return AggregateReport(
+        n_runs=len(runs),
+        scenarios=scenarios,
+        ok_runs=sum(1 for r in runs if r.ok),
+        component_latency=component_latency,
+        detection=detection,
+        critical_path_freq=critical_path_freq,
+        wall_s_total=sum(r.wall_s for r in runs),
+        events_total=sum(r.events for r in runs),
+    )

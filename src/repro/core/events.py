@@ -56,6 +56,7 @@ def register_event(cls: Type["Event"]) -> Type["Event"]:
 
 
 def event_types(sim_type) -> Dict[str, Type["Event"]]:
+    """kind -> Event class for one simulator type's registered events."""
     return dict(_EVENT_REGISTRY.get(sim_type_value(sim_type), {}))
 
 
@@ -90,6 +91,8 @@ class Event:
 @register_event
 @dataclass(slots=True, repr=False)
 class HostStepBegin(Event):
+    """Host begins a training step."""
+
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "step_begin"
 
@@ -97,6 +100,8 @@ class HostStepBegin(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class HostStepEnd(Event):
+    """Host finishes a training step."""
+
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "step_end"
 
@@ -104,6 +109,8 @@ class HostStepEnd(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class DataLoadBegin(Event):
+    """Input pipeline starts producing this step's batch."""
+
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "data_load_begin"
 
@@ -111,6 +118,8 @@ class DataLoadBegin(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class DataLoadEnd(Event):
+    """Batch ready; per-chip H2D DMAs can start."""
+
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "data_load_end"
 
@@ -127,6 +136,8 @@ class ProgramEnqueue(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class ProgramRetire(Event):
+    """A dispatched program completed on its chip (host view)."""
+
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "program_retire"
 
@@ -134,6 +145,8 @@ class ProgramRetire(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class DmaH2DIssue(Event):
+    """Host issues a host-to-device DMA (batch upload)."""
+
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "dma_h2d_issue"
 
@@ -141,6 +154,8 @@ class DmaH2DIssue(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class DmaH2DComplete(Event):
+    """Host-side completion of a host-to-device DMA."""
+
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "dma_h2d_complete"
 
@@ -148,6 +163,8 @@ class DmaH2DComplete(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class DmaD2HIssue(Event):
+    """Host issues a device-to-host DMA (readback)."""
+
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "dma_d2h_issue"
 
@@ -155,6 +172,8 @@ class DmaD2HIssue(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class DmaD2HComplete(Event):
+    """Host-side completion of a device-to-host DMA."""
+
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "dma_d2h_complete"
 
@@ -162,6 +181,8 @@ class DmaD2HComplete(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class CkptBegin(Event):
+    """Checkpoint write begins at a step boundary."""
+
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "ckpt_begin"
 
@@ -169,6 +190,8 @@ class CkptBegin(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class CkptShardWrite(Event):
+    """One checkpoint shard written to disk."""
+
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "ckpt_shard_write"
 
@@ -176,6 +199,8 @@ class CkptShardWrite(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class CkptEnd(Event):
+    """Checkpoint write finished."""
+
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "ckpt_end"
 
@@ -183,6 +208,8 @@ class CkptEnd(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class Heartbeat(Event):
+    """Periodic liveness beacon from the host runtime."""
+
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "heartbeat"
 
@@ -218,6 +245,8 @@ class GcStall(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class HostFailure(Event):
+    """Host crash (failure-injection scenarios)."""
+
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "host_failure"
 
@@ -225,6 +254,8 @@ class HostFailure(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class HostRestart(Event):
+    """Host rejoined after a failure, restored to a step."""
+
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "host_restart"
 
@@ -238,6 +269,8 @@ class HostRestart(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class ProgramStart(Event):
+    """Chip starts executing a dispatched program."""
+
     sim_type: ClassVar[SimType] = SimType.DEVICE
     kind: ClassVar[str] = "program_start"
 
@@ -245,6 +278,8 @@ class ProgramStart(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class ProgramEnd(Event):
+    """Chip finished the program's op list."""
+
     sim_type: ClassVar[SimType] = SimType.DEVICE
     kind: ClassVar[str] = "program_end"
 
@@ -261,6 +296,8 @@ class OpBegin(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class OpEnd(Event):
+    """A fused HLO op finished executing on the chip."""
+
     sim_type: ClassVar[SimType] = SimType.DEVICE
     kind: ClassVar[str] = "op_end"
 
@@ -268,6 +305,8 @@ class OpEnd(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class HbmRead(Event):
+    """HBM read traffic attributed to an op."""
+
     sim_type: ClassVar[SimType] = SimType.DEVICE
     kind: ClassVar[str] = "hbm_read"
 
@@ -275,6 +314,8 @@ class HbmRead(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class HbmWrite(Event):
+    """HBM write traffic attributed to an op."""
+
     sim_type: ClassVar[SimType] = SimType.DEVICE
     kind: ClassVar[str] = "hbm_write"
 
@@ -291,6 +332,8 @@ class MxuIssue(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class CollectiveStart(Event):
+    """Chip reaches a collective and joins its ring rendezvous."""
+
     sim_type: ClassVar[SimType] = SimType.DEVICE
     kind: ClassVar[str] = "collective_start"
 
@@ -308,6 +351,8 @@ class CollectiveChunkTx(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class CollectiveChunkRx(Event):
+    """A collective ring chunk arrived at this chip."""
+
     sim_type: ClassVar[SimType] = SimType.DEVICE
     kind: ClassVar[str] = "collective_chunk_rx"
 
@@ -315,6 +360,8 @@ class CollectiveChunkRx(Event):
 @register_event
 @dataclass(slots=True, repr=False)
 class CollectiveEnd(Event):
+    """The collective completed for this chip."""
+
     sim_type: ClassVar[SimType] = SimType.DEVICE
     kind: ClassVar[str] = "collective_end"
 

@@ -67,6 +67,8 @@ class Exporter:
 
 
 class JaegerJSONExporter(Exporter):
+    """Jaeger UI's upload-JSON format (per-trace envelopes, buffered)."""
+
     def __init__(self, path: Optional[str] = None):
         self.path = path
         self.payload: Optional[Dict[str, Any]] = None
@@ -206,6 +208,8 @@ class ChromeTraceExporter(Exporter):
 
 
 class OTLPJSONExporter(Exporter):
+    """OpenTelemetry OTLP/JSON resourceSpans (per-resource, buffered)."""
+
     def __init__(self, path: Optional[str] = None):
         self.path = path
         self.payload: Optional[Dict[str, Any]] = None
@@ -326,9 +330,66 @@ class SpanJSONLExporter(Exporter):
 
 
 # ---------------------------------------------------------------------------
+# SpanJSONL shard reading + merging (the sweep's output side)
+# ---------------------------------------------------------------------------
+
+
+def iter_span_records(paths) -> Iterable[Dict[str, Any]]:
+    """Yield parsed span records from one or more SpanJSONL files, in file
+    order (each shard is already sorted by ``(trace_id, start, span_id)``
+    — the engine's export order)."""
+    if isinstance(paths, str):
+        paths = [paths]
+    for path in paths:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    yield json.loads(line)
+
+
+def merge_span_jsonl(shard_paths, out_path: str, disambiguate: bool = True) -> int:
+    """Streaming-merge N SpanJSONL shards into one file ordered by
+    ``(trace_id, start_us, span_id)``.  Returns the number of spans written.
+
+    Sweep cells each reset the span/trace id counters (that is what makes
+    a cell's bytes seed-reproducible), so ids *collide across shards*.
+    With ``disambiguate`` (default) every id in shard ``i`` gets its top
+    8 hex digits replaced by ``i`` — parents and links rewritten
+    consistently — so the merged file has one coherent id space and
+    ``assemble_traces``/``RunStats.from_jsonl`` over it never stitch spans
+    from different cells together.  Pass ``disambiguate=False`` only for
+    shards that already share one id space (e.g. a single run exported in
+    pieces)."""
+    import heapq
+
+    def _keyed(idx, path):
+        prefix = f"{idx:08x}"
+        for r in iter_span_records(path):
+            if disambiguate:
+                r["trace_id"] = prefix + r["trace_id"][8:]
+                r["span_id"] = prefix + r["span_id"][8:]
+                if r.get("parent_id"):
+                    r["parent_id"] = prefix + r["parent_id"][8:]
+                if r.get("links"):
+                    r["links"] = [prefix + l[8:] for l in r["links"]]
+            yield (r["trace_id"], r["start_us"], r["span_id"]), json.dumps(r)
+
+    n = 0
+    with open(out_path, "w", buffering=1 << 20) as out:
+        for _, line in heapq.merge(*[_keyed(i, p) for i, p in enumerate(shard_paths)]):
+            out.write(line)
+            out.write("\n")
+            n += 1
+    return n
+
+
+# ---------------------------------------------------------------------------
 
 
 class ConsoleExporter(Exporter):
+    """Human-readable span tree on a stream (tests, examples, debugging)."""
+
     def __init__(self, stream: Optional[IO[str]] = None, max_spans: int = 200):
         self.stream = stream or sys.stdout
         self.max_spans = max_spans

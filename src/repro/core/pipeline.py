@@ -147,6 +147,9 @@ class Consumer:
 
 
 class Pipeline:
+    """producer -> actors -> consumer for one simulator's event stream,
+    runnable synchronously or as a thread (§3.8 online mode)."""
+
     def __init__(
         self,
         producer: Producer,

@@ -16,10 +16,12 @@ _trace_counter = itertools.count(1)
 
 
 def new_span_id() -> int:
+    """Next process-wide span id (see ``reset_ids`` for determinism)."""
     return next(_span_counter)
 
 
 def new_trace_id() -> int:
+    """Next process-wide trace id (see ``reset_ids`` for determinism)."""
     return next(_trace_counter)
 
 
@@ -46,6 +48,9 @@ class SpanContext:
 
 @dataclass(slots=True)
 class Span:
+    """One finished operation interval (OpenTelemetry-shaped): context,
+    optional parent, causal links, attributes, point-in-time events."""
+
     name: str
     start: int                       # ps
     end: int                         # ps
@@ -128,6 +133,7 @@ class Trace:
 
 
 def assemble_traces(spans: Iterable[Span]) -> Dict[int, Trace]:
+    """Group spans by trace_id into :class:`Trace` views."""
     traces: Dict[int, Trace] = {}
     for s in spans:
         traces.setdefault(s.context.trace_id, Trace(s.context.trace_id)).spans.append(s)

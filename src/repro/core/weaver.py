@@ -29,6 +29,9 @@ from .span import Span, SpanBuilder, SpanContext, new_trace_id
 
 
 class SpanWeaver(Consumer):
+    """Base consumer turning one simulator's event stream into spans,
+    propagating context through the shared registry (§3.5–3.6)."""
+
     sim_type: ClassVar[SimType]
     span_types: ClassVar[Tuple[str, ...]] = ()
 
@@ -103,6 +106,9 @@ class SpanWeaver(Consumer):
 
 
 class HostSpanWeaver(SpanWeaver):
+    """Weaves host-runtime events: steps, data loads, DMAs, dispatches,
+    checkpoints, NTP exchanges; pushes dispatch/DMA contexts."""
+
     sim_type = SimType.HOST
     span_types = (
         "HostStep", "DataLoad", "H2DTransfer", "Dispatch", "Checkpoint",
@@ -277,6 +283,9 @@ class HostSpanWeaver(SpanWeaver):
 
 
 class DeviceSpanWeaver(SpanWeaver):
+    """Weaves chip events: programs, ops, collectives; adopts the host's
+    dispatch context and pushes collective-chunk contexts to the net."""
+
     sim_type = SimType.DEVICE
     span_types = ("DeviceProgram", "Op", "Collective", "DmaRecv")
 
@@ -396,6 +405,9 @@ class DeviceSpanWeaver(SpanWeaver):
 
 
 class NetSpanWeaver(SpanWeaver):
+    """Weaves link transfers (enqueue -> wire -> receive) into
+    LinkTransfer spans linked to their causing DMA / collective spans."""
+
     sim_type = SimType.NET
     span_types = ("LinkTransfer",)
 
@@ -453,6 +465,8 @@ class NetSpanWeaver(SpanWeaver):
 
 
 def finalize_spans(spans: List[Span], registry: ContextRegistry) -> Dict[str, int]:
+    """Post-weave pass: resolve deferred context links and unify every
+    span's trace id with its root's; returns resolution counters."""
     stats = registry.resolve_deferred()
     by_id: Dict[int, Span] = {s.context.span_id: s for s in spans}
 

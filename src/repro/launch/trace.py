@@ -14,10 +14,57 @@ Fault scenarios (sim/scenarios.py) run through the same path:
 
 ``python -m repro.launch.trace --scenario throttled_chip --seed 7``
 ``python -m repro.launch.trace --list-scenarios``
+
+Fleet sweeps (sim/sweep.py) fan (scenario, seed) cells over worker
+processes, stream per-cell SpanJSONL shards, and print the aggregate
+report (detection rates, latency percentiles, critical-path frequency):
+
+``python -m repro.launch.trace --sweep --seeds 0:8 --jobs 8``
+``python -m repro.launch.trace --sweep --scenarios lossy_dcn,healthy_baseline \\
+     --seeds 0,1,2 --sweep-pods 64 --fabric fat-tree``
 """
 import argparse
 import json
 import os
+
+
+def _parse_seeds(text: str):
+    """``"0:8"`` -> range(0, 8); ``"0,3,7"`` -> those seeds."""
+    if ":" in text:
+        lo, hi = text.split(":", 1)
+        return tuple(range(int(lo), int(hi)))
+    return tuple(int(s) for s in text.split(",") if s.strip())
+
+
+def _run_sweep(args) -> None:
+    from ..sim.sweep import SweepSpec, run_sweep
+
+    scenarios = None
+    if args.scenarios:
+        scenarios = tuple(s.strip() for s in args.scenarios.split(",") if s.strip())
+    seeds = _parse_seeds(args.seeds)
+    overrides = {}
+    if args.sweep_pods:
+        overrides["n_pods"] = args.sweep_pods
+    if args.sweep_chips_per_pod:
+        overrides["chips_per_pod"] = args.sweep_chips_per_pod
+    if args.fabric:
+        overrides["fabric"] = args.fabric
+    if scenarios is None:
+        spec = SweepSpec.library(seeds=seeds, **overrides)
+    else:
+        spec = SweepSpec(scenarios=scenarios, seeds=seeds, **overrides)
+    outdir = os.path.join(args.outdir, "sweep")
+    result = run_sweep(spec, outdir, jobs=args.jobs)
+    agg = result.aggregate()
+    print(result.report(aggregate_report=agg))
+    agg_path = os.path.join(outdir, "aggregate.json")
+    with open(agg_path, "w") as f:
+        json.dump(agg.to_dict(), f, indent=1)
+    print(f"[sweep] {len(result.cells)} shards in {outdir}/shards/, "
+          f"summary in {outdir}/sweep.json, rollup in {agg_path}")
+    if not result.ok:
+        raise SystemExit(1)
 
 
 def _run_scenario(args) -> None:
@@ -57,6 +104,20 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=None,
                     help="override the scenario's fault-plan seed")
     ap.add_argument("--list-scenarios", action="store_true")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run a (scenario x seed) sweep through sim/sweep.py")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="worker processes for --sweep (cells are independent)")
+    ap.add_argument("--seeds", default="0:4",
+                    help="sweep seeds: 'lo:hi' range or comma list (default 0:4)")
+    ap.add_argument("--scenarios", default="",
+                    help="comma-separated sweep scenarios (default: whole library)")
+    ap.add_argument("--sweep-pods", type=int, default=0,
+                    help="override every sweep scenario's pod count")
+    ap.add_argument("--sweep-chips-per-pod", type=int, default=0,
+                    help="override every sweep scenario's chips per pod")
+    ap.add_argument("--fabric", default="",
+                    help="sweep topology fabric: 'mesh' or 'fat-tree'")
     ap.add_argument("--outdir", default="results/traces")
     ap.add_argument("--dryrun-dir", default="results/dryrun")
     args = ap.parse_args()
@@ -66,6 +127,9 @@ def main() -> None:
 
         for name, spec in SCENARIOS.items():
             print(f"{name:24s} {spec.description}")
+        return
+    if args.sweep:
+        _run_sweep(args)
         return
     if args.scenario:
         _run_scenario(args)

@@ -9,9 +9,13 @@ Component simulators (each writing its own ad-hoc log format):
 
 cluster.ClusterOrchestrator assembles them (SimBricks role); workload builds
 device programs from compiled XLA artifacts or synthetic specs.
+
+engine.EventKernel is the shared discrete-event kernel all of them schedule
+on; sweep runs fleets of (scenario, seed) cells in parallel.
 """
 from .clock import LogWriter, Sim
 from .cluster import ClusterOrchestrator, FailurePlan, run_ntp_sim, run_training_sim
+from .engine import EventHandle, EventKernel, PeriodicTask, SimPort
 from .devicesim import CollectiveInstance, DeviceSim
 from .faults import (
     FAULT_CLASSES,
@@ -35,7 +39,14 @@ from .scenarios import (
     get_scenario,
     list_scenarios,
 )
-from .topology import Link, Topology, ntp_testbed, tpu_cluster
+from .sweep import (
+    CellResult,
+    SweepResult,
+    SweepSpec,
+    load_sweep,
+    run_sweep,
+)
+from .topology import Link, Topology, fat_tree_cluster, ntp_testbed, scale, tpu_cluster
 from .workload import OpSpec, ProgramSpec, program_from_compiled, synthetic_program
 
 __all__ = [k for k in dir() if not k.startswith("_")]

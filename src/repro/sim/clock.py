@@ -1,44 +1,19 @@
-"""Discrete-event simulation core: global virtual clock + event queue.
+"""Global virtual clock + log plumbing for the component simulators.
 
-The global clock is the "true and precise global clock for all events" the
-paper highlights as a key advantage of simulation (§1 advantage iii).
-Times are integer picoseconds.
+The DES kernel itself lives in :mod:`repro.sim.engine` (``EventKernel``);
+this module keeps the historic ``Sim`` name importable and owns
+:class:`LogWriter`, the ad-hoc per-simulator log sink.  The kernel's global
+clock is the "true and precise global clock for all events" the paper
+highlights as a key advantage of simulation (§1 advantage iii).  Times are
+integer picoseconds.
 """
 from __future__ import annotations
 
-import heapq
-from typing import Callable, List, Optional, Tuple
+from typing import List, Optional
 
+from .engine import EventHandle, EventKernel, PeriodicTask, Sim, SimPort
 
-class Sim:
-    """Minimal DES kernel."""
-
-    def __init__(self) -> None:
-        self.now: int = 0
-        self._q: List[Tuple[int, int, Callable[[], None]]] = []
-        self._seq = 0
-        self.events_executed = 0
-
-    def at(self, t: int, fn: Callable[[], None]) -> None:
-        assert t >= self.now, f"scheduling into the past: {t} < {self.now}"
-        heapq.heappush(self._q, (int(t), self._seq, fn))
-        self._seq += 1
-
-    def after(self, dt: int, fn: Callable[[], None]) -> None:
-        self.at(self.now + int(dt), fn)
-
-    def run(self, until: Optional[int] = None, max_events: int = 100_000_000) -> None:
-        while self._q and self.events_executed < max_events:
-            t, _, fn = self._q[0]
-            if until is not None and t > until:
-                break
-            heapq.heappop(self._q)
-            self.now = t
-            fn()
-            self.events_executed += 1
-
-    def empty(self) -> bool:
-        return not self._q
+__all__ = ["EventHandle", "EventKernel", "LogWriter", "PeriodicTask", "Sim", "SimPort"]
 
 
 class LogWriter:

@@ -12,7 +12,8 @@ import os
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
-from .clock import LogWriter, Sim
+from .clock import LogWriter
+from .engine import EventKernel
 from .devicesim import ClusterLike, CollectiveInstance, DeviceSim
 from .hostsim import HostClock, HostSim
 from .netsim import NetSim
@@ -22,6 +23,9 @@ from .workload import OpSpec, ProgramSpec
 
 @dataclass
 class FailurePlan:
+    """Kill one host at ``fail_at_ps`` and restart it ``restart_after_ps``
+    later, resuming from ``restored_step``."""
+
     host: str
     fail_at_ps: int
     restart_after_ps: int
@@ -29,6 +33,9 @@ class FailurePlan:
 
 
 class ClusterOrchestrator(ClusterLike):
+    """Assembles component sims over one shared :class:`EventKernel` and
+    runs the full-system simulation (the SimBricks role)."""
+
     def __init__(
         self,
         topo: Topology,
@@ -38,7 +45,8 @@ class ClusterOrchestrator(ClusterLike):
         clock_params: Optional[Dict[str, Tuple[int, float]]] = None,  # host -> (offset_ps, drift_ppm)
         online_pipes: bool = False,
     ) -> None:
-        self.sim = Sim()
+        self.sim = EventKernel()
+        self.port = self.sim.register("cluster")
         self.topo = topo
         self.outdir = outdir
         self.online_pipes = online_pipes
@@ -46,13 +54,14 @@ class ClusterOrchestrator(ClusterLike):
             os.makedirs(outdir, exist_ok=True)
         self._logs: List[LogWriter] = []
 
-        self.net = NetSim(self.sim, topo, self._mklog("net.log", "net"))
+        self.net = NetSim(self.sim.register("net"), topo, self._mklog("net.log", "net"))
 
         self.device_sims: Dict[int, DeviceSim] = {}
         self._chip2dev: Dict[str, DeviceSim] = {}
         for pod, chips in topo.pods.items():
             dev = DeviceSim(
-                self.sim, self, pod, chips, self._mklog(f"device-pod{pod}.log", "device"),
+                self.sim.register(f"device.pod{pod}"), self, pod, chips,
+                self._mklog(f"device-pod{pod}.log", "device"),
                 compute_scale=compute_scale,
             )
             self.device_sims[pod] = dev
@@ -66,7 +75,8 @@ class ClusterOrchestrator(ClusterLike):
             name = topo.host_name(pod)
             off, drift = clock_params.get(name, (0, 0.0))
             self.hosts[name] = HostSim(
-                self.sim, self, name, self._mklog(f"host-{name}.log", "host"),
+                self.sim.register(f"host.{name}"), self,
+                name, self._mklog(f"host-{name}.log", "host"),
                 chips=chips, clock=HostClock(off, drift), **hk,
             )
         # hosts that exist in the topology but have no chips (NTP testbed)
@@ -74,7 +84,8 @@ class ClusterOrchestrator(ClusterLike):
             if name not in self.hosts:
                 off, drift = clock_params.get(name, (0, 0.0))
                 self.hosts[name] = HostSim(
-                    self.sim, self, name, self._mklog(f"host-{name}.log", "host"),
+                    self.sim.register(f"host.{name}"), self,
+                    name, self._mklog(f"host-{name}.log", "host"),
                     chips=[], clock=HostClock(off, drift), **hk,
                 )
 

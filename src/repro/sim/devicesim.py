@@ -19,7 +19,8 @@ from __future__ import annotations
 import itertools
 from typing import Callable, Dict, List, Optional, Tuple
 
-from .clock import LogWriter, Sim
+from .clock import LogWriter
+from .engine import SimPort
 from .netsim import NetSim
 from .topology import Topology
 from .workload import OpSpec, ProgramSpec
@@ -178,7 +179,7 @@ class DeviceSim:
 
     def __init__(
         self,
-        sim: Sim,
+        sim: SimPort,
         cluster: ClusterLike,
         pod: int,
         chips: List[str],

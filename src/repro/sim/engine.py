@@ -1,0 +1,265 @@
+"""Discrete-event kernel shared by every component simulator.
+
+One :class:`EventKernel` drives the whole full-system simulation: a single
+binary-heap event queue with deterministic tie-breaking by ``(time, seq)``,
+where ``seq`` is the global scheduling order.  Two properties follow:
+
+* **Determinism** — two events at the same virtual instant always execute
+  in the order they were scheduled, so a seeded run replays the exact same
+  event sequence and produces byte-identical simulator logs (and therefore
+  byte-identical woven SpanJSONL).  Asserted in ``tests/test_sweep.py``
+  against golden files recorded before the kernel rewrite.
+* **Idle gaps cost zero work** — nothing "ticks".  The kernel jumps the
+  virtual clock straight to the next scheduled event, so a 30-second idle
+  window between NTP polls costs one heap pop, not 30e12 picosecond steps.
+
+Component simulators register on the kernel (:meth:`EventKernel.register`)
+and receive a :class:`SimPort` — a scheduling facade that attributes every
+executed event to the owning simulator, giving per-component event
+accounting for ``benchmarks/engine_bench.py`` without touching the hot
+path's ordering.  Recurring behaviours (heartbeats, clock reads, NTP polls,
+background traffic) use :meth:`SimPort.every`, a cancellable
+:class:`PeriodicTask` that re-arms itself *after* each firing and schedules
+no trailing no-op events.
+
+Times are integer picoseconds throughout.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class EventHandle:
+    """A scheduled event; ``cancel()`` removes it lazily (the heap entry
+    stays but is skipped on pop, preserving every other event's order)."""
+
+    __slots__ = ("fn", "port", "cancelled")
+
+    def __init__(self, fn: Callable[[], None], port: Optional["SimPort"]) -> None:
+        self.fn = fn
+        self.port = port
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        """Mark the event dead; the kernel skips it when popped."""
+        self.cancelled = True
+
+
+class PeriodicTask:
+    """A recurring event: fires ``fn(i)`` every ``interval_ps``.
+
+    Replaces the per-callsite hand-rolled reschedule chains (heartbeats,
+    clock reads, NTP polls, bulk flows).  The next firing is armed *after*
+    ``fn`` runs — the same scheduling order as the chains it replaced, so
+    seeded runs stay byte-identical — and a finished or cancelled task
+    leaves no pending heap entry behind.
+
+    * ``n``        — stop after ``n`` firings (``None`` = unbounded).
+    * ``stop_ps``  — do not fire at or after this virtual time.
+    * ``cancel()`` — stop immediately, removing the pending event.
+    """
+
+    __slots__ = ("kernel", "interval_ps", "fn", "n", "stop_ps", "port", "fires", "_handle", "cancelled")
+
+    def __init__(
+        self,
+        kernel: "EventKernel",
+        interval_ps: int,
+        fn: Callable[[int], None],
+        n: Optional[int] = None,
+        first_at: Optional[int] = None,
+        stop_ps: Optional[int] = None,
+        port: Optional["SimPort"] = None,
+    ) -> None:
+        self.kernel = kernel
+        self.interval_ps = int(interval_ps)
+        self.fn = fn
+        self.n = n
+        self.stop_ps = stop_ps
+        self.port = port
+        self.fires = 0
+        self.cancelled = False
+        start = kernel.now + self.interval_ps if first_at is None else int(first_at)
+        self._handle: Optional[EventHandle] = kernel.at(start, self._fire, port=port)
+
+    def _fire(self) -> None:
+        if self.cancelled:
+            return
+        if self.stop_ps is not None and self.kernel.now >= self.stop_ps:
+            self._handle = None
+            return
+        if self.n is not None and self.fires >= self.n:
+            # n == 0 (or n shrunk under us): never run fn, never re-arm —
+            # matching the pre-kernel chains, which checked i >= n first
+            self._handle = None
+            return
+        i = self.fires
+        self.fires += 1
+        self.fn(i)
+        if self.n is None or self.fires < self.n:
+            self._handle = self.kernel.at(
+                self.kernel.now + self.interval_ps, self._fire, port=self.port
+            )
+        else:
+            self._handle = None
+
+    def cancel(self) -> None:
+        """Stop the task; its pending heap entry is skipped, not executed."""
+        self.cancelled = True
+        if self._handle is not None:
+            self._handle.cancel()
+            self._handle = None
+
+
+class SimPort:
+    """One simulator's scheduling interface onto the shared kernel.
+
+    Everything scheduled through a port is attributed to the owning
+    component in :meth:`EventKernel.stats` — the per-simulator event
+    accounting ``benchmarks/engine_bench.py`` reports — while executing on
+    the one global queue (so cross-simulator ordering is exact).
+    """
+
+    __slots__ = ("kernel", "name", "events_executed")
+
+    def __init__(self, kernel: "EventKernel", name: str) -> None:
+        self.kernel = kernel
+        self.name = name
+        self.events_executed = 0
+
+    @property
+    def now(self) -> int:
+        """Current virtual time (ps) of the shared kernel."""
+        return self.kernel.now
+
+    def at(self, t: int, fn: Callable[[], None]) -> EventHandle:
+        """Schedule ``fn`` at absolute virtual time ``t``."""
+        return self.kernel.at(t, fn, port=self)
+
+    def after(self, dt: int, fn: Callable[[], None]) -> EventHandle:
+        """Schedule ``fn`` ``dt`` picoseconds from now."""
+        return self.kernel.at(self.kernel.now + int(dt), fn, port=self)
+
+    def every(
+        self,
+        interval_ps: int,
+        fn: Callable[[int], None],
+        n: Optional[int] = None,
+        first_at: Optional[int] = None,
+        stop_ps: Optional[int] = None,
+    ) -> PeriodicTask:
+        """Start a :class:`PeriodicTask` attributed to this simulator."""
+        return PeriodicTask(
+            self.kernel, interval_ps, fn, n=n, first_at=first_at, stop_ps=stop_ps, port=self
+        )
+
+
+class EventKernel:
+    """Binary-heap DES kernel with deterministic ``(time, seq)`` ordering.
+
+    The single event queue all component simulators share; ``seq`` is the
+    global scheduling order, so same-time events execute exactly in the
+    order they were scheduled — the foundation of the repo's byte-identical
+    reproducibility contract.
+    """
+
+    def __init__(self) -> None:
+        self.now: int = 0
+        self._q: List[Tuple[int, int, EventHandle]] = []
+        self._seq = 0
+        self.events_executed = 0
+        self.events_cancelled = 0
+        self.ports: Dict[str, SimPort] = {}
+
+    # -- registration -----------------------------------------------------------
+
+    def register(self, name: str) -> SimPort:
+        """Register a component simulator; returns its :class:`SimPort`.
+
+        Ports are idempotent per name (re-registering returns the same
+        port), so helpers can look one up without threading it through."""
+        port = self.ports.get(name)
+        if port is None:
+            port = SimPort(self, name)
+            self.ports[name] = port
+        return port
+
+    # -- scheduling -------------------------------------------------------------
+
+    def at(self, t: int, fn: Callable[[], None], port: Optional[SimPort] = None) -> EventHandle:
+        """Schedule ``fn`` at absolute virtual time ``t`` (>= now)."""
+        t = int(t)
+        if t < self.now:
+            raise ValueError(f"scheduling into the past: {t} < {self.now}")
+        h = EventHandle(fn, port)
+        heapq.heappush(self._q, (t, self._seq, h))
+        self._seq += 1
+        return h
+
+    def after(self, dt: int, fn: Callable[[], None], port: Optional[SimPort] = None) -> EventHandle:
+        """Schedule ``fn`` ``dt`` picoseconds from now."""
+        return self.at(self.now + int(dt), fn, port=port)
+
+    def every(
+        self,
+        interval_ps: int,
+        fn: Callable[[int], None],
+        n: Optional[int] = None,
+        first_at: Optional[int] = None,
+        stop_ps: Optional[int] = None,
+        port: Optional[SimPort] = None,
+    ) -> PeriodicTask:
+        """Start a :class:`PeriodicTask` on the kernel's queue."""
+        return PeriodicTask(self, interval_ps, fn, n=n, first_at=first_at, stop_ps=stop_ps, port=port)
+
+    # -- execution --------------------------------------------------------------
+
+    def run(self, until: Optional[int] = None, max_events: int = 100_000_000) -> int:
+        """Drain the queue (optionally only up to virtual time ``until``).
+
+        Returns the number of events executed by this call.  Cancelled
+        entries are skipped without advancing the clock or the counters
+        other events observe."""
+        q = self._q
+        pop = heapq.heappop
+        executed0 = self.events_executed
+        while q and self.events_executed - executed0 < max_events:
+            t, _, h = q[0]
+            if until is not None and t > until:
+                break
+            pop(q)
+            if h.cancelled:
+                self.events_cancelled += 1
+                continue
+            self.now = t
+            h.fn()
+            self.events_executed += 1
+            if h.port is not None:
+                h.port.events_executed += 1
+        return self.events_executed - executed0
+
+    def empty(self) -> bool:
+        """True when no events (live or cancelled) remain queued."""
+        return not self._q
+
+    def queue_len(self) -> int:
+        """Number of queued heap entries (including cancelled ones)."""
+        return len(self._q)
+
+    def stats(self) -> Dict[str, object]:
+        """Execution counters: totals plus per-registered-simulator events."""
+        return {
+            "events_executed": self.events_executed,
+            "events_cancelled": self.events_cancelled,
+            "virtual_time_ps": self.now,
+            "queued": len(self._q),
+            "per_component": {
+                name: p.events_executed for name, p in sorted(self.ports.items())
+            },
+        }
+
+
+# Historic name: the seed repo called the kernel ``Sim`` (sim/clock.py).
+# The alias keeps every existing ``Sim()`` call site working unchanged.
+Sim = EventKernel

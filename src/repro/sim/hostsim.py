@@ -16,7 +16,8 @@ from __future__ import annotations
 import itertools
 from typing import Callable, Dict, List, Optional
 
-from .clock import LogWriter, Sim
+from .clock import LogWriter
+from .engine import PeriodicTask, SimPort
 from .netsim import NetSim
 from .topology import Topology
 from .workload import ProgramSpec
@@ -64,7 +65,7 @@ class HostSim:
 
     def __init__(
         self,
-        sim: Sim,
+        sim: SimPort,
         cluster: "ClusterOrchestrator",
         name: str,
         log: LogWriter,
@@ -218,17 +219,15 @@ class HostSim:
 
     # -- clock reads + NTP (case study §5) ---------------------------------------------------
 
-    def start_clock_reads(self, every_ps: int, n: Optional[int] = None) -> None:
-        count = itertools.count()
-
-        def _read() -> None:
-            i = next(count)
-            if n is not None and i >= n:
-                return
-            self.log_event("clock_read", local=self.clock.local(self.sim.now))
-            self.sim.after(every_ps, _read)
-
-        self.sim.after(every_ps, _read)
+    def start_clock_reads(self, every_ps: int, n: Optional[int] = None) -> PeriodicTask:
+        """Sample the local clock every ``every_ps`` (``clock_read`` log
+        events carry the host's view; the log line's timestamp carries the
+        ground-truth global clock)."""
+        return self.sim.every(
+            every_ps,
+            lambda i: self.log_event("clock_read", local=self.clock.local(self.sim.now)),
+            n=n,
+        )
 
     def start_ntp_client(
         self,
@@ -237,15 +236,11 @@ class HostSim:
         n: Optional[int] = None,
         gain: float = 0.5,
         server_proc_ps: int = 50_000_000,    # 50 us server processing
-    ) -> None:
+    ) -> PeriodicTask:
         """chrony/NTP: request -> server -> response; estimate offset
         ((t2-t1)+(t3-t4))/2 and slew by -gain*estimate."""
-        count = itertools.count()
 
-        def _poll() -> None:
-            i = next(count)
-            if n is not None and i >= n:
-                return
+        def _poll(i: int) -> None:
             t1 = self.clock.local(self.sim.now)
 
             def _at_server(_t: int) -> None:
@@ -278,21 +273,13 @@ class HostSim:
                 meta={"proto": "ntp", "dir": "req", "seq": i, "peer": self.name},
                 on_delivered=_at_server,
             )
-            self.sim.after(every_ps, _poll)
 
-        self.sim.after(every_ps, _poll)
+        return self.sim.every(every_ps, _poll, n=n)
 
-    def start_heartbeats(self, every_ps: int = 10_000_000_000, n: Optional[int] = None) -> None:
-        count = itertools.count()
-
-        def _hb() -> None:
-            i = next(count)
-            if n is not None and i >= n:
-                return
-            self.log_event("heartbeat", seq=i)
-            self.sim.after(every_ps, _hb)
-
-        self.sim.after(every_ps, _hb)
+    def start_heartbeats(self, every_ps: int = 10_000_000_000, n: Optional[int] = None) -> PeriodicTask:
+        """Emit ``heartbeat`` log events every ``every_ps`` (liveness
+        telemetry; the failure scenarios read their absence)."""
+        return self.sim.every(every_ps, lambda i: self.log_event("heartbeat", seq=i), n=n)
 
 
 def _short(chip: str) -> str:

@@ -20,7 +20,8 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
-from .clock import LogWriter, Sim
+from .clock import LogWriter
+from .engine import PeriodicTask, SimPort
 from .topology import Link, Topology
 
 PS_PER_S = 1_000_000_000_000
@@ -59,7 +60,9 @@ class LinkFault:
 
 
 class NetSim:
-    def __init__(self, sim: Sim, topo: Topology, log: LogWriter) -> None:
+    """Interconnect simulator: moves chunks along multi-link FIFO routes."""
+
+    def __init__(self, sim: SimPort, topo: Topology, log: LogWriter) -> None:
         self.sim = sim
         self.topo = topo
         self.log = log
@@ -68,6 +71,7 @@ class NetSim:
         self.bytes_delivered = 0
         self.chunks_dropped = 0
         self.flows_stopped = False
+        self._flow_tasks: List[PeriodicTask] = []
         self.link_faults: Dict[str, List[LinkFault]] = {}
 
     # -- fault hooks (driven by sim/faults.py) ------------------------------------
@@ -175,25 +179,32 @@ class NetSim:
         start_ps: int = 0,
         stop_ps: Optional[int] = None,
         flow_id: str = "bg0",
-    ) -> None:
+    ) -> PeriodicTask:
+        """BulkSend analogue: back-to-back ``segment_bytes`` transfers at
+        ``rate_bytes_per_s``, as a cancellable kernel :class:`PeriodicTask`
+        (no wake-ups survive past :meth:`stop_all_flows`)."""
         interval_ps = int(segment_bytes / (rate_bytes_per_s / PS_PER_S))
-        seq = itertools.count()
 
-        def _send() -> None:
-            if self.flows_stopped or (stop_ps is not None and self.sim.now >= stop_ps):
-                return
+        def _send(i: int) -> None:
             self.transfer(
                 src,
                 dst,
                 segment_bytes,
-                meta={"flow": flow_id, "seq": next(seq)},
+                meta={"flow": flow_id, "seq": i},
                 quiet=False,
             )
-            self.sim.after(interval_ps, _send)
 
-        self.sim.at(start_ps, _send)
+        task = self.sim.every(interval_ps, _send, first_at=start_ps, stop_ps=stop_ps)
+        self._flow_tasks.append(task)
+        if self.flows_stopped:
+            # flows were already stopped (workload drained): a late-started
+            # flow must not outlive them
+            task.cancel()
+        return task
 
     def stop_all_flows(self) -> None:
-        """Stops background flows at their next tick (lets training sims
+        """Cancel every background flow's pending event (lets training sims
         drain and terminate once the workload completes)."""
         self.flows_stopped = True
+        for task in self._flow_tasks:
+            task.cancel()

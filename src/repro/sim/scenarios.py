@@ -44,7 +44,7 @@ from .faults import (
     LinkLoss,
     StragglerPod,
 )
-from .topology import tpu_cluster
+from .topology import scale
 from .workload import ProgramSpec, synthetic_program
 
 PS_PER_MS = 1_000_000_000
@@ -71,6 +71,7 @@ class ScenarioSpec:
     n_steps: int = 2
     n_pods: int = 2
     chips_per_pod: int = 4
+    fabric: str = "mesh"                          # "mesh" (full DCN) | "fat-tree"
     program: Callable[[], ProgramSpec] = _default_program
     clock_read_every_ps: int = 2 * PS_PER_MS
     clock_reads: int = 30
@@ -92,7 +93,9 @@ class ScenarioSpec:
 
     def simulate(self, outdir: str, seed: Optional[int] = None) -> ClusterOrchestrator:
         """Run only the full-system simulation; logs land in ``outdir``."""
-        topo = tpu_cluster(n_pods=self.n_pods, chips_per_pod=self.chips_per_pod)
+        topo = scale(
+            pods=self.n_pods, chips_per_pod=self.chips_per_pod, fabric=self.fabric
+        )
         cluster = ClusterOrchestrator(topo, outdir=outdir)
         self.fault_plan(seed).schedule(cluster)
         drive_training_hosts(
@@ -273,10 +276,12 @@ SCENARIOS: Dict[str, ScenarioSpec] = {s.name: s for s in _LIBRARY}
 
 
 def list_scenarios() -> List[str]:
+    """Names of the curated scenario library, in definition order."""
     return list(SCENARIOS)
 
 
 def get_scenario(name: str) -> ScenarioSpec:
+    """Look up a library scenario by name (KeyError lists what exists)."""
     try:
         return SCENARIOS[name]
     except KeyError:

@@ -1,0 +1,243 @@
+"""Parallel multi-seed scenario sweeps: fleets of ``(scenario, seed)`` cells.
+
+One simulated run answers "what happened here"; a sweep runs a grid of
+scenarios × seeds and feeds :func:`repro.core.analysis.aggregate` so the
+question becomes "how does the fleet behave" — detection rates per fault
+class, latency percentiles per component, critical-path frequency — the
+aggregate-driven reading of traces rather than eyeballing single runs.
+
+Execution model: each cell runs the existing
+:class:`~repro.sim.scenarios.ScenarioSpec` → ``TraceSpec``/``ExecutionEngine``
+path end to end in its own process (``jobs > 1`` uses a multiprocessing
+pool) and streams its SpanJSONL to a per-cell shard under
+``<outdir>/shards/``.  Cells are fully independent and individually seeded,
+so:
+
+* ``--jobs 8`` produces byte-identical shard files to ``--jobs 1`` (only
+  completion order differs — shard *content* is pinned by the cell's seed);
+* a sweep is resumable/auditable: ``sweep.json`` records every cell's
+  verdict and pre-reduced :class:`~repro.core.analysis.RunStats`, and
+  :func:`load_sweep` re-hydrates a finished sweep without re-simulating.
+
+CLI: ``python -m repro.launch.trace --sweep --jobs 8`` (see docs/sweeps.md).
+"""
+from __future__ import annotations
+
+import json
+import multiprocessing
+import os
+import time
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .scenarios import SCENARIOS, ScenarioSpec, get_scenario
+
+SWEEP_SCHEMA = "columbo.sweep/v1"
+
+
+@dataclass(frozen=True)
+class SweepSpec:
+    """A grid of ``(scenario, seed)`` cells plus optional topology overrides.
+
+    Inert and declarative like :class:`~repro.sim.scenarios.ScenarioSpec`:
+    build once, run with any ``--jobs``, get the same shards.
+    ``n_pods``/``chips_per_pod``/``fabric``/``n_steps`` (when not ``None``)
+    override every scenario in the grid — e.g. re-running the curated
+    library on a 64-pod fat-tree.
+    """
+
+    scenarios: Tuple[str, ...]
+    seeds: Tuple[int, ...]
+    n_pods: Optional[int] = None
+    chips_per_pod: Optional[int] = None
+    fabric: Optional[str] = None
+    n_steps: Optional[int] = None
+
+    def overrides(self) -> Dict[str, Any]:
+        """The non-``None`` ScenarioSpec field overrides for every cell."""
+        out: Dict[str, Any] = {}
+        for k in ("n_pods", "chips_per_pod", "fabric", "n_steps"):
+            v = getattr(self, k)
+            if v is not None:
+                out[k] = v
+        return out
+
+    def cells(self) -> List[Tuple[str, int]]:
+        """The full grid, scenario-major (deterministic order)."""
+        return [(s, seed) for s in self.scenarios for seed in self.seeds]
+
+    @classmethod
+    def library(cls, seeds: Sequence[int] = (0,), **overrides: Any) -> "SweepSpec":
+        """The whole curated scenario library × ``seeds``."""
+        return cls(scenarios=tuple(SCENARIOS), seeds=tuple(seeds), **overrides)
+
+
+@dataclass
+class CellResult:
+    """One finished ``(scenario, seed)`` cell."""
+
+    scenario: str
+    seed: int
+    ok: bool                    # expected fault classes ⊆ diagnosed classes
+    shard: str                  # SpanJSONL shard path, relative to the sweep outdir
+    stats: "Any"                # core.analysis.RunStats (pre-reduced spans)
+
+
+def _shard_name(scenario: str, seed: int) -> str:
+    return os.path.join("shards", f"{scenario}.seed{seed}.spans.jsonl")
+
+
+def _run_cell(args: Tuple[str, int, Dict[str, Any], str]) -> Dict[str, Any]:
+    """Worker: run one cell end to end (simulate → weave → diagnose),
+    write its SpanJSONL shard, return a JSON-serializable summary.
+
+    Top-level (picklable) so multiprocessing pools can dispatch it; every
+    random draw inside comes from the cell's seeded fault plan, so the
+    result is independent of which worker runs it.
+    """
+    from ..core.analysis import RunStats
+
+    scenario, seed, overrides, outdir = args
+    spec: ScenarioSpec = get_scenario(scenario)
+    if overrides:
+        spec = replace(spec, **overrides)
+    t0 = time.perf_counter()
+    run = spec.run(seed=seed)
+    wall = time.perf_counter() - t0
+    shard = _shard_name(scenario, seed)
+    with open(os.path.join(outdir, shard), "w", buffering=1 << 20) as f:
+        f.write(run.span_jsonl)
+    stats = RunStats.from_spans(
+        run.spans,
+        scenario=scenario,
+        seed=run.plan.seed,
+        expected=spec.expected_classes,
+        detected=run.detected,
+        wall_s=wall,
+        events=run.cluster.sim.events_executed,
+    )
+    return {"scenario": scenario, "seed": seed, "ok": run.ok, "shard": shard,
+            "stats": stats.to_dict()}
+
+
+@dataclass
+class SweepResult:
+    """Everything a sweep produced (or re-loaded via :func:`load_sweep`)."""
+
+    outdir: str
+    jobs: int
+    spec: SweepSpec
+    cells: List[CellResult] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        """True when every cell's diagnosis matched its injection."""
+        return all(c.ok for c in self.cells)
+
+    def run_stats(self) -> List["Any"]:
+        """The per-cell :class:`~repro.core.analysis.RunStats` list."""
+        return [c.stats for c in self.cells]
+
+    def aggregate(self) -> "Any":
+        """Merge all cells into an :class:`~repro.core.analysis.AggregateReport`."""
+        from ..core.analysis import aggregate
+
+        return aggregate(self.run_stats())
+
+    def shard_paths(self) -> List[str]:
+        """Absolute paths of every cell's SpanJSONL shard."""
+        return [os.path.join(self.outdir, c.shard) for c in self.cells]
+
+    def merge_shards(self, out_path: str) -> int:
+        """Merge every shard into one globally ordered SpanJSONL file."""
+        from ..core.exporters import merge_span_jsonl
+
+        return merge_span_jsonl(self.shard_paths(), out_path)
+
+    def report(self, aggregate_report: Optional["Any"] = None) -> str:
+        """Cell verdict table + the aggregate rollup (pass a precomputed
+        ``aggregate()`` result to avoid pooling the samples twice)."""
+        lines = [
+            f"sweep: {len(self.cells)} cells "
+            f"({len(self.spec.scenarios)} scenarios x {len(self.spec.seeds)} seeds, "
+            f"jobs={self.jobs}) -> {self.outdir}",
+        ]
+        for c in self.cells:
+            verdict = "OK    " if c.ok else "MISSED"
+            lines.append(f"  {verdict} {c.scenario:24s} seed={c.seed:<4d} "
+                         f"spans={c.stats.n_spans:<5d} wall={c.stats.wall_s:.2f}s")
+        lines.append((aggregate_report or self.aggregate()).report())
+        return "\n".join(lines)
+
+
+def run_sweep(spec: SweepSpec, outdir: str, jobs: int = 1) -> SweepResult:
+    """Run every cell of ``spec``, streaming shards into ``outdir``.
+
+    ``jobs > 1`` distributes cells over a process pool (``fork`` where the
+    platform has it, else ``spawn``); results are collected in grid order
+    regardless of completion order, and each shard's bytes depend only on
+    its ``(scenario, seed)`` — the parallel-equals-serial equivalence
+    asserted in ``tests/test_sweep.py``.  Writes ``sweep.json`` (cells +
+    RunStats) next to the shards.
+    """
+    from ..core.analysis import RunStats
+
+    os.makedirs(os.path.join(outdir, "shards"), exist_ok=True)
+    work = [(s, seed, spec.overrides(), outdir) for s, seed in spec.cells()]
+    if jobs <= 1 or len(work) <= 1:
+        raw = [_run_cell(w) for w in work]
+    else:
+        methods = multiprocessing.get_all_start_methods()
+        ctx = multiprocessing.get_context("fork" if "fork" in methods else "spawn")
+        with ctx.Pool(min(jobs, len(work))) as pool:
+            raw = pool.map(_run_cell, work)
+    cells = [
+        CellResult(
+            scenario=r["scenario"], seed=r["seed"], ok=r["ok"], shard=r["shard"],
+            stats=RunStats.from_dict(r["stats"]),
+        )
+        for r in raw
+    ]
+    result = SweepResult(outdir=outdir, jobs=jobs, spec=spec, cells=cells)
+    payload = {
+        "schema": SWEEP_SCHEMA,
+        "scenarios": list(spec.scenarios),
+        "seeds": list(spec.seeds),
+        "overrides": spec.overrides(),
+        "jobs": jobs,
+        "cells": raw,
+    }
+    with open(os.path.join(outdir, "sweep.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    return result
+
+
+def load_sweep(outdir: str) -> SweepResult:
+    """Re-hydrate a finished sweep from its ``sweep.json`` (no simulation).
+
+    The pre-reduced RunStats come straight from the summary; shard files
+    remain on disk for deeper re-analysis
+    (:meth:`SweepResult.merge_shards`, ``RunStats.from_jsonl``).
+    """
+    from ..core.analysis import RunStats
+
+    with open(os.path.join(outdir, "sweep.json")) as f:
+        payload = json.load(f)
+    if payload.get("schema") != SWEEP_SCHEMA:
+        raise ValueError(
+            f"{outdir}/sweep.json has schema {payload.get('schema')!r}, "
+            f"expected {SWEEP_SCHEMA!r}"
+        )
+    spec = SweepSpec(
+        scenarios=tuple(payload["scenarios"]),
+        seeds=tuple(payload["seeds"]),
+        **payload.get("overrides", {}),
+    )
+    cells = [
+        CellResult(
+            scenario=r["scenario"], seed=r["seed"], ok=r["ok"], shard=r["shard"],
+            stats=RunStats.from_dict(r["stats"]),
+        )
+        for r in payload["cells"]
+    ]
+    return SweepResult(outdir=outdir, jobs=int(payload.get("jobs", 1)), spec=spec, cells=cells)

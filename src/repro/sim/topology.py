@@ -1,17 +1,26 @@
 """Simulated testbed topologies (nodes + links + routes).
 
-Two families:
-* ``ntp_testbed()``   — the paper's §5 topology: client/server hosts behind
-                        two switches, background traffic on the inter-switch
-                        link.
-* ``tpu_cluster()``   — a multi-pod TPU testbed: per-pod ICI ring of chips,
-                        one host per pod (PCIe to each chip), DCN between
-                        hosts.
+Three families:
+* ``ntp_testbed()``       — the paper's §5 topology: client/server hosts
+                            behind two switches, background traffic on the
+                            inter-switch link.
+* ``tpu_cluster()``       — a multi-pod TPU testbed: per-pod ICI ring of
+                            chips, one host per pod (PCIe to each chip),
+                            full DCN mesh between hosts (O(pods²) links —
+                            fine at 2–8 pods, prohibitive at fleet scale).
+* ``fat_tree_cluster()``  — the scale-out variant: hosts grouped into
+                            racks behind ToR switches, ToRs uplinked to a
+                            spine layer (O(pods) links), so 64–512-pod
+                            testbeds stay cheap to build and route.
 
-Routing is static shortest-path (BFS), cached per (src, dst).
+``scale(pods=N)`` is the one-call entry point sweeps and benchmarks use.
+Routing is static shortest-path (BFS), cached per (src, dst); fat-tree ToR
+uplinks are added in rack-rotated order so different racks deterministically
+prefer different spines (poor-man's ECMP without random route state).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -20,6 +29,9 @@ from ..hw import V5E, ChipSpec, PS_PER_S
 
 @dataclass
 class Link:
+    """One bidirectional link: bandwidth, propagation latency, and the
+    runtime FIFO state (``busy_until``) netsim serializes transfers on."""
+
     name: str                    # e.g. "ici.pod0.l3", "dcn.h0h1", "pcie.pod0.c2"
     a: str
     b: str
@@ -37,6 +49,8 @@ class Link:
 
 @dataclass
 class Topology:
+    """Nodes + links + BFS-routed adjacency of one simulated testbed."""
+
     name: str
     chip: ChipSpec = field(default_factory=lambda: V5E)
     nodes: List[str] = field(default_factory=list)
@@ -131,15 +145,7 @@ def tpu_cluster(
     """
     t = Topology(name=f"tpu_{n_pods}x{chips_per_pod}", chip=chip)
     for p in range(n_pods):
-        host = t.host_name(p)
-        chips = [t.chip_name(p, i) for i in range(chips_per_pod)]
-        t.pods[p] = chips
-        t.hosts.append(host)
-        for i, c in enumerate(chips):
-            # bidirectional ICI ring: one link per neighbor pair
-            nxt = chips[(i + 1) % chips_per_pod]
-            t.add_link(f"ici.pod{p}.l{i}", c, nxt, chip.ici_link_bw, ici_latency_ps)
-            t.add_link(f"pcie.pod{p}.c{i}", host, c, chip.pcie_bw, 2_000_000)
+        _add_pod(t, p, chips_per_pod, chip, ici_latency_ps)
     for p in range(n_pods):
         for q in range(p + 1, n_pods):
             t.add_link(
@@ -150,3 +156,83 @@ def tpu_cluster(
                 dcn_latency_ps,
             )
     return t
+
+
+def _add_pod(
+    t: Topology, p: int, chips_per_pod: int, chip: ChipSpec, ici_latency_ps: int
+) -> str:
+    """One pod: ICI ring over its chips + PCIe host links; returns the host."""
+    host = t.host_name(p)
+    chips = [t.chip_name(p, i) for i in range(chips_per_pod)]
+    t.pods[p] = chips
+    t.hosts.append(host)
+    for i, c in enumerate(chips):
+        nxt = chips[(i + 1) % chips_per_pod]
+        t.add_link(f"ici.pod{p}.l{i}", c, nxt, chip.ici_link_bw, ici_latency_ps)
+        t.add_link(f"pcie.pod{p}.c{i}", host, c, chip.pcie_bw, 2_000_000)
+    return host
+
+
+def fat_tree_cluster(
+    n_pods: int,
+    chips_per_pod: int = 4,
+    pods_per_rack: int = 8,
+    n_spines: Optional[int] = None,
+    chip: ChipSpec = V5E,
+    ici_latency_ps: int = 1_000_000,     # 1 us hop
+    dcn_latency_ps: int = 10_000_000,    # 10 us hop
+    oversubscription: float = 2.0,
+) -> Topology:
+    """Multi-rack fat-tree testbed: the O(pods)-link scale-out fabric.
+
+    Per pod: the same ICI ring + PCIe host links as :func:`tpu_cluster`.
+    Across pods: each rack's hosts connect to a ToR switch
+    (``dcn.h<p>tor<r>``), and every ToR uplinks to every spine switch
+    (``dcn.tor<r>spine<s>``) with aggregate uplink bandwidth
+    ``pods_per_rack * dcn_bw_per_host / oversubscription`` split across the
+    spines.  Cross-rack DCN traffic routes host → ToR → spine → ToR → host;
+    ToR uplinks are added in rack-rotated spine order, so BFS (first-found
+    shortest path) deterministically spreads racks across spines.
+
+    Link count grows linearly in ``n_pods`` (vs the mesh's quadratic
+    growth), which is what keeps 64–512-pod sweeps affordable — see
+    ``docs/performance.md`` for the measured scaling table.
+    """
+    n_racks = max(1, math.ceil(n_pods / pods_per_rack))
+    if n_spines is None:
+        n_spines = max(2, min(n_racks, 8))
+    t = Topology(name=f"fattree_{n_pods}x{chips_per_pod}", chip=chip)
+    for p in range(n_pods):
+        _add_pod(t, p, chips_per_pod, chip, ici_latency_ps)
+    uplink_bw = chip.dcn_bw_per_host * pods_per_rack / (n_spines * oversubscription)
+    for r in range(n_racks):
+        tor = f"tor{r}"
+        for p in range(r * pods_per_rack, min((r + 1) * pods_per_rack, n_pods)):
+            t.add_link(f"dcn.h{p}tor{r}", t.host_name(p), tor, chip.dcn_bw_per_host,
+                       dcn_latency_ps)
+        for j in range(n_spines):
+            s = (r + j) % n_spines
+            t.add_link(f"dcn.tor{r}spine{s}", tor, f"spine{s}", uplink_bw, dcn_latency_ps)
+    return t
+
+
+def scale(
+    pods: int = 64,
+    chips_per_pod: int = 4,
+    fabric: str = "fat-tree",
+    chip: ChipSpec = V5E,
+    **kwargs,
+) -> Topology:
+    """Scaled-out testbed in one call: ``scale(pods=256)``.
+
+    ``fabric="fat-tree"`` (default) builds :func:`fat_tree_cluster` —
+    linear link count, the only fabric that stays tractable at 64–512
+    pods.  ``fabric="mesh"`` builds the legacy full-mesh
+    :func:`tpu_cluster` for small-topology parity runs.  Extra ``kwargs``
+    pass through to the underlying builder.
+    """
+    if fabric == "fat-tree":
+        return fat_tree_cluster(pods, chips_per_pod, chip=chip, **kwargs)
+    if fabric == "mesh":
+        return tpu_cluster(pods, chips_per_pod, chip=chip, **kwargs)
+    raise ValueError(f"unknown fabric {fabric!r}; one of 'fat-tree', 'mesh'")

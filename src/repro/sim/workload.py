@@ -19,6 +19,9 @@ from ..xla.hlo_stats import collective_stats, cost_summary
 
 @dataclass(frozen=True)
 class OpSpec:
+    """One op on a chip's timeline: compute (roofline-costed), a
+    collective, or a wait joining an async collective."""
+
     name: str
     kind: str = "compute"         # compute | all-reduce | all-gather | reduce-scatter
                                   # | all-to-all | collective-permute | wait
@@ -32,6 +35,8 @@ class OpSpec:
 
 @dataclass
 class ProgramSpec:
+    """The ordered op timeline every chip executes once per step."""
+
     name: str
     ops: List[OpSpec] = field(default_factory=list)
 

@@ -1,0 +1,400 @@
+"""Scale-out engine + sweep tests: the kernel rewrite's byte-identity
+contract, parallel-equals-serial sweep equivalence, aggregate() semantics,
+the k·MAD degenerate-sample guards, and the engine bench's JSON schema.
+
+The golden files under ``tests/golden/`` were recorded with the
+*pre-refactor* per-module ``Sim`` kernel (sim/clock.py at commit
+"PR 2"); the discrete-event kernel in sim/engine.py must reproduce them
+byte for byte from the same seeds.
+"""
+import gzip
+import importlib.util
+import json
+import os
+
+import pytest
+
+from repro.core.analysis import (
+    RunStats,
+    _mad_outliers,
+    aggregate,
+    diagnose,
+    percentile,
+    straggler_report,
+)
+from repro.core.span import Span, SpanContext
+from repro.sim import EventKernel, get_scenario
+from repro.sim.sweep import SweepSpec, load_sweep, run_sweep
+from repro.sim.topology import fat_tree_cluster, scale
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden")
+
+
+# ---------------------------------------------------------------------------
+# Event kernel semantics
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_tie_break_is_scheduling_order():
+    k = EventKernel()
+    fired = []
+    for tag in ("a", "b", "c"):
+        k.at(100, lambda t=tag: fired.append(t))
+    k.at(50, lambda: fired.append("first"))
+    k.run()
+    assert fired == ["first", "a", "b", "c"]
+    assert k.now == 100
+
+
+def test_kernel_cancel_skips_without_disturbing_order():
+    k = EventKernel()
+    fired = []
+    h = k.at(10, lambda: fired.append("dead"))
+    k.at(10, lambda: fired.append("alive"))
+    h.cancel()
+    k.run()
+    assert fired == ["alive"]
+    assert k.events_cancelled == 1
+
+
+def test_kernel_periodic_task_counts_and_cancels():
+    k = EventKernel()
+    fired = []
+    task = k.every(10, fired.append, n=5)
+    k.run(until=25)          # fires at 10, 20
+    assert fired == [0, 1]
+    task.cancel()
+    k.run()
+    assert fired == [0, 1]   # pending firing was cancelled, none trail
+    assert k.empty()
+
+
+def test_kernel_periodic_task_n_zero_never_fires():
+    # parity with the pre-kernel chains, which checked i >= n before acting
+    k = EventKernel()
+    fired = []
+    k.every(10, fired.append, n=0)
+    k.run()
+    assert fired == []
+
+
+def test_kernel_ports_attribute_events():
+    k = EventKernel()
+    a, b = k.register("sim_a"), k.register("sim_b")
+    a.after(5, lambda: None)
+    b.after(5, lambda: None)
+    b.after(6, lambda: None)
+    k.run()
+    stats = k.stats()
+    assert stats["per_component"] == {"sim_a": 1, "sim_b": 2}
+    assert stats["events_executed"] == 3
+
+
+def test_kernel_rejects_scheduling_into_the_past():
+    k = EventKernel()
+    k.at(10, lambda: None)
+    k.run()
+    with pytest.raises(ValueError):
+        k.at(5, lambda: None)
+
+
+# ---------------------------------------------------------------------------
+# Byte-identity across the kernel rewrite (golden files are pre-refactor)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "name,seed",
+    [("healthy_baseline", 0), ("degraded_ici_link", 3)],
+)
+def test_span_jsonl_matches_prerefactor_golden(name, seed):
+    path = os.path.join(GOLDEN_DIR, f"scenario.{name}.seed{seed}.spans.jsonl.gz")
+    with gzip.open(path, "rb") as f:
+        golden = f.read().decode()
+    run = get_scenario(name).run(seed=seed)
+    assert run.span_jsonl == golden, (
+        f"{name} seed={seed}: SpanJSONL diverged from the pre-kernel-rewrite "
+        f"golden ({len(run.span_jsonl)} vs {len(golden)} bytes)"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sweep: parallel == serial, shards reload, from_jsonl agrees
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_sweep(tmp_path_factory):
+    spec = SweepSpec(scenarios=("healthy_baseline", "throttled_chip"), seeds=(0, 5))
+    base = tmp_path_factory.mktemp("sweep")
+    serial = run_sweep(spec, str(base / "serial"), jobs=1)
+    parallel = run_sweep(spec, str(base / "parallel"), jobs=8)
+    return spec, serial, parallel
+
+
+def test_sweep_parallel_equals_serial(small_sweep):
+    spec, serial, parallel = small_sweep
+    assert [(c.scenario, c.seed) for c in serial.cells] == spec.cells()
+    assert [(c.scenario, c.seed) for c in parallel.cells] == spec.cells()
+    for cs, cp in zip(serial.cells, parallel.cells):
+        with open(os.path.join(serial.outdir, cs.shard), "rb") as f:
+            bytes_serial = f.read()
+        with open(os.path.join(parallel.outdir, cp.shard), "rb") as f:
+            bytes_parallel = f.read()
+        assert bytes_serial == bytes_parallel, (
+            f"cell ({cs.scenario}, {cs.seed}): --jobs 8 shard differs from --jobs 1"
+        )
+        assert cs.ok == cp.ok
+        assert cs.stats.detected == cp.stats.detected
+
+
+def test_sweep_reloads_from_disk(small_sweep):
+    _, serial, _ = small_sweep
+    reloaded = load_sweep(serial.outdir)
+    assert [(c.scenario, c.seed) for c in reloaded.cells] == [
+        (c.scenario, c.seed) for c in serial.cells
+    ]
+    agg_live = serial.aggregate().to_dict()
+    agg_reload = reloaded.aggregate().to_dict()
+    assert agg_live == agg_reload
+
+
+def test_runstats_from_jsonl_agrees_with_from_spans(small_sweep):
+    _, serial, _ = small_sweep
+    cell = serial.cells[0]
+    from_shard = RunStats.from_jsonl(
+        os.path.join(serial.outdir, cell.shard),
+        scenario=cell.scenario,
+        seed=cell.seed,
+        expected=cell.stats.expected,
+        detected=cell.stats.detected,
+    )
+    assert from_shard.n_spans == cell.stats.n_spans
+    assert set(from_shard.component_us) == set(cell.stats.component_us)
+    for comp, samples in cell.stats.component_us.items():
+        assert from_shard.component_us[comp] == pytest.approx(samples, rel=1e-6)
+    assert from_shard.critical_components == cell.stats.critical_components
+
+
+def test_sweep_merge_shards_is_globally_ordered(small_sweep, tmp_path):
+    _, serial, _ = small_sweep
+    out = str(tmp_path / "merged.jsonl")
+    n = serial.merge_shards(out)
+    assert n == sum(c.stats.n_spans for c in serial.cells)
+    keys, span_ids, parent_ok = [], set(), True
+    with open(out) as f:
+        for line in f:
+            r = json.loads(line)
+            keys.append((r["trace_id"], r["start_us"], r["span_id"]))
+            span_ids.add(r["span_id"])
+    assert keys == sorted(keys)
+    # cells reset id counters, so without disambiguation span/trace ids
+    # would collide across shards and stitch unrelated runs together
+    assert len(span_ids) == n, "merged span ids must be globally unique"
+    with open(out) as f:
+        for line in f:
+            r = json.loads(line)
+            if r["parent_id"] is not None and r["parent_id"] not in span_ids:
+                parent_ok = False
+    assert parent_ok, "rewritten parent ids must resolve within the merged file"
+
+
+# ---------------------------------------------------------------------------
+# aggregate() on hand-built inputs
+# ---------------------------------------------------------------------------
+
+
+def _span(name, comp, sim_type, start, end, span_id, trace_id=1, parent=None):
+    return Span(
+        name=name, start=start, end=end,
+        context=SpanContext(trace_id=trace_id, span_id=span_id),
+        parent=parent, component=comp, sim_type=sim_type,
+    )
+
+
+def test_aggregate_hand_built():
+    runs = [
+        RunStats(
+            scenario="s_faulty", seed=0,
+            expected=("link_loss",), detected=("link_loss",),
+            wall_s=1.0, events=100, n_spans=2,
+            component_us={"net:l0": [10.0, 30.0]},
+            critical_components=["net:l0"],
+        ),
+        RunStats(
+            scenario="s_faulty", seed=1,
+            expected=("link_loss",), detected=(),      # missed detection
+            wall_s=1.0, events=100, n_spans=2,
+            component_us={"net:l0": [20.0, 40.0]},
+            critical_components=["net:l0"],
+        ),
+        RunStats(
+            scenario="s_clean", seed=0,
+            expected=(), detected=("link_loss",),      # false positive
+            wall_s=0.5, events=50, n_spans=1,
+            component_us={"net:l0": [50.0], "host:h0": [5.0]},
+            critical_components=["host:h0"],
+        ),
+        RunStats(
+            scenario="s_clean", seed=1,
+            expected=(), detected=(),
+            wall_s=0.5, events=50, n_spans=1,
+            component_us={"host:h0": [15.0]},
+            critical_components=["host:h0"],
+        ),
+    ]
+    rep = aggregate(runs)
+    assert rep.n_runs == 4
+    assert rep.scenarios == ["s_faulty", "s_clean"]
+    assert rep.ok_runs == 2          # one miss, one false positive
+    d = rep.detection["link_loss"]
+    assert d["injected_runs"] == 2 and d["detected"] == 1
+    assert d["detection_rate"] == 0.5
+    assert d["clean_runs"] == 2 and d["false_positives"] == 1
+    assert d["false_positive_rate"] == 0.5
+    lat = rep.component_latency["net:l0"]
+    assert lat["n"] == 5
+    assert lat["p50"] == 30.0 and lat["max"] == 50.0
+    cp = rep.critical_path_freq
+    assert cp["host:h0"]["count"] == 2 and cp["net:l0"]["fraction"] == 0.5
+    assert rep.events_total == 300
+    # report() renders every section without blowing up
+    text = rep.report()
+    assert "link_loss" in text and "net:l0" in text
+
+
+def test_runstats_from_spans_and_roundtrip():
+    spans = [
+        _span("HostStep", "h0", "host", 0, 100, span_id=1),
+        _span("DataLoad", "h0", "host", 0, 40, span_id=2,
+              parent=SpanContext(trace_id=1, span_id=1)),
+        _span("Op", "c0", "device", 40, 100, span_id=3,
+              parent=SpanContext(trace_id=1, span_id=1)),
+    ]
+    rs = RunStats.from_spans(spans, scenario="hand", seed=7, expected=(), detected=())
+    assert rs.n_spans == 3
+    # durations are ps -> µs; 100 ps is 1e-4 µs
+    assert rs.component_us["host:h0"] == pytest.approx([1e-4, 0.4e-4])
+    assert rs.critical_components == ["host:h0"]   # largest critical-path share
+    assert RunStats.from_dict(rs.to_dict()) == rs
+
+
+def test_percentile_interpolates():
+    assert percentile([], 99) == 0.0
+    assert percentile([7.0], 50) == 7.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50) == 2.5
+    assert percentile([1.0, 2.0, 3.0, 4.0], 100) == 4.0
+
+
+# ---------------------------------------------------------------------------
+# k·MAD degenerate-sample guards (bugfix regression)
+# ---------------------------------------------------------------------------
+
+
+def test_mad_outliers_degenerate_samples():
+    # n < 3: cannot call either value an outlier
+    assert _mad_outliers({"a": 1.0, "b": 100.0}, k=4.0) == []
+    # all-zero medians previously divided by zero / flagged everything
+    assert _mad_outliers({"a": 0.0, "b": 0.0, "c": 0.0}, k=4.0) == []
+    assert _mad_outliers({"a": 0.0, "b": 0.0, "c": 5.0}, k=4.0) == []
+    # healthy population with a genuine outlier still flags
+    out = _mad_outliers({"a": 10.0, "b": 11.0, "c": 10.5, "d": 99.0}, k=4.0)
+    assert [key for key, _, _ in out] == ["d"]
+
+
+def test_straggler_report_tiny_population():
+    spans = [
+        _span("DeviceProgram", "c0", "device", 0, 0, span_id=1),
+        _span("DeviceProgram", "c1", "device", 0, 0, span_id=2),
+    ]
+    rep = straggler_report(spans)   # 2 components, zero medians
+    assert rep["stragglers"] == []
+
+
+def test_two_pod_scenario_has_no_degenerate_findings():
+    """Regression: a 2-pod x 1-chip topology (2 chips, 2 hosts — every
+    population below the k·MAD minimum) must diagnose clean, not divide by
+    zero or flag everything."""
+    from dataclasses import replace
+
+    spec = replace(get_scenario("healthy_baseline"), n_pods=2, chips_per_pod=1)
+    run = spec.run(seed=0)
+    assert run.diagnosis.findings == []
+    assert run.ok
+    assert straggler_report(run.spans)["stragglers"] == []
+
+
+# ---------------------------------------------------------------------------
+# Topology generators
+# ---------------------------------------------------------------------------
+
+
+def test_fat_tree_scales_linearly_and_routes():
+    t64 = fat_tree_cluster(64, chips_per_pod=2)
+    t128 = fat_tree_cluster(128, chips_per_pod=2)
+    # linear, not quadratic: doubling pods roughly doubles links
+    assert len(t128.links) < 2.5 * len(t64.links)
+    # mesh comparison: 64-pod mesh has 64*63/2 = 2016 DCN links alone
+    dcn_links = [l for l in t64.links if l.startswith("dcn.")]
+    assert len(dcn_links) < 200
+    # host -> ToR -> spine -> ToR -> host
+    route = t64.route("host0", "host63")
+    assert [l.split(".")[0] for l in route] == ["dcn"] * 4
+    # chips in different racks reach each other through the fabric
+    assert t64.route("pod0.chip00", "pod63.chip00")
+
+
+def test_scale_dispatches_fabrics():
+    assert scale(pods=4, fabric="mesh").name.startswith("tpu_")
+    assert scale(pods=16, fabric="fat-tree").name.startswith("fattree_")
+    with pytest.raises(ValueError):
+        scale(pods=4, fabric="clos")
+
+
+# ---------------------------------------------------------------------------
+# Bench JSON schema
+# ---------------------------------------------------------------------------
+
+
+def _load_engine_bench():
+    spec = importlib.util.spec_from_file_location(
+        "engine_bench", os.path.join(REPO, "benchmarks", "engine_bench.py")
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _validate_bench_payload(payload):
+    assert payload["schema"] == "columbo.engine_bench/v1"
+    assert isinstance(payload["smoke"], bool)
+    assert {"python", "platform"} <= set(payload["host"])
+    k = payload["kernel"]
+    assert k["n_events"] > 0 and k["events_per_sec"] > 0 and k["wall_s"] >= 0
+    assert payload["topology_scaling"], "needs at least one topology row"
+    for row in payload["topology_scaling"]:
+        assert {"pods", "chips", "links", "events", "wall_s", "events_per_sec",
+                "virtual_s"} <= set(row)
+        assert row["events"] > 0
+    sw = payload["sweep"]
+    assert sw["cells"] == len(sw["scenarios"]) * len(sw["seeds"])
+    assert sw["wall_s_by_jobs"], "needs at least one --jobs timing"
+    for jobs, wall in sw["wall_s_by_jobs"].items():
+        assert int(jobs) >= 1 and wall >= 0
+
+
+def test_committed_bench_json_is_valid():
+    path = os.path.join(REPO, "BENCH_engine.json")
+    assert os.path.exists(path), "BENCH_engine.json baseline missing from repo"
+    with open(path) as f:
+        payload = json.load(f)
+    _validate_bench_payload(payload)
+    assert payload["smoke"] is False, "committed baseline must be a full run"
+
+
+def test_engine_bench_kernel_micro_live():
+    mod = _load_engine_bench()
+    res = mod.bench_kernel(n_events=2_000, n_timers=16)
+    assert res["n_events"] == 2_000
+    assert res["events_per_sec"] > 0
