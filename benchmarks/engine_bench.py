@@ -1,22 +1,31 @@
 """Engine performance benchmark — the repo's perf baseline (BENCH_engine.json).
 
-Three measurements, smallest to largest scope:
+Four measurements, smallest to largest scope:
 
 * ``kernel``    — raw DES dispatch rate: events/sec through a bare
                   :class:`repro.sim.engine.EventKernel` (256 interleaved
                   self-rescheduling timers, no simulator work).
 * ``topology``  — full-system simulation events/sec at 8/64/256-pod
                   fat-tree testbeds (``scale(pods=N)``): one training step
-                  with a cross-pod DCN all-reduce, in-memory logs.
+                  with a cross-pod DCN all-reduce, in-memory text logs
+                  (the compatibility path — directly comparable to the
+                  PR 3 baseline rows).
+* ``pipeline``  — the kernel-to-trace gap, per stage: simulate / format /
+                  parse / weave / export / analyze walls at each testbed
+                  size, and the **structured fast path vs text path**
+                  events/sec comparison they compose into.  ``full_sim``
+                  is simulation + log sink only (what ``topology``
+                  measures); ``end_to_end`` also weaves, exports SpanJSONL
+                  and runs the aggregate analytics.
 * ``sweep``     — end-to-end ``(scenario, seed)`` sweep wall-time at
                   ``--jobs 1/4/8`` (simulate + weave + diagnose + shards).
 
-Results land in ``BENCH_engine.json`` (schema ``columbo.engine_bench/v1``,
+Results land in ``BENCH_engine.json`` (schema ``columbo.engine_bench/v2``,
 validated in ``tests/test_sweep.py``); the recorded baseline and the exact
 reproduction commands live in ``docs/performance.md``.
 
-    python -m benchmarks.engine_bench                 # full baseline (~2 min)
-    python -m benchmarks.engine_bench --smoke         # tier-1 pre-flight (~10 s)
+    python -m benchmarks.engine_bench                 # full baseline (~4 min)
+    python -m benchmarks.engine_bench --smoke         # tier-1 pre-flight (~15 s)
     python -m benchmarks.engine_bench --out my.json --jobs 1,2
 """
 from __future__ import annotations
@@ -28,10 +37,14 @@ import sys
 import tempfile
 import time
 
-SCHEMA = "columbo.engine_bench/v1"
+SCHEMA = "columbo.engine_bench/v2"
 
 SMOKE_TOPOLOGY_PODS = (4, 8)
 FULL_TOPOLOGY_PODS = (8, 64, 256)
+SMOKE_PIPELINE_PODS = (8,)
+FULL_PIPELINE_PODS = (8, 64, 256)
+
+STAGES = ("simulate", "format", "parse", "weave", "export", "analyze")
 
 
 def bench_kernel(n_events: int = 200_000, n_timers: int = 256) -> dict:
@@ -100,6 +113,170 @@ def bench_topology(pods_list=FULL_TOPOLOGY_PODS, chips_per_pod: int = 2,
     return rows
 
 
+def _pipeline_cluster(pods: int, chips_per_pod: int, n_steps: int, structured: bool):
+    """One full-system simulation with the chosen log sink; returns
+    ``(cluster, wall_s)``."""
+    from repro.sim.cluster import ClusterOrchestrator, drive_training_hosts
+    from repro.sim.topology import scale
+    from repro.sim.workload import synthetic_program
+
+    program = synthetic_program(
+        n_layers=1, layer_flops=5e11, layer_bytes=2e8, grad_bytes=1e8
+    )
+    t0 = time.perf_counter()
+    topo = scale(pods=pods, chips_per_pod=chips_per_pod)
+    cluster = ClusterOrchestrator(topo, structured=structured)
+    drive_training_hosts(cluster, program, n_steps)
+    cluster.run()
+    return cluster, time.perf_counter() - t0
+
+
+def bench_pipeline(pods_list=FULL_PIPELINE_PODS, chips_per_pod: int = 2,
+                   n_steps: int = 1, trials: int = 3) -> list:
+    """The kernel-to-trace gap, stage by stage, text vs structured.
+
+    Stages are measured independently so the gap stays attributable:
+
+    * ``simulate`` — DES run with the structured (zero-format) sink;
+    * ``format``   — rendering the captured records into the ad-hoc text
+                     lines (what the text path pays *inside* simulate);
+    * ``parse``    — re-parsing those lines into Events (text path only);
+    * ``weave``    — materialize + weave the event streams into spans;
+    * ``export``   — stream the spans through SpanJSONLExporter;
+    * ``analyze``  — RunStats reduction + aggregate() percentile rollup.
+
+    ``full_sim`` events/sec = events / simulate wall (text: with inline
+    formatting — the PR 3 baseline's definition; structured: record
+    capture).  ``end_to_end`` = events / (simulate + [format+parse] +
+    weave + export + analyze), the whole simulate→trace→analytics path.
+
+    Simulate walls are **best-of-``trials``** (timeit's ``min`` rule): a
+    DES run is deterministic CPU-bound work, so the minimum is the
+    machine's actual cost and everything above it is scheduler noise —
+    on shared CI hosts single shots were observed swinging ±40%.
+    """
+    import io
+
+    from repro.core import SourceSpec, SpanJSONLExporter, TraceSpec, reset_ids
+    from repro.core.analysis import RunStats, aggregate
+    from repro.core.pipeline import LineIterProducer, Pipeline
+    from repro.core.registry import DEFAULT_REGISTRY
+
+    rows = []
+    for pods in pods_list:
+        # text-path simulate: in-memory ad-hoc text lines (inline f-strings)
+        events = 0
+        t_sim_text = None
+        for _ in range(trials):
+            cluster_text, wall = _pipeline_cluster(
+                pods, chips_per_pod, n_steps, structured=False
+            )
+            events = cluster_text.sim.events_executed
+            del cluster_text
+            t_sim_text = wall if t_sim_text is None else min(t_sim_text, wall)
+        # structured simulate: record capture, no formatting (runs are
+        # deterministic, so any trial's captured records feed the stages)
+        cluster = None
+        t_sim_fast = None
+        for _ in range(trials):
+            del cluster
+            cluster, wall = _pipeline_cluster(
+                pods, chips_per_pod, n_steps, structured=True
+            )
+            t_sim_fast = wall if t_sim_fast is None else min(t_sim_fast, wall)
+
+        # format: records -> ad-hoc text lines (pure function of capture)
+        t0 = time.perf_counter()
+        lines_per_writer = [lw.render_lines() for lw in cluster._logs]
+        t_format = time.perf_counter() - t0
+        n_lines = sum(len(ls) for ls in lines_per_writer)
+
+        # parse: text lines -> Events (what the text path pays per line)
+        class _Null:
+            def consume(self, ev):
+                pass
+
+            def consume_many(self, evs):
+                n = 0
+                for _ in evs:
+                    n += 1
+                return n
+
+            def on_finish(self):
+                pass
+
+        t0 = time.perf_counter()
+        parsed = 0
+        for lw, lines in zip(cluster._logs, lines_per_writer):
+            p = Pipeline(
+                LineIterProducer(lines, DEFAULT_REGISTRY.make_parser(lw.sim_type)),
+                (), _Null(),
+            )
+            p.run_sync()
+            parsed += p.events_in
+        t_parse = time.perf_counter() - t0
+        del lines_per_writer
+
+        # weave: structured streams -> finalized spans (the fast path's
+        # only trace-side cost besides export)
+        reset_ids()
+        buf = io.StringIO()
+        exporter = SpanJSONLExporter(buf)
+        t0 = time.perf_counter()
+        spec = TraceSpec(
+            sources=[
+                SourceSpec(sim_type=st, events=evs)
+                for st, evs in cluster.structured_sources()
+            ],
+        )
+        session = spec.run()
+        spans = session.spans
+        t_weave = time.perf_counter() - t0
+
+        # export: spans -> SpanJSONL (buffered single-write batches)
+        t0 = time.perf_counter()
+        session.export(exporter)
+        t_export = time.perf_counter() - t0
+
+        # analyze: per-run reduction + fleet-style aggregate rollup
+        t0 = time.perf_counter()
+        stats = RunStats.from_spans(spans, scenario="bench", detected=())
+        report = aggregate([stats])
+        t_analyze = time.perf_counter() - t0
+        assert report.n_runs == 1
+
+        e2e_fast = t_sim_fast + t_weave + t_export + t_analyze
+        e2e_text = t_sim_text + t_parse + t_weave + t_export + t_analyze
+        rows.append({
+            "pods": pods,
+            "chips": pods * chips_per_pod,
+            "events": events,
+            "log_lines": n_lines,
+            "parsed_events": parsed,
+            "spans": len(spans),
+            "stages_s": {
+                "simulate": round(t_sim_fast, 3),
+                "format": round(t_format, 3),
+                "parse": round(t_parse, 3),
+                "weave": round(t_weave, 3),
+                "export": round(t_export, 3),
+                "analyze": round(t_analyze, 3),
+            },
+            "full_sim_events_per_sec": {
+                "text": round(events / t_sim_text) if t_sim_text else 0,
+                "structured": round(events / t_sim_fast) if t_sim_fast else 0,
+            },
+            "end_to_end_events_per_sec": {
+                "text": round(events / e2e_text) if e2e_text else 0,
+                "structured": round(events / e2e_fast) if e2e_fast else 0,
+            },
+            "full_sim_speedup": round(t_sim_text / t_sim_fast, 2) if t_sim_fast else 0,
+            "end_to_end_speedup": round(e2e_text / e2e_fast, 2) if e2e_fast else 0,
+        })
+        del cluster, session, spans, stats, report, buf, exporter
+    return rows
+
+
 def bench_sweep(jobs_list=(1, 4, 8), scenarios=None, seeds=(0, 1, 2, 3),
                 **overrides) -> dict:
     """End-to-end sweep wall-time per ``--jobs`` setting (same grid each
@@ -135,16 +312,18 @@ def bench_sweep(jobs_list=(1, 4, 8), scenarios=None, seeds=(0, 1, 2, 3),
 
 
 def collect(smoke: bool = False, jobs_list=(1, 4, 8)) -> dict:
-    """Run all three benches and assemble the BENCH_engine.json payload."""
+    """Run all four benches and assemble the BENCH_engine.json payload."""
     if smoke:
         kernel = bench_kernel(n_events=20_000)
         topo = bench_topology(SMOKE_TOPOLOGY_PODS)
+        pipeline = bench_pipeline(SMOKE_PIPELINE_PODS)
         sweep = bench_sweep(jobs_list=(1, 2),
                             scenarios=("healthy_baseline", "throttled_chip"),
                             seeds=(0,))
     else:
         kernel = bench_kernel()
         topo = bench_topology()
+        pipeline = bench_pipeline()
         sweep = bench_sweep(jobs_list=jobs_list, n_pods=4, n_steps=3)
     return {
         "schema": SCHEMA,
@@ -155,6 +334,7 @@ def collect(smoke: bool = False, jobs_list=(1, 4, 8)) -> dict:
         },
         "kernel": kernel,
         "topology_scaling": topo,
+        "pipeline": pipeline,
         "sweep": sweep,
     }
 
@@ -167,6 +347,12 @@ def run():
     for row in payload["topology_scaling"]:
         yield (f"engine.sim.pods{row['pods']}",
                row["wall_s"] * 1e6, f"{row['events_per_sec']}ev/s")
+    for row in payload["pipeline"]:
+        fs = row["full_sim_events_per_sec"]
+        yield (f"engine.pipeline.pods{row['pods']}",
+               sum(row["stages_s"].values()) * 1e6,
+               f"text={fs['text']} structured={fs['structured']}ev/s "
+               f"({row['full_sim_speedup']}x)")
     for jobs, wall in payload["sweep"]["wall_s_by_jobs"].items():
         yield (f"engine.sweep.jobs{jobs}", wall * 1e6,
                f"{payload['sweep']['cells']}cells")
@@ -193,6 +379,16 @@ def main() -> None:
         print(f"[engine_bench] sim pods={row['pods']:<4d} links={row['links']:<6d} "
               f"{row['events']:>9,} events in {row['wall_s']:>7.3f}s "
               f"-> {row['events_per_sec']:,} events/s")
+    for row in payload["pipeline"]:
+        st = row["stages_s"]
+        fs = row["full_sim_events_per_sec"]
+        ee = row["end_to_end_events_per_sec"]
+        print(f"[engine_bench] pipeline pods={row['pods']:<4d} "
+              + " ".join(f"{k}={st[k]}s" for k in STAGES))
+        print(f"[engine_bench]   full-sim   text {fs['text']:,} -> structured "
+              f"{fs['structured']:,} ev/s ({row['full_sim_speedup']}x)")
+        print(f"[engine_bench]   end-to-end text {ee['text']:,} -> structured "
+              f"{ee['structured']:,} ev/s ({row['end_to_end_speedup']}x)")
     for jobs, wall in payload["sweep"]["wall_s_by_jobs"].items():
         print(f"[engine_bench] sweep jobs={jobs}: {wall}s "
               f"({payload['sweep']['cells']} cells)")

@@ -2,8 +2,10 @@
 
 Measures end-to-end log-line -> span throughput of a single pipeline
 (parse + weave) and of the parser alone, on a synthetic gem5-flavoured
-device log.  The paper's concern is 100s of GB of logs; events/s here
-sets the single-core processing rate.
+device log — plus the structured fast path over the *same* events (no
+text round-trip), so the format/parse tax is visible as a ratio.  The
+paper's concern is 100s of GB of logs; events/s here sets the
+single-core processing rate.
 """
 import os
 import tempfile
@@ -58,10 +60,22 @@ def run():
         # parse + weave + finalize
         t0 = time.perf_counter()
         spans = TraceSession().add_log(path, SimType.DEVICE).run()
-        dt = time.perf_counter() - t0
+        dt_text = time.perf_counter() - t0
         rows.append(
-            ("pipeline.parse_weave", dt * 1e6,
-             f"{(3*n_ops+2)/dt:,.0f} ev/s {len(spans):,} spans {size_mb/dt:.1f} MB/s")
+            ("pipeline.parse_weave", dt_text * 1e6,
+             f"{(3*n_ops+2)/dt_text:,.0f} ev/s {len(spans):,} spans {size_mb/dt_text:.1f} MB/s")
+        )
+
+        # structured fast path: weave the same events with no text
+        # round-trip (what a StructuredLogWriter feeds the session)
+        events = list(LogFileProducer(path, parser_for(SimType.DEVICE)).events())
+        t0 = time.perf_counter()
+        spans_fast = TraceSession().add_events(events, SimType.DEVICE).run()
+        dt_fast = time.perf_counter() - t0
+        rows.append(
+            ("pipeline.weave_structured", dt_fast * 1e6,
+             f"{(3*n_ops+2)/dt_fast:,.0f} ev/s {len(spans_fast):,} spans "
+             f"{dt_text/dt_fast:.1f}x vs parse_weave")
         )
 
         # sharded: the same log split into 4 contiguous shards, merged back

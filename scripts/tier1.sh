@@ -24,4 +24,26 @@ python -m benchmarks.run smoke
 mkdir -p results
 python -m benchmarks.engine_bench --smoke --out results/BENCH_engine.smoke.json
 
+# perf smoke: the structured fast path must never regress below the text
+# path's events/sec (a ratio check, not an absolute bar, so loaded CI
+# hosts don't flake — the committed full run shows the real ~3x)
+python - <<'PY'
+import json
+
+with open("results/BENCH_engine.smoke.json") as f:
+    payload = json.load(f)
+for row in payload["pipeline"]:
+    fs = row["full_sim_events_per_sec"]
+    assert fs["structured"] >= fs["text"], (
+        f"pods={row['pods']}: structured full-sim path ({fs['structured']} ev/s) "
+        f"fell below the text path ({fs['text']} ev/s)"
+    )
+    ee = row["end_to_end_events_per_sec"]
+    assert ee["structured"] >= ee["text"], (
+        f"pods={row['pods']}: structured end-to-end path ({ee['structured']} ev/s) "
+        f"fell below the text path ({ee['text']} ev/s)"
+    )
+print("[tier1] perf smoke: structured >= text on all pipeline rows")
+PY
+
 scripts/docs_check.sh

@@ -36,6 +36,7 @@ from .analysis import (
     ntp_estimated_offsets,
     ntp_path_asymmetry,
     percentile,
+    percentiles,
     span_name_breakdown,
     straggler_report,
     trace_summary,

@@ -22,7 +22,15 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .span import Span, SpanContext, Trace, assemble_traces
 
+try:  # columnar backend for large-sweep statistics; pure-python fallback
+    import numpy as _np
+except ModuleNotFoundError:  # pragma: no cover - minimal installs
+    _np = None
+
 PS_PER_US = 1_000_000
+
+# below this many samples the numpy round-trip costs more than it saves
+_COLUMNAR_MIN_SAMPLES = 64
 
 
 # ---------------------------------------------------------------------------
@@ -233,7 +241,7 @@ def straggler_report(
             durs[s.component].append(s.duration)
     if not durs:
         return {"stragglers": [], "median_us": 0.0, "per_component_us": {}}
-    per_comp = {c: statistics.median(v) / PS_PER_US for c, v in durs.items()}
+    per_comp = {c: _median(v) / PS_PER_US for c, v in durs.items()}
     med = statistics.median(per_comp.values())
     if len(per_comp) < 3 or med <= 0:
         return {"stragglers": [], "median_us": med, "per_component_us": per_comp}
@@ -389,7 +397,7 @@ def _diagnose_device(spans: Sequence[Span], k: float) -> List[Finding]:
             durs[s.component].append(s.duration)
     if not durs:
         return []
-    per_chip = {c: statistics.median(v) / PS_PER_US for c, v in durs.items()}
+    per_chip = {c: _median(v) / PS_PER_US for c, v in durs.items()}
     findings = [
         Finding(
             "device_slowdown", chip, "op_kmad", v / med,
@@ -440,7 +448,7 @@ def _diagnose_links(
             if wire_ps > 0:
                 samples.append(wire_ps / size)
         if samples:
-            per_byte[_link_family(link)][link] = statistics.median(samples)
+            per_byte[_link_family(link)][link] = _median(samples)
     for family, links in per_byte.items():
         for link, v, med in _mad_outliers(links, k):
             findings.append(
@@ -564,13 +572,51 @@ def _critical_path_components(spans: Sequence[Span]) -> Dict[int, str]:
 
 def percentile(samples: Sequence[float], q: float) -> float:
     """Deterministic linear-interpolation percentile (``q`` in [0, 100])."""
+    return percentiles(samples, (q,))[0]
+
+
+def percentiles(samples: Sequence[float], qs: Sequence[float]) -> List[float]:
+    """Several linear-interpolation percentiles from **one** sort.
+
+    The columnar path of the sweep analytics: large sample pools sort once
+    in numpy (when available) and every requested ``q`` interpolates off
+    the sorted array.  The interpolation arithmetic is the exact IEEE-754
+    expression of the pure-python fallback, so both backends return
+    bit-identical floats — aggregate reports do not depend on whether
+    numpy is installed (asserted in ``tests/test_structured.py``).
+    """
+    n = len(samples)
+    if n == 0:
+        return [0.0 for _ in qs]
+    if _np is not None and n >= _COLUMNAR_MIN_SAMPLES:
+        s = _np.sort(_np.asarray(samples, dtype=_np.float64))
+        out = []
+        for q in qs:
+            pos = (n - 1) * q / 100.0
+            lo = int(pos)
+            hi = min(lo + 1, n - 1)
+            out.append(float(s[lo] + (s[hi] - s[lo]) * (pos - lo)))
+        return out
     s = sorted(samples)
-    if not s:
-        return 0.0
-    pos = (len(s) - 1) * q / 100.0
-    lo = int(pos)
-    hi = min(lo + 1, len(s) - 1)
-    return s[lo] + (s[hi] - s[lo]) * (pos - lo)
+    out = []
+    for q in qs:
+        pos = (n - 1) * q / 100.0
+        lo = int(pos)
+        hi = min(lo + 1, n - 1)
+        out.append(s[lo] + (s[hi] - s[lo]) * (pos - lo))
+    return out
+
+
+def _median(values: Sequence[float]) -> float:
+    """Median with a columnar (numpy) path for large samples.
+
+    numpy's even-count mean-of-middles matches ``statistics.median``'s
+    ``(a + b) / 2`` bit for bit in float64, so the backends agree exactly;
+    int inputs come back as floats either way once divided by ``PS_PER_US``
+    at every call site."""
+    if _np is not None and len(values) >= _COLUMNAR_MIN_SAMPLES:
+        return float(_np.median(_np.asarray(values, dtype=_np.float64)))
+    return statistics.median(values)
 
 
 @dataclass
@@ -803,16 +849,14 @@ def aggregate(runs: Iterable[RunStats]) -> AggregateReport:
     for r in runs:
         for c, samples in r.component_us.items():
             comp[c].extend(samples)
-    component_latency = {
-        c: {
-            "n": float(len(v)),
-            "p50": percentile(v, 50),
-            "p90": percentile(v, 90),
-            "p99": percentile(v, 99),
-            "max": max(v),
+    component_latency = {}
+    for c, v in sorted(comp.items()):
+        # one sort per component (columnar when numpy is present) instead
+        # of one sort per percentile — the sweep rollup's hot loop
+        p50, p90, p99 = percentiles(v, (50, 90, 99))
+        component_latency[c] = {
+            "n": float(len(v)), "p50": p50, "p90": p90, "p99": p99, "max": max(v),
         }
-        for c, v in sorted(comp.items())
-    }
     classes = sorted({fc for r in runs for fc in (*r.expected, *r.detected)})
     detection: Dict[str, Dict[str, Any]] = {}
     for fc in classes:

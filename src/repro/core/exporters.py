@@ -20,6 +20,7 @@ defined in terms of the streaming hooks.
 """
 from __future__ import annotations
 
+import heapq
 import json
 import sys
 from typing import Any, Dict, IO, Iterable, List, Optional
@@ -288,42 +289,59 @@ class OTLPJSONExporter(Exporter):
 class SpanJSONLExporter(Exporter):
     """One JSON object per span per line, written incrementally.
 
-    The constant-memory exporter for multipod-scale runs: nothing buffers
-    beyond the current span, so trace size is bounded by disk, not RAM.
-    Lines are self-contained and ingestible by log pipelines (BigQuery,
-    DuckDB, jq)."""
+    The constant-memory exporter for multipod-scale runs: output buffers
+    at most ``flush_every`` encoded lines (never the spans themselves), so
+    trace size is bounded by disk, not RAM.  Lines are self-contained and
+    ingestible by log pipelines (BigQuery, DuckDB, jq).
 
-    def __init__(self, path_or_stream):
+    Lines accumulate into a list and flush with a *single* ``write`` per
+    batch: at fleet scale the two-writes-per-span pattern this replaces
+    spent more time in stream bookkeeping than in JSON encoding."""
+
+    def __init__(self, path_or_stream, flush_every: int = 1024):
         if hasattr(path_or_stream, "write"):
             self.path, self._stream = None, path_or_stream
         else:
             self.path, self._stream = path_or_stream, None
         self._out: Optional[IO[str]] = None
+        self._buf: List[str] = []
+        self.flush_every = flush_every
         self.spans_written = 0
 
     def begin(self) -> None:
         self._out = self._stream or open(self.path, "w", buffering=1 << 20)
+        self._buf = []
         self.spans_written = 0
 
     def consume(self, s: Span) -> None:
+        ctx = s.context
+        parent = s.parent
+        dur = s.end - s.start
         rec = {
-            "trace_id": s.context.hex_trace(),
-            "span_id": s.context.hex_span(),
-            "parent_id": f"{s.parent.span_id:016x}" if s.parent else None,
+            "trace_id": f"{ctx.trace_id:032x}",
+            "span_id": f"{ctx.span_id:016x}",
+            "parent_id": f"{parent.span_id:016x}" if parent is not None else None,
             "name": s.name,
             "sim_type": s.sim_type,
             "component": s.component,
             "start_us": s.start / PS_PER_US,
-            "duration_us": max(s.duration, 1) / PS_PER_US,
+            "duration_us": (dur if dur > 1 else 1) / PS_PER_US,
             "attrs": {k: str(v) for k, v in s.attrs.items()},
             "n_events": len(s.events),
             "links": [f"{l.span_id:016x}" for l in s.links],
         }
-        self._out.write(json.dumps(rec))
-        self._out.write("\n")
+        buf = self._buf
+        buf.append(json.dumps(rec))
+        buf.append("\n")
+        if len(buf) >= 2 * self.flush_every:
+            self._out.write("".join(buf))
+            buf.clear()
         self.spans_written += 1
 
     def finish(self) -> None:
+        if self._buf:
+            self._out.write("".join(self._buf))
+            self._buf = []
         if self._out is not None and self._stream is None:
             self._out.close()
         self._out = None
@@ -361,7 +379,6 @@ def merge_span_jsonl(shard_paths, out_path: str, disambiguate: bool = True) -> i
     from different cells together.  Pass ``disambiguate=False`` only for
     shards that already share one id space (e.g. a single run exported in
     pieces)."""
-    import heapq
 
     def _keyed(idx, path):
         prefix = f"{idx:08x}"

@@ -19,6 +19,7 @@ also true of gem5/ns3).
 """
 from __future__ import annotations
 
+from sys import intern as _intern
 from typing import Any, Dict, Optional
 
 from .events import (
@@ -47,6 +48,24 @@ def _coerce(v: str) -> Any:
             return v
 
 
+def coerce_value(v: Any) -> Any:
+    """Normalize one attr value to exactly what the text round-trip yields.
+
+    The text path formats every value with ``f"{v}"`` and re-coerces the
+    token with :func:`_coerce`; the structured fast path must agree so the
+    two paths weave byte-identical spans.  ``int``/``float`` survive the
+    round-trip unchanged (``float(repr(x)) == x`` in Python 3), strings
+    re-coerce in place, and anything else (bools, None, ...) normalizes to
+    whatever its formatted token coerces to (e.g. ``True`` -> ``"True"``).
+    """
+    t = type(v)
+    if t is int or t is float:
+        return v
+    if t is str:
+        return _coerce(v)
+    return _coerce(str(v))
+
+
 def _parse_kv(parts: list) -> Dict[str, Any]:
     attrs: Dict[str, Any] = {}
     for p in parts:
@@ -71,11 +90,14 @@ class LogParser:
 
 # CamelCase class-name -> registered snake_case kind.  The device simulator
 # logs bare gem5-ish names ("DmaRecv"), so strip our "Device" prefix aliases.
-_DEVICE_NAME_TO_CLS = {}
+# Public: the structured fast path (sim/clock.py StructuredLogWriter) uses
+# the same tables to materialize Events without a text round-trip.
+DEVICE_NAME_TO_CLASS: Dict[str, type] = {}
 for _kind, _cls in event_types(SimType.DEVICE).items():
-    _DEVICE_NAME_TO_CLS[_cls.__name__] = _cls
+    DEVICE_NAME_TO_CLASS[_cls.__name__] = _cls
     if _cls.__name__.startswith("Device"):
-        _DEVICE_NAME_TO_CLS[_cls.__name__[6:]] = _cls
+        DEVICE_NAME_TO_CLASS[_cls.__name__[6:]] = _cls
+_DEVICE_NAME_TO_CLS = DEVICE_NAME_TO_CLASS
 
 
 class DeviceLogParser(LogParser):
@@ -102,15 +124,17 @@ class DeviceLogParser(LogParser):
         cls = _DEVICE_NAME_TO_CLS.get(name)
         if cls is None:
             return None
-        # source: "system.pod0.chip03" -> "pod0.chip03"
-        return cls(ts=int(ts_s), source=src_s[7:], attrs=_parse_kv(parts))
+        # source: "system.pod0.chip03" -> "pod0.chip03" (interned: a few
+        # distinct components repeat across millions of lines)
+        return cls(ts=int(ts_s), source=_intern(src_s[7:]), attrs=_parse_kv(parts))
 
 
 # ---------------------------------------------------------------------------
 # HOST: SimBricks nicbm-flavoured
 # ---------------------------------------------------------------------------
 
-_HOST_KIND_TO_CLS = event_types(SimType.HOST)
+HOST_KIND_TO_CLASS: Dict[str, type] = event_types(SimType.HOST)
+_HOST_KIND_TO_CLS = HOST_KIND_TO_CLASS
 
 
 class HostLogParser(LogParser):
@@ -133,14 +157,17 @@ class HostLogParser(LogParser):
         cls = _HOST_KIND_TO_CLS.get(kind)
         if cls is None:
             return None
-        return cls(ts=int(ts_s), source=src_s[8:], attrs=attrs)
+        return cls(ts=int(ts_s), source=_intern(src_s[8:]), attrs=attrs)
 
 
 # ---------------------------------------------------------------------------
 # NET: ns3 ascii-trace-flavoured
 # ---------------------------------------------------------------------------
 
-_NET_MARK_TO_CLS = {"+": ChunkEnqueue, "-": ChunkTx, "r": ChunkRx, "d": ChunkDrop}
+NET_MARK_TO_CLASS: Dict[str, type] = {
+    "+": ChunkEnqueue, "-": ChunkTx, "r": ChunkRx, "d": ChunkDrop,
+}
+_NET_MARK_TO_CLS = NET_MARK_TO_CLASS
 
 
 class NetLogParser(LogParser):
@@ -162,7 +189,7 @@ class NetLogParser(LogParser):
         link = parts[2]
         if link.startswith("/"):
             link = link[1:].replace("/", ".")
-        return cls(ts=ts, source=link, attrs=_parse_kv(parts[3:]))
+        return cls(ts=ts, source=_intern(link), attrs=_parse_kv(parts[3:]))
 
 
 # Retained for backward compatibility; the authoritative binding lives in

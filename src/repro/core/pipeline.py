@@ -19,6 +19,7 @@ that may be distributed over the network").  Two execution modes:
 """
 from __future__ import annotations
 
+import heapq
 import os
 import queue
 import threading
@@ -57,14 +58,26 @@ class LogFileProducer(Producer):
         self.events_emitted = 0
 
     def events(self) -> Iterator[Event]:
+        # newline="" keeps line endings raw, so CRLF logs (Windows-written
+        # shards, object-store downloads) reach the rstrip below intact —
+        # stripping only "\n" used to leave a trailing "\r" in the last
+        # k=v token and silently corrupt that attr's value.  Counters are
+        # accumulated in locals and published once: per-line attribute
+        # writes were measurable at multi-GB log sizes.
         parse = self.parser
-        with open(self.path, "r", buffering=1 << 20) as f:
-            for line in f:
-                self.lines_read += 1
-                ev = parse(line.rstrip("\n"))
-                if ev is not None:
-                    self.events_emitted += 1
-                    yield ev
+        lines = 0
+        emitted = 0
+        try:
+            with open(self.path, "r", buffering=1 << 20, newline="") as f:
+                for line in f:
+                    lines += 1
+                    ev = parse(line.rstrip("\r\n"))
+                    if ev is not None:
+                        emitted += 1
+                        yield ev
+        finally:
+            self.lines_read += lines
+            self.events_emitted += emitted
 
 
 class MergedProducer(Producer):
@@ -75,16 +88,21 @@ class MergedProducer(Producer):
     chunks.  Each shard is internally time-ordered (simulators log in
     virtual-time order), so a heap merge reconstructs the single coherent
     stream one weaver can consume; span output is identical to weaving the
-    unsharded log.  Ties break toward the earlier-listed shard, preserving
-    original order for contiguous splits.
+    unsharded log.
+
+    Tie-break contract (``heapq.merge`` semantics, relied on by the
+    structured fast path's shard merge in
+    ``ClusterOrchestrator.structured_sources``): events with *equal
+    timestamps* are emitted in shard-list order — all of shard 0's events
+    at time t before any of shard 1's at time t — which preserves original
+    order for contiguous splits and is deterministic for interleaved
+    shards (asserted in ``tests/test_structured.py``).
     """
 
     def __init__(self, producers: Sequence[Producer]):
         self.producers = list(producers)
 
     def events(self) -> Iterator[Event]:
-        import heapq
-
         yield from heapq.merge(
             *(p.events() for p in self.producers), key=lambda ev: ev.ts
         )
@@ -136,6 +154,18 @@ class Consumer:
 
     def consume(self, ev: Event) -> None:
         raise NotImplementedError
+
+    def consume_many(self, events: Iterable[Event]) -> int:
+        """Batched entry point: drain ``events`` and return how many were
+        consumed.  The base implementation loops over :meth:`consume`;
+        hot consumers (``SpanWeaver``) override it with a dispatch loop
+        that hoists the handler table out of the per-event path."""
+        n = 0
+        consume = self.consume
+        for ev in events:
+            consume(ev)
+            n += 1
+        return n
 
     def on_finish(self) -> None:
         pass
@@ -196,6 +226,19 @@ class Pipeline:
     # -- sync mode ------------------------------------------------------------
 
     def run_sync(self) -> None:
+        # fast path: no actors means the producer stream feeds the
+        # consumer's batched entry point directly — no per-event pipeline
+        # bookkeeping, one Python frame per batch.  getattr keeps
+        # duck-typed consumers (not derived from Consumer) working.
+        consume_many = (
+            getattr(self.consumer, "consume_many", None) if not self.actors else None
+        )
+        if consume_many is not None:
+            n = consume_many(self.producer.events())
+            self.events_in += n
+            self.events_out += n
+            self.consumer.on_finish()
+            return
         consume = self.consumer.consume if self.consumer else (lambda e: None)
         for ev in self.producer.events():
             self.events_in += 1

@@ -62,6 +62,25 @@ class SpanWeaver(Consumer):
             return
         h(ev)
 
+    def consume_many(self, events) -> int:
+        """Batched consume: one dict-lookup-table dispatch loop with the
+        handler table and counters hoisted into locals.  This is the
+        pipeline fast path's entry point (``Pipeline.run_sync`` with no
+        actors) — per event it costs one ``dict.get`` and the handler
+        call, nothing else."""
+        get = self._handlers.get
+        n = 0
+        unhandled = 0
+        for ev in events:
+            h = get(ev.kind)
+            if h is not None:
+                h(ev)
+            else:
+                unhandled += 1
+            n += 1
+        self.unhandled_events += unhandled
+        return n
+
     def on_finish(self) -> None:
         pass
 

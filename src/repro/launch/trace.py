@@ -22,6 +22,13 @@ report (detection rates, latency percentiles, critical-path frequency):
 ``python -m repro.launch.trace --sweep --seeds 0:8 --jobs 8``
 ``python -m repro.launch.trace --sweep --scenarios lossy_dcn,healthy_baseline \\
      --seeds 0,1,2 --sweep-pods 64 --fabric fat-tree``
+
+``--structured`` switches every path onto the zero-parse event fast path
+(simulators hand Event records straight to the weavers; no text logs are
+formatted or re-parsed).  Output bytes are identical — only faster:
+
+``python -m repro.launch.trace --scenario throttled_chip --structured``
+``python -m repro.launch.trace --sweep --jobs 8 --structured``
 """
 import argparse
 import json
@@ -55,7 +62,7 @@ def _run_sweep(args) -> None:
     else:
         spec = SweepSpec(scenarios=scenarios, seeds=seeds, **overrides)
     outdir = os.path.join(args.outdir, "sweep")
-    result = run_sweep(spec, outdir, jobs=args.jobs)
+    result = run_sweep(spec, outdir, jobs=args.jobs, structured=args.structured)
     agg = result.aggregate()
     print(result.report(aggregate_report=agg))
     agg_path = os.path.join(outdir, "aggregate.json")
@@ -75,16 +82,18 @@ def _run_scenario(args) -> None:
     os.makedirs(args.outdir, exist_ok=True)
     base = os.path.join(args.outdir, f"scenario.{spec.name}")
     run = spec.run(
-        outdir=base + ".logs",
+        outdir=None if args.structured else base + ".logs",
         seed=args.seed,
         exporters=(
             ChromeTraceExporter(base + ".chrome.json"),
             SpanJSONLExporter(base + ".spans.jsonl"),
         ),
+        structured=args.structured,
     )
     print(f"[trace] {trace_summary(run.spans)}")
     print(run.report())
-    print(f"[trace] exported {base}.chrome.json + .spans.jsonl (logs in {base}.logs/)")
+    logs = "structured fast path, no logs" if args.structured else f"logs in {base}.logs/"
+    print(f"[trace] exported {base}.chrome.json + .spans.jsonl ({logs})")
     if not run.ok:
         raise SystemExit(1)
 
@@ -118,6 +127,10 @@ def main() -> None:
                     help="override every sweep scenario's chips per pod")
     ap.add_argument("--fabric", default="",
                     help="sweep topology fabric: 'mesh' or 'fat-tree'")
+    ap.add_argument("--structured", action="store_true",
+                    help="zero-parse fast path: simulators hand Event records "
+                         "straight to the weavers (identical output, no text "
+                         "log round-trip)")
     ap.add_argument("--outdir", default="results/traces")
     ap.add_argument("--dryrun-dir", default="results/dryrun")
     args = ap.parse_args()
@@ -190,20 +203,31 @@ def main() -> None:
     scale = {args.slow_chip: args.slow_factor} if args.slow_chip else None
     cluster = run_training_sim(
         program, n_steps=args.steps, n_pods=args.pods,
-        chips_per_pod=args.chips_per_pod, outdir=logdir, compute_scale=scale,
+        chips_per_pod=args.chips_per_pod,
+        outdir=None if args.structured else logdir, compute_scale=scale,
+        structured=args.structured,
     )
     print(f"[trace] simulated {args.steps} steps on {args.pods}x{args.chips_per_pod} chips "
           f"-> {cluster.sim.events_executed} DES events, "
-          f"virtual time {cluster.sim.now/1e12:.3f}s")
+          f"virtual time {cluster.sim.now/1e12:.3f}s"
+          + (" [structured fast path]" if args.structured else ""))
 
-    # -- Columbo: declarative spec over the tagged simulator logs ----------------
+    # -- Columbo: declarative spec over the tagged simulator logs (or, on the
+    # fast path, over the structured event streams the sims captured) ----------
     base = os.path.join(args.outdir, f"{args.arch}.{args.shape}")
-    spec = TraceSpec(
-        sources=[
+    if args.structured:
+        sources = [
+            SourceSpec(sim_type=st, events=evs)
+            for st, evs in cluster.structured_sources()
+        ]
+    else:
+        sources = [
             SourceSpec(sim_type=st, paths=ps) if len(ps) > 1
             else SourceSpec(sim_type=st, path=ps[0])
             for st, ps in sorted(cluster.log_paths().items())
-        ],
+        ]
+    spec = TraceSpec(
+        sources=sources,
         exporters=[
             JaegerJSONExporter(base + ".jaeger.json"),
             ChromeTraceExporter(base + ".chrome.json"),

@@ -13,7 +13,7 @@ device programs from compiled XLA artifacts or synthetic specs.
 engine.EventKernel is the shared discrete-event kernel all of them schedule
 on; sweep runs fleets of (scenario, seed) cells in parallel.
 """
-from .clock import LogWriter, Sim
+from .clock import LogWriter, Sim, StructuredLogWriter
 from .cluster import ClusterOrchestrator, FailurePlan, run_ntp_sim, run_training_sim
 from .engine import EventHandle, EventKernel, PeriodicTask, SimPort
 from .devicesim import CollectiveInstance, DeviceSim

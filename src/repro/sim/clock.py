@@ -1,19 +1,43 @@
 """Global virtual clock + log plumbing for the component simulators.
 
 The DES kernel itself lives in :mod:`repro.sim.engine` (``EventKernel``);
-this module keeps the historic ``Sim`` name importable and owns
-:class:`LogWriter`, the ad-hoc per-simulator log sink.  The kernel's global
-clock is the "true and precise global clock for all events" the paper
-highlights as a key advantage of simulation (§1 advantage iii).  Times are
-integer picoseconds.
+this module keeps the historic ``Sim`` name importable and owns the per
+simulator *log sinks*.  The kernel's global clock is the "true and precise
+global clock for all events" the paper highlights as a key advantage of
+simulation (§1 advantage iii).  Times are integer picoseconds.
+
+Two sinks implement one emit interface (``emit_host`` / ``emit_device`` /
+``emit_net``, one method per ad-hoc log flavour):
+
+* :class:`LogWriter` — the compatibility default: formats each event into
+  the simulator's ad-hoc text line (SimBricks / gem5 / ns3 flavour) and
+  writes it to a file, named pipe, or in-memory line list.  This is the
+  paper's world: text logs are the only interface Columbo consumes.
+* :class:`StructuredLogWriter` — the zero-parse fast path: captures each
+  emit as a compact record (no f-string work on the simulation's hot path)
+  and materializes typed :class:`~repro.core.events.Event` objects on
+  demand, bypassing the format -> parse round-trip entirely.  The weave is
+  byte-identical to the text path (asserted against ``tests/golden/`` and
+  property-tested across the scenario library in
+  ``tests/test_structured.py``).
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Any, Dict, Iterator, List, Optional
 
 from .engine import EventHandle, EventKernel, PeriodicTask, Sim, SimPort
 
-__all__ = ["EventHandle", "EventKernel", "LogWriter", "PeriodicTask", "Sim", "SimPort"]
+__all__ = [
+    "EventHandle", "EventKernel", "LogWriter", "PeriodicTask", "Sim",
+    "SimPort", "StructuredLogWriter",
+]
+
+PS_PER_S = 1_000_000_000_000
+
+
+def _fmt_s(ps: int) -> str:
+    # ns3 ascii traces carry seconds with 12 decimals (= ps resolution)
+    return f"{ps / PS_PER_S:.12f}"
 
 
 class LogWriter:
@@ -21,7 +45,15 @@ class LogWriter:
 
     Lines buffer in memory and flush to a file (or named pipe for §3.8
     online mode) — simulators in the paper write files; ours do too.
+
+    The three ``emit_*`` methods own the ad-hoc text formats (one per
+    simulator type); component sims call them instead of formatting
+    inline, so :class:`StructuredLogWriter` can override them and skip
+    text entirely while the formats themselves stay byte-identical.
     """
+
+    #: True on sinks that capture events structurally instead of as text.
+    structured = False
 
     def __init__(self, path: Optional[str] = None, stream=None) -> None:
         self.path = path
@@ -37,6 +69,31 @@ class LogWriter:
         else:
             self.lines.append(line)
 
+    # -- per-simulator-type emit interface -----------------------------------
+    #
+    # SimBricks nicbm flavour / gem5 flavour / ns3 ascii-trace flavour; the
+    # exact f-strings the sims historically produced, byte for byte.  Each
+    # emit takes ONE pre-built record tuple so the structured sink can bind
+    # ``emit_* = records.append`` and capture with zero Python frames.
+
+    def emit_host(self, rec: tuple) -> None:
+        ts, host, kind, attrs = rec
+        kv = " ".join(f"{k}={v}" for k, v in attrs.items())
+        self.write(f"main_time = {ts}: hostsim-{host}: ev={kind} {kv}")
+
+    def emit_device(self, rec: tuple) -> None:
+        ts, chip, name, attrs = rec
+        kv = " ".join(f"{k}={v}" for k, v in attrs.items())
+        self.write(f"{ts}: system.{chip}: {name}: {kv}")
+
+    def emit_net(self, rec: tuple) -> None:
+        ts, mark, link, chunk, size, meta = rec
+        extra = " ".join(f"{k}={v}" for k, v in meta.items())
+        self.write(
+            f"{mark} {_fmt_s(ts)} /{link.replace('.', '/')} "
+            f"chunk={chunk} size={size}" + (f" {extra}" if extra else "")
+        )
+
     def close(self) -> None:
         if self._stream is not None:
             self._stream.close()
@@ -47,3 +104,102 @@ class LogWriter:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+
+class StructuredLogWriter(LogWriter):
+    """Zero-parse event sink: the structured fast path's capture side.
+
+    ``emit_*`` appends one compact tuple per log event — no f-string
+    formatting, no file I/O — so the simulation's hot path pays a list
+    append instead of text assembly.  :meth:`events` then materializes the
+    typed :class:`~repro.core.events.Event` stream the weavers consume,
+    using the *same* kind/name/mark lookup tables the text parsers use and
+    normalizing attr values through
+    :func:`~repro.core.parsers.coerce_value`, so the woven SpanJSONL is
+    byte-identical to the text path's.
+
+    :meth:`render_lines` replays the captured records through the base
+    class's text formatting — the exact ad-hoc log the simulator would have
+    written — which the benchmarks use to price the format stage and tests
+    use to prove the round-trip.
+    """
+
+    structured = True
+
+    def __init__(self, sim_type: str) -> None:
+        super().__init__()
+        self.sim_type = sim_type
+        self.records: List[tuple] = []
+        # the capture fast path IS list.append: callers pass the record
+        # tuple, so a captured event costs one C-level append, no frames
+        self.emit_host = self.emit_device = self.emit_net = self.records.append
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def events(self) -> Iterator["Any"]:
+        """Materialize the captured records as typed ``Event`` objects.
+
+        Emitted in capture order (simulators log in virtual-time order, so
+        the stream is time-ordered like a parsed log).  Records whose
+        kind/name has no registered event class are dropped, exactly as the
+        text parsers drop unparseable lines.
+        """
+        from ..core.parsers import (
+            DEVICE_NAME_TO_CLASS,
+            HOST_KIND_TO_CLASS,
+            NET_MARK_TO_CLASS,
+            coerce_value,
+        )
+
+        sim_type = self.sim_type
+        if sim_type == "host" or sim_type == "device":
+            table = HOST_KIND_TO_CLASS if sim_type == "host" else DEVICE_NAME_TO_CLASS
+            get = table.get
+            for ts, source, kind, attrs in self.records:
+                cls = get(kind)
+                if cls is None:
+                    continue
+                # coercion is the identity for ints and non-numeric strings
+                # (the overwhelming majority), so the record's dict is
+                # reused untouched unless a value actually changes — the
+                # capture stays pristine for render_lines() replay
+                coerced = None
+                for k, v in attrs.items():
+                    if type(v) is not int:
+                        cv = coerce_value(v)
+                        if cv is not v:
+                            if coerced is None:
+                                coerced = dict(attrs)
+                            coerced[k] = cv
+                yield cls(ts=ts, source=source,
+                          attrs=attrs if coerced is None else coerced)
+        elif sim_type == "net":
+            get = NET_MARK_TO_CLASS.get
+            for ts, mark, link, chunk, size, meta in self.records:
+                cls = get(mark)
+                if cls is None:
+                    continue
+                attrs = {"chunk": chunk, "size": size}
+                for k, v in meta.items():
+                    attrs[k] = v if type(v) is int else coerce_value(v)
+                yield cls(ts=ts, source=link, attrs=attrs)
+        else:
+            raise ValueError(
+                f"StructuredLogWriter has no materializer for sim type {sim_type!r}; "
+                "custom types need a text parser (the compatibility path)"
+            )
+
+    def render_lines(self) -> List[str]:
+        """The text log this writer *would* have produced (header included).
+
+        Replays every captured record through :class:`LogWriter`'s emit
+        formatting — used by benchmarks to price the format stage in
+        isolation and by tests to prove text/structured equivalence.
+        """
+        out = LogWriter()
+        out.lines.extend(self.lines)      # e.g. the "# columbo sim_type=" tag
+        emit = getattr(out, f"emit_{self.sim_type}")
+        for rec in self.records:
+            emit(rec)
+        return out.lines

@@ -12,7 +12,7 @@ import os
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
-from .clock import LogWriter
+from .clock import LogWriter, StructuredLogWriter
 from .engine import EventKernel
 from .devicesim import ClusterLike, CollectiveInstance, DeviceSim
 from .hostsim import HostClock, HostSim
@@ -44,12 +44,22 @@ class ClusterOrchestrator(ClusterLike):
         host_kwargs: Optional[Dict] = None,
         clock_params: Optional[Dict[str, Tuple[int, float]]] = None,  # host -> (offset_ps, drift_ppm)
         online_pipes: bool = False,
+        structured: bool = False,
     ) -> None:
         self.sim = EventKernel()
         self.port = self.sim.register("cluster")
         self.topo = topo
         self.outdir = outdir
         self.online_pipes = online_pipes
+        # structured fast path: sims hand Event records straight to the
+        # trace pipeline (StructuredLogWriter); no text is ever formatted
+        self.structured = structured
+        if structured and (online_pipes or outdir):
+            raise ValueError(
+                "structured=True captures events in memory and writes no "
+                "logs; it cannot honor outdir or serve online_pipes "
+                "consumers (both need the text path)"
+            )
         if outdir:
             os.makedirs(outdir, exist_ok=True)
         self._logs: List[LogWriter] = []
@@ -95,6 +105,13 @@ class ClusterOrchestrator(ClusterLike):
     # -- log management -----------------------------------------------------------------
 
     def _mklog(self, fname: str, sim_type: str) -> LogWriter:
+        if self.structured:
+            lw = StructuredLogWriter(sim_type)
+            # keep the registry tag so render_lines() reproduces the text
+            # log byte for byte (the parsers skip this comment line)
+            lw.write(f"# columbo sim_type={sim_type}")
+            self._logs.append(lw)
+            return lw
         if self.outdir:
             path = os.path.join(self.outdir, fname)
             if self.online_pipes:
@@ -129,6 +146,38 @@ class ClusterOrchestrator(ClusterLike):
             if lw.path is None:
                 continue
             out.setdefault(lw.sim_type, []).append(lw.path)
+        return out
+
+    def event_streams(self) -> Dict[str, List[StructuredLogWriter]]:
+        """sim_type -> structured writers, in creation order (the same
+        order ``log_paths`` lists the text logs, so both paths merge
+        shards with identical tie-breaking)."""
+        out: Dict[str, List[StructuredLogWriter]] = {}
+        for lw in self._logs:
+            if lw.structured:
+                out.setdefault(lw.sim_type, []).append(lw)
+        return out
+
+    def structured_sources(self) -> List[Tuple[str, "object"]]:
+        """``(sim_type, event iterable)`` pairs ready for ``SourceSpec``.
+
+        Multiple writers of one type (per-pod device logs, per-host logs)
+        merge through the same ``MergedProducer`` that merges text shards
+        (writers expose ``events()``, which is all it needs), so the
+        tie-break contract — ties toward the earlier-created writer — is
+        shared by construction and structured weaving stays byte-identical
+        to text."""
+        # late import: repro.core must not depend on repro.sim
+        from ..core.pipeline import MergedProducer
+
+        streams = self.event_streams()
+        out: List[Tuple[str, object]] = []
+        for st in sorted(streams):
+            writers = streams[st]
+            if len(writers) == 1:
+                out.append((st, writers[0].events()))
+            else:
+                out.append((st, MergedProducer(writers).events()))
         return out
 
     def close(self) -> None:
@@ -236,12 +285,13 @@ def run_training_sim(
     bg_rate: float = 40e9,
     ckpt_every: int = 0,
     failure: Optional[FailurePlan] = None,
+    structured: bool = False,
 ) -> ClusterOrchestrator:
     """Simulate n_steps of a training program on a multi-pod testbed."""
     topo = tpu_cluster(n_pods=n_pods, chips_per_pod=chips_per_pod)
     cluster = ClusterOrchestrator(
         topo, outdir=outdir, compute_scale=compute_scale,
-        host_kwargs={"ckpt_every": ckpt_every},
+        host_kwargs={"ckpt_every": ckpt_every}, structured=structured,
     )
     if bg_traffic_link is not None:
         link = topo.links[bg_traffic_link]

@@ -107,17 +107,16 @@ class CollectiveInstance:
             self._send(chip, dst, round_no=r)
 
     def _send(self, src: str, dst: str, round_no: int) -> None:
+        # collective chunks are the fleet-scale hot path (one per ring
+        # round per participant): emit the record tuple directly instead
+        # of going through log_event's kwargs marshalling
         cid = f"{self.coll_id}.k{next(self._chunk_seq)}"
         dev = self.cluster.device_sim_for(src)
-        dev.log_event(
-            src,
-            "CollectiveChunkTx",
-            coll=self.coll_id,
-            chunk=cid,
-            dst=dst,
-            round=round_no,
-            size=self.chunk_bytes,
-        )
+        dev._emit((
+            dev._kernel.now, src, "CollectiveChunkTx",
+            {"coll": self.coll_id, "chunk": cid, "dst": dst, "round": round_no,
+             "size": self.chunk_bytes},
+        ))
         self.cluster.net.transfer(
             src,
             dst,
@@ -130,10 +129,11 @@ class CollectiveInstance:
     def _on_recv(self, chip: str, round_no: int, cid: str) -> None:
         self.recv[chip] += 1
         dev = self.cluster.device_sim_for(chip)
-        dev.log_event(
-            chip, "CollectiveChunkRx", coll=self.coll_id, chunk=cid, round=round_no,
-            size=self.chunk_bytes,
-        )
+        dev._emit((
+            dev._kernel.now, chip, "CollectiveChunkRx",
+            {"coll": self.coll_id, "chunk": cid, "round": round_no,
+             "size": self.chunk_bytes},
+        ))
         if self.recv[chip] >= self.rounds:
             if self.arrived.get(chip) and not self.done[chip]:
                 self._finish(chip)
@@ -191,6 +191,9 @@ class DeviceSim:
         self.pod = pod
         self.chips = chips
         self.log = log
+        # hot-path bindings (clock read + emit happen per logged event)
+        self._kernel = sim.kernel
+        self._emit = log.emit_device
         self.chip_spec = cluster.topo.chip  # type: ignore[attr-defined]
         self.compute_scale = compute_scale or {}
         self._async: Dict[Tuple[str, str, int], CollectiveInstance] = {}
@@ -199,8 +202,9 @@ class DeviceSim:
     # -- logging (gem5 flavour) -------------------------------------------------------
 
     def log_event(self, chip: str, ev_name: str, **attrs) -> None:
-        kv = " ".join(f"{k}={v}" for k, v in attrs.items())
-        self.log.write(f"{self.sim.now}: system.{chip}: {ev_name}: {kv}")
+        # the sink owns the format: text (gem5 flavour) on the compatibility
+        # path, a zero-format record capture on the structured fast path
+        self._emit((self._kernel.now, chip, ev_name, attrs))
 
     # -- program execution --------------------------------------------------------------
 

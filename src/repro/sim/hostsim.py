@@ -81,6 +81,9 @@ class HostSim:
         self.cluster = cluster
         self.name = name
         self.log = log
+        # hot-path bindings (clock read + emit happen per logged event)
+        self._kernel = sim.kernel
+        self._emit = log.emit_host
         self.chips = chips or []
         self.clock = clock or HostClock()
         self.data_load_ps = data_load_ps
@@ -98,8 +101,9 @@ class HostSim:
     # -- logging ----------------------------------------------------------------------
 
     def log_event(self, kind: str, **attrs) -> None:
-        kv = " ".join(f"{k}={v}" for k, v in attrs.items())
-        self.log.write(f"main_time = {self.sim.now}: hostsim-{self.name}: ev={kind} {kv}")
+        # the sink owns the format: text (SimBricks nicbm flavour) on the
+        # compatibility path, a zero-format record capture on the fast path
+        self._emit((self._kernel.now, self.name, kind, attrs))
 
     # -- training-step loop --------------------------------------------------------------
 

@@ -27,10 +27,6 @@ from .topology import Link, Topology
 PS_PER_S = 1_000_000_000_000
 
 
-def _fmt_s(ps: int) -> str:
-    return f"{ps / PS_PER_S:.12f}"
-
-
 @dataclass
 class LinkFault:
     """Runtime fault state installed on one link (see sim/faults.py).
@@ -59,6 +55,70 @@ class LinkFault:
         return now >= self.start_ps and (self.stop_ps is None or now < self.stop_ps)
 
 
+class _Transfer:
+    """One in-flight chunk: per-transfer state reused across hops.
+
+    Replaces the two per-hop closures the hot path used to allocate (the
+    wire mark and the receive continuation) with slot mutations on one
+    object; safe because a hop's wire event always fires strictly before
+    the next hop overwrites the per-hop fields (``arrive > start`` — links
+    have non-zero latency)."""
+
+    __slots__ = (
+        "net", "cid", "route", "i", "nbytes", "meta", "on_delivered",
+        "quiet", "start", "arrive", "link_name", "wire_cb", "rx_cb",
+    )
+
+    def __init__(self, net: "NetSim", cid: str, route: List["Link"], nbytes: int,
+                 meta: Dict, on_delivered: Optional[Callable[[int], None]],
+                 quiet: bool) -> None:
+        self.net = net
+        self.cid = cid
+        self.route = route                # pre-resolved Link objects
+        self.i = 0
+        self.nbytes = nbytes
+        self.meta = meta
+        self.on_delivered = on_delivered
+        self.quiet = quiet
+        # bind the continuations once per transfer, not once per hop
+        self.wire_cb = self.wire
+        self.rx_cb = self.rx
+
+    def wire(self) -> None:
+        """'-' mark: the chunk's current hop starts on the wire."""
+        self.net._emit(
+            (self.start, "-", self.link_name, self.cid, self.nbytes, self.meta)
+        )
+
+    def drop(self) -> None:
+        """'d' mark: the wire copy was lost (link layer will retransmit)."""
+        self.net._emit(
+            (self.start, "d", self.link_name, self.cid, self.nbytes, self.meta)
+        )
+
+    def rx(self) -> None:
+        """'r' mark + continue: next hop, or final delivery callback."""
+        net = self.net
+        if not self.quiet:
+            net._emit(
+                (self.arrive, "r", self.link_name, self.cid, self.nbytes, self.meta)
+            )
+        i = self.i + 1
+        if i < len(self.route):
+            self.i = i
+            net._hop(self)
+        else:
+            # break the self -> bound-method -> self cycle so a delivered
+            # transfer is reclaimed by refcounting alone — the kernel
+            # pauses the cyclic GC for the whole drain, so cyclic garbage
+            # would otherwise accumulate for the run's duration
+            self.wire_cb = self.rx_cb = None
+            net.chunks_delivered += 1
+            net.bytes_delivered += self.nbytes
+            if self.on_delivered is not None:
+                self.on_delivered(self.arrive)
+
+
 class NetSim:
     """Interconnect simulator: moves chunks along multi-link FIFO routes."""
 
@@ -73,6 +133,10 @@ class NetSim:
         self.flows_stopped = False
         self._flow_tasks: List[PeriodicTask] = []
         self.link_faults: Dict[str, List[LinkFault]] = {}
+        # hot-path bindings: every chunk hop logs up to 3 marks and
+        # schedules 2 events, so skip the SimPort/property indirection
+        self._kernel = sim.kernel
+        self._emit = log.emit_net
 
     # -- fault hooks (driven by sim/faults.py) ------------------------------------
 
@@ -103,70 +167,56 @@ class NetSim:
     ) -> str:
         """Send nbytes src->dst along the static route; calls on_delivered(t)."""
         cid = chunk_id or f"c{next(self._chunk_ids)}"
-        route = self.topo.route(src, dst)
-        meta = meta or {}
-        self._hop(cid, route, 0, nbytes, meta, on_delivered, quiet)
+        route = self.topo.route_links(src, dst)
+        self._hop(_Transfer(self, cid, route, nbytes, meta or {}, on_delivered, quiet))
         return cid
 
-    def _hop(
-        self,
-        cid: str,
-        route: List[str],
-        i: int,
-        nbytes: int,
-        meta: Dict,
-        on_delivered: Optional[Callable[[int], None]],
-        quiet: bool,
-    ) -> None:
-        link = self.topo.links[route[i]]
-        now = self.sim.now
+    def _hop(self, t: _Transfer) -> None:
+        link = t.route[t.i]
+        kernel = self._kernel
+        port = self.sim
+        now = kernel.now
+        link_name = link.name
+        t.link_name = link_name
+        quiet = t.quiet
+        nbytes = t.nbytes
         if not quiet:
-            self._log_mark("+", link, cid, nbytes, meta)
-        start = max(now, link.busy_until)
-        tx_ps = int(nbytes / link.bytes_per_ps)
+            self._emit((now, "+", link_name, t.cid, nbytes, t.meta))
+        start = link.busy_until
+        if start < now:
+            start = now
+        t.start = start
+        tx_ps = int(nbytes / (link.bw / PS_PER_S))
         link.busy_until = start + tx_ps
         link.bytes_tx += nbytes
 
-        def _on_wire() -> None:
-            if not quiet:
-                self._log_mark("-", link, cid, nbytes, meta)
-
-        self.sim.at(start, _on_wire)
+        if not quiet:
+            # the wire event fires exactly at ``t.start``, strictly before
+            # the next hop can overwrite the per-hop fields
+            kernel.call_at(start, t.wire_cb, port)
         arrive = start + tx_ps + link.latency_ps
-        for fault in self.link_faults.get(link.name, ()):
-            if not fault.active(now):
-                continue
-            if fault.loss_prob and fault.rng.random() < fault.loss_prob:
-                fault.drops += 1
-                self.chunks_dropped += 1
-                retrans = fault.retransmit_ps or 2 * (tx_ps + link.latency_ps)
-                if not quiet:
-                    # ns3-style 'd' mark: the wire copy is lost at tx time;
-                    # the link layer retransmits, delaying arrival
-                    self.sim.at(start, lambda l=link: self._log_mark("d", l, cid, nbytes, meta))
-                arrive += retrans
-            if fault.jitter_ps:
-                arrive += fault.rng.randrange(fault.jitter_ps)
-
-        def _on_rx() -> None:
-            if not quiet:
-                self._log_mark("r", link, cid, nbytes, meta)
-            if i + 1 < len(route):
-                self._hop(cid, route, i + 1, nbytes, meta, on_delivered, quiet)
-            else:
-                self.chunks_delivered += 1
-                self.bytes_delivered += nbytes
-                if on_delivered is not None:
-                    on_delivered(self.sim.now)
-
-        self.sim.at(arrive, _on_rx)
+        if self.link_faults:
+            for fault in self.link_faults.get(link_name, ()):
+                if not fault.active(now):
+                    continue
+                if fault.loss_prob and fault.rng.random() < fault.loss_prob:
+                    fault.drops += 1
+                    self.chunks_dropped += 1
+                    retrans = fault.retransmit_ps or 2 * (tx_ps + link.latency_ps)
+                    if not quiet:
+                        # ns3-style 'd' mark: the wire copy is lost at tx
+                        # time; the link layer retransmits, delaying arrival
+                        kernel.call_at(start, t.drop, port)
+                    arrive += retrans
+                if fault.jitter_ps:
+                    arrive += fault.rng.randrange(fault.jitter_ps)
+        t.arrive = arrive
+        kernel.call_at(arrive, t.rx_cb, port)
 
     def _log_mark(self, mark: str, link: Link, cid: str, nbytes: int, meta: Dict) -> None:
-        extra = " ".join(f"{k}={v}" for k, v in meta.items())
-        self.log.write(
-            f"{mark} {_fmt_s(self.sim.now)} /{link.name.replace('.', '/')} "
-            f"chunk={cid} size={nbytes}" + (f" {extra}" if extra else "")
-        )
+        # the sink owns the format: text (ns3 ascii flavour) on the
+        # compatibility path, a zero-format record capture on the fast path
+        self._emit((self.sim.now, mark, link.name, cid, nbytes, meta))
 
     # -- background traffic (BulkSend analogue) -----------------------------------
 

@@ -91,12 +91,19 @@ class ScenarioSpec:
 
     # -- execution ---------------------------------------------------------------
 
-    def simulate(self, outdir: str, seed: Optional[int] = None) -> ClusterOrchestrator:
-        """Run only the full-system simulation; logs land in ``outdir``."""
+    def simulate(
+        self,
+        outdir: Optional[str],
+        seed: Optional[int] = None,
+        structured: bool = False,
+    ) -> ClusterOrchestrator:
+        """Run only the full-system simulation; logs land in ``outdir``
+        (text mode) or stay in memory as structured event records
+        (``structured=True``, the zero-parse fast path)."""
         topo = scale(
             pods=self.n_pods, chips_per_pod=self.chips_per_pod, fabric=self.fabric
         )
-        cluster = ClusterOrchestrator(topo, outdir=outdir)
+        cluster = ClusterOrchestrator(topo, outdir=outdir, structured=structured)
         self.fault_plan(seed).schedule(cluster)
         drive_training_hosts(
             cluster, self.program(), self.n_steps,
@@ -113,6 +120,7 @@ class ScenarioSpec:
         outdir: Optional[str] = None,
         seed: Optional[int] = None,
         exporters: Tuple = (),
+        structured: bool = False,
     ) -> "ScenarioRun":
         """Simulate, weave through a TraceSpec, diagnose.
 
@@ -120,6 +128,11 @@ class ScenarioSpec:
         after weaving; pass a path to keep the raw simulator logs.  Extra
         ``exporters`` (Chrome trace, Jaeger, ...) stream alongside the
         always-on in-memory SpanJSONL exporter.
+
+        ``structured=True`` takes the zero-parse fast path: simulators hand
+        ``Event`` records straight to the weavers (no text logs, no
+        ``outdir``), producing byte-identical SpanJSONL to the text path
+        (asserted in ``tests/test_structured.py``).
         """
         # late import: repro.core must not depend on repro.sim
         from ..core import SourceSpec, SpanJSONLExporter, TraceSpec, reset_ids
@@ -127,20 +140,27 @@ class ScenarioSpec:
 
         plan = self.fault_plan(seed)
         tmp = None
-        if outdir is None:
+        if outdir is None and not structured:
             tmp = tempfile.TemporaryDirectory(prefix=f"scenario-{self.name}-")
             outdir = tmp.name
         try:
-            cluster = self.simulate(outdir, seed=plan.seed)
+            cluster = self.simulate(outdir, seed=plan.seed, structured=structured)
             # deterministic ids => same seed reproduces byte-identical JSONL
             reset_ids()
             buf = io.StringIO()
-            spec = TraceSpec(
-                sources=[
+            if structured:
+                sources = [
+                    SourceSpec(sim_type=st, events=evs)
+                    for st, evs in cluster.structured_sources()
+                ]
+            else:
+                sources = [
                     SourceSpec(sim_type=st, paths=ps) if len(ps) > 1
                     else SourceSpec(sim_type=st, path=ps[0])
                     for st, ps in sorted(cluster.log_paths().items())
-                ],
+                ]
+            spec = TraceSpec(
+                sources=sources,
                 exporters=[SpanJSONLExporter(buf), *exporters],
             )
             session = spec.run()

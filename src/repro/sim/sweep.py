@@ -87,22 +87,23 @@ def _shard_name(scenario: str, seed: int) -> str:
     return os.path.join("shards", f"{scenario}.seed{seed}.spans.jsonl")
 
 
-def _run_cell(args: Tuple[str, int, Dict[str, Any], str]) -> Dict[str, Any]:
+def _run_cell(args: Tuple[str, int, Dict[str, Any], str, bool]) -> Dict[str, Any]:
     """Worker: run one cell end to end (simulate → weave → diagnose),
     write its SpanJSONL shard, return a JSON-serializable summary.
 
     Top-level (picklable) so multiprocessing pools can dispatch it; every
     random draw inside comes from the cell's seeded fault plan, so the
-    result is independent of which worker runs it.
+    result is independent of which worker runs it.  ``structured`` cells
+    take the zero-parse fast path; shard bytes are identical either way.
     """
     from ..core.analysis import RunStats
 
-    scenario, seed, overrides, outdir = args
+    scenario, seed, overrides, outdir, structured = args
     spec: ScenarioSpec = get_scenario(scenario)
     if overrides:
         spec = replace(spec, **overrides)
     t0 = time.perf_counter()
-    run = spec.run(seed=seed)
+    run = spec.run(seed=seed, structured=structured)
     wall = time.perf_counter() - t0
     shard = _shard_name(scenario, seed)
     with open(os.path.join(outdir, shard), "w", buffering=1 << 20) as f:
@@ -170,7 +171,9 @@ class SweepResult:
         return "\n".join(lines)
 
 
-def run_sweep(spec: SweepSpec, outdir: str, jobs: int = 1) -> SweepResult:
+def run_sweep(
+    spec: SweepSpec, outdir: str, jobs: int = 1, structured: bool = False
+) -> SweepResult:
     """Run every cell of ``spec``, streaming shards into ``outdir``.
 
     ``jobs > 1`` distributes cells over a process pool (``fork`` where the
@@ -179,11 +182,16 @@ def run_sweep(spec: SweepSpec, outdir: str, jobs: int = 1) -> SweepResult:
     its ``(scenario, seed)`` — the parallel-equals-serial equivalence
     asserted in ``tests/test_sweep.py``.  Writes ``sweep.json`` (cells +
     RunStats) next to the shards.
+
+    ``structured=True`` runs every cell on the zero-parse structured fast
+    path (no text logs are formatted or parsed); shard bytes stay
+    identical to text-path shards — only the wall clock moves — so the
+    flag is pure execution policy, recorded in ``sweep.json`` for audit.
     """
     from ..core.analysis import RunStats
 
     os.makedirs(os.path.join(outdir, "shards"), exist_ok=True)
-    work = [(s, seed, spec.overrides(), outdir) for s, seed in spec.cells()]
+    work = [(s, seed, spec.overrides(), outdir, structured) for s, seed in spec.cells()]
     if jobs <= 1 or len(work) <= 1:
         raw = [_run_cell(w) for w in work]
     else:
@@ -205,6 +213,7 @@ def run_sweep(spec: SweepSpec, outdir: str, jobs: int = 1) -> SweepResult:
         "seeds": list(spec.seeds),
         "overrides": spec.overrides(),
         "jobs": jobs,
+        "structured": structured,
         "cells": raw,
     }
     with open(os.path.join(outdir, "sweep.json"), "w") as f:

@@ -27,7 +27,7 @@ from typing import Dict, List, Optional, Tuple
 from ..hw import V5E, ChipSpec, PS_PER_S
 
 
-@dataclass
+@dataclass(slots=True)
 class Link:
     """One bidirectional link: bandwidth, propagation latency, and the
     runtime FIFO state (``busy_until``) netsim serializes transfers on."""
@@ -59,6 +59,7 @@ class Topology:
     pods: Dict[int, List[str]] = field(default_factory=dict)             # pod -> chip node names
     hosts: List[str] = field(default_factory=list)
     _routes: Dict[Tuple[str, str], List[str]] = field(default_factory=dict)
+    _route_links: Dict[Tuple[str, str], List[Link]] = field(default_factory=dict)
 
     def add_node(self, n: str) -> None:
         if n not in self.adj:
@@ -103,6 +104,17 @@ class Topology:
         path.reverse()
         self._routes[key] = path
         return path
+
+    def route_links(self, src: str, dst: str) -> List[Link]:
+        """:meth:`route`, pre-resolved to :class:`Link` objects (cached).
+
+        The interconnect hot path walks a chunk's route once per hop;
+        resolving names to links here removes a dict lookup per hop."""
+        key = (src, dst)
+        r = self._route_links.get(key)
+        if r is None:
+            r = self._route_links[key] = [self.links[n] for n in self.route(src, dst)]
+        return r
 
     # -- id helpers ---------------------------------------------------------------
 

@@ -367,7 +367,7 @@ def _load_engine_bench():
 
 
 def _validate_bench_payload(payload):
-    assert payload["schema"] == "columbo.engine_bench/v1"
+    assert payload["schema"] == "columbo.engine_bench/v2"
     assert isinstance(payload["smoke"], bool)
     assert {"python", "platform"} <= set(payload["host"])
     k = payload["kernel"]
@@ -377,6 +377,22 @@ def _validate_bench_payload(payload):
         assert {"pods", "chips", "links", "events", "wall_s", "events_per_sec",
                 "virtual_s"} <= set(row)
         assert row["events"] > 0
+    assert payload["pipeline"], "needs at least one per-stage pipeline row"
+    for row in payload["pipeline"]:
+        assert {"pods", "chips", "events", "log_lines", "parsed_events", "spans",
+                "stages_s", "full_sim_events_per_sec", "end_to_end_events_per_sec",
+                "full_sim_speedup", "end_to_end_speedup"} <= set(row)
+        assert set(row["stages_s"]) == {
+            "simulate", "format", "parse", "weave", "export", "analyze"
+        }
+        assert all(v >= 0 for v in row["stages_s"].values())
+        for section in ("full_sim_events_per_sec", "end_to_end_events_per_sec"):
+            assert set(row[section]) == {"text", "structured"}
+            assert all(v > 0 for v in row[section].values())
+        # the parse stage consumes the rendered text lines: every line
+        # except the per-writer "# columbo" headers parses into an event
+        assert 0 < row["parsed_events"] < row["log_lines"]
+        assert row["spans"] > 0
     sw = payload["sweep"]
     assert sw["cells"] == len(sw["scenarios"]) * len(sw["seeds"])
     assert sw["wall_s_by_jobs"], "needs at least one --jobs timing"
@@ -391,6 +407,16 @@ def test_committed_bench_json_is_valid():
         payload = json.load(f)
     _validate_bench_payload(payload)
     assert payload["smoke"] is False, "committed baseline must be a full run"
+    # the kernel-to-trace-gap acceptance bar: the recorded structured
+    # full-sim rate at 256 pods is >= 3x the PR 3 text baseline
+    PR3_FULL_SIM_EV_S = 63_779
+    rows = {r["pods"]: r for r in payload["pipeline"]}
+    assert 256 in rows, "committed baseline needs the 256-pod pipeline row"
+    structured = rows[256]["full_sim_events_per_sec"]["structured"]
+    assert structured >= 3 * PR3_FULL_SIM_EV_S, (
+        f"recorded structured full-sim rate {structured} ev/s at 256 pods is "
+        f"below 3x the PR 3 baseline ({PR3_FULL_SIM_EV_S} ev/s)"
+    )
 
 
 def test_engine_bench_kernel_micro_live():
