@@ -17,32 +17,40 @@ Four measurements, smallest to largest scope:
                   is simulation + log sink only (what ``topology``
                   measures); ``end_to_end`` also weaves, exports SpanJSONL
                   and runs the aggregate analytics.
+* ``workloads`` — per-workload-type throughput at 8/64/256-pod testbeds:
+                  events/sec plus the workload's own unit rate (requests/s
+                  for ``rpc``, steps/s, checkpoint rounds/s, microbatches/s)
+                  — the perf trajectory of the pluggable workload layer's
+                  hot paths (``sim/workload.py`` + ``sim/workloads/``).
 * ``sweep``     — end-to-end ``(scenario, seed)`` sweep wall-time at
                   ``--jobs 1/4/8`` (simulate + weave + diagnose + shards).
 
-Results land in ``BENCH_engine.json`` (schema ``columbo.engine_bench/v2``,
+Results land in ``BENCH_engine.json`` (schema ``columbo.engine_bench/v3``,
 validated in ``tests/test_sweep.py``); the recorded baseline and the exact
 reproduction commands live in ``docs/performance.md``.
 
-    python -m benchmarks.engine_bench                 # full baseline (~4 min)
+    python -m benchmarks.engine_bench                 # full baseline (~5 min)
     python -m benchmarks.engine_bench --smoke         # tier-1 pre-flight (~15 s)
     python -m benchmarks.engine_bench --out my.json --jobs 1,2
 """
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import platform
 import sys
 import tempfile
 import time
 
-SCHEMA = "columbo.engine_bench/v2"
+SCHEMA = "columbo.engine_bench/v3"
 
 SMOKE_TOPOLOGY_PODS = (4, 8)
 FULL_TOPOLOGY_PODS = (8, 64, 256)
 SMOKE_PIPELINE_PODS = (8,)
 FULL_PIPELINE_PODS = (8, 64, 256)
+SMOKE_WORKLOAD_PODS = (8,)
+FULL_WORKLOAD_PODS = (8, 64, 256)
 
 STAGES = ("simulate", "format", "parse", "weave", "export", "analyze")
 
@@ -168,6 +176,7 @@ def bench_pipeline(pods_list=FULL_PIPELINE_PODS, chips_per_pod: int = 2,
         events = 0
         t_sim_text = None
         for _ in range(trials):
+            gc.collect()   # earlier rows' allocator debris must not bill here
             cluster_text, wall = _pipeline_cluster(
                 pods, chips_per_pod, n_steps, structured=False
             )
@@ -180,6 +189,7 @@ def bench_pipeline(pods_list=FULL_PIPELINE_PODS, chips_per_pod: int = 2,
         t_sim_fast = None
         for _ in range(trials):
             del cluster
+            gc.collect()
             cluster, wall = _pipeline_cluster(
                 pods, chips_per_pod, n_steps, structured=True
             )
@@ -277,6 +287,68 @@ def bench_pipeline(pods_list=FULL_PIPELINE_PODS, chips_per_pod: int = 2,
     return rows
 
 
+def bench_workloads(pods_list=FULL_WORKLOAD_PODS, chips_per_pod: int = 2) -> list:
+    """Per-workload-type full-system throughput at each testbed size.
+
+    Each row drives one registered workload (``sim/workload.py`` registry)
+    on a fat-tree testbed with in-memory text logs (the same sink as
+    ``topology_scaling``, so rows are comparable) and reports events/sec
+    plus the workload's own unit rate — requests/s for ``rpc``, steps/s,
+    checkpoint rounds/s, microbatches/s.  The *knobs* are fixed per type,
+    but absolute work still grows with the testbed (ring collectives span
+    all pods; storage rounds run per writer host — ``units`` counts the
+    system total, ``2 × (pods - 1)`` rounds, not the per-writer knob), so
+    read the pods axis as scaling cost, not constant work on a bigger
+    fabric.
+    """
+    from repro.sim.cluster import ClusterOrchestrator
+    from repro.sim.topology import scale
+    from repro.sim.workload import make_workload, synthetic_program
+    from repro.sim.workloads.rpc import rpc_handler_program
+
+    program = synthetic_program(
+        n_layers=1, layer_flops=5e11, layer_bytes=2e8, grad_bytes=1e8
+    )
+    cases = [
+        ("collective", "step", dict(program=program, n_steps=1),
+         lambda wl, pods: wl.n_steps),          # globally synchronized steps
+        ("rpc", "request",
+         dict(program=rpc_handler_program(), n_requests=8, arrival="open",
+              rate_rps=4000.0),
+         lambda wl, pods: wl.total_requests),
+        ("storage", "round", dict(program=program, n_steps=1, rounds=2, shards=2),
+         lambda wl, pods: wl.total_rounds * max(pods - 1, 0)),  # per writer
+        ("pipeline", "microbatch", dict(program=program, n_microbatches=4),
+         lambda wl, pods: wl.total_microbatches),
+    ]
+    rows = []
+    for pods in pods_list:
+        for name, unit, params, units_of in cases:
+            wl = make_workload(name, clock_reads=4, **params)
+            gc.collect()   # isolate rows from each other's allocator debris
+            t0 = time.perf_counter()
+            cluster = ClusterOrchestrator(scale(pods=pods, chips_per_pod=chips_per_pod))
+            wl.drive(cluster)
+            cluster.run()
+            wall = time.perf_counter() - t0
+            ev = cluster.sim.events_executed
+            units = units_of(wl, pods)
+            rows.append({
+                "workload": name,
+                "pods": pods,
+                "chips": pods * chips_per_pod,
+                "unit": unit,
+                "units": units,
+                "events": ev,
+                "wall_s": round(wall, 3),
+                "events_per_sec": round(ev / wall) if wall else 0,
+                "units_per_sec": round(units / wall, 2) if wall else 0,
+                "virtual_s": round(cluster.sim.now / 1e12, 4),
+            })
+            del cluster
+    return rows
+
+
 def bench_sweep(jobs_list=(1, 4, 8), scenarios=None, seeds=(0, 1, 2, 3),
                 **overrides) -> dict:
     """End-to-end sweep wall-time per ``--jobs`` setting (same grid each
@@ -317,13 +389,19 @@ def collect(smoke: bool = False, jobs_list=(1, 4, 8)) -> dict:
         kernel = bench_kernel(n_events=20_000)
         topo = bench_topology(SMOKE_TOPOLOGY_PODS)
         pipeline = bench_pipeline(SMOKE_PIPELINE_PODS)
+        workloads = bench_workloads(SMOKE_WORKLOAD_PODS)
         sweep = bench_sweep(jobs_list=(1, 2),
                             scenarios=("healthy_baseline", "throttled_chip"),
                             seeds=(0,))
     else:
         kernel = bench_kernel()
+        gc.collect()
         topo = bench_topology()
+        gc.collect()
         pipeline = bench_pipeline()
+        gc.collect()
+        workloads = bench_workloads()
+        gc.collect()
         sweep = bench_sweep(jobs_list=jobs_list, n_pods=4, n_steps=3)
     return {
         "schema": SCHEMA,
@@ -335,6 +413,7 @@ def collect(smoke: bool = False, jobs_list=(1, 4, 8)) -> dict:
         "kernel": kernel,
         "topology_scaling": topo,
         "pipeline": pipeline,
+        "workloads": workloads,
         "sweep": sweep,
     }
 
@@ -353,6 +432,11 @@ def run():
                sum(row["stages_s"].values()) * 1e6,
                f"text={fs['text']} structured={fs['structured']}ev/s "
                f"({row['full_sim_speedup']}x)")
+    for row in payload["workloads"]:
+        yield (f"engine.workload.{row['workload']}.pods{row['pods']}",
+               row["wall_s"] * 1e6,
+               f"{row['events_per_sec']}ev/s "
+               f"{row['units_per_sec']}{row['unit']}/s")
     for jobs, wall in payload["sweep"]["wall_s_by_jobs"].items():
         yield (f"engine.sweep.jobs{jobs}", wall * 1e6,
                f"{payload['sweep']['cells']}cells")
@@ -389,6 +473,11 @@ def main() -> None:
               f"{fs['structured']:,} ev/s ({row['full_sim_speedup']}x)")
         print(f"[engine_bench]   end-to-end text {ee['text']:,} -> structured "
               f"{ee['structured']:,} ev/s ({row['end_to_end_speedup']}x)")
+    for row in payload["workloads"]:
+        print(f"[engine_bench] workload {row['workload']:<10s} pods={row['pods']:<4d} "
+              f"{row['events']:>9,} events in {row['wall_s']:>7.3f}s "
+              f"-> {row['events_per_sec']:,} ev/s, "
+              f"{row['units_per_sec']} {row['unit']}/s")
     for jobs, wall in payload["sweep"]["wall_s_by_jobs"].items():
         print(f"[engine_bench] sweep jobs={jobs}: {wall}s "
               f"({payload['sweep']['cells']} cells)")

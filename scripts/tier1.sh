@@ -19,6 +19,14 @@ fi
 
 python -m benchmarks.run smoke
 
+# doc'd examples can't rot: smoke-run the quickstarts end to end into a
+# throwaway outdir (the README's headline paths)
+EXAMPLES_TMP="$(mktemp -d)"
+trap 'rm -rf "$EXAMPLES_TMP"' EXIT
+QUICKSTART_OUT="$EXAMPLES_TMP/quickstart" python examples/quickstart.py > /dev/null
+RPC_TRACE_OUT="$EXAMPLES_TMP/rpc_trace" python examples/rpc_request_trace.py > /dev/null
+echo "[tier1] examples smoke: quickstart.py + rpc_request_trace.py OK"
+
 # engine perf harness pre-flight: tiny sizes, validates that the bench
 # itself still runs end to end (schema is asserted in tests/test_sweep.py)
 mkdir -p results

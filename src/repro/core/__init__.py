@@ -37,6 +37,10 @@ from .analysis import (
     ntp_path_asymmetry,
     percentile,
     percentiles,
+    request_latency_stats,
+    request_report,
+    rpc_requests,
+    slowest_request,
     span_name_breakdown,
     straggler_report,
     trace_summary,

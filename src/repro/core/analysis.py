@@ -267,6 +267,79 @@ def trace_summary(spans: Sequence[Span]) -> Dict[str, Any]:
 
 
 # ---------------------------------------------------------------------------
+# Per-request analysis (RPC serving workload): latency tails + drill-down
+# ---------------------------------------------------------------------------
+#
+# The RPC workload (sim/workloads/rpc.py) weaves one span tree per request,
+# rooted at an ``RpcRequest`` span carrying the request's trace-context id
+# (``rid``).  These helpers turn that into the serving questions: what are
+# the latency percentiles, which request was slowest, and what does *its*
+# trace alone say went wrong — the per-request reading aggregate dashboards
+# cannot give (the paper's §1 motivation).
+
+
+def rpc_requests(spans: Iterable[Span]) -> List[Span]:
+    """All per-request root spans (``RpcRequest``), slowest first."""
+    return sorted(
+        (s for s in spans if s.name == "RpcRequest"), key=lambda s: -s.duration
+    )
+
+
+def request_latency_stats(spans: Iterable[Span]) -> Dict[str, float]:
+    """End-to-end request latency percentiles in µs (p50/p90/p99/max over
+    ``RpcRequest`` span durations; zeros when the trace has no requests)."""
+    lats = [s.duration / PS_PER_US for s in spans if s.name == "RpcRequest"]
+    if not lats:
+        return {"n": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0, "max": 0.0}
+    p50, p90, p99 = percentiles(lats, (50, 90, 99))
+    return {"n": float(len(lats)), "p50": p50, "p90": p90, "p99": p99,
+            "max": max(lats)}
+
+
+def slowest_request(spans: Sequence[Span]) -> Optional[Trace]:
+    """The slowest request's *entire* span tree (host + device + net), or
+    ``None`` when no ``RpcRequest`` span exists."""
+    reqs = rpc_requests(spans)
+    if not reqs:
+        return None
+    return assemble_traces(spans).get(reqs[0].context.trace_id)
+
+
+def request_report(spans: Sequence[Span], k: float = 4.0) -> str:
+    """Tail-latency drill-down: percentiles, the slowest request's critical
+    path, and :func:`diagnose` run on that request's trace **alone** — the
+    per-request attribution the RPC quickstart prints."""
+    stats = request_latency_stats(spans)
+    if not stats["n"]:
+        return "no RpcRequest spans (not an RPC-serving trace)"
+    lines = [
+        f"requests: n={stats['n']:.0f}  p50={stats['p50']:.0f}us  "
+        f"p90={stats['p90']:.0f}us  p99={stats['p99']:.0f}us  "
+        f"max={stats['max']:.0f}us",
+    ]
+    trace = slowest_request(spans)
+    if trace is not None:
+        root = rpc_requests(trace.spans)[0]
+        lines.append(
+            f"slowest request {root.attrs.get('rid')!r}: "
+            f"{root.duration / PS_PER_US:.0f}us critical path:"
+        )
+        for s in critical_path(trace):
+            lines.append(
+                f"    {s.name:14s} [{s.sim_type}:{s.component}] "
+                f"{s.duration / PS_PER_US:.1f}us"
+            )
+        per_request = diagnose(trace.spans, k=k)
+        if per_request.findings:
+            lines.append("diagnose() on the slowest request's trace alone:")
+            for f in per_request.findings:
+                lines.append(f"    {f}")
+        else:
+            lines.append("diagnose() on the slowest request's trace: clean")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
 # diagnose(): attribute trace anomalies to fault classes
 # ---------------------------------------------------------------------------
 #
@@ -638,6 +711,7 @@ class RunStats:
     n_spans: int = 0
     component_us: Dict[str, List[float]] = field(default_factory=dict)
     critical_components: List[str] = field(default_factory=list)
+    request_us: List[float] = field(default_factory=list)   # RpcRequest latencies
 
     @property
     def ok(self) -> bool:
@@ -662,10 +736,14 @@ class RunStats:
         if detected is None:
             detected = diagnose(spans).fault_classes
         comp: Dict[str, List[float]] = defaultdict(list)
+        request_us: List[float] = []
         for s in spans:
             # 1 ps floor matches what SpanJSONLExporter publishes, so stats
             # built from live spans and from shard files agree exactly
-            comp[f"{s.sim_type}:{s.component}"].append(max(s.duration, 1) / PS_PER_US)
+            us = max(s.duration, 1) / PS_PER_US
+            comp[f"{s.sim_type}:{s.component}"].append(us)
+            if s.name == "RpcRequest":
+                request_us.append(us)
         return cls(
             scenario=scenario,
             seed=seed,
@@ -676,6 +754,7 @@ class RunStats:
             n_spans=len(spans),
             component_us=dict(comp),
             critical_components=list(_critical_path_components(spans).values()),
+            request_us=request_us,
         )
 
     @classmethod
@@ -698,8 +777,11 @@ class RunStats:
 
         records = list(iter_span_records(path))
         comp: Dict[str, List[float]] = defaultdict(list)
+        request_us: List[float] = []
         for r in records:
             comp[f"{r['sim_type']}:{r['component']}"].append(float(r["duration_us"]))
+            if r["name"] == "RpcRequest":
+                request_us.append(float(r["duration_us"]))
         spans = _records_to_spans(records)
         return cls(
             scenario=scenario,
@@ -709,6 +791,7 @@ class RunStats:
             n_spans=len(records),
             component_us=dict(comp),
             critical_components=list(_critical_path_components(spans).values()),
+            request_us=request_us,
         )
 
     def to_dict(self) -> Dict[str, Any]:
@@ -723,6 +806,7 @@ class RunStats:
             "n_spans": self.n_spans,
             "component_us": self.component_us,
             "critical_components": self.critical_components,
+            "request_us": self.request_us,
         }
 
     @classmethod
@@ -738,6 +822,7 @@ class RunStats:
             n_spans=int(d.get("n_spans", 0)),
             component_us={k: list(v) for k, v in d.get("component_us", {}).items()},
             critical_components=list(d.get("critical_components", ())),
+            request_us=list(d.get("request_us", ())),
         )
 
 
@@ -781,6 +866,7 @@ class AggregateReport:
     critical_path_freq: Dict[str, Dict[str, float]]  # comp -> count/fraction
     wall_s_total: float = 0.0
     events_total: int = 0
+    request_latency: Dict[str, float] = field(default_factory=dict)  # RPC rollup
 
     def to_dict(self) -> Dict[str, Any]:
         """JSON-serializable form (written as aggregate.json by sweeps)."""
@@ -793,6 +879,7 @@ class AggregateReport:
             "component_latency": self.component_latency,
             "detection": self.detection,
             "critical_path_freq": self.critical_path_freq,
+            "request_latency": self.request_latency,
         }
 
     def report(self, top: int = 12) -> str:
@@ -811,6 +898,13 @@ class AggregateReport:
             lines.append(
                 f"    {comp:30s} {st['n']:6.0f} {st['p50']:10.1f} {st['p90']:10.1f} "
                 f"{st['p99']:10.1f} {st['max']:10.1f}"
+            )
+        if self.request_latency.get("n"):
+            rl = self.request_latency
+            lines.append(
+                f"  end-to-end request latency (us): n={rl['n']:.0f} "
+                f"p50={rl['p50']:.1f} p90={rl['p90']:.1f} p99={rl['p99']:.1f} "
+                f"max={rl['max']:.1f}"
             )
         if self.detection:
             lines.append("  fault-class detection (injected vs diagnosed):")
@@ -877,6 +971,12 @@ def aggregate(runs: Iterable[RunStats]) -> AggregateReport:
     critical_path_freq = {
         c: {"count": float(n), "fraction": n / total} for c, n in cp.most_common()
     }
+    req = [x for r in runs for x in r.request_us]
+    request_latency: Dict[str, float] = {}
+    if req:
+        p50, p90, p99 = percentiles(req, (50, 90, 99))
+        request_latency = {"n": float(len(req)), "p50": p50, "p90": p90,
+                           "p99": p99, "max": max(req)}
     scenarios: List[str] = []
     for r in runs:
         if r.scenario not in scenarios:
@@ -890,4 +990,5 @@ def aggregate(runs: Iterable[RunStats]) -> AggregateReport:
         critical_path_freq=critical_path_freq,
         wall_s_total=sum(r.wall_s for r in runs),
         events_total=sum(r.events for r in runs),
+        request_latency=request_latency,
     )

@@ -198,6 +198,16 @@ class CkptShardWrite(Event):
 
 @register_event
 @dataclass(slots=True, repr=False)
+class CkptShardRead(Event):
+    """One checkpoint shard read back from storage (restore path — the
+    storage workload's read rounds)."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "ckpt_shard_read"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
 class CkptEnd(Event):
     """Checkpoint write finished."""
 
@@ -258,6 +268,88 @@ class HostRestart(Event):
 
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "host_restart"
+
+
+# -- RPC serving workload (sim/workloads/rpc.py): one span tree per request --
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class RpcRecv(Event):
+    """Frontend host admits one RPC request (``rid`` is the trace-context
+    id every downstream event of the request carries)."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "rpc_recv"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class RpcSend(Event):
+    """Frontend fans one subrequest (``sub``) out toward a serving pod."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "rpc_send"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class RpcWorkBegin(Event):
+    """A serving host dequeues subrequest ``sub`` and starts executing its
+    handler program on the pod's chips."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "rpc_work_begin"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class RpcWorkEnd(Event):
+    """The serving host finished subrequest ``sub`` (reply leaves next)."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "rpc_work_end"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class RpcReply(Event):
+    """Frontend received the reply for subrequest ``sub`` (fan-in)."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "rpc_reply"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class RpcDone(Event):
+    """All fan-out replies are in: request ``rid`` completes, ``lat``
+    carries its end-to-end latency in ps."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "rpc_done"
+
+
+# -- pipelined-training workload (sim/workloads/pipeline.py) ----------------
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class PipeSend(Event):
+    """Stage host ships microbatch ``mb``'s activations to the next stage
+    (``chunk`` names the interconnect transfer that carries them)."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "pipe_send"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class PipeRecv(Event):
+    """Stage host received the previous stage's activations for ``mb``."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "pipe_recv"
 
 
 # ---------------------------------------------------------------------------

@@ -131,7 +131,7 @@ class HostSpanWeaver(SpanWeaver):
     sim_type = SimType.HOST
     span_types = (
         "HostStep", "DataLoad", "H2DTransfer", "Dispatch", "Checkpoint",
-        "NtpSync", "HostTimeline",
+        "NtpSync", "HostTimeline", "RpcRequest", "RpcCall", "RpcWork",
     )
 
     def __init__(self, registry: ContextRegistry, poll_timeout: float = 0.0) -> None:
@@ -142,6 +142,9 @@ class HostSpanWeaver(SpanWeaver):
         self._dispatch: Dict[Any, SpanBuilder] = {}   # (host, chip, step, program)
         self._ckpt: Dict[str, SpanBuilder] = {}
         self._timeline: Dict[str, SpanBuilder] = {}   # host -> whole-run span
+        self._rpc_req: Dict[Any, SpanBuilder] = {}    # (host, rid) -> RpcRequest
+        self._rpc_call: Dict[Any, SpanBuilder] = {}   # (host, sub) -> RpcCall
+        self._rpc_work: Dict[str, SpanBuilder] = {}   # host -> open RpcWork
 
     # one trace per training step, shared by all hosts: first host to begin
     # the step allocates, the rest adopt (atomic get-or-create on the registry)
@@ -155,12 +158,17 @@ class HostSpanWeaver(SpanWeaver):
         return tid
 
     def _cur(self, host: str) -> Optional[SpanBuilder]:
-        return self._step.get(host)
+        # the host's current unit of work: its open training step, else the
+        # RPC subrequest it is serving (hosts serve serially) — dispatches
+        # and DMAs issued while serving parent under the RpcWork span
+        return self._step.get(host) or self._rpc_work.get(host)
 
     def _cur_or_timeline(self, ev: Event) -> SpanBuilder:
-        """Current step span, else a lazy per-host whole-run timeline span
-        (hosts outside a training loop, e.g. the NTP testbed's client)."""
-        cur = self._step.get(ev.source)
+        """Current unit of work (open step, else the RPC subrequest being
+        served — so stalls/telemetry during serving land inside the
+        request's trace), else a lazy per-host whole-run timeline span
+        (hosts outside any work loop, e.g. the NTP testbed's client)."""
+        cur = self._step.get(ev.source) or self._rpc_work.get(ev.source)
         if cur is not None:
             return cur
         tl = self._timeline.get(ev.source)
@@ -244,6 +252,11 @@ class HostSpanWeaver(SpanWeaver):
         if b is not None:
             b.span.add_event(ev.ts, "shard_write", ev.attrs)
 
+    def _on_ckpt_shard_read(self, ev: Event) -> None:
+        b = self._ckpt.get(ev.source)
+        if b is not None:
+            b.span.add_event(ev.ts, "shard_read", ev.attrs)
+
     def _on_ckpt_end(self, ev: Event) -> None:
         b = self._ckpt.pop(ev.source, None)
         if b is not None:
@@ -284,12 +297,74 @@ class HostSpanWeaver(SpanWeaver):
     def _on_host_restart(self, ev: Event) -> None:
         self._cur_or_timeline(ev).span.add_event(ev.ts, "host_restart", ev.attrs)
 
+    # -- RPC serving workload: one span tree per request ----------------------
+    #
+    # rpc_recv opens the per-request root span (its own trace), rpc_send
+    # opens one RpcCall child per serving pod and pushes the subrequest
+    # context so the request's wire transfers AND the backend's RpcWork
+    # span parent under it; rpc_work_begin adopts that context across the
+    # host boundary and pushes the reply-leg context; rpc_reply / rpc_done
+    # close the fan-in.  The result: RpcRequest -> RpcCall -> {LinkTransfer,
+    # RpcWork -> Dispatch -> DeviceProgram -> ...} -> reply LinkTransfer —
+    # the end-to-end tree per request id the paper's request tracing needs.
+
+    def _on_rpc_recv(self, ev: Event) -> None:
+        b = self._begin("RpcRequest", ev, new_trace_id(), None, dict(ev.attrs))
+        self._rpc_req[(ev.source, ev.attrs.get("rid"))] = b
+
+    def _on_rpc_send(self, ev: Event) -> None:
+        req = self._rpc_req.get((ev.source, ev.attrs.get("rid")))
+        tid = req.context.trace_id if req else new_trace_id()
+        b = self._begin("RpcCall", ev, tid, req.context if req else None, dict(ev.attrs))
+        sub = ev.attrs.get("sub")
+        self._rpc_call[(ev.source, sub)] = b
+        # natural boundary: the subrequest's wire chunks and the serving
+        # host's rpc_work_begin both carry the same sub id
+        self.registry.push(("rpccall", sub), b.context)
+
+    def _on_rpc_work_begin(self, ev: Event) -> None:
+        b = self._begin("RpcWork", ev, new_trace_id(), None, dict(ev.attrs))
+        sub = ev.attrs.get("sub")
+        self._parent_or_defer(b, ("rpccall", sub))
+        # the reply chunk carries "<sub>.r": parent it under this work span
+        self.registry.push(("rpccall", f"{sub}.r"), b.context)
+        self._rpc_work[ev.source] = b
+
+    def _on_rpc_work_end(self, ev: Event) -> None:
+        b = self._rpc_work.pop(ev.source, None)
+        if b is not None:
+            b.span.attrs.update(ev.attrs)
+            self.emit(b.finish(ev.ts))
+
+    def _on_rpc_reply(self, ev: Event) -> None:
+        b = self._rpc_call.pop((ev.source, ev.attrs.get("sub")), None)
+        if b is not None:
+            self.emit(b.finish(ev.ts))
+
+    def _on_rpc_done(self, ev: Event) -> None:
+        b = self._rpc_req.pop((ev.source, ev.attrs.get("rid")), None)
+        if b is not None:
+            b.span.attrs.update(ev.attrs)
+            self.emit(b.finish(ev.ts))
+
+    # -- pipelined-training workload: inter-stage activation hand-off ---------
+
+    def _on_pipe_send(self, ev: Event) -> None:
+        cur = self._cur_or_timeline(ev)
+        cur.span.add_event(ev.ts, "pipe_send", ev.attrs)
+        # the activation transfer's chunk id parents under this stage's step
+        self.registry.push(("chunk", ev.attrs.get("chunk")), cur.context)
+
+    def _on_pipe_recv(self, ev: Event) -> None:
+        self._cur_or_timeline(ev).span.add_event(ev.ts, "pipe_recv", ev.attrs)
+
     def on_finish(self) -> None:
         for host, b in self._timeline.items():
             last = max((ts for ts, _, _ in b.span.events), default=b.span.start)
             self.emit(b.finish(last))
         self._timeline.clear()
-        for d in (self._step, self._load, self._ckpt):
+        for d in (self._step, self._load, self._ckpt, self._rpc_req,
+                  self._rpc_call, self._rpc_work):
             for b in d.values():
                 b.span.attrs["unclosed"] = True
                 self.emit(b.finish(b.span.start))
@@ -445,6 +520,11 @@ class NetSpanWeaver(SpanWeaver):
             self._parent_or_defer(b, ("h2d", ev.attrs["dma"]))
         elif ev.attrs.get("proto") == "ntp":
             self._parent_or_defer(b, ("ntp", ev.attrs.get("peer"), ev.attrs.get("seq")))
+        elif "rpc" in ev.attrs:
+            # RPC request/reply leg: the frontend's RpcCall span (request)
+            # or the serving host's RpcWork span (reply, "<sub>.r") pushed
+            # the context under this sub id
+            self._parent_or_defer(b, ("rpccall", ev.attrs["rpc"]))
         elif "flow" not in ev.attrs:
             self._parent_or_defer(b, ("chunk", ck))
         # let the receiving chip link back to this wire transfer

@@ -10,10 +10,13 @@
 
 ``python -m repro.launch.trace --arch olmo-1b --shape train_4k --steps 2``
 
-Fault scenarios (sim/scenarios.py) run through the same path:
+Fault scenarios (sim/scenarios.py) run through the same path, under any
+registered workload (sim/workload.py: collective / rpc / storage /
+pipeline):
 
 ``python -m repro.launch.trace --scenario throttled_chip --seed 7``
-``python -m repro.launch.trace --list-scenarios``
+``python -m repro.launch.trace --scenario degraded_ici_link --workload rpc``
+``python -m repro.launch.trace --list-scenarios [--workload rpc]``
 
 Fleet sweeps (sim/sweep.py) fan (scenario, seed) cells over worker
 processes, stream per-cell SpanJSONL shards, and print the aggregate
@@ -57,6 +60,12 @@ def _run_sweep(args) -> None:
         overrides["chips_per_pod"] = args.sweep_chips_per_pod
     if args.fabric:
         overrides["fabric"] = args.fabric
+    if args.workloads:
+        overrides["workloads"] = tuple(
+            w.strip() for w in args.workloads.split(",") if w.strip()
+        )
+    elif args.workload:
+        overrides["workloads"] = (args.workload,)
     if scenarios is None:
         spec = SweepSpec.library(seeds=seeds, **overrides)
     else:
@@ -75,12 +84,15 @@ def _run_sweep(args) -> None:
 
 
 def _run_scenario(args) -> None:
-    from ..core import ChromeTraceExporter, SpanJSONLExporter, trace_summary
+    from ..core import (ChromeTraceExporter, SpanJSONLExporter, request_report,
+                        trace_summary)
     from ..sim.scenarios import get_scenario
 
     spec = get_scenario(args.scenario)
     os.makedirs(args.outdir, exist_ok=True)
-    base = os.path.join(args.outdir, f"scenario.{spec.name}")
+    tag = f".{args.workload}" if args.workload else ""
+    base = os.path.join(args.outdir, f"scenario.{spec.name}{tag}")
+    overrides = {"workload": args.workload} if args.workload else {}
     run = spec.run(
         outdir=None if args.structured else base + ".logs",
         seed=args.seed,
@@ -89,13 +101,35 @@ def _run_scenario(args) -> None:
             SpanJSONLExporter(base + ".spans.jsonl"),
         ),
         structured=args.structured,
+        **overrides,
     )
     print(f"[trace] {trace_summary(run.spans)}")
     print(run.report())
+    if any(s.name == "RpcRequest" for s in run.spans):
+        # per-request drill-down: tail percentiles + the slowest request's
+        # critical path + diagnose() on its trace alone
+        print("[trace] " + request_report(run.spans).replace("\n", "\n[trace] "))
     logs = "structured fast path, no logs" if args.structured else f"logs in {base}.logs/"
     print(f"[trace] exported {base}.chrome.json + .spans.jsonl ({logs})")
     if not run.ok:
         raise SystemExit(1)
+
+
+def _list_scenarios(args) -> None:
+    from ..sim.scenarios import SCENARIOS
+
+    workload = args.workload or None
+    rows = [
+        (name, spec) for name, spec in SCENARIOS.items()
+        if workload is None or spec.workload == workload
+    ]
+    if not rows:
+        print(f"no scenarios pinned to workload {workload!r}")
+        return
+    print(f"{'scenario':24s} {'workload':10s} {'expected diagnosis':28s} description")
+    for name, spec in rows:
+        expected = ",".join(spec.expected_classes) or "(clean)"
+        print(f"{name:24s} {spec.workload:10s} {expected:28s} {spec.description}")
 
 
 def main() -> None:
@@ -112,6 +146,12 @@ def main() -> None:
                     help="run a named fault scenario from sim/scenarios.py instead")
     ap.add_argument("--seed", type=int, default=None,
                     help="override the scenario's fault-plan seed")
+    ap.add_argument("--workload", default="",
+                    help="workload type driving the scenario (collective, rpc, "
+                         "storage, pipeline); also filters --list-scenarios")
+    ap.add_argument("--workloads", default="",
+                    help="comma list: run every sweep scenario under each of "
+                         "these workload types (the workload sweep axis)")
     ap.add_argument("--list-scenarios", action="store_true")
     ap.add_argument("--sweep", action="store_true",
                     help="run a (scenario x seed) sweep through sim/sweep.py")
@@ -136,17 +176,27 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.list_scenarios:
-        from ..sim.scenarios import SCENARIOS
-
-        for name, spec in SCENARIOS.items():
-            print(f"{name:24s} {spec.description}")
+        _list_scenarios(args)
         return
     if args.sweep:
         _run_sweep(args)
         return
     if args.scenario:
+        if args.workloads:
+            raise SystemExit(
+                "--workloads is a sweep axis; with --scenario use "
+                "--workload <type> (or --sweep --scenarios "
+                f"{args.scenario} --workloads {args.workloads})"
+            )
         _run_scenario(args)
         return
+    if args.workload or args.workloads:
+        # the compiled-program training path below has no workload axis;
+        # dropping the flag silently would trace the wrong workload
+        raise SystemExit(
+            "--workload/--workloads require --scenario or --sweep "
+            "(the default path always traces the compiled training program)"
+        )
 
     from ..core import (
         ChromeTraceExporter,

@@ -47,6 +47,18 @@ from .sweep import (
     run_sweep,
 )
 from .topology import Link, Topology, fat_tree_cluster, ntp_testbed, scale, tpu_cluster
-from .workload import OpSpec, ProgramSpec, program_from_compiled, synthetic_program
+from .workload import (
+    CollectiveTraining,
+    OpSpec,
+    ProgramSpec,
+    Workload,
+    list_workloads,
+    make_workload,
+    program_from_compiled,
+    register_workload,
+    synthetic_program,
+    workload_type,
+)
+from .workloads import PipelinedTraining, RpcServing, StorageIO, rpc_handler_program
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -132,13 +132,9 @@ class HostSim:
             return
         self.log_event("step_begin", step=step)
         self.log_event("data_load_begin", step=step)
-        wait_ps = self.data_load_ps
-        if self._stall_ps:
-            # injected runtime pause (sim/faults.py HostPause): the input
-            # pipeline freezes before this step's batch is ready
-            self.log_event("gc_stall", step=step, dur=self._stall_ps, cause=self._stall_kind)
-            wait_ps += self._stall_ps
-            self._stall_ps = 0
+        # injected runtime pause (sim/faults.py HostPause): the input
+        # pipeline freezes before this step's batch is ready
+        wait_ps = self.data_load_ps + self.consume_stall(step=step)
 
         def _after_load() -> None:
             self.log_event("data_load_end", step=step, bytes=self.batch_bytes_per_chip * len(self.chips))
@@ -204,10 +200,25 @@ class HostSim:
 
     def inject_stall(self, dur_ps: int, kind: str = "gc") -> None:
         """Fault hook: pause the host runtime for ``dur_ps`` at the next
-        step boundary (GC pause, page-fault storm, scheduler stall).  The
-        stall is logged as a ``gc_stall`` event inside the affected step."""
+        unit-of-work boundary (GC pause, page-fault storm, scheduler
+        stall).  The stall is logged as a ``gc_stall`` event inside the
+        affected step / request / microbatch when the workload driver
+        drains it via :meth:`consume_stall`."""
         self._stall_ps += int(dur_ps)
         self._stall_kind = kind
+
+    def consume_stall(self, **attrs) -> int:
+        """Drain a pending injected stall: log it as a ``gc_stall`` event
+        (the caller's unit-of-work attrs lead, then ``dur``/``cause``) and
+        return the extra wait in ps, or 0 when none is pending.  Every
+        workload driver calls this at its work boundaries, which is what
+        makes the ``host_pause`` fault class compose with any workload."""
+        if not self._stall_ps:
+            return 0
+        dur = self._stall_ps
+        self.log_event("gc_stall", **attrs, dur=dur, cause=self._stall_kind)
+        self._stall_ps = 0
+        return dur
 
     def fail(self) -> None:
         self.failed = True

@@ -28,10 +28,10 @@ from __future__ import annotations
 
 import io
 import tempfile
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field, fields as dataclasses_fields, replace
 from typing import Callable, Dict, List, Optional, Tuple
 
-from .cluster import ClusterOrchestrator, drive_training_hosts
+from .cluster import ClusterOrchestrator
 from .faults import (
     ChunkReorder,
     ClockDrift,
@@ -45,7 +45,8 @@ from .faults import (
     StragglerPod,
 )
 from .topology import scale
-from .workload import ProgramSpec, synthetic_program
+from .workload import ProgramSpec, Workload, make_workload, synthetic_program
+from .workloads.rpc import rpc_handler_program
 
 PS_PER_MS = 1_000_000_000
 
@@ -60,7 +61,15 @@ def _default_program() -> ProgramSpec:
 
 @dataclass(frozen=True)
 class ScenarioSpec:
-    """Topology + workload + fault plan + expected diagnosis, declaratively."""
+    """Topology + workload + fault plan + expected diagnosis, declaratively.
+
+    ``workload`` names a registered workload type (``collective`` — the
+    classic training step — or any of ``repro.sim.workloads``: ``rpc``,
+    ``storage``, ``pipeline``); ``workload_params`` are extra knobs for it
+    as an inert ``(key, value)`` tuple.  Every fault class composes with
+    every workload: the same plan schedules regardless of what drives the
+    cluster.
+    """
 
     name: str
     description: str
@@ -75,6 +84,8 @@ class ScenarioSpec:
     program: Callable[[], ProgramSpec] = _default_program
     clock_read_every_ps: int = 2 * PS_PER_MS
     clock_reads: int = 30
+    workload: str = "collective"                  # registered workload type
+    workload_params: Tuple[Tuple[str, object], ...] = ()
 
     @property
     def expected_classes(self) -> Tuple[str, ...]:
@@ -89,6 +100,24 @@ class ScenarioSpec:
     def with_seed(self, seed: int) -> "ScenarioSpec":
         return replace(self, seed=seed)
 
+    def make_workload(self, seed: Optional[int] = None) -> Workload:
+        """Instantiate this scenario's workload (standard knobs + params).
+
+        ``workload_params`` naming one of the five standard knobs
+        (``program``, ``n_steps``, ``seed``, ``clock_read_every_ps``,
+        ``clock_reads``) overrides the scenario-level value; unknown
+        knobs raise ``TypeError`` — the same no-silent-ignore contract
+        :meth:`run` enforces for its kwargs."""
+        params = dict(
+            program=self.program(),
+            n_steps=self.n_steps,
+            seed=self.seed if seed is None else seed,
+            clock_read_every_ps=self.clock_read_every_ps,
+            clock_reads=self.clock_reads,
+        )
+        params.update(dict(self.workload_params))
+        return make_workload(self.workload, **params)
+
     # -- execution ---------------------------------------------------------------
 
     def simulate(
@@ -99,19 +128,16 @@ class ScenarioSpec:
     ) -> ClusterOrchestrator:
         """Run only the full-system simulation; logs land in ``outdir``
         (text mode) or stay in memory as structured event records
-        (``structured=True``, the zero-parse fast path)."""
+        (``structured=True``, the zero-parse fast path).  The scenario's
+        registered workload drives the cluster (clock telemetry — offsets
+        vs the sim's ground-truth global clock — is part of every
+        workload's drive)."""
         topo = scale(
             pods=self.n_pods, chips_per_pod=self.chips_per_pod, fabric=self.fabric
         )
         cluster = ClusterOrchestrator(topo, outdir=outdir, structured=structured)
         self.fault_plan(seed).schedule(cluster)
-        drive_training_hosts(
-            cluster, self.program(), self.n_steps,
-            # clock telemetry: offsets vs the sim's ground-truth global clock
-            per_host=lambda h: h.start_clock_reads(
-                every_ps=self.clock_read_every_ps, n=self.clock_reads
-            ),
-        )
+        self.make_workload(seed=seed).drive(cluster)
         cluster.run()
         return cluster
 
@@ -121,6 +147,7 @@ class ScenarioSpec:
         seed: Optional[int] = None,
         exporters: Tuple = (),
         structured: bool = False,
+        **overrides,
     ) -> "ScenarioRun":
         """Simulate, weave through a TraceSpec, diagnose.
 
@@ -133,10 +160,32 @@ class ScenarioSpec:
         ``Event`` records straight to the weavers (no text logs, no
         ``outdir``), producing byte-identical SpanJSONL to the text path
         (asserted in ``tests/test_structured.py``).
+
+        Any extra keyword argument must name a :class:`ScenarioSpec` field
+        (``run(workload="rpc")``, ``run(n_pods=4)``): it overrides that
+        field for this run.  Anything else raises ``TypeError`` — unknown
+        kwargs are never silently ignored.
         """
         # late import: repro.core must not depend on repro.sim
         from ..core import SourceSpec, SpanJSONLExporter, TraceSpec, reset_ids
         from ..core.analysis import diagnose
+
+        if overrides:
+            fields = {f.name for f in dataclasses_fields(ScenarioSpec)}
+            unknown = sorted(set(overrides) - fields)
+            if unknown:
+                raise TypeError(
+                    f"ScenarioSpec.run() got unexpected keyword arguments "
+                    f"{unknown}; valid field overrides: {sorted(fields)}"
+                )
+            if (overrides.get("workload", self.workload) != self.workload
+                    and "workload_params" not in overrides):
+                # per-type knobs don't transfer across workload types: a
+                # cross-type override starts from the new type's defaults
+                overrides["workload_params"] = ()
+            return replace(self, **overrides).run(
+                outdir=outdir, seed=seed, exporters=exporters, structured=structured
+            )
 
         plan = self.fault_plan(seed)
         tmp = None
@@ -210,6 +259,7 @@ class ScenarioRun:
         lines = [
             f"scenario {self.scenario.name!r} (seed={self.plan.seed}): "
             f"{self.scenario.description}",
+            f"  workload : {self.scenario.make_workload(self.plan.seed).describe()}",
             f"  injected : {self.plan.describe() or ['none']}",
             f"  expected : {list(self.scenario.expected_classes) or ['(clean)']}",
             f"  diagnosed: {list(self.detected) or ['(clean)']}   "
@@ -290,14 +340,53 @@ _LIBRARY: Tuple[ScenarioSpec, ...] = (
         signature="pod2's chips are uniformly slow: per-pod median Op duration "
                   "k-MAD outlier (pod rule needs >= 3 pods)",
     ),
+    # -- workload-pinned scenarios: the serving / storage / pipeline axes -----
+    ScenarioSpec(
+        name="rpc_tail_latency",
+        description="RPC serving while an ICI link in the frontend pod drops to 8% bw",
+        workload="rpc",
+        workload_params=(("n_requests", 10), ("rate_rps", 1500.0)),
+        program=rpc_handler_program,
+        faults=(LinkDegradation(link="ici.pod0.l1", bw_factor=0.08),),
+        signature="per-request span trees; the slowest RpcRequest's critical "
+                  "path runs through ici.pod0.l1, whose wire time per byte is "
+                  "a k-MAD outlier vs sibling ICI links",
+    ),
+    ScenarioSpec(
+        name="ckpt_slow_dcn",
+        description="checkpoint I/O + training while dcn.h0h1 runs at 10% bandwidth",
+        workload="storage",
+        n_pods=3,
+        chips_per_pod=2,
+        faults=(LinkDegradation(link="dcn.h0h1", bw_factor=0.1),),
+        signature="ckpt shard flows and gradient all-reduce chunks contend on "
+                  "the DCN; dcn.h0h1 wire time per byte is a k-MAD outlier vs "
+                  "its sibling DCN links",
+    ),
+    ScenarioSpec(
+        name="pipeline_stall_host1",
+        description="pipelined training with a 30 ms GC pause on the stage-1 host",
+        workload="pipeline",
+        n_pods=3,
+        chips_per_pod=2,
+        faults=(HostPause(host="host1", pause_ps=30 * PS_PER_MS, at_ps=1_000_000),),
+        signature="a gc_stall span event inside host1's microbatch HostStep; "
+                  "every later stage's microbatches shift by the bubble",
+    ),
 )
 
 SCENARIOS: Dict[str, ScenarioSpec] = {s.name: s for s in _LIBRARY}
 
 
-def list_scenarios() -> List[str]:
-    """Names of the curated scenario library, in definition order."""
-    return list(SCENARIOS)
+def list_scenarios(workload: Optional[str] = None) -> List[str]:
+    """Names of the curated scenario library, in definition order.
+
+    ``workload`` filters to scenarios pinned to that workload type
+    (``--list-scenarios --workload rpc`` on the CLI)."""
+    return [
+        name for name, s in SCENARIOS.items()
+        if workload is None or s.workload == workload
+    ]
 
 
 def get_scenario(name: str) -> ScenarioSpec:

@@ -1,10 +1,16 @@
 """Parallel multi-seed scenario sweeps: fleets of ``(scenario, seed)`` cells.
 
 One simulated run answers "what happened here"; a sweep runs a grid of
-scenarios × seeds and feeds :func:`repro.core.analysis.aggregate` so the
-question becomes "how does the fleet behave" — detection rates per fault
-class, latency percentiles per component, critical-path frequency — the
-aggregate-driven reading of traces rather than eyeballing single runs.
+scenarios × workloads × seeds and feeds
+:func:`repro.core.analysis.aggregate` so the question becomes "how does
+the fleet behave" — detection rates per fault class, latency percentiles
+per component, end-to-end request-latency tails, critical-path frequency —
+the aggregate-driven reading of traces rather than eyeballing single runs.
+
+The workload axis (``workloads=("collective", "rpc", ...)``) re-runs every
+scenario under each listed workload type; the default (``None``) keeps
+each scenario's own pinned workload, so the curated library sweeps exactly
+as published.
 
 Execution model: each cell runs the existing
 :class:`~repro.sim.scenarios.ScenarioSpec` → ``TraceSpec``/``ExecutionEngine``
@@ -32,15 +38,18 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .scenarios import SCENARIOS, ScenarioSpec, get_scenario
 
-SWEEP_SCHEMA = "columbo.sweep/v1"
+SWEEP_SCHEMA = "columbo.sweep/v2"
+_SWEEP_SCHEMAS = ("columbo.sweep/v1", SWEEP_SCHEMA)
 
 
 @dataclass(frozen=True)
 class SweepSpec:
-    """A grid of ``(scenario, seed)`` cells plus optional topology overrides.
+    """A grid of ``(scenario, workload, seed)`` cells plus topology overrides.
 
     Inert and declarative like :class:`~repro.sim.scenarios.ScenarioSpec`:
     build once, run with any ``--jobs``, get the same shards.
+    ``workloads`` (when set) re-runs every scenario under each listed
+    workload type; ``None`` keeps each scenario's own pinned workload.
     ``n_pods``/``chips_per_pod``/``fabric``/``n_steps`` (when not ``None``)
     override every scenario in the grid — e.g. re-running the curated
     library on a 64-pod fat-tree.
@@ -48,6 +57,7 @@ class SweepSpec:
 
     scenarios: Tuple[str, ...]
     seeds: Tuple[int, ...]
+    workloads: Optional[Tuple[str, ...]] = None   # None -> scenario's own
     n_pods: Optional[int] = None
     chips_per_pod: Optional[int] = None
     fabric: Optional[str] = None
@@ -62,9 +72,15 @@ class SweepSpec:
                 out[k] = v
         return out
 
-    def cells(self) -> List[Tuple[str, int]]:
-        """The full grid, scenario-major (deterministic order)."""
-        return [(s, seed) for s in self.scenarios for seed in self.seeds]
+    def cells(self) -> List[Tuple[str, Optional[str], int]]:
+        """The full ``(scenario, workload, seed)`` grid, scenario-major
+        (deterministic order).  ``workload`` is ``None`` when the cell
+        keeps its scenario's own pinned workload type."""
+        wls: Tuple[Optional[str], ...] = self.workloads or (None,)
+        return [
+            (s, w, seed)
+            for s in self.scenarios for w in wls for seed in self.seeds
+        ]
 
     @classmethod
     def library(cls, seeds: Sequence[int] = (0,), **overrides: Any) -> "SweepSpec":
@@ -74,38 +90,48 @@ class SweepSpec:
 
 @dataclass
 class CellResult:
-    """One finished ``(scenario, seed)`` cell."""
+    """One finished ``(scenario, workload, seed)`` cell."""
 
     scenario: str
     seed: int
     ok: bool                    # expected fault classes ⊆ diagnosed classes
     shard: str                  # SpanJSONL shard path, relative to the sweep outdir
     stats: "Any"                # core.analysis.RunStats (pre-reduced spans)
+    workload: Optional[str] = None   # explicit sweep-axis workload (None = own)
 
 
-def _shard_name(scenario: str, seed: int) -> str:
-    return os.path.join("shards", f"{scenario}.seed{seed}.spans.jsonl")
+def _shard_name(scenario: str, workload: Optional[str], seed: int) -> str:
+    # the workload only appears in the name when the sweep axis set it, so
+    # default-library shard names stay exactly as they were pre-axis
+    mid = f".{workload}" if workload else ""
+    return os.path.join("shards", f"{scenario}{mid}.seed{seed}.spans.jsonl")
 
 
-def _run_cell(args: Tuple[str, int, Dict[str, Any], str, bool]) -> Dict[str, Any]:
+def _run_cell(
+    args: Tuple[str, Optional[str], int, Dict[str, Any], str, bool]
+) -> Dict[str, Any]:
     """Worker: run one cell end to end (simulate → weave → diagnose),
     write its SpanJSONL shard, return a JSON-serializable summary.
 
     Top-level (picklable) so multiprocessing pools can dispatch it; every
-    random draw inside comes from the cell's seeded fault plan, so the
-    result is independent of which worker runs it.  ``structured`` cells
-    take the zero-parse fast path; shard bytes are identical either way.
+    random draw inside comes from the cell's seeded fault plan and
+    workload, so the result is independent of which worker runs it.
+    ``structured`` cells take the zero-parse fast path; shard bytes are
+    identical either way.
     """
     from ..core.analysis import RunStats
 
-    scenario, seed, overrides, outdir, structured = args
+    scenario, workload, seed, overrides, outdir, structured = args
     spec: ScenarioSpec = get_scenario(scenario)
+    if workload is not None and workload != spec.workload:
+        # cross-type axis override: the pinned type's knobs don't transfer
+        spec = replace(spec, workload=workload, workload_params=())
     if overrides:
         spec = replace(spec, **overrides)
     t0 = time.perf_counter()
     run = spec.run(seed=seed, structured=structured)
     wall = time.perf_counter() - t0
-    shard = _shard_name(scenario, seed)
+    shard = _shard_name(scenario, workload, seed)
     with open(os.path.join(outdir, shard), "w", buffering=1 << 20) as f:
         f.write(run.span_jsonl)
     stats = RunStats.from_spans(
@@ -117,8 +143,8 @@ def _run_cell(args: Tuple[str, int, Dict[str, Any], str, bool]) -> Dict[str, Any
         wall_s=wall,
         events=run.cluster.sim.events_executed,
     )
-    return {"scenario": scenario, "seed": seed, "ok": run.ok, "shard": shard,
-            "stats": stats.to_dict()}
+    return {"scenario": scenario, "workload": workload, "seed": seed,
+            "ok": run.ok, "shard": shard, "stats": stats.to_dict()}
 
 
 @dataclass
@@ -158,14 +184,18 @@ class SweepResult:
     def report(self, aggregate_report: Optional["Any"] = None) -> str:
         """Cell verdict table + the aggregate rollup (pass a precomputed
         ``aggregate()`` result to avoid pooling the samples twice)."""
+        wl_axis = (f" x {len(self.spec.workloads)} workloads"
+                   if self.spec.workloads else "")
         lines = [
             f"sweep: {len(self.cells)} cells "
-            f"({len(self.spec.scenarios)} scenarios x {len(self.spec.seeds)} seeds, "
+            f"({len(self.spec.scenarios)} scenarios{wl_axis} x "
+            f"{len(self.spec.seeds)} seeds, "
             f"jobs={self.jobs}) -> {self.outdir}",
         ]
         for c in self.cells:
             verdict = "OK    " if c.ok else "MISSED"
-            lines.append(f"  {verdict} {c.scenario:24s} seed={c.seed:<4d} "
+            wl = f" [{c.workload}]" if c.workload else ""
+            lines.append(f"  {verdict} {c.scenario:24s}{wl} seed={c.seed:<4d} "
                          f"spans={c.stats.n_spans:<5d} wall={c.stats.wall_s:.2f}s")
         lines.append((aggregate_report or self.aggregate()).report())
         return "\n".join(lines)
@@ -191,7 +221,10 @@ def run_sweep(
     from ..core.analysis import RunStats
 
     os.makedirs(os.path.join(outdir, "shards"), exist_ok=True)
-    work = [(s, seed, spec.overrides(), outdir, structured) for s, seed in spec.cells()]
+    work = [
+        (s, w, seed, spec.overrides(), outdir, structured)
+        for s, w, seed in spec.cells()
+    ]
     if jobs <= 1 or len(work) <= 1:
         raw = [_run_cell(w) for w in work]
     else:
@@ -202,7 +235,7 @@ def run_sweep(
     cells = [
         CellResult(
             scenario=r["scenario"], seed=r["seed"], ok=r["ok"], shard=r["shard"],
-            stats=RunStats.from_dict(r["stats"]),
+            stats=RunStats.from_dict(r["stats"]), workload=r.get("workload"),
         )
         for r in raw
     ]
@@ -211,6 +244,7 @@ def run_sweep(
         "schema": SWEEP_SCHEMA,
         "scenarios": list(spec.scenarios),
         "seeds": list(spec.seeds),
+        "workloads": list(spec.workloads) if spec.workloads else None,
         "overrides": spec.overrides(),
         "jobs": jobs,
         "structured": structured,
@@ -232,20 +266,22 @@ def load_sweep(outdir: str) -> SweepResult:
 
     with open(os.path.join(outdir, "sweep.json")) as f:
         payload = json.load(f)
-    if payload.get("schema") != SWEEP_SCHEMA:
+    if payload.get("schema") not in _SWEEP_SCHEMAS:
         raise ValueError(
             f"{outdir}/sweep.json has schema {payload.get('schema')!r}, "
-            f"expected {SWEEP_SCHEMA!r}"
+            f"expected one of {_SWEEP_SCHEMAS!r}"
         )
+    workloads = payload.get("workloads")
     spec = SweepSpec(
         scenarios=tuple(payload["scenarios"]),
         seeds=tuple(payload["seeds"]),
+        workloads=tuple(workloads) if workloads else None,
         **payload.get("overrides", {}),
     )
     cells = [
         CellResult(
             scenario=r["scenario"], seed=r["seed"], ok=r["ok"], shard=r["shard"],
-            stats=RunStats.from_dict(r["stats"]),
+            stats=RunStats.from_dict(r["stats"]), workload=r.get("workload"),
         )
         for r in payload["cells"]
     ]

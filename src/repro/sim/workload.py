@@ -1,20 +1,49 @@
-"""Workload specs for the device simulator.
+"""Workloads: *what* the simulated cluster executes, pluggably.
 
-A ProgramSpec is the op timeline one chip executes per step.  It can be built
+Two layers live here:
 
-* **from a compiled XLA artifact** (``program_from_compiled``) — aggregate
-  FLOPs/bytes from ``cost_analysis()`` sliced into per-layer segments, with
-  the *actual* collective schedule parsed from the optimized HLO placed at
-  its position in program order.  This is the full-system-simulation step:
-  the simulated chips execute what the real compiler produced.
-* **synthetically** (``synthetic_program``) — for tests and the case study.
+1. **Device programs** — a :class:`ProgramSpec` is the op timeline one chip
+   executes per step.  It can be built **from a compiled XLA artifact**
+   (``program_from_compiled``) — aggregate FLOPs/bytes from
+   ``cost_analysis()`` sliced into per-layer segments, with the *actual*
+   collective schedule parsed from the optimized HLO placed at its position
+   in program order — or **synthetically** (``synthetic_program``).
+
+2. **Workloads** — a :class:`Workload` schedules work onto a running
+   :class:`~repro.sim.cluster.ClusterOrchestrator` (hosts, chips, links)
+   through the shared :class:`~repro.sim.engine.EventKernel`.  Workload
+   types register by name (``register_workload``, mirroring
+   ``core.registry.register_simulator``) so scenarios, sweeps and the CLI
+   select them declaratively::
+
+       from repro.sim.workload import make_workload
+
+       wl = make_workload("rpc", program=handler, seed=3, n_requests=32)
+       wl.drive(cluster)          # before cluster.run()
+
+   Built-ins: ``collective`` (the classic data-parallel training step,
+   this module), and — in :mod:`repro.sim.workloads` — ``rpc``
+   (request/response serving with open/closed-loop arrivals and a per
+   request trace-context id), ``storage`` (bulk checkpoint I/O contending
+   with training traffic) and ``pipeline`` (stage-partitioned training
+   with inter-stage activations over the fabric).
+
+Reproducibility contract: every random draw a workload makes comes from a
+``random.Random`` derived from its ``seed`` field, and the DES kernel is
+deterministic — so one seed reproduces byte-identical simulator logs on
+both the text and structured paths.
 """
 from __future__ import annotations
 
+import random
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, ClassVar, Dict, List, Optional, Sequence, TYPE_CHECKING
 
 from ..xla.hlo_stats import collective_stats, cost_summary
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .cluster import ClusterOrchestrator
+    from .hostsim import HostSim
 
 
 @dataclass(frozen=True)
@@ -140,3 +169,145 @@ def synthetic_program(
         ops.append(ar)
         ops.append(OpSpec(name="optimizer", kind="compute", flops=layer_flops / 4, bytes=grad_bytes))
     return ProgramSpec(name=name, ops=ops)
+
+
+# ---------------------------------------------------------------------------
+# The pluggable workload layer
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Workload:
+    """Base class: something that schedules work onto a running cluster.
+
+    Subclasses implement :meth:`drive`, which arms hosts/chips/links on the
+    cluster's shared :class:`~repro.sim.engine.EventKernel` **before**
+    ``cluster.run()`` and arranges its own termination (bounded work, and
+    ``cluster.net.stop_all_flows()`` once done so background flows drain).
+
+    The five standard fields are the scenario-level knobs every workload
+    receives from :class:`~repro.sim.scenarios.ScenarioSpec`; subclasses
+    add their own (unknown knobs raise ``TypeError`` — see
+    :func:`make_workload`).  ``n_steps`` is the workload's *size* dial:
+    training workloads read it literally, the serving/storage workloads
+    derive their request/round counts from it so sweep-level ``n_steps``
+    overrides scale every cell consistently.
+    """
+
+    #: registry key; subclasses set it (e.g. "rpc") and call register_workload
+    workload_name: ClassVar[str] = ""
+
+    program: ProgramSpec = field(default_factory=synthetic_program)
+    n_steps: int = 2
+    seed: int = 0
+    clock_read_every_ps: int = 2_000_000_000
+    clock_reads: int = 30
+
+    def drive(self, cluster: "ClusterOrchestrator") -> None:
+        """Arm the workload's events on ``cluster`` (call before ``run()``)."""
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        """One-line summary for reports and ``--list-scenarios``."""
+        return f"{self.workload_name or type(self).__name__}({self.program.name})"
+
+    # -- shared helpers for subclasses ------------------------------------------
+
+    def rng(self, stream: int = 0) -> random.Random:
+        """A deterministic per-``(seed, stream)`` random source (same
+        arithmetic-derivation scheme as :class:`~repro.sim.faults.FaultPlan`,
+        offset so workload streams never collide with fault streams)."""
+        return random.Random(self.seed * 1_000_003 + stream * 7_919 + 502_137)
+
+    def serving_hosts(self, cluster: "ClusterOrchestrator") -> List["HostSim"]:
+        """The chip-bearing hosts, in pod order (chipless NTP-testbed hosts
+        carry no workload)."""
+        return [h for h in cluster.hosts.values() if h.chips]
+
+    def start_clock_telemetry(self, host: "HostSim") -> None:
+        """Arm one host's ground-truth clock sampling (what the clock-fault
+        diagnosis rules read), using the scenario's cadence knobs."""
+        host.start_clock_reads(every_ps=self.clock_read_every_ps, n=self.clock_reads)
+
+
+_WORKLOADS: Dict[str, type] = {}
+_BUILTINS_LOADED = False
+
+
+def _ensure_builtin_workloads() -> None:
+    global _BUILTINS_LOADED
+    if not _BUILTINS_LOADED:
+        _BUILTINS_LOADED = True
+        from . import workloads  # noqa: F401  (registers rpc/storage/pipeline)
+
+
+def register_workload(cls: type, replace: bool = False) -> type:
+    """Class decorator: register a :class:`Workload` subclass under its
+    ``workload_name`` (the workload-layer analogue of
+    ``core.registry.register_simulator``)."""
+    name = getattr(cls, "workload_name", "")
+    if not name:
+        raise ValueError(f"{cls.__name__} must set a non-empty workload_name")
+    if not replace and name in _WORKLOADS:
+        raise ValueError(
+            f"workload {name!r} already registered; pass replace=True to override"
+        )
+    _WORKLOADS[name] = cls
+    return cls
+
+
+def list_workloads() -> List[str]:
+    """Registered workload names, sorted (built-ins load on first use)."""
+    _ensure_builtin_workloads()
+    return sorted(_WORKLOADS)
+
+
+def workload_type(name: str) -> type:
+    """Look up a registered workload class (KeyError lists what exists)."""
+    _ensure_builtin_workloads()
+    try:
+        return _WORKLOADS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown workload {name!r}; available: {', '.join(sorted(_WORKLOADS))}"
+        ) from None
+
+
+def make_workload(name: str, **params: Any) -> Workload:
+    """Instantiate a registered workload with ``params``.
+
+    Unknown knobs raise ``TypeError`` naming the workload — misspelled
+    parameters must never be silently ignored (the same contract
+    :meth:`ScenarioSpec.run` enforces for its own kwargs)."""
+    cls = workload_type(name)
+    try:
+        return cls(**params)
+    except TypeError as e:
+        raise TypeError(f"workload {name!r}: {e}") from None
+
+
+@dataclass
+class CollectiveTraining(Workload):
+    """The classic workload: every chip-bearing host runs ``n_steps`` of the
+    data-parallel ``program`` (per-layer ICI collectives + the cross-pod
+    DCN gradient all-reduce), with per-host clock telemetry.
+
+    This reproduces the exact event schedule the scenario framework drove
+    before the workload layer existed — the pre-refactor goldens in
+    ``tests/golden/`` hold byte for byte (asserted in
+    ``tests/test_sweep.py`` / ``tests/test_structured.py``).
+    """
+
+    workload_name: ClassVar[str] = "collective"
+
+    def drive(self, cluster: "ClusterOrchestrator") -> None:
+        """Arm every chip-bearing host with the training-step loop."""
+        from .cluster import drive_training_hosts  # late: cluster imports us
+
+        drive_training_hosts(
+            cluster, self.program, self.n_steps,
+            per_host=self.start_clock_telemetry,
+        )
+
+
+register_workload(CollectiveTraining)

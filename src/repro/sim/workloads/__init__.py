@@ -1,0 +1,24 @@
+"""Built-in workloads beyond the classic collective-training step.
+
+Importing this package registers the built-ins on the workload registry
+(:mod:`repro.sim.workload`), the same pattern ``core.registry`` uses for
+simulator types:
+
+* ``rpc``      — :class:`~repro.sim.workloads.rpc.RpcServing`:
+  request/response serving with open-loop Poisson or closed-loop arrivals,
+  fan-out across pods over the interconnect, and a per-request
+  trace-context id that weaves into one end-to-end span tree per request.
+* ``storage``  — :class:`~repro.sim.workloads.storage.StorageIO`:
+  bulk checkpoint write/read flows contending with training traffic on the
+  shared DCN links.
+* ``pipeline`` — :class:`~repro.sim.workloads.pipeline.PipelinedTraining`:
+  stage-partitioned training with inter-stage activations over the fabric.
+
+``docs/workloads.md`` is the cookbook: each workload's knobs, the span
+tree it weaves into, and the "write your own Workload" recipe.
+"""
+from .pipeline import PipelinedTraining
+from .rpc import RpcServing, rpc_handler_program
+from .storage import StorageIO
+
+__all__ = ["PipelinedTraining", "RpcServing", "StorageIO", "rpc_handler_program"]

@@ -1,0 +1,162 @@
+"""Pipelined-training workload — stage-partitioned programs over pods.
+
+Pods become pipeline stages: the scenario's program is split into
+contiguous per-stage segments, stage 0's host data-loads each microbatch,
+and every stage ships its activations to the next stage's host over the
+fabric (``pipe_send`` → ``LinkTransfer`` → ``pipe_recv``).  All stages of
+one microbatch share a trace (the host weaver keys traces by ``step``),
+so a woven microbatch reads as::
+
+    HostStep step=m (host0/stage0)          HostStep step=m (host1/stage1)
+    ├── DataLoad                            ├── [pipe_recv event]
+    ├── Dispatch ×chips → DeviceProgram     ├── Dispatch ×chips → ...
+    └── [pipe_send event]                   └── [pipe_send event] ...
+         └── LinkTransfer act.m<m>.s0 ───────▶ (parents under stage0's step)
+
+Cross-pod (DCN-group) ops inside a stage segment are re-homed onto the
+stage's ICI ring: pods are pipeline stages here, so there is no data
+parallel replica group to all-reduce with across pods.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import ClassVar, List, Optional, TYPE_CHECKING
+
+from ..hostsim import _short
+from ..workload import ProgramSpec, Workload, register_workload
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from ..cluster import ClusterOrchestrator
+
+
+def split_stages(program: ProgramSpec, n_stages: int) -> List[ProgramSpec]:
+    """Partition a program into ``n_stages`` contiguous per-stage segments.
+
+    Ops are split evenly by position (the layer-granular programs this
+    repo builds make position a good proxy for cost); DCN-group ops are
+    re-homed to the stage's ICI ring (see module docstring).  Stage ``s``'s
+    program is named ``<name>.stage<s>`` so dispatch keys, collective
+    rendezvous and span names all stay stage-distinct.
+    """
+    ops = [o if o.group != "dcn" else replace(o, group="ici") for o in program.ops]
+    bounds = [round(s * len(ops) / n_stages) for s in range(n_stages + 1)]
+    return [
+        ProgramSpec(name=f"{program.name}.stage{s}", ops=ops[bounds[s]:bounds[s + 1]])
+        for s in range(n_stages)
+    ]
+
+
+@register_workload
+@dataclass
+class PipelinedTraining(Workload):
+    """Microbatch pipeline across pods with activations over the fabric.
+
+    Knobs beyond the standard five:
+
+    * ``n_microbatches``   — microbatches pushed through the pipeline
+      (default ``2 * n_steps``: sweep size overrides scale depth);
+    * ``activation_bytes`` — inter-stage activation payload per microbatch.
+    """
+
+    workload_name: ClassVar[str] = "pipeline"
+
+    n_microbatches: Optional[int] = None
+    activation_bytes: int = 4 << 20
+
+    @property
+    def total_microbatches(self) -> int:
+        """Effective depth (``n_microbatches`` or ``2 * n_steps``)."""
+        return (self.n_microbatches if self.n_microbatches is not None
+                else 2 * self.n_steps)
+
+    def describe(self) -> str:
+        return (f"pipeline({self.total_microbatches} microbatches, "
+                f"{self.activation_bytes >> 20} MiB activations)")
+
+    def drive(self, cluster: "ClusterOrchestrator") -> None:
+        """Arm the stage hosts: stage 0 feeds, stages forward activations."""
+        hosts = self.serving_hosts(cluster)
+        if not hosts:
+            raise ValueError("pipeline workload needs at least one chip-bearing host")
+        stages = split_stages(self.program, len(hosts))
+        n_mb = self.total_microbatches
+        last = len(hosts) - 1
+        # per-stage serial execution: a stage processes microbatches in
+        # order; arrivals ahead of the current microbatch wait in `ready`
+        ready = [set() for _ in hosts]
+        busy = [False] * len(hosts)
+        next_mb = [0] * len(hosts)
+        finished = {"n": 0}
+
+        for h in hosts:
+            self.start_clock_telemetry(h)
+
+        def try_start(s: int) -> None:
+            if busy[s] or next_mb[s] >= n_mb:
+                return
+            m = next_mb[s]
+            if s > 0 and m not in ready[s]:
+                return
+            busy[s] = True
+            next_mb[s] += 1
+            process(s, m)
+
+        def process(s: int, m: int) -> None:
+            h = hosts[s]
+            h.log_event("step_begin", step=m)
+            if s > 0:
+                h.log_event("pipe_recv", mb=m, stage=s)
+                stall = h.consume_stall(step=m)
+                h.sim.after(stall, lambda: dispatch_stage(s, m))
+            else:
+                h.log_event("data_load_begin", step=m)
+                wait = h.data_load_ps + h.consume_stall(step=m)
+
+                def loaded() -> None:
+                    h.log_event("data_load_end", step=m,
+                                bytes=h.batch_bytes_per_chip * len(h.chips))
+                    dispatch_stage(s, m)
+
+                h.sim.after(wait, loaded)
+
+        def dispatch_stage(s: int, m: int) -> None:
+            h = hosts[s]
+            prog = stages[s]
+            pending = {"n": len(h.chips)}
+
+            def chip_done(chip: str, _t: int) -> None:
+                h.log_event("program_retire", chip=_short(chip), step=m,
+                            program=prog.name)
+                pending["n"] -= 1
+                if pending["n"] == 0:
+                    stage_done(s, m)
+
+            for chip in h.chips:
+                h.log_event("program_enqueue", chip=_short(chip), step=m,
+                            program=prog.name)
+                cluster.dispatch(h, chip, prog, m, chip_done)
+
+        def stage_done(s: int, m: int) -> None:
+            h = hosts[s]
+            if s < last:
+                cid = f"act.m{m}.s{s}"
+                h.log_event("pipe_send", mb=m, stage=s,
+                            bytes=self.activation_bytes, chunk=cid)
+                cluster.net.transfer(
+                    h.name, hosts[s + 1].name, self.activation_bytes,
+                    meta={"mb": m, "stage": s}, chunk_id=cid,
+                    on_delivered=lambda _t: activation_arrived(s + 1, m),
+                )
+            h.log_event("step_end", step=m)
+            busy[s] = False
+            if s == last:
+                finished["n"] += 1
+                if finished["n"] == n_mb:
+                    cluster.net.stop_all_flows()
+            try_start(s)
+
+        def activation_arrived(s: int, m: int) -> None:
+            ready[s].add(m)
+            try_start(s)
+
+        try_start(0)

@@ -1,0 +1,256 @@
+"""RPC request/response serving workload — one span tree per request.
+
+The frontend (the first chip-bearing host) admits requests under an
+**open-loop** Poisson arrival process (seeded, so byte-reproducible) or a
+**closed-loop** fixed-concurrency process, fans each request out across
+every serving pod over the interconnect, and fans the replies back in.
+Every log event of a request carries its trace-context id (``rid`` /
+``sub``), so the weave produces one end-to-end tree per request::
+
+    RpcRequest r3                         (frontend host)
+    ├── RpcCall r3.host0                  (local pod, no wire hop)
+    │   └── RpcWork r3.host0
+    │       └── Dispatch ×chips → DeviceProgram → Op / Collective
+    │           └── LinkTransfer ×ICI ring chunks
+    └── RpcCall r3.host1                  (remote pod)
+        ├── LinkTransfer dcn.h0h1         (request leg)
+        └── RpcWork r3.host1
+            ├── Dispatch ×chips → DeviceProgram → ...
+            └── LinkTransfer dcn.h0h1     (reply leg, "<sub>.r")
+
+Serving is **serial per host** (one subrequest at a time, FIFO queue), so
+queueing delay under open-loop overload shows up as RpcCall-minus-RpcWork
+time — the tail-latency signal ``core.analysis.request_latency_stats``
+summarizes and ``slowest_request`` drills into.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import ClassVar, Optional, TYPE_CHECKING
+
+from ..hostsim import _short
+from ..workload import OpSpec, ProgramSpec, Workload, register_workload
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from ..cluster import ClusterOrchestrator
+    from ..hostsim import HostSim
+
+PS_PER_S = 1_000_000_000_000
+
+
+def rpc_handler_program(
+    name: str = "rpc_infer",
+    tp_bytes: float = 1 << 20,
+    flops: float = 2e11,
+    hbm_bytes: float = 1e8,
+) -> ProgramSpec:
+    """The default per-request handler: a tensor-parallel inference step
+    over the serving pod's ICI ring (all-gather → compute → all-reduce).
+    Cross-pod (DCN-group) ops are deliberately absent: a request is served
+    entirely inside one pod."""
+    return ProgramSpec(name, [
+        OpSpec(name="tp.ag", kind="all-gather", coll_bytes=tp_bytes),
+        OpSpec(name="infer.ffn", kind="compute", flops=flops, bytes=hbm_bytes),
+        OpSpec(name="tp.ar", kind="all-reduce", coll_bytes=tp_bytes),
+    ])
+
+
+def _ici_only(program: ProgramSpec) -> ProgramSpec:
+    """Strip cross-pod (DCN-group) ops and their waits from a program.
+
+    A request is served by one pod; a DCN-group op would rendezvous with
+    homologue chips in pods that never join this request's collective and
+    stall the request forever.  Sweeping ``workload=rpc`` over scenarios
+    whose program is a training step therefore serves the ICI-only part.
+    """
+    dcn_names = {o.name for o in program.ops if o.group == "dcn"}
+    ops = [
+        o for o in program.ops
+        if o.group != "dcn" and not (o.kind == "wait" and o.wait_for in dcn_names)
+    ]
+    if ops == program.ops:
+        return program
+    return ProgramSpec(name=program.name, ops=ops)
+
+
+@dataclass
+class _PodServer:
+    """Per-host serving state: FIFO of pending subrequests + busy flag."""
+
+    host: "HostSim"
+    queue: deque = field(default_factory=deque)
+    busy: bool = False
+
+
+@register_workload
+@dataclass
+class RpcServing(Workload):
+    """Open/closed-loop request serving with per-request trace contexts.
+
+    Knobs beyond the standard five:
+
+    * ``n_requests``    — total requests (default ``4 * n_steps`` so sweep
+      size overrides scale serving cells too);
+    * ``arrival``       — ``"open"`` (Poisson at ``rate_rps``, seeded) or
+      ``"closed"`` (``concurrency`` outstanding requests, next issued on
+      completion);
+    * ``rate_rps`` / ``concurrency`` — the two loops' intensity dials;
+    * ``request_bytes`` / ``reply_bytes`` — wire payloads per fan-out leg;
+    * ``dequeue_ps``    — fixed host-runtime cost to pick up a subrequest.
+
+    The handler program is ``program`` with any DCN-group ops stripped
+    (see :func:`_ici_only`); scenarios that mean serving from the start
+    pass :func:`rpc_handler_program` directly.
+    """
+
+    workload_name: ClassVar[str] = "rpc"
+
+    n_requests: Optional[int] = None
+    arrival: str = "open"                 # "open" | "closed"
+    rate_rps: float = 2000.0
+    concurrency: int = 4
+    request_bytes: int = 32 << 10
+    reply_bytes: int = 64 << 10
+    dequeue_ps: int = 200_000             # 0.2 us runtime pickup cost
+
+    def __post_init__(self) -> None:
+        if self.arrival not in ("open", "closed"):
+            raise ValueError(
+                f"arrival must be 'open' or 'closed', got {self.arrival!r}"
+            )
+
+    @property
+    def total_requests(self) -> int:
+        """The effective request count (``n_requests`` or ``4 * n_steps``)."""
+        return self.n_requests if self.n_requests is not None else 4 * self.n_steps
+
+    def describe(self) -> str:
+        loop = (f"open {self.rate_rps:g} rps" if self.arrival == "open"
+                else f"closed x{self.concurrency}")
+        return f"rpc({self.total_requests} reqs, {loop})"
+
+    # -- driving -----------------------------------------------------------------
+
+    def drive(self, cluster: "ClusterOrchestrator") -> None:
+        """Arm arrivals at the frontend + serial per-pod serving queues."""
+        hosts = self.serving_hosts(cluster)
+        if not hosts:
+            raise ValueError("rpc workload needs at least one chip-bearing host")
+        frontend = hosts[0]
+        handler = _ici_only(self.program)
+        servers = {h.name: _PodServer(h) for h in hosts}
+        sub_steps = itertools.count()     # unique dispatch-step int per sub
+        n_total = self.total_requests
+        state = {"issued": 0, "completed": 0}
+
+        for h in hosts:
+            self.start_clock_telemetry(h)
+
+        def serve_next(srv: _PodServer) -> None:
+            if not srv.queue:
+                srv.busy = False
+                return
+            srv.busy = True
+            sub, rid, reply = srv.queue.popleft()
+            srv.host.sim.after(
+                self.dequeue_ps, lambda: begin_work(srv, sub, rid, reply)
+            )
+
+        def begin_work(srv: _PodServer, sub: str, rid: str, reply) -> None:
+            h = srv.host
+            h.log_event("rpc_work_begin", sub=sub, rid=rid)
+            # an injected HostPause stall drains at the subrequest boundary,
+            # *after* rpc_work_begin so the gc_stall event lands inside this
+            # request's RpcWork span (per-request diagnosis sees it)
+            stall = h.consume_stall(sub=sub, rid=rid)
+            if stall:
+                h.sim.after(stall, lambda: run_handler(srv, sub, rid, reply))
+            else:
+                run_handler(srv, sub, rid, reply)
+
+        def run_handler(srv: _PodServer, sub: str, rid: str, reply) -> None:
+            h = srv.host
+            step = next(sub_steps)
+            pending = {"n": len(h.chips)}
+
+            def chip_done(chip: str, _t: int) -> None:
+                h.log_event("program_retire", chip=_short(chip), step=step,
+                            program=handler.name)
+                pending["n"] -= 1
+                if pending["n"] == 0:
+                    h.log_event("rpc_work_end", sub=sub, rid=rid)
+                    reply()
+                    serve_next(srv)
+
+            for chip in h.chips:
+                h.log_event("program_enqueue", chip=_short(chip), step=step,
+                            program=handler.name)
+                cluster.dispatch(h, chip, handler, step, chip_done)
+
+        def enqueue(srv: _PodServer, sub: str, rid: str, reply) -> None:
+            srv.queue.append((sub, rid, reply))
+            if not srv.busy:
+                serve_next(srv)
+
+        def admit(i: int) -> None:
+            rid = f"r{i}"
+            t0 = frontend.sim.now
+            frontend.log_event("rpc_recv", rid=rid, bytes=self.request_bytes)
+            pending = {"n": len(hosts)}
+
+            def fan_in(sub: str) -> None:
+                frontend.log_event("rpc_reply", rid=rid, sub=sub)
+                pending["n"] -= 1
+                if pending["n"] == 0:
+                    frontend.log_event(
+                        "rpc_done", rid=rid, lat=frontend.sim.now - t0,
+                        fanout=len(hosts),
+                    )
+                    state["completed"] += 1
+                    if self.arrival == "closed" and state["issued"] < n_total:
+                        issue_now()
+                    if state["completed"] == n_total:
+                        cluster.net.stop_all_flows()
+
+            for h in hosts:
+                sub = f"{rid}.{h.name}"
+                frontend.log_event("rpc_send", rid=rid, sub=sub, dst=h.name,
+                                   bytes=self.request_bytes)
+                if h is frontend:
+                    # local pod: no wire hop, reply is a local fan-in
+                    enqueue(servers[h.name], sub, rid,
+                            lambda s=sub: fan_in(s))
+                else:
+                    def deliver(_t: int, hh=h, s=sub) -> None:
+                        enqueue(servers[hh.name], s, rid,
+                                lambda: send_reply(hh, s))
+
+                    def send_reply(hh: "HostSim", s: str) -> None:
+                        cluster.net.transfer(
+                            hh.name, frontend.name, self.reply_bytes,
+                            meta={"rpc": f"{s}.r"},
+                            on_delivered=lambda _t, s=s: fan_in(s),
+                        )
+
+                    cluster.net.transfer(
+                        frontend.name, h.name, self.request_bytes,
+                        meta={"rpc": sub}, on_delivered=deliver,
+                    )
+
+        def issue_now() -> None:
+            i = state["issued"]
+            state["issued"] += 1
+            admit(i)
+
+        if self.arrival == "open":
+            # pre-draw the whole Poisson arrival schedule (deterministic)
+            rng = self.rng(stream=0)
+            t = 0.0
+            for i in range(n_total):
+                t += rng.expovariate(self.rate_rps) * PS_PER_S
+                frontend.sim.at(int(t), issue_now)
+        else:
+            for _ in range(min(self.concurrency, n_total)):
+                issue_now()

@@ -1,0 +1,103 @@
+"""Storage / checkpoint I/O workload — bulk flows contending with training.
+
+Every non-head host runs the classic training loop **and** a serial chain
+of checkpoint rounds against the storage head (the first chip-bearing
+host): write rounds push ``shards × shard_bytes`` over the DCN toward the
+head, read rounds (restore path) pull the same volume back.  Shards of a
+round are enqueued back-to-back, so they queue behind — and delay — the
+training step's gradient all-reduce chunks on the shared links: the
+contention signal the paper's §5 background-traffic case study examines,
+now at checkpoint scale.
+
+Span shape: each round weaves into the existing ``Checkpoint`` span
+(``ckpt_begin`` → ``ckpt_shard_write`` / ``ckpt_shard_read`` events →
+``ckpt_end``) parented under whatever ``HostStep`` is open when the round
+begins; the shard transfers appear as root ``LinkTransfer`` spans tagged
+with their ``flow=ckpt.<host>.r<round>.s<shard>`` id.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import ClassVar, Optional, TYPE_CHECKING
+
+from ..workload import Workload, register_workload
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from ..cluster import ClusterOrchestrator
+    from ..hostsim import HostSim
+
+
+@register_workload
+@dataclass
+class StorageIO(Workload):
+    """Training plus checkpoint write/read rounds over the shared fabric.
+
+    Knobs beyond the standard five:
+
+    * ``rounds``       — checkpoint rounds per non-head host (default
+      ``n_steps``, so sweep size overrides scale the I/O volume too);
+    * ``shards`` / ``shard_bytes`` — per-round volume (shards are enqueued
+      back-to-back: maximal contention);
+    * ``gap_ps``       — idle gap between a host's rounds;
+    * ``read_back``    — alternate write rounds with read (restore) rounds.
+    """
+
+    workload_name: ClassVar[str] = "storage"
+
+    rounds: Optional[int] = None
+    shards: int = 4
+    shard_bytes: int = 8 << 20
+    gap_ps: int = 2_000_000_000           # 2 ms between rounds
+    read_back: bool = True
+
+    @property
+    def total_rounds(self) -> int:
+        """Effective rounds per writer host (``rounds`` or ``n_steps``)."""
+        return self.rounds if self.rounds is not None else self.n_steps
+
+    def describe(self) -> str:
+        vol = self.shards * self.shard_bytes / 1e6
+        return (f"storage({self.total_rounds} rounds x {vol:.0f} MB"
+                f"{' rw' if self.read_back else ' w'}) + training")
+
+    def drive(self, cluster: "ClusterOrchestrator") -> None:
+        """Arm the training loop plus per-host checkpoint round chains."""
+        from ..cluster import drive_training_hosts  # late: cluster imports workload
+
+        drive_training_hosts(
+            cluster, self.program, self.n_steps,
+            per_host=self.start_clock_telemetry,
+        )
+        hosts = self.serving_hosts(cluster)
+        if len(hosts) < 2:
+            return                        # nothing to ship checkpoints to
+        head = hosts[0]
+
+        def run_round(h: "HostSim", r: int) -> None:
+            if r >= self.total_rounds:
+                return
+            direction = "read" if (self.read_back and r % 2 == 1) else "write"
+            h.log_event("ckpt_begin", round=r, dir=direction, shards=self.shards)
+            src, dst = ((head.name, h.name) if direction == "read"
+                        else (h.name, head.name))
+            pending = {"n": self.shards}
+
+            def shard_done(i: int) -> None:
+                kind = "ckpt_shard_read" if direction == "read" else "ckpt_shard_write"
+                h.log_event(kind, round=r, shard=i, bytes=self.shard_bytes)
+                pending["n"] -= 1
+                if pending["n"] == 0:
+                    h.log_event("ckpt_end", round=r, dir=direction)
+                    h.sim.after(self.gap_ps, lambda: run_round(h, r + 1))
+
+            for i in range(self.shards):
+                cluster.net.transfer(
+                    src, dst, self.shard_bytes,
+                    meta={"flow": f"ckpt.{h.name}.r{r}.s{i}"},
+                    on_delivered=lambda _t, i=i: shard_done(i),
+                )
+
+        for i, h in enumerate(hosts[1:], 1):
+            # stagger writer starts 1 us apart so round 0 of every writer
+            # doesn't land on the head's links at the same instant
+            h.sim.after(1_000_000 * i, lambda hh=h: run_round(hh, 0))

@@ -135,8 +135,8 @@ def small_sweep(tmp_path_factory):
 
 def test_sweep_parallel_equals_serial(small_sweep):
     spec, serial, parallel = small_sweep
-    assert [(c.scenario, c.seed) for c in serial.cells] == spec.cells()
-    assert [(c.scenario, c.seed) for c in parallel.cells] == spec.cells()
+    assert [(c.scenario, c.workload, c.seed) for c in serial.cells] == spec.cells()
+    assert [(c.scenario, c.workload, c.seed) for c in parallel.cells] == spec.cells()
     for cs, cp in zip(serial.cells, parallel.cells):
         with open(os.path.join(serial.outdir, cs.shard), "rb") as f:
             bytes_serial = f.read()
@@ -367,7 +367,7 @@ def _load_engine_bench():
 
 
 def _validate_bench_payload(payload):
-    assert payload["schema"] == "columbo.engine_bench/v2"
+    assert payload["schema"] == "columbo.engine_bench/v3"
     assert isinstance(payload["smoke"], bool)
     assert {"python", "platform"} <= set(payload["host"])
     k = payload["kernel"]
@@ -393,6 +393,17 @@ def _validate_bench_payload(payload):
         # except the per-writer "# columbo" headers parses into an event
         assert 0 < row["parsed_events"] < row["log_lines"]
         assert row["spans"] > 0
+    assert payload["workloads"], "needs at least one per-workload row"
+    workload_types = {r["workload"] for r in payload["workloads"]}
+    assert workload_types >= {"collective", "rpc", "storage", "pipeline"}
+    for row in payload["workloads"]:
+        assert {"workload", "pods", "chips", "unit", "units", "events",
+                "wall_s", "events_per_sec", "units_per_sec",
+                "virtual_s"} <= set(row)
+        assert row["events"] > 0 and row["events_per_sec"] > 0
+        assert row["units"] > 0 and row["units_per_sec"] > 0
+    rpc_rows = [r for r in payload["workloads"] if r["workload"] == "rpc"]
+    assert all(r["unit"] == "request" for r in rpc_rows)
     sw = payload["sweep"]
     assert sw["cells"] == len(sw["scenarios"]) * len(sw["seeds"])
     assert sw["wall_s_by_jobs"], "needs at least one --jobs timing"

@@ -1,0 +1,306 @@
+"""Pluggable workload layer: registry semantics, per-workload text-vs
+structured byte identity, workload x scenario reproducibility, the RPC
+one-root-span-per-request property, the ScenarioSpec.run kwargs contract,
+and the sweep's workload axis.
+"""
+import os
+import re
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.analysis import (
+    request_latency_stats,
+    request_report,
+    rpc_requests,
+    slowest_request,
+)
+from repro.sim import (
+    CollectiveTraining,
+    RpcServing,
+    ScenarioSpec,
+    Workload,
+    get_scenario,
+    list_scenarios,
+    list_workloads,
+    make_workload,
+    register_workload,
+    rpc_handler_program,
+    workload_type,
+)
+from repro.sim.scenarios import SCENARIOS
+from repro.sim.sweep import SweepSpec, run_sweep
+from repro.sim.workloads.pipeline import split_stages
+from repro.sim.workload import synthetic_program
+
+WORKLOAD_SCENARIOS = ("rpc_tail_latency", "ckpt_slow_dcn", "pipeline_stall_host1")
+
+
+# ---------------------------------------------------------------------------
+# Registry semantics
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_workloads_registered():
+    assert set(list_workloads()) >= {"collective", "rpc", "storage", "pipeline"}
+    assert workload_type("rpc") is RpcServing
+    assert workload_type("collective") is CollectiveTraining
+
+
+def test_workload_type_unknown_name():
+    with pytest.raises(KeyError, match="unknown workload"):
+        workload_type("batch_inference")
+
+
+def test_register_workload_rejects_duplicates_and_anonymous():
+    with pytest.raises(ValueError, match="already registered"):
+        register_workload(RpcServing)
+
+    class NoName(Workload):
+        pass
+
+    with pytest.raises(ValueError, match="workload_name"):
+        register_workload(NoName)
+
+
+def test_make_workload_unknown_knob_raises_typeerror():
+    """Misspelled workload knobs must never be silently ignored."""
+    with pytest.raises(TypeError, match="rpc"):
+        make_workload("rpc", n_request=5)        # typo: n_requests
+    wl = make_workload("rpc", n_requests=5, arrival="closed")
+    assert wl.total_requests == 5
+
+
+def test_rpc_rejects_unknown_arrival_mode():
+    with pytest.raises(ValueError, match="arrival"):
+        RpcServing(arrival="batch")
+
+
+def test_scenario_run_rejects_unknown_kwargs():
+    """Bugfix contract: ScenarioSpec.run(unknown=...) raises TypeError
+    (extra kwargs are field overrides, never silently dropped)."""
+    spec = get_scenario("healthy_baseline")
+    with pytest.raises(TypeError, match="workloadz"):
+        spec.run(workloadz="rpc")
+    with pytest.raises(TypeError, match="n_podz"):
+        spec.run(n_podz=4)
+
+
+def test_scenario_run_field_overrides_apply():
+    run = get_scenario("healthy_baseline").run(
+        workload="rpc", workload_params=(("n_requests", 2),), structured=True
+    )
+    assert len(rpc_requests(run.spans)) == 2
+
+
+def test_scenario_make_workload_rejects_bad_params():
+    spec = ScenarioSpec(
+        name="x", description="", workload="rpc",
+        workload_params=(("n_request", 3),),
+    )
+    with pytest.raises(TypeError, match="rpc"):
+        spec.make_workload()
+
+
+# ---------------------------------------------------------------------------
+# Per-workload byte identity + reproducibility across workload x scenario
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", WORKLOAD_SCENARIOS)
+def test_workload_scenarios_structured_equals_text(name):
+    """Every workload-pinned library scenario weaves byte-identically on
+    the text and zero-parse structured paths."""
+    spec = get_scenario(name)
+    assert spec.run(seed=9).span_jsonl == spec.run(seed=9, structured=True).span_jsonl
+
+
+@pytest.mark.parametrize(
+    "workload,scenario",
+    [
+        ("rpc", "degraded_ici_link"),
+        ("rpc", "gc_pause_host0"),
+        ("storage", "lossy_dcn"),
+        ("pipeline", "throttled_chip"),
+        ("collective", "rpc_tail_latency"),   # axis override in reverse, too
+    ],
+)
+def test_workload_scenario_cells_reproduce_and_match_structured(workload, scenario):
+    """Same seed -> byte-identical SpanJSONL for arbitrary workload x
+    scenario cells, on both paths; a different seed changes the trace."""
+    spec = get_scenario(scenario)
+    a = spec.run(seed=3, workload=workload)
+    b = spec.run(seed=3, workload=workload)
+    c = spec.run(seed=3, workload=workload, structured=True)
+    assert a.span_jsonl == b.span_jsonl == c.span_jsonl
+    assert a.span_jsonl        # produced something
+
+
+def test_rpc_different_seed_changes_arrivals():
+    spec = get_scenario("rpc_tail_latency")
+    assert spec.run(seed=0).span_jsonl != spec.run(seed=1).span_jsonl
+
+
+def test_workload_faults_compose():
+    """All-fault-classes-compose spot checks: host_pause drains at an RPC
+    subrequest boundary, device_slowdown shows under pipeline load."""
+    run = get_scenario("gc_pause_host0").run(workload="rpc", structured=True)
+    assert "host_pause" in run.detected
+    run = get_scenario("throttled_chip").run(workload="pipeline", structured=True)
+    assert "device_slowdown" in run.detected
+
+
+# ---------------------------------------------------------------------------
+# RPC: every request id in any log appears as exactly one root span
+# ---------------------------------------------------------------------------
+
+
+def _rids_in_logs(cluster) -> set:
+    """Request ids appearing anywhere in the simulator logs (text files,
+    in-memory lines, or the structured capture rendered back to text)."""
+    rids = set()
+    pat = re.compile(r"\brid=(\S+)")
+    for lw in cluster._logs:
+        if lw.structured:
+            lines = lw.render_lines()
+        elif lw.path is not None:
+            with open(lw.path) as f:
+                lines = f.read().splitlines()
+        else:
+            lines = lw.lines
+        for line in lines:
+            rids.update(pat.findall(line))
+    return rids
+
+
+def test_every_rpc_request_id_has_exactly_one_root_span(tmp_path):
+    run = get_scenario("rpc_tail_latency").run(outdir=str(tmp_path / "logs"))
+    rids = _rids_in_logs(run.cluster)
+    assert rids, "rpc scenario logged no request ids"
+    roots = [s for s in run.spans if s.name == "RpcRequest"]
+    assert all(s.parent is None for s in roots)
+    by_rid = {}
+    for s in roots:
+        by_rid.setdefault(s.attrs.get("rid"), []).append(s)
+    assert set(by_rid) == rids
+    assert all(len(v) == 1 for v in by_rid.values())
+
+
+@given(
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+    arrival=st.sampled_from(["open", "closed"]),
+)
+@settings(max_examples=6, deadline=None)
+def test_rpc_root_span_property_any_seed(seed, arrival):
+    """Property: for any seed and arrival mode, every rid in the
+    (structured) logs weaves into exactly one parentless RpcRequest span."""
+    spec = ScenarioSpec(
+        name="rpc_prop",
+        description="rpc root-span property probe",
+        workload="rpc",
+        workload_params=(("n_requests", 5), ("arrival", arrival)),
+        program=rpc_handler_program,
+        chips_per_pod=2,
+        clock_reads=4,
+    )
+    run = spec.run(seed=seed, structured=True)
+    rids = _rids_in_logs(run.cluster)
+    roots = [s for s in run.spans if s.name == "RpcRequest"]
+    assert sorted(s.attrs.get("rid") for s in roots) == sorted(rids)
+    assert len(roots) == 5 and all(s.parent is None for s in roots)
+
+
+# ---------------------------------------------------------------------------
+# Per-request analysis
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def rpc_run():
+    return get_scenario("rpc_tail_latency").run(structured=True)
+
+
+def test_request_latency_stats_and_slowest(rpc_run):
+    stats = request_latency_stats(rpc_run.spans)
+    assert stats["n"] == 10
+    assert 0 < stats["p50"] <= stats["p90"] <= stats["p99"] <= stats["max"]
+    trace = slowest_request(rpc_run.spans)
+    root = rpc_requests(trace.spans)[0]
+    assert root.duration / 1e6 == pytest.approx(stats["max"], rel=1e-9)
+    # the tree spans all three simulator types (host -> device -> net)
+    assert {s.sim_type for s in trace.spans} == {"host", "device", "net"}
+
+
+def test_request_report_names_degraded_link(rpc_run):
+    """Acceptance: diagnose() on the slowest request's own trace names the
+    degraded link."""
+    report = request_report(rpc_run.spans)
+    assert "slowest request" in report
+    assert "link_degradation" in report and "ici.pod0.l1" in report
+
+
+def test_request_report_without_requests():
+    assert "no RpcRequest spans" in request_report([])
+
+
+# ---------------------------------------------------------------------------
+# Sweep workload axis
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_workload_axis(tmp_path):
+    spec = SweepSpec(
+        scenarios=("degraded_ici_link",),
+        seeds=(0,),
+        workloads=("collective", "rpc"),
+        chips_per_pod=2,
+    )
+    assert spec.cells() == [
+        ("degraded_ici_link", "collective", 0), ("degraded_ici_link", "rpc", 0),
+    ]
+    result = run_sweep(spec, str(tmp_path), jobs=1, structured=True)
+    assert [c.workload for c in result.cells] == ["collective", "rpc"]
+    shards = [c.shard for c in result.cells]
+    assert shards == [
+        os.path.join("shards", "degraded_ici_link.collective.seed0.spans.jsonl"),
+        os.path.join("shards", "degraded_ici_link.rpc.seed0.spans.jsonl"),
+    ]
+    agg = result.aggregate()
+    assert len(result.cells[1].stats.request_us) > 0
+    assert agg.request_latency["n"] == len(result.cells[1].stats.request_us)
+    assert "request latency" in agg.report()
+    # default-workload sweeps keep their pre-axis shard names
+    legacy = SweepSpec(scenarios=("healthy_baseline",), seeds=(1,))
+    r2 = run_sweep(legacy, str(tmp_path / "legacy"), jobs=1, structured=True)
+    assert r2.cells[0].shard == os.path.join(
+        "shards", "healthy_baseline.seed1.spans.jsonl"
+    )
+
+
+def test_list_scenarios_workload_filter():
+    assert list_scenarios("rpc") == ["rpc_tail_latency"]
+    assert "healthy_baseline" in list_scenarios("collective")
+    assert set(list_scenarios()) == set(SCENARIOS)
+
+
+# ---------------------------------------------------------------------------
+# Stage splitting (pipeline)
+# ---------------------------------------------------------------------------
+
+
+def test_split_stages_rehomes_dcn_and_names_stages():
+    prog = synthetic_program(n_layers=3, cross_pod=True)
+    stages = split_stages(prog, 3)
+    assert [s.name for s in stages] == [
+        "train_step.stage0", "train_step.stage1", "train_step.stage2",
+    ]
+    all_ops = [o for s in stages for o in s.ops]
+    assert len(all_ops) == len(prog.ops)
+    assert all(o.group == "ici" for o in all_ops)   # dcn grad.ar re-homed
+
+
+def test_split_stages_more_stages_than_ops():
+    prog = synthetic_program(n_layers=1)
+    stages = split_stages(prog, 8)
+    assert sum(len(s.ops) for s in stages) == len(prog.ops)
