@@ -1,6 +1,6 @@
 """Engine performance benchmark — the repo's perf baseline (BENCH_engine.json).
 
-Four measurements, smallest to largest scope:
+Six measurements, smallest to largest scope:
 
 * ``kernel``    — raw DES dispatch rate: events/sec through a bare
                   :class:`repro.sim.engine.EventKernel` (256 interleaved
@@ -22,10 +22,18 @@ Four measurements, smallest to largest scope:
                   for ``rpc``, steps/s, checkpoint rounds/s, microbatches/s)
                   — the perf trajectory of the pluggable workload layer's
                   hot paths (``sim/workload.py`` + ``sim/workloads/``).
+* ``mitigations`` — per-policy kernel overhead on the shared mitigation
+                  scenario (``link_loss_rpc``): events/sec with each
+                  registered remediation policy attached vs an
+                  ``unmitigated`` reference that skips the attach
+                  entirely; ``do_nothing`` is asserted to stay within 10%
+                  of the unmitigated rate (the subsystem must be free when
+                  nothing fires).
 * ``sweep``     — end-to-end ``(scenario, seed)`` sweep wall-time at
-                  ``--jobs 1/4/8`` (simulate + weave + diagnose + shards).
+                  ``--jobs 1/4/8`` (simulate + weave + diagnose + shards),
+                  now served by the persistent warm worker pool.
 
-Results land in ``BENCH_engine.json`` (schema ``columbo.engine_bench/v3``,
+Results land in ``BENCH_engine.json`` (schema ``columbo.engine_bench/v4``,
 validated in ``tests/test_sweep.py``); the recorded baseline and the exact
 reproduction commands live in ``docs/performance.md``.
 
@@ -43,7 +51,7 @@ import sys
 import tempfile
 import time
 
-SCHEMA = "columbo.engine_bench/v3"
+SCHEMA = "columbo.engine_bench/v4"
 
 SMOKE_TOPOLOGY_PODS = (4, 8)
 FULL_TOPOLOGY_PODS = (8, 64, 256)
@@ -51,6 +59,9 @@ SMOKE_PIPELINE_PODS = (8,)
 FULL_PIPELINE_PODS = (8, 64, 256)
 SMOKE_WORKLOAD_PODS = (8,)
 FULL_WORKLOAD_PODS = (8, 64, 256)
+SMOKE_MITIGATION_PODS = 4
+FULL_MITIGATION_PODS = 128
+MITIGATION_SCENARIO = "link_loss_rpc"
 
 STAGES = ("simulate", "format", "parse", "weave", "export", "analyze")
 
@@ -349,6 +360,81 @@ def bench_workloads(pods_list=FULL_WORKLOAD_PODS, chips_per_pod: int = 2) -> lis
     return rows
 
 
+def bench_mitigations(pods: int = FULL_MITIGATION_PODS, trials: int = 5) -> dict:
+    """Per-policy kernel overhead on the shared mitigation scenario.
+
+    One row per registered remediation policy: full-system events/sec on
+    ``link_loss_rpc`` (structured sink, in-memory) with that policy
+    attached, plus an ``unmitigated`` reference that runs the same faults
+    and workload with no policy attached at all (pre-subsystem behavior).
+    ``do_nothing`` must execute exactly the unmitigated event count and
+    stay within 10% of its wall — the subsystem's cost when nothing fires
+    has to be noise.  Walls are best-of-``trials`` with the configurations
+    *interleaved* (round-robin: every config once per round), so a
+    transient load spike hits all rows alike instead of skewing one
+    overhead ratio (same minimum-is-the-real-cost rule as
+    ``bench_pipeline``)."""
+    from dataclasses import replace
+
+    from repro.sim.cluster import ClusterOrchestrator
+    from repro.sim.mitigation import list_mitigations
+    from repro.sim.scenarios import get_scenario
+    from repro.sim.topology import scale as scale_topo
+
+    spec = replace(get_scenario(MITIGATION_SCENARIO), n_pods=pods)
+
+    def _sim(policy):
+        gc.collect()
+        t0 = time.perf_counter()
+        topo = scale_topo(pods=spec.n_pods, chips_per_pod=spec.chips_per_pod,
+                          fabric=spec.fabric)
+        cluster = ClusterOrchestrator(topo, outdir=None, structured=True)
+        spec.fault_plan(0).schedule(cluster)
+        if policy is not None:
+            replace(spec, mitigation=policy,
+                    mitigation_params=()).make_mitigation(seed=0).attach(cluster)
+        spec.make_workload(seed=0).drive(cluster)
+        cluster.run()
+        return cluster.sim.events_executed, time.perf_counter() - t0
+
+    configs = [None] + list(list_mitigations())
+    best = {c: (0, None) for c in configs}
+    for _ in range(trials):
+        for cfg in configs:
+            events, wall = _sim(cfg)
+            prev = best[cfg][1]
+            best[cfg] = (events, wall if prev is None else min(prev, wall))
+
+    ref_events, ref_wall = best[None]
+    rows = [{
+        "policy": "unmitigated",
+        "events": ref_events,
+        "wall_s": round(ref_wall, 4),
+        "events_per_sec": round(ref_events / ref_wall) if ref_wall else 0,
+        "overhead_vs_unmitigated": 1.0,
+    }]
+    for name in configs[1:]:
+        events, wall = best[name]
+        overhead = round(wall / ref_wall, 3) if ref_wall else 0
+        rows.append({
+            "policy": name,
+            "events": events,
+            "wall_s": round(wall, 4),
+            "events_per_sec": round(events / wall) if wall else 0,
+            "overhead_vs_unmitigated": overhead,
+        })
+        if name == "do_nothing":
+            assert events == ref_events, (
+                f"do_nothing executed {events} kernel events vs "
+                f"{ref_events} unmitigated — the baseline must be inert"
+            )
+            assert wall <= 1.10 * ref_wall, (
+                f"do_nothing wall {wall:.4f}s exceeds 110% of the "
+                f"unmitigated {ref_wall:.4f}s"
+            )
+    return {"scenario": MITIGATION_SCENARIO, "pods": pods, "rows": rows}
+
+
 def bench_sweep(jobs_list=(1, 4, 8), scenarios=None, seeds=(0, 1, 2, 3),
                 **overrides) -> dict:
     """End-to-end sweep wall-time per ``--jobs`` setting (same grid each
@@ -390,6 +476,7 @@ def collect(smoke: bool = False, jobs_list=(1, 4, 8)) -> dict:
         topo = bench_topology(SMOKE_TOPOLOGY_PODS)
         pipeline = bench_pipeline(SMOKE_PIPELINE_PODS)
         workloads = bench_workloads(SMOKE_WORKLOAD_PODS)
+        mitigations = bench_mitigations(SMOKE_MITIGATION_PODS, trials=1)
         sweep = bench_sweep(jobs_list=(1, 2),
                             scenarios=("healthy_baseline", "throttled_chip"),
                             seeds=(0,))
@@ -401,6 +488,8 @@ def collect(smoke: bool = False, jobs_list=(1, 4, 8)) -> dict:
         pipeline = bench_pipeline()
         gc.collect()
         workloads = bench_workloads()
+        gc.collect()
+        mitigations = bench_mitigations()
         gc.collect()
         sweep = bench_sweep(jobs_list=jobs_list, n_pods=4, n_steps=3)
     return {
@@ -414,6 +503,7 @@ def collect(smoke: bool = False, jobs_list=(1, 4, 8)) -> dict:
         "topology_scaling": topo,
         "pipeline": pipeline,
         "workloads": workloads,
+        "mitigations": mitigations,
         "sweep": sweep,
     }
 
@@ -437,6 +527,11 @@ def run():
                row["wall_s"] * 1e6,
                f"{row['events_per_sec']}ev/s "
                f"{row['units_per_sec']}{row['unit']}/s")
+    for row in payload["mitigations"]["rows"]:
+        yield (f"engine.mitigation.{row['policy']}",
+               row["wall_s"] * 1e6,
+               f"{row['events_per_sec']}ev/s "
+               f"{row['overhead_vs_unmitigated']}x")
     for jobs, wall in payload["sweep"]["wall_s_by_jobs"].items():
         yield (f"engine.sweep.jobs{jobs}", wall * 1e6,
                f"{payload['sweep']['cells']}cells")
@@ -478,6 +573,13 @@ def main() -> None:
               f"{row['events']:>9,} events in {row['wall_s']:>7.3f}s "
               f"-> {row['events_per_sec']:,} ev/s, "
               f"{row['units_per_sec']} {row['unit']}/s")
+    mit = payload["mitigations"]
+    for row in mit["rows"]:
+        print(f"[engine_bench] mitigation {row['policy']:<20s} "
+              f"({mit['scenario']}, pods={mit['pods']}) "
+              f"{row['events']:>8,} events in {row['wall_s']:>7.4f}s "
+              f"-> {row['events_per_sec']:,} ev/s "
+              f"({row['overhead_vs_unmitigated']}x unmitigated)")
     for jobs, wall in payload["sweep"]["wall_s_by_jobs"].items():
         print(f"[engine_bench] sweep jobs={jobs}: {wall}s "
               f"({payload['sweep']['cells']} cells)")

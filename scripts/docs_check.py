@@ -21,8 +21,9 @@ Four failure classes, all cheap and deterministic:
    legitimately reference runtime artifacts (log files, clusters).
 
 4. **Docstring coverage**: every public top-level function and class in
-   ``src/repro/sim`` (including the ``sim/workloads`` package) and
-   ``src/repro/core`` (the documented API surface) must carry a docstring.
+   ``src/repro/sim`` (including the ``sim/workloads`` and
+   ``sim/mitigations`` packages) and ``src/repro/core`` (the documented
+   API surface) must carry a docstring.
 """
 from __future__ import annotations
 
@@ -43,7 +44,8 @@ QUOTED_SYMBOL = re.compile(r"`([A-Za-z_][A-Za-z0-9_.]*)`")
 # backtick-quoted names it belongs to (roughly one doc bullet/sentence)
 ANCHOR_CONTEXT_CHARS = 250
 
-DOCSTRING_DIRS = ("src/repro/sim", "src/repro/sim/workloads", "src/repro/core")
+DOCSTRING_DIRS = ("src/repro/sim", "src/repro/sim/workloads",
+                  "src/repro/sim/mitigations", "src/repro/core")
 
 
 def _doc_files():

@@ -25,7 +25,8 @@ EXAMPLES_TMP="$(mktemp -d)"
 trap 'rm -rf "$EXAMPLES_TMP"' EXIT
 QUICKSTART_OUT="$EXAMPLES_TMP/quickstart" python examples/quickstart.py > /dev/null
 RPC_TRACE_OUT="$EXAMPLES_TMP/rpc_trace" python examples/rpc_request_trace.py > /dev/null
-echo "[tier1] examples smoke: quickstart.py + rpc_request_trace.py OK"
+python examples/mitigation_comparison.py --seeds 1 > /dev/null
+echo "[tier1] examples smoke: quickstart.py + rpc_request_trace.py + mitigation_comparison.py OK"
 
 # engine perf harness pre-flight: tiny sizes, validates that the bench
 # itself still runs end to end (schema is asserted in tests/test_sweep.py)

@@ -11,7 +11,10 @@ framework exposes as telemetry:
 * straggler detection across per-chip/per-pod spans (k·MAD outliers);
 * ``aggregate()`` — fleet-level statistics over *many* runs (sweep cells):
   per-component latency percentiles, per-fault-class detection and
-  false-positive rates, critical-path frequency tables.
+  false-positive rates, critical-path frequency tables;
+* ``score_mitigations()`` — remediation policies competing on the same
+  fault trace: per-policy request-tail percentiles, detection-to-mitigation
+  latency, and capacity penalty vs the ``do_nothing`` baseline.
 """
 from __future__ import annotations
 
@@ -286,14 +289,17 @@ def rpc_requests(spans: Iterable[Span]) -> List[Span]:
 
 
 def request_latency_stats(spans: Iterable[Span]) -> Dict[str, float]:
-    """End-to-end request latency percentiles in µs (p50/p90/p99/max over
-    ``RpcRequest`` span durations; zeros when the trace has no requests)."""
+    """End-to-end request latency percentiles in µs (p50/p90/p99/p99.9/max
+    over ``RpcRequest`` span durations; zeros when the trace has no
+    requests).  p99.9 is the mitigation scoreboard's headline metric —
+    loss/stall faults live in the extreme tail."""
     lats = [s.duration / PS_PER_US for s in spans if s.name == "RpcRequest"]
     if not lats:
-        return {"n": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0, "max": 0.0}
-    p50, p90, p99 = percentiles(lats, (50, 90, 99))
+        return {"n": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0, "p99.9": 0.0,
+                "max": 0.0}
+    p50, p90, p99, p999 = percentiles(lats, (50, 90, 99, 99.9))
     return {"n": float(len(lats)), "p50": p50, "p90": p90, "p99": p99,
-            "max": max(lats)}
+            "p99.9": p999, "max": max(lats)}
 
 
 def slowest_request(spans: Sequence[Span]) -> Optional[Trace]:
@@ -712,6 +718,9 @@ class RunStats:
     component_us: Dict[str, List[float]] = field(default_factory=dict)
     critical_components: List[str] = field(default_factory=list)
     request_us: List[float] = field(default_factory=list)   # RpcRequest latencies
+    mitigation: str = ""               # policy name ("" = unmitigated/baseline)
+    mitigation_us: List[float] = field(default_factory=list)  # trigger->done (µs)
+    capacity_penalty: float = 0.0      # summed penalty attrs of Mitigation spans
 
     @property
     def ok(self) -> bool:
@@ -731,12 +740,15 @@ class RunStats:
         detected: Optional[Sequence[str]] = None,
         wall_s: float = 0.0,
         events: int = 0,
+        mitigation: str = "",
     ) -> "RunStats":
         """Reduce woven spans (``detected=None`` runs :func:`diagnose`)."""
         if detected is None:
             detected = diagnose(spans).fault_classes
         comp: Dict[str, List[float]] = defaultdict(list)
         request_us: List[float] = []
+        mitigation_us: List[float] = []
+        capacity_penalty = 0.0
         for s in spans:
             # 1 ps floor matches what SpanJSONLExporter publishes, so stats
             # built from live spans and from shard files agree exactly
@@ -744,6 +756,14 @@ class RunStats:
             comp[f"{s.sim_type}:{s.component}"].append(us)
             if s.name == "RpcRequest":
                 request_us.append(us)
+            elif s.name == "Mitigation":
+                # trigger->done = the policy's detection-to-mitigation
+                # latency; its penalty attr is the capacity it gave up
+                mitigation_us.append(us)
+                try:
+                    capacity_penalty += float(s.attrs.get("penalty", 0.0))
+                except (TypeError, ValueError):
+                    pass
         return cls(
             scenario=scenario,
             seed=seed,
@@ -755,6 +775,9 @@ class RunStats:
             component_us=dict(comp),
             critical_components=list(_critical_path_components(spans).values()),
             request_us=request_us,
+            mitigation=mitigation,
+            mitigation_us=mitigation_us,
+            capacity_penalty=capacity_penalty,
         )
 
     @classmethod
@@ -807,6 +830,9 @@ class RunStats:
             "component_us": self.component_us,
             "critical_components": self.critical_components,
             "request_us": self.request_us,
+            "mitigation": self.mitigation,
+            "mitigation_us": self.mitigation_us,
+            "capacity_penalty": self.capacity_penalty,
         }
 
     @classmethod
@@ -823,6 +849,10 @@ class RunStats:
             component_us={k: list(v) for k, v in d.get("component_us", {}).items()},
             critical_components=list(d.get("critical_components", ())),
             request_us=list(d.get("request_us", ())),
+            # absent in schema-v2 sweep payloads: default = unmitigated
+            mitigation=str(d.get("mitigation", "")),
+            mitigation_us=list(d.get("mitigation_us", ())),
+            capacity_penalty=float(d.get("capacity_penalty", 0.0)),
         )
 
 
@@ -974,9 +1004,9 @@ def aggregate(runs: Iterable[RunStats]) -> AggregateReport:
     req = [x for r in runs for x in r.request_us]
     request_latency: Dict[str, float] = {}
     if req:
-        p50, p90, p99 = percentiles(req, (50, 90, 99))
+        p50, p90, p99, p999 = percentiles(req, (50, 90, 99, 99.9))
         request_latency = {"n": float(len(req)), "p50": p50, "p90": p90,
-                           "p99": p99, "max": max(req)}
+                           "p99": p99, "p99.9": p999, "max": max(req)}
     scenarios: List[str] = []
     for r in runs:
         if r.scenario not in scenarios:
@@ -992,3 +1022,142 @@ def aggregate(runs: Iterable[RunStats]) -> AggregateReport:
         events_total=sum(r.events for r in runs),
         request_latency=request_latency,
     )
+
+
+# ---------------------------------------------------------------------------
+# score_mitigations(): remediation policies competing on the same fault trace
+# ---------------------------------------------------------------------------
+#
+# The mitigation engine's analysis half (sim/mitigation.py is the acting
+# half).  A sweep with a ``mitigations`` axis runs the same scenario x seed
+# cells once per policy; this rollup groups the resulting RunStats by
+# policy and answers the operator's question — which remediation actually
+# helps, how fast it kicked in, and what capacity it paid — always relative
+# to the ``do_nothing`` baseline (byte-identical to an unmitigated run).
+
+
+@dataclass
+class MitigationScore:
+    """One policy's scorecard across its runs of a mitigation sweep."""
+
+    mitigation: str
+    n_runs: int
+    request_latency: Dict[str, float]      # pooled n/p50/p99/p99.9/max (µs)
+    triggers: int                          # Mitigation spans across runs
+    mitigation_us: Dict[str, float]        # mean/max detection->mitigation
+    capacity_penalty: float                # mean per-run summed penalty
+    p999_vs_baseline: Optional[float] = None   # p99.9 ratio (active/baseline)
+    beats_baseline: Optional[bool] = None      # p99.9 strictly better?
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-serializable form (mitigations.json scoreboard rows)."""
+        return {
+            "mitigation": self.mitigation,
+            "n_runs": self.n_runs,
+            "request_latency": self.request_latency,
+            "triggers": self.triggers,
+            "mitigation_us": self.mitigation_us,
+            "capacity_penalty": self.capacity_penalty,
+            "p999_vs_baseline": self.p999_vs_baseline,
+            "beats_baseline": self.beats_baseline,
+        }
+
+
+@dataclass
+class MitigationScoreboard:
+    """:func:`score_mitigations` output: one scorecard per policy."""
+
+    baseline: str
+    scores: List[MitigationScore] = field(default_factory=list)
+
+    def __getitem__(self, mitigation: str) -> MitigationScore:
+        for s in self.scores:
+            if s.mitigation == mitigation:
+                return s
+        raise KeyError(
+            f"no scorecard for mitigation {mitigation!r}; have: "
+            f"{[s.mitigation for s in self.scores]}"
+        )
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-serializable form."""
+        return {
+            "baseline": self.baseline,
+            "scores": [s.to_dict() for s in self.scores],
+        }
+
+    def report(self) -> str:
+        """Human-readable scoreboard (the sweep CLI prints this)."""
+        lines = [
+            f"mitigation scoreboard (baseline: {self.baseline}; request "
+            f"latency in us, vs-base = p99.9 ratio):",
+            f"    {'policy':22s} {'runs':>4s} {'p50':>9s} {'p99':>9s} "
+            f"{'p99.9':>9s} {'vs-base':>8s} {'penalty':>8s} "
+            f"{'trig':>4s} {'det->mit':>9s}",
+        ]
+        for s in self.scores:
+            rl = s.request_latency
+            vs = "-" if s.p999_vs_baseline is None else f"{s.p999_vs_baseline:.2f}x"
+            mit = ("-" if not s.mitigation_us
+                   else f"{s.mitigation_us['mean_us']:.0f}us")
+            lines.append(
+                f"    {s.mitigation:22s} {s.n_runs:4d} "
+                f"{rl.get('p50', 0.0):9.0f} {rl.get('p99', 0.0):9.0f} "
+                f"{rl.get('p99.9', 0.0):9.0f} {vs:>8s} "
+                f"{s.capacity_penalty:8.4f} {s.triggers:4d} {mit:>9s}"
+            )
+        winners = [
+            s.mitigation for s in self.scores if s.beats_baseline
+        ]
+        if winners:
+            lines.append(f"    -> beats {self.baseline} on p99.9: {', '.join(winners)}")
+        return "\n".join(lines)
+
+
+def score_mitigations(
+    runs: Iterable[RunStats], baseline: str = "do_nothing"
+) -> MitigationScoreboard:
+    """Group runs by mitigation policy and score each against ``baseline``.
+
+    Per policy: pooled request-latency percentiles (p50/p99/p99.9/max),
+    trigger count and mean/max detection-to-mitigation latency (the
+    ``Mitigation`` span durations), mean capacity penalty per run, and —
+    for active policies — the p99.9 ratio vs the baseline group.  Runs with
+    an empty ``mitigation`` tag count as the baseline (pre-mitigation-era
+    shards re-aggregate cleanly)."""
+    groups: Dict[str, List[RunStats]] = {}
+    for r in runs:
+        groups.setdefault(r.mitigation or baseline, []).append(r)
+    base_req = [x for r in groups.get(baseline, []) for x in r.request_us]
+    base_p999 = percentiles(base_req, (99.9,))[0] if base_req else None
+    names = sorted(groups, key=lambda n: (n != baseline, n))  # baseline first
+    scores: List[MitigationScore] = []
+    for name in names:
+        rs = groups[name]
+        req = [x for r in rs for x in r.request_us]
+        rl: Dict[str, float] = {}
+        if req:
+            p50, p99, p999 = percentiles(req, (50, 99, 99.9))
+            rl = {"n": float(len(req)), "p50": p50, "p99": p99,
+                  "p99.9": p999, "max": max(req)}
+        mit = [x for r in rs for x in r.mitigation_us]
+        mit_stats: Dict[str, float] = {}
+        if mit:
+            mit_stats = {"mean_us": sum(mit) / len(mit), "max_us": max(mit)}
+        penalty = sum(r.capacity_penalty for r in rs) / len(rs) if rs else 0.0
+        ratio: Optional[float] = None
+        beats: Optional[bool] = None
+        if name != baseline and base_p999 and rl:
+            ratio = rl["p99.9"] / base_p999
+            beats = rl["p99.9"] < base_p999
+        scores.append(MitigationScore(
+            mitigation=name,
+            n_runs=len(rs),
+            request_latency=rl,
+            triggers=len(mit),
+            mitigation_us=mit_stats,
+            capacity_penalty=penalty,
+            p999_vs_baseline=ratio,
+            beats_baseline=beats,
+        ))
+    return MitigationScoreboard(baseline=baseline, scores=scores)

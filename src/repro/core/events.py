@@ -330,6 +330,60 @@ class RpcDone(Event):
     kind: ClassVar[str] = "rpc_done"
 
 
+# -- mitigation engine (sim/mitigation.py): remediation trigger/action/done --
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class MitigationTrigger(Event):
+    """A mitigation policy's trigger loop fired: the watched telemetry
+    (``signal``) crossed its threshold for ``target``.  Opens the policy's
+    ``Mitigation`` span."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "mitigation_trigger"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class MitigationAction(Event):
+    """A remediation action taken by a triggered policy (reroute, evict,
+    rollback, ...); ``penalty`` records the capacity cost it pays."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "mitigation_action"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class MitigationDone(Event):
+    """The policy's remediation completed; closes its ``Mitigation`` span
+    (trigger→done duration is the detection-to-mitigation latency
+    ``score_mitigations`` reports)."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "mitigation_done"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class RetransmitBegin(Event):
+    """Loss-protection resend of a dropped chunk starts (``retransmit``
+    policy); opens a ``Retransmit`` span under the policy's span."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "retransmit_begin"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class RetransmitEnd(Event):
+    """The resent chunk was delivered; closes its ``Retransmit`` span."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "retransmit_end"
+
+
 # -- pipelined-training workload (sim/workloads/pipeline.py) ----------------
 
 

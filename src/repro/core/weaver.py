@@ -132,6 +132,7 @@ class HostSpanWeaver(SpanWeaver):
     span_types = (
         "HostStep", "DataLoad", "H2DTransfer", "Dispatch", "Checkpoint",
         "NtpSync", "HostTimeline", "RpcRequest", "RpcCall", "RpcWork",
+        "Mitigation", "Retransmit",
     )
 
     def __init__(self, registry: ContextRegistry, poll_timeout: float = 0.0) -> None:
@@ -145,6 +146,9 @@ class HostSpanWeaver(SpanWeaver):
         self._rpc_req: Dict[Any, SpanBuilder] = {}    # (host, rid) -> RpcRequest
         self._rpc_call: Dict[Any, SpanBuilder] = {}   # (host, sub) -> RpcCall
         self._rpc_work: Dict[str, SpanBuilder] = {}   # host -> open RpcWork
+        self._mitigation: Dict[Any, SpanBuilder] = {}   # (host, policy) -> open
+        self._mitigation_ctx: Dict[Any, SpanContext] = {}  # last span per key
+        self._retransmit: Dict[Any, SpanBuilder] = {}   # (host, chunk) -> open
 
     # one trace per training step, shared by all hosts: first host to begin
     # the step allocates, the rest adopt (atomic get-or-create on the registry)
@@ -347,6 +351,49 @@ class HostSpanWeaver(SpanWeaver):
             b.span.attrs.update(ev.attrs)
             self.emit(b.finish(ev.ts))
 
+    # -- mitigation engine: remediation subtrees ------------------------------
+    #
+    # mitigation_trigger opens a Mitigation span keyed (host, policy); it
+    # roots its own trace (a remediation is its own unit of work — sweeps
+    # compare them across runs).  mitigation_action lands inside it as a
+    # span event and folds the action/penalty into the span attrs (what
+    # score_mitigations reads); mitigation_done closes it — trigger→done is
+    # the detection-to-mitigation latency.  retransmit_begin/_end weave
+    # Retransmit child spans (the `retransmit` policy's per-chunk resends),
+    # parented under the policy's Mitigation span even after it closed.
+
+    def _on_mitigation_trigger(self, ev: Event) -> None:
+        b = self._begin("Mitigation", ev, new_trace_id(), None, dict(ev.attrs))
+        key = (ev.source, ev.attrs.get("policy"))
+        self._mitigation[key] = b
+        self._mitigation_ctx[key] = b.context
+
+    def _on_mitigation_action(self, ev: Event) -> None:
+        b = self._mitigation.get((ev.source, ev.attrs.get("policy")))
+        if b is None:
+            self._cur_or_timeline(ev).span.add_event(ev.ts, "mitigation_action", ev.attrs)
+            return
+        b.span.add_event(ev.ts, "mitigation_action", ev.attrs)
+        for k in ("action", "target", "penalty"):
+            if k in ev.attrs:
+                b.span.attrs[k] = ev.attrs[k]
+
+    def _on_mitigation_done(self, ev: Event) -> None:
+        b = self._mitigation.pop((ev.source, ev.attrs.get("policy")), None)
+        if b is not None:
+            self.emit(b.finish(ev.ts))
+
+    def _on_retransmit_begin(self, ev: Event) -> None:
+        ctx = self._mitigation_ctx.get((ev.source, ev.attrs.get("policy")))
+        tid = ctx.trace_id if ctx else new_trace_id()
+        b = self._begin("Retransmit", ev, tid, ctx, dict(ev.attrs))
+        self._retransmit[(ev.source, ev.attrs.get("chunk"))] = b
+
+    def _on_retransmit_end(self, ev: Event) -> None:
+        b = self._retransmit.pop((ev.source, ev.attrs.get("chunk")), None)
+        if b is not None:
+            self.emit(b.finish(ev.ts))
+
     # -- pipelined-training workload: inter-stage activation hand-off ---------
 
     def _on_pipe_send(self, ev: Event) -> None:
@@ -364,7 +411,8 @@ class HostSpanWeaver(SpanWeaver):
             self.emit(b.finish(last))
         self._timeline.clear()
         for d in (self._step, self._load, self._ckpt, self._rpc_req,
-                  self._rpc_call, self._rpc_work):
+                  self._rpc_call, self._rpc_work, self._mitigation,
+                  self._retransmit):
             for b in d.values():
                 b.span.attrs["unclosed"] = True
                 self.emit(b.finish(b.span.start))

@@ -18,6 +18,15 @@ pipeline):
 ``python -m repro.launch.trace --scenario degraded_ici_link --workload rpc``
 ``python -m repro.launch.trace --list-scenarios [--workload rpc]``
 
+Mitigation policies (sim/mitigation.py) attach to the same fault trace and
+compete against the ``do_nothing`` baseline; ``--mitigations`` fans them out
+as a sweep axis and prints the ``score_mitigations()`` scoreboard:
+
+``python -m repro.launch.trace --scenario link_loss_rpc --mitigation retransmit``
+``python -m repro.launch.trace --scenario 'link_loss_*' --sweep \\
+     --mitigations do_nothing,retransmit,disable_and_reroute``
+``python -m repro.launch.trace --list-mitigations``
+
 Fleet sweeps (sim/sweep.py) fan (scenario, seed) cells over worker
 processes, stream per-cell SpanJSONL shards, and print the aggregate
 report (detection rates, latency percentiles, critical-path frequency):
@@ -34,6 +43,7 @@ formatted or re-parsed).  Output bytes are identical — only faster:
 ``python -m repro.launch.trace --sweep --jobs 8 --structured``
 """
 import argparse
+import fnmatch
 import json
 import os
 
@@ -46,12 +56,29 @@ def _parse_seeds(text: str):
     return tuple(int(s) for s in text.split(",") if s.strip())
 
 
+def _expand_scenarios(patterns: str):
+    """Comma list of scenario names/globs -> matching library names."""
+    from ..sim.scenarios import SCENARIOS
+
+    names = []
+    for pat in (p.strip() for p in patterns.split(",")):
+        if not pat:
+            continue
+        hits = [n for n in SCENARIOS if fnmatch.fnmatch(n, pat)]
+        if not hits:
+            raise SystemExit(f"no scenario matches {pat!r} "
+                             f"(see --list-scenarios)")
+        names.extend(n for n in hits if n not in names)
+    return tuple(names)
+
+
 def _run_sweep(args) -> None:
     from ..sim.sweep import SweepSpec, run_sweep
 
     scenarios = None
-    if args.scenarios:
-        scenarios = tuple(s.strip() for s in args.scenarios.split(",") if s.strip())
+    patterns = ",".join(p for p in (args.scenarios, args.scenario) if p)
+    if patterns:
+        scenarios = _expand_scenarios(patterns)
     seeds = _parse_seeds(args.seeds)
     overrides = {}
     if args.sweep_pods:
@@ -66,6 +93,12 @@ def _run_sweep(args) -> None:
         )
     elif args.workload:
         overrides["workloads"] = (args.workload,)
+    if args.mitigations:
+        overrides["mitigations"] = tuple(
+            m.strip() for m in args.mitigations.split(",") if m.strip()
+        )
+    elif args.mitigation:
+        overrides["mitigations"] = (args.mitigation,)
     if scenarios is None:
         spec = SweepSpec.library(seeds=seeds, **overrides)
     else:
@@ -77,6 +110,11 @@ def _run_sweep(args) -> None:
     agg_path = os.path.join(outdir, "aggregate.json")
     with open(agg_path, "w") as f:
         json.dump(agg.to_dict(), f, indent=1)
+    if spec.mitigations:
+        score_path = os.path.join(outdir, "mitigation_scores.json")
+        with open(score_path, "w") as f:
+            json.dump(result.score_mitigations().to_dict(), f, indent=1)
+        print(f"[sweep] mitigation scoreboard in {score_path}")
     print(f"[sweep] {len(result.cells)} shards in {outdir}/shards/, "
           f"summary in {outdir}/sweep.json, rollup in {agg_path}")
     if not result.ok:
@@ -91,8 +129,11 @@ def _run_scenario(args) -> None:
     spec = get_scenario(args.scenario)
     os.makedirs(args.outdir, exist_ok=True)
     tag = f".{args.workload}" if args.workload else ""
-    base = os.path.join(args.outdir, f"scenario.{spec.name}{tag}")
+    mit_tag = f".{args.mitigation}" if args.mitigation else ""
+    base = os.path.join(args.outdir, f"scenario.{spec.name}{tag}{mit_tag}")
     overrides = {"workload": args.workload} if args.workload else {}
+    if args.mitigation:
+        overrides["mitigation"] = args.mitigation
     run = spec.run(
         outdir=None if args.structured else base + ".logs",
         seed=args.seed,
@@ -132,6 +173,16 @@ def _list_scenarios(args) -> None:
         print(f"{name:24s} {spec.workload:10s} {expected:28s} {spec.description}")
 
 
+def _list_mitigations() -> None:
+    from ..sim.mitigation import list_mitigations, mitigation_type
+
+    print(f"{'mitigation':22s} {'masks':32s} description")
+    for name in list_mitigations():
+        cls = mitigation_type(name)
+        masks = ",".join(cls.masks) or "-"
+        print(f"{name:22s} {masks:32s} {cls().describe()}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
@@ -152,7 +203,15 @@ def main() -> None:
     ap.add_argument("--workloads", default="",
                     help="comma list: run every sweep scenario under each of "
                          "these workload types (the workload sweep axis)")
+    ap.add_argument("--mitigation", default="",
+                    help="remediation policy attached to the scenario "
+                         "(do_nothing, retransmit, disable_and_reroute, ...)")
+    ap.add_argument("--mitigations", default="",
+                    help="comma list: run every sweep cell under each of "
+                         "these policies and print the score_mitigations() "
+                         "scoreboard (the mitigation sweep axis)")
     ap.add_argument("--list-scenarios", action="store_true")
+    ap.add_argument("--list-mitigations", action="store_true")
     ap.add_argument("--sweep", action="store_true",
                     help="run a (scenario x seed) sweep through sim/sweep.py")
     ap.add_argument("--jobs", type=int, default=1,
@@ -178,24 +237,29 @@ def main() -> None:
     if args.list_scenarios:
         _list_scenarios(args)
         return
+    if args.list_mitigations:
+        _list_mitigations()
+        return
     if args.sweep:
         _run_sweep(args)
         return
     if args.scenario:
-        if args.workloads:
+        if args.workloads or args.mitigations:
+            axis = "--workloads" if args.workloads else "--mitigations"
             raise SystemExit(
-                "--workloads is a sweep axis; with --scenario use "
-                "--workload <type> (or --sweep --scenarios "
-                f"{args.scenario} --workloads {args.workloads})"
+                f"{axis} is a sweep axis; with --scenario use the singular "
+                f"flag (or add --sweep to fan "
+                f"{args.scenario!r} out across the axis)"
             )
         _run_scenario(args)
         return
-    if args.workload or args.workloads:
+    if args.workload or args.workloads or args.mitigation or args.mitigations:
         # the compiled-program training path below has no workload axis;
         # dropping the flag silently would trace the wrong workload
         raise SystemExit(
-            "--workload/--workloads require --scenario or --sweep "
-            "(the default path always traces the compiled training program)"
+            "--workload/--workloads/--mitigation/--mitigations require "
+            "--scenario or --sweep (the default path always traces the "
+            "compiled training program unmitigated)"
         )
 
     from ..core import (

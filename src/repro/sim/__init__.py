@@ -11,7 +11,11 @@ cluster.ClusterOrchestrator assembles them (SimBricks role); workload builds
 device programs from compiled XLA artifacts or synthetic specs.
 
 engine.EventKernel is the shared discrete-event kernel all of them schedule
-on; sweep runs fleets of (scenario, seed) cells in parallel.
+on; sweep runs fleets of (scenario, workload, mitigation, seed) cells in
+parallel over a persistent warm worker pool; mitigation attaches pluggable
+remediation policies (retransmit, disable_and_reroute, evict_straggler,
+checkpoint_restore) that compete against the do_nothing baseline on the
+same fault trace.
 """
 from .clock import LogWriter, Sim, StructuredLogWriter
 from .cluster import ClusterOrchestrator, FailurePlan, run_ntp_sim, run_training_sim
@@ -28,9 +32,25 @@ from .faults import (
     HostPause,
     LinkDegradation,
     LinkLoss,
+    LossRateTrace,
     StragglerPod,
 )
 from .hostsim import HostClock, HostSim
+from .mitigation import (
+    DoNothing,
+    MitigationConflictError,
+    MitigationPolicy,
+    list_mitigations,
+    make_mitigation,
+    mitigation_type,
+    register_mitigation,
+)
+from .mitigations import (
+    CheckpointRestore,
+    DisableAndReroute,
+    EvictStraggler,
+    Retransmit,
+)
 from .netsim import LinkFault, NetSim
 from .scenarios import (
     SCENARIOS,
@@ -45,6 +65,7 @@ from .sweep import (
     SweepSpec,
     load_sweep,
     run_sweep,
+    shutdown_pool,
 )
 from .topology import Link, Topology, fat_tree_cluster, ntp_testbed, scale, tpu_cluster
 from .workload import (

@@ -206,6 +206,19 @@ class DeviceSim:
         # path, a zero-format record capture on the structured fast path
         self._emit((self._kernel.now, chip, ev_name, attrs))
 
+    # -- mitigation hooks (driven by sim/mitigation.py) ---------------------------------
+
+    def scale_of(self, chip: str) -> float:
+        """Current compute-time multiplier of one chip (1.0 = healthy) —
+        the straggler telemetry mitigation trigger loops poll."""
+        return self.compute_scale.get(chip, 1.0)
+
+    def rescale(self, chip: str, factor: float) -> None:
+        """Multiply one chip's compute-time scale (``evict_straggler``
+        hook: re-homing work shows up as scale changes), effective for ops
+        that begin after ``sim.now``."""
+        self.compute_scale[chip] = self.compute_scale.get(chip, 1.0) * factor
+
     # -- program execution --------------------------------------------------------------
 
     def run_program(

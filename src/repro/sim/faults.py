@@ -98,11 +98,68 @@ class LinkDegradation(FaultSpec):
         return f"link {self.link} bandwidth x{self.bw_factor}"
 
 
+_TRACE_PROFILES = ("constant", "step", "ramp", "burst")
+
+
+@dataclass(frozen=True)
+class LossRateTrace:
+    """Time-varying loss-intensity profile for :class:`LinkLoss`.
+
+    Replaces the constant ``drop_prob`` knob with a deterministic function
+    of simulated time (pure arithmetic — no random draws of its own, so the
+    fault's seeded rng stream is untouched):
+
+    * ``constant`` — ``peak`` everywhere (byte-identical to a trace-less
+      ``LinkLoss`` whose ``drop_prob == peak``);
+    * ``step``     — ``base`` before ``at_ps``, ``peak`` from then on;
+    * ``ramp``     — ``base`` before ``at_ps``, then linear to ``peak``
+      over ``ramp_ps``, holding ``peak`` afterwards;
+    * ``burst``    — ``peak`` inside ``[at_ps, at_ps + ramp_ps)``, ``base``
+      outside (a corruption burst).
+    """
+
+    profile: str = "constant"
+    peak: float = 0.25
+    base: float = 0.0
+    at_ps: int = 0
+    ramp_ps: int = 1_000_000_000        # 1 ms ramp / burst width
+
+    def __post_init__(self) -> None:
+        if self.profile not in _TRACE_PROFILES:
+            raise ValueError(
+                f"profile must be one of {_TRACE_PROFILES}, got {self.profile!r}"
+            )
+
+    def rate(self, now: int) -> float:
+        """The instantaneous per-chunk drop probability at time ``now``."""
+        if self.profile == "constant":
+            return self.peak
+        if self.profile == "step":
+            return self.peak if now >= self.at_ps else self.base
+        if self.profile == "ramp":
+            if now < self.at_ps:
+                return self.base
+            frac = min(1.0, (now - self.at_ps) / max(self.ramp_ps, 1))
+            return self.base + (self.peak - self.base) * frac
+        # burst
+        if self.at_ps <= now < self.at_ps + self.ramp_ps:
+            return self.peak
+        return self.base
+
+    def describe(self) -> str:
+        """Human-readable profile summary (used by LinkLoss.describe)."""
+        if self.profile == "constant":
+            return f"constant p={self.peak}"
+        return (f"{self.profile} p={self.base}->{self.peak} "
+                f"@{self.at_ps}ps/{self.ramp_ps}ps")
+
+
 @dataclass(frozen=True)
 class LinkLoss(FaultSpec):
     """Drop chunks on one link with probability ``drop_prob``; the link
     layer retransmits after ``retransmit_ps`` (delivery delayed, not lost,
-    so collectives still terminate)."""
+    so collectives still terminate).  A :class:`LossRateTrace` makes the
+    drop probability time-varying (``drop_prob`` is then ignored)."""
 
     fault_class: ClassVar[str] = LINK_LOSS
 
@@ -111,6 +168,7 @@ class LinkLoss(FaultSpec):
     retransmit_ps: int = 0          # 0 -> 2x the chunk's wire time
     start_ps: int = 0
     stop_ps: Optional[int] = None
+    trace: Optional[LossRateTrace] = None
 
     def schedule(self, cluster: "ClusterOrchestrator", rng: random.Random) -> None:
         cluster.net.install_link_fault(
@@ -121,10 +179,13 @@ class LinkLoss(FaultSpec):
                 start_ps=self.start_ps,
                 stop_ps=self.stop_ps,
                 rng=rng,
+                loss_trace=None if self.trace is None else self.trace.rate,
             ),
         )
 
     def describe(self) -> str:
+        if self.trace is not None:
+            return f"link {self.link} loss {self.trace.describe()}"
         return f"link {self.link} loss p={self.drop_prob}"
 
 

@@ -220,6 +220,21 @@ class HostSim:
         self._stall_ps = 0
         return dur
 
+    @property
+    def pending_stall_ps(self) -> int:
+        """Injected-but-not-yet-drained stall time (mitigation telemetry:
+        the ``checkpoint_restore`` trigger loop polls this)."""
+        return self._stall_ps
+
+    def cancel_stall(self) -> int:
+        """Mitigation hook: drop a pending injected stall before the
+        workload drains it, returning the cancelled duration in ps.  The
+        caller (e.g. ``checkpoint_restore``) typically re-injects a shorter
+        replay cost via :meth:`inject_stall`."""
+        dur = self._stall_ps
+        self._stall_ps = 0
+        return dur
+
     def fail(self) -> None:
         self.failed = True
         self.log_event("host_failure")

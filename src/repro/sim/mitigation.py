@@ -1,0 +1,237 @@
+"""The pluggable mitigation layer: remediation policies on a live cluster.
+
+Columbo's diagnosis loop (``sim/faults.py`` injects, ``core.analysis.diagnose``
+attributes) answers *"can we see the fault?"*.  This module answers the next
+question — *"what should the fleet do about it, and what does it cost?"* —
+with the same architecture the workload layer uses:
+
+* :class:`MitigationPolicy` — the protocol: a dataclass of knobs plus
+  ``attach(cluster)``, called by :meth:`ScenarioSpec.simulate` after faults
+  are scheduled and before the workload drives.  A policy arms a **seeded
+  deterministic trigger loop** (:meth:`MitigationPolicy.watch`) that polls
+  simulator telemetry — per-link drop counters
+  (:meth:`~repro.sim.netsim.NetSim.link_drop_counts`), host stall state
+  (:attr:`~repro.sim.hostsim.HostSim.pending_stall_ps`), per-chip compute
+  scales (:meth:`~repro.sim.devicesim.DeviceSim.scale_of`) — and fires
+  remediation actions through the simulators' mitigation hooks.
+* a name registry — :func:`register_mitigation` / :func:`make_mitigation` /
+  :func:`list_mitigations` / :func:`mitigation_type`, mirroring
+  ``sim/workload.py``.
+* :class:`DoNothing` — the baseline.  Its ``attach`` is a strict no-op
+  (zero kernel events, zero log records), so a ``do_nothing`` run is
+  **byte-identical** to an unmitigated one: the goldens hold, and every
+  active policy is scored against it by ``core.analysis.score_mitigations``.
+
+Every trigger/action/recovery logs host events (``mitigation_trigger`` /
+``mitigation_action`` / ``mitigation_done``, plus ``retransmit_begin`` /
+``retransmit_end`` from the loss-protection policy) that weave into
+``Mitigation`` span subtrees on both the text and structured paths.
+
+Built-ins live in the ``sim/mitigations/`` package (same split as
+``sim/workload.py`` + ``sim/workloads/``): ``disable_and_reroute``,
+``retransmit``, ``evict_straggler``, ``checkpoint_restore``.
+``docs/mitigations.md`` is the cookbook.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import Any, Callable, ClassVar, Dict, List, Optional, Tuple, TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .cluster import ClusterOrchestrator
+    from .hostsim import HostSim
+
+
+class MitigationConflictError(ValueError):
+    """A mitigation would mask the very diagnosis a scenario asserts.
+
+    Raised by ``ScenarioSpec.run(mitigation=...)`` when the policy's
+    declared ``masks`` intersect the scenario's ``expected`` fault classes:
+    running the combination would make the scenario's acceptance check
+    vacuous (the fault gets remediated before diagnosis can see it).
+    Construct the spec with the ``mitigation`` field directly — or override
+    ``expected`` in the same call — to opt in deliberately.
+    """
+
+
+@dataclass
+class MitigationPolicy:
+    """Base class: a remediation policy that arms itself on a cluster.
+
+    Subclasses implement :meth:`attach`, which registers a trigger loop (or
+    nothing, for the baseline) on the cluster's shared
+    :class:`~repro.sim.engine.EventKernel` **before** the workload drives.
+    The two standard knobs bound the watch window so the DES always drains:
+
+    * ``poll_every_ps`` — trigger-loop cadence (how often telemetry is
+      polled);
+    * ``max_polls``     — polls before the policy gives up watching.
+
+    ``masks`` declares the fault classes whose *diagnosis signal* the
+    policy removes when it fires (e.g. evicting a straggler normalizes the
+    op durations the straggler rules read); ``ScenarioSpec.run`` refuses
+    ``mitigation=`` overrides that would mask a scenario's expected
+    diagnosis (:class:`MitigationConflictError`).
+    """
+
+    #: registry key; subclasses set it (e.g. "retransmit") and register
+    mitigation_name: ClassVar[str] = ""
+    #: fault classes whose diagnosis this policy can mask once triggered
+    masks: ClassVar[Tuple[str, ...]] = ()
+
+    seed: int = 0
+    poll_every_ps: int = 1_000_000_000      # 1 ms trigger-loop cadence
+    max_polls: int = 40
+
+    def attach(self, cluster: "ClusterOrchestrator") -> None:
+        """Arm the policy's trigger loop on ``cluster`` (before ``run()``)."""
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        """One-line summary for reports and ``--list-mitigations``."""
+        doc = (type(self).__doc__ or "").strip().splitlines()
+        return doc[0] if doc else (self.mitigation_name or type(self).__name__)
+
+    # -- shared helpers for subclasses ------------------------------------------
+
+    def rng(self, stream: int = 0) -> random.Random:
+        """A deterministic per-``(seed, stream)`` random source (the same
+        arithmetic-derivation scheme as ``FaultPlan`` / ``Workload``, with
+        a third offset so mitigation streams never collide with fault or
+        workload streams)."""
+        return random.Random(self.seed * 1_000_003 + stream * 7_919 + 911_657)
+
+    def controller(self, cluster: "ClusterOrchestrator") -> "HostSim":
+        """The host that logs this policy's events: the first chip-bearing
+        host (the fleet-controller stand-in), else the first host."""
+        for h in cluster.hosts.values():
+            if h.chips:
+                return h
+        return next(iter(cluster.hosts.values()))
+
+    def watch(
+        self,
+        cluster: "ClusterOrchestrator",
+        probe: Callable[[int], bool],
+    ) -> None:
+        """The seeded deterministic trigger loop.
+
+        Calls ``probe(i)`` every ``poll_every_ps`` of simulated time; a
+        ``True`` return means the policy triggered and the loop cancels
+        itself (one-shot remediation).  After ``max_polls`` quiet polls the
+        loop expires on its own, so an un-triggered policy never keeps the
+        kernel alive."""
+        state: Dict[str, Any] = {}
+
+        def _tick(i: int) -> None:
+            if probe(i):
+                # shrink n to the fire count: the task never re-arms, so a
+                # triggered policy leaves zero trailing kernel events
+                state["task"].n = state["task"].fires
+
+        state["task"] = cluster.sim.every(
+            self.poll_every_ps, _tick, n=self.max_polls
+        )
+
+    # -- event helpers (weave into the Mitigation span subtree) ------------------
+
+    def log_trigger(self, cluster: "ClusterOrchestrator", **attrs: Any) -> None:
+        """Log ``mitigation_trigger`` (opens the policy's Mitigation span)."""
+        self.controller(cluster).log_event(
+            "mitigation_trigger", policy=self.mitigation_name, **attrs
+        )
+
+    def log_action(self, cluster: "ClusterOrchestrator", **attrs: Any) -> None:
+        """Log ``mitigation_action`` (a remediation step, inside the span)."""
+        self.controller(cluster).log_event(
+            "mitigation_action", policy=self.mitigation_name, **attrs
+        )
+
+    def log_done(self, cluster: "ClusterOrchestrator", **attrs: Any) -> None:
+        """Log ``mitigation_done`` (closes the span; trigger→done is the
+        detection-to-mitigation latency)."""
+        self.controller(cluster).log_event(
+            "mitigation_done", policy=self.mitigation_name, **attrs
+        )
+
+
+# ---------------------------------------------------------------------------
+# Registry (mirrors sim/workload.py)
+# ---------------------------------------------------------------------------
+
+
+_MITIGATIONS: Dict[str, type] = {}
+_BUILTINS_LOADED = False
+
+
+def _ensure_builtin_mitigations() -> None:
+    global _BUILTINS_LOADED
+    if not _BUILTINS_LOADED:
+        _BUILTINS_LOADED = True
+        from . import mitigations  # noqa: F401  (registers the built-ins)
+
+
+def register_mitigation(cls: type, replace: bool = False) -> type:
+    """Class decorator: register a :class:`MitigationPolicy` subclass under
+    its ``mitigation_name`` (the mitigation-layer analogue of
+    :func:`~repro.sim.workload.register_workload`)."""
+    name = getattr(cls, "mitigation_name", "")
+    if not name:
+        raise ValueError(f"{cls.__name__} must set a non-empty mitigation_name")
+    if not replace and name in _MITIGATIONS:
+        raise ValueError(
+            f"mitigation {name!r} already registered; pass replace=True to override"
+        )
+    _MITIGATIONS[name] = cls
+    return cls
+
+
+def list_mitigations() -> List[str]:
+    """Registered mitigation names, sorted (built-ins load on first use)."""
+    _ensure_builtin_mitigations()
+    return sorted(_MITIGATIONS)
+
+
+def mitigation_type(name: str) -> type:
+    """Look up a registered mitigation class (KeyError lists what exists)."""
+    _ensure_builtin_mitigations()
+    try:
+        return _MITIGATIONS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown mitigation {name!r}; available: "
+            f"{', '.join(sorted(_MITIGATIONS))}"
+        ) from None
+
+
+def make_mitigation(name: str, **params: Any) -> MitigationPolicy:
+    """Instantiate a registered mitigation with ``params``.
+
+    Unknown knobs raise ``TypeError`` naming the policy — misspelled
+    parameters must never be silently ignored (the same contract
+    :func:`~repro.sim.workload.make_workload` enforces)."""
+    cls = mitigation_type(name)
+    try:
+        return cls(**params)
+    except TypeError as e:
+        raise TypeError(f"mitigation {name!r}: {e}") from None
+
+
+@register_mitigation
+@dataclass
+class DoNothing(MitigationPolicy):
+    """Baseline: ride the fault out (what every scenario did before the
+    mitigation layer existed).
+
+    ``attach`` is a strict no-op — no kernel events scheduled, no log
+    records emitted — so a ``do_nothing`` run is byte-identical to an
+    unmitigated one and every active policy's cost/benefit is measured
+    against it.
+    """
+
+    mitigation_name: ClassVar[str] = "do_nothing"
+
+    def attach(self, cluster: "ClusterOrchestrator") -> None:
+        """Deliberately nothing: the baseline must not perturb the DES."""
+        return None

@@ -1,0 +1,30 @@
+"""Built-in mitigation policies (importing this package registers them).
+
+Each module defines one :class:`~repro.sim.mitigation.MitigationPolicy`
+subclass and registers it under its ``mitigation_name`` — the same layout
+as ``sim/workloads/`` for workload drivers:
+
+* ``retransmit`` (:mod:`.retransmit`) — fast-retransmit dropped chunks
+  under a seeded timeout cap; each re-send is a ``Retransmit`` span.
+* ``disable_and_reroute`` (:mod:`.reroute`) — take the worst-dropping link
+  out of the route tables (when an alternate path exists) and record the
+  capacity penalty.
+* ``evict_straggler`` (:mod:`.evict`) — re-home a straggler pod's work
+  onto the healthy pods at a small spread cost.
+* ``checkpoint_restore`` (:mod:`.restore`) — roll a stalled host back to
+  its last checkpoint instead of riding out a long runtime pause.
+
+(The ``do_nothing`` baseline lives in ``sim/mitigation.py`` itself, next to
+the registry, because it *is* the contract: attach-is-a-no-op.)
+"""
+from .evict import EvictStraggler
+from .reroute import DisableAndReroute
+from .restore import CheckpointRestore
+from .retransmit import Retransmit
+
+__all__ = [
+    "CheckpointRestore",
+    "DisableAndReroute",
+    "EvictStraggler",
+    "Retransmit",
+]

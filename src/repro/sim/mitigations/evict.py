@@ -1,0 +1,75 @@
+"""``evict_straggler``: re-home a straggler pod's work onto healthy pods."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import ClassVar, Tuple, TYPE_CHECKING
+
+from ..faults import DEVICE_SLOWDOWN, STRAGGLER_POD
+from ..mitigation import MitigationPolicy, register_mitigation
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from ..cluster import ClusterOrchestrator
+
+
+@register_mitigation
+@dataclass
+class EvictStraggler(MitigationPolicy):
+    """Straggler eviction: normalize the slow pod, spread its work.
+
+    The trigger loop polls per-chip compute scales
+    (:meth:`~repro.sim.devicesim.DeviceSim.scale_of`); when any chip's
+    scale crosses ``threshold`` its pod is declared the straggler, its
+    chips are rescaled back to 1.0 (the evicted replica's shard re-homed),
+    and every healthy pod pays ``spread_factor`` on subsequent ops — the
+    capacity cost of absorbing the extra work, recorded as the span's
+    ``penalty``.
+
+    This policy *masks* the slow-op signature the ``device_slowdown`` /
+    ``straggler_pod`` diagnosis rules read, so ``ScenarioSpec.run`` refuses
+    it as an override on scenarios expecting those classes
+    (:class:`~repro.sim.mitigation.MitigationConflictError`).
+    """
+
+    mitigation_name: ClassVar[str] = "evict_straggler"
+    masks: ClassVar[Tuple[str, ...]] = (DEVICE_SLOWDOWN, STRAGGLER_POD)
+
+    #: compute-scale multiplier above which a chip marks its pod straggler
+    threshold: float = 1.5
+    #: post-eviction compute-scale multiplier on every healthy pod's chips
+    spread_factor: float = 1.15
+
+    def attach(self, cluster: "ClusterOrchestrator") -> None:
+        """Watch per-chip compute scales; evict the worst straggler pod."""
+
+        def _probe(i: int) -> bool:
+            worst_pod, worst_chip, worst_scale = None, None, 0.0
+            for pod in sorted(cluster.device_sims):
+                dev = cluster.device_sims[pod]
+                for chip in dev.chips:
+                    s = dev.scale_of(chip)
+                    if s > worst_scale:
+                        worst_pod, worst_chip, worst_scale = pod, chip, s
+            if worst_pod is None or worst_scale < self.threshold:
+                return False
+            self.log_trigger(
+                cluster, pod=worst_pod, chip=worst_chip,
+                scale=round(worst_scale, 4),
+            )
+            for pod in sorted(cluster.device_sims):
+                dev = cluster.device_sims[pod]
+                if pod == worst_pod:
+                    for chip in dev.chips:
+                        cur = dev.scale_of(chip)
+                        if cur != 1.0:
+                            dev.rescale(chip, 1.0 / cur)
+                else:
+                    for chip in dev.chips:
+                        dev.rescale(chip, self.spread_factor)
+            self.log_action(
+                cluster, action="evict", target=f"pod{worst_pod}",
+                penalty=round(self.spread_factor - 1.0, 4),
+            )
+            self.log_done(cluster, pod=worst_pod)
+            return True
+
+        self.watch(cluster, _probe)

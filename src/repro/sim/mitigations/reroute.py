@@ -1,0 +1,73 @@
+"""``disable_and_reroute``: pull a lossy link out of the route tables."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import ClassVar, TYPE_CHECKING
+
+from ..mitigation import MitigationPolicy, register_mitigation
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from ..cluster import ClusterOrchestrator
+
+
+@register_mitigation
+@dataclass
+class DisableAndReroute(MitigationPolicy):
+    """Fleet response to a degraded link: take it out of service.
+
+    The trigger loop polls per-link drop counters
+    (:meth:`~repro.sim.netsim.NetSim.link_drop_counts`); when one link
+    accumulates ``trigger_drops``, the policy disables it
+    (:meth:`~repro.sim.topology.Topology.disable_link`) so every *new*
+    transfer routes around it (in-flight chunks keep their pre-resolved
+    paths, as real switches drain).  If the fabric has no alternate path
+    the link is restored and the loop keeps watching.  The removed
+    bandwidth fraction of the link's fabric family is recorded as the
+    ``penalty`` attr on the Mitigation span — the cost
+    ``score_mitigations`` charges against the latency win.
+    """
+
+    mitigation_name: ClassVar[str] = "disable_and_reroute"
+
+    #: per-link drops observed before that link is taken out
+    trigger_drops: int = 3
+
+    def attach(self, cluster: "ClusterOrchestrator") -> None:
+        """Watch per-link drop counters; disable the worst offender."""
+        net, topo = cluster.net, cluster.topo
+        tried = set()
+
+        def _probe(i: int) -> bool:
+            counts = net.link_drop_counts()
+            worst = None
+            for name in sorted(counts):
+                if name in tried or counts[name] < self.trigger_drops:
+                    continue
+                if worst is None or counts[name] > counts[worst]:
+                    worst = name
+            if worst is None:
+                return False
+            tried.add(worst)
+            link = topo.links[worst]
+            topo.disable_link(worst)
+            try:
+                topo.route(link.a, link.b)
+            except ValueError:
+                # no alternate path (e.g. a 2-pod mesh): losing the link
+                # would partition the fabric, so put it back and keep
+                # watching for a remediable one
+                topo.restore_link(worst)
+                return False
+            fam = worst.split(".", 1)[0]
+            fam_bw = sum(
+                l.bw for n, l in topo.links.items() if n.split(".", 1)[0] == fam
+            )
+            penalty = round(link.bw / fam_bw, 4) if fam_bw else 1.0
+            self.log_trigger(cluster, link=worst, drops=counts[worst])
+            self.log_action(
+                cluster, action="disable_link", target=worst, penalty=penalty,
+            )
+            self.log_done(cluster, link=worst)
+            return True
+
+        self.watch(cluster, _probe)

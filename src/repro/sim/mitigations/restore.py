@@ -1,0 +1,59 @@
+"""``checkpoint_restore``: roll a stalled host back instead of waiting."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import ClassVar, TYPE_CHECKING
+
+from ..mitigation import MitigationPolicy, register_mitigation
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from ..cluster import ClusterOrchestrator
+
+
+@register_mitigation
+@dataclass
+class CheckpointRestore(MitigationPolicy):
+    """Long-stall remediation: restore from checkpoint rather than wait.
+
+    The trigger loop polls every host's injected-but-undrained stall time
+    (:attr:`~repro.sim.hostsim.HostSim.pending_stall_ps`, the telemetry a
+    runtime watchdog would export).  When one crosses
+    ``stall_threshold_ps`` the pending pause is cancelled
+    (:meth:`~repro.sim.hostsim.HostSim.cancel_stall`) and replaced with the
+    fixed ``restore_ps`` replay cost — the host still logs a ``gc_stall``
+    (with ``cause=restore``), so the ``host_pause`` diagnosis signal is
+    shortened, not masked (``masks`` stays empty).
+    """
+
+    mitigation_name: ClassVar[str] = "checkpoint_restore"
+
+    #: pending stall above which restoring beats waiting (default 10 ms)
+    stall_threshold_ps: int = 10_000_000_000
+    #: checkpoint-restore replay cost charged instead (default 5 ms)
+    restore_ps: int = 5_000_000_000
+
+    def attach(self, cluster: "ClusterOrchestrator") -> None:
+        """Watch pending host stalls; swap long ones for a restore."""
+
+        def _probe(i: int) -> bool:
+            victim = None
+            for name in sorted(cluster.hosts):
+                if cluster.hosts[name].pending_stall_ps >= self.stall_threshold_ps:
+                    victim = cluster.hosts[name]
+                    break
+            if victim is None:
+                return False
+            cancelled = victim.cancel_stall()
+            victim.inject_stall(self.restore_ps, "restore")
+            self.log_trigger(
+                cluster, host=victim.name, stall_us=cancelled // 1_000_000,
+            )
+            self.log_action(
+                cluster, action="checkpoint_restore", target=victim.name,
+                penalty=0.0,
+                saved_us=(cancelled - self.restore_ps) // 1_000_000,
+            )
+            self.log_done(cluster, host=victim.name)
+            return True
+
+        self.watch(cluster, _probe)

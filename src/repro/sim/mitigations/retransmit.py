@@ -1,0 +1,71 @@
+"""``retransmit``: fast-retransmit dropped chunks under a timeout cap."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import ClassVar, TYPE_CHECKING
+
+from ..mitigation import MitigationPolicy, register_mitigation
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from ..cluster import ClusterOrchestrator
+
+
+@register_mitigation
+@dataclass
+class Retransmit(MitigationPolicy):
+    """Loss protection: once drops are observed, cap every subsequent
+    drop's recovery delay at ``timeout_ps`` (a fast-retransmit timer)
+    instead of the network's default exponential-ish re-send backoff.
+
+    The trigger loop watches the fleet drop counter
+    (:attr:`~repro.sim.netsim.NetSim.chunks_dropped`); on trigger it
+    installs a retransmit-override callback via
+    :meth:`~repro.sim.netsim.NetSim.set_retransmit_policy`.  Every re-send
+    the callback governs logs ``retransmit_begin`` / ``retransmit_end``
+    host events, which weave into ``Retransmit`` spans parented under this
+    policy's ``Mitigation`` span.
+    """
+
+    mitigation_name: ClassVar[str] = "retransmit"
+
+    #: recovery-delay cap per dropped chunk (default 100 us)
+    timeout_ps: int = 100_000_000
+    #: fleet-wide drops observed before the policy arms
+    trigger_drops: int = 1
+
+    def attach(self, cluster: "ClusterOrchestrator") -> None:
+        """Watch the drop counter; on trigger install the re-send cap."""
+        net = cluster.net
+        kernel = cluster.sim
+        host = self.controller(cluster)
+        state = {"seq": 0}
+
+        def _cb(link: str, cid: str, drop_ps: int, default_ps: int) -> int:
+            retrans = min(default_ps, self.timeout_ps)
+            # unique per re-send (a chunk can drop on several hops), so
+            # concurrent Retransmit spans never collide on the weave key
+            tag = f"{cid}~{state['seq']}"
+            state["seq"] += 1
+            kernel.at(drop_ps, lambda: host.log_event(
+                "retransmit_begin", policy=self.mitigation_name,
+                chunk=tag, link=link,
+            ))
+            kernel.at(drop_ps + retrans, lambda: host.log_event(
+                "retransmit_end", policy=self.mitigation_name,
+                chunk=tag, link=link,
+            ))
+            return retrans
+
+        def _probe(i: int) -> bool:
+            if net.chunks_dropped < self.trigger_drops:
+                return False
+            self.log_trigger(cluster, drops=net.chunks_dropped)
+            net.set_retransmit_policy(_cb)
+            self.log_action(
+                cluster, action="fast_retransmit", target="net",
+                penalty=0.0, timeout_us=self.timeout_ps // 1_000_000,
+            )
+            self.log_done(cluster)
+            return True
+
+        self.watch(cluster, _probe)

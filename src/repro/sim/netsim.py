@@ -36,6 +36,10 @@ class LinkFault:
       happens (collectives terminate) but late, and a ``d`` mark is logged.
     * ``jitter_ps``     — uniform extra propagation delay in [0, jitter_ps),
       breaking the link's natural FIFO arrival order (in-flight reordering).
+    * ``loss_trace``    — optional ``now -> prob`` callable (compiled from a
+      :class:`~repro.sim.faults.LossRateTrace`) making the drop probability
+      time-varying; ``None`` keeps the constant ``loss_prob`` behaviour and
+      its exact draw sequence.
 
     Draws come from the fault's own seeded ``rng``; the DES executes in a
     deterministic order, so the same seed reproduces the same byte stream.
@@ -50,6 +54,7 @@ class LinkFault:
     # reproducibility contract; FaultPlan supplies per-fault streams
     rng: random.Random = field(default_factory=lambda: random.Random(0))
     drops: int = 0
+    loss_trace: Optional[Callable[[int], float]] = None
 
     def active(self, now: int) -> bool:
         return now >= self.start_ps and (self.stop_ps is None or now < self.stop_ps)
@@ -133,6 +138,10 @@ class NetSim:
         self.flows_stopped = False
         self._flow_tasks: List[PeriodicTask] = []
         self.link_faults: Dict[str, List[LinkFault]] = {}
+        # mitigation hook: when set, rewrites the link-layer retransmit
+        # delay of each dropped chunk (consulted only on the drop branch,
+        # so the no-mitigation hot path pays nothing)
+        self._retransmit_cb: Optional[Callable[[str, str, int, int], int]] = None
         # hot-path bindings: every chunk hop logs up to 3 marks and
         # schedules 2 events, so skip the SimPort/property indirection
         self._kernel = sim.kernel
@@ -152,6 +161,27 @@ class NetSim:
         """Degrade (or restore) a link's bandwidth in place, effective for
         chunks that start transmitting after ``sim.now``."""
         self.topo.links[link_name].bw *= factor
+
+    # -- mitigation hooks (driven by sim/mitigation.py) ----------------------------
+
+    def set_retransmit_policy(
+        self, cb: Optional[Callable[[str, str, int, int], int]]
+    ) -> None:
+        """Install (or clear) a retransmit override for dropped chunks.
+
+        ``cb(link_name, chunk_id, drop_ps, default_retrans_ps)`` returns the
+        retransmit delay to charge instead of the link layer's default —
+        the ``retransmit`` mitigation policy's loss-protection hook.
+        """
+        self._retransmit_cb = cb
+
+    def link_drop_counts(self) -> Dict[str, int]:
+        """Per-link dropped-chunk counters (summed over that link's faults)
+        — the loss telemetry mitigation trigger loops poll."""
+        return {
+            name: sum(f.drops for f in faults)
+            for name, faults in self.link_faults.items()
+        }
 
     # -- core transfer -----------------------------------------------------------
 
@@ -199,10 +229,16 @@ class NetSim:
             for fault in self.link_faults.get(link_name, ()):
                 if not fault.active(now):
                     continue
-                if fault.loss_prob and fault.rng.random() < fault.loss_prob:
+                p = (fault.loss_prob if fault.loss_trace is None
+                     else fault.loss_trace(now))
+                if p and fault.rng.random() < p:
                     fault.drops += 1
                     self.chunks_dropped += 1
                     retrans = fault.retransmit_ps or 2 * (tx_ps + link.latency_ps)
+                    if self._retransmit_cb is not None:
+                        retrans = self._retransmit_cb(
+                            link_name, t.cid, start, retrans
+                        )
                     if not quiet:
                         # ns3-style 'd' mark: the wire copy is lost at tx
                         # time; the link layer retransmits, delaying arrival

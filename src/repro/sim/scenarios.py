@@ -32,6 +32,12 @@ from dataclasses import dataclass, field, fields as dataclasses_fields, replace
 from typing import Callable, Dict, List, Optional, Tuple
 
 from .cluster import ClusterOrchestrator
+from .mitigation import (
+    MitigationConflictError,
+    MitigationPolicy,
+    make_mitigation,
+    mitigation_type,
+)
 from .faults import (
     ChunkReorder,
     ClockDrift,
@@ -69,6 +75,13 @@ class ScenarioSpec:
     as an inert ``(key, value)`` tuple.  Every fault class composes with
     every workload: the same plan schedules regardless of what drives the
     cluster.
+
+    ``mitigation`` names a registered remediation policy
+    (``repro.sim.mitigation``); it attaches *between* fault scheduling and
+    the workload drive, so its trigger loop competes on the same fault
+    trace the workload experiences.  The default ``do_nothing`` baseline
+    is a strict no-op: such runs are byte-identical to pre-mitigation-era
+    runs.
     """
 
     name: str
@@ -86,6 +99,8 @@ class ScenarioSpec:
     clock_reads: int = 30
     workload: str = "collective"                  # registered workload type
     workload_params: Tuple[Tuple[str, object], ...] = ()
+    mitigation: str = "do_nothing"                # registered mitigation policy
+    mitigation_params: Tuple[Tuple[str, object], ...] = ()
 
     @property
     def expected_classes(self) -> Tuple[str, ...]:
@@ -118,6 +133,17 @@ class ScenarioSpec:
         params.update(dict(self.workload_params))
         return make_workload(self.workload, **params)
 
+    def make_mitigation(self, seed: Optional[int] = None) -> MitigationPolicy:
+        """Instantiate this scenario's mitigation policy (seed + params).
+
+        The policy inherits the scenario seed (its trigger loop draws from
+        a third RNG-stream family, disjoint from fault and workload
+        streams); ``mitigation_params`` are extra per-policy knobs, with
+        the same no-silent-ignore contract as ``workload_params``."""
+        params = dict(seed=self.seed if seed is None else seed)
+        params.update(dict(self.mitigation_params))
+        return make_mitigation(self.mitigation, **params)
+
     # -- execution ---------------------------------------------------------------
 
     def simulate(
@@ -137,6 +163,9 @@ class ScenarioSpec:
         )
         cluster = ClusterOrchestrator(topo, outdir=outdir, structured=structured)
         self.fault_plan(seed).schedule(cluster)
+        # the policy arms after faults are scheduled and before the workload
+        # drives: its trigger loop competes on the same fault trace
+        self.make_mitigation(seed=seed).attach(cluster)
         self.make_workload(seed=seed).drive(cluster)
         cluster.run()
         return cluster
@@ -183,7 +212,24 @@ class ScenarioSpec:
                 # per-type knobs don't transfer across workload types: a
                 # cross-type override starts from the new type's defaults
                 overrides["workload_params"] = ()
-            return replace(self, **overrides).run(
+            if (overrides.get("mitigation", self.mitigation) != self.mitigation
+                    and "mitigation_params" not in overrides):
+                # same contract for mitigations: per-policy knobs reset
+                overrides["mitigation_params"] = ()
+            candidate = replace(self, **overrides)
+            if "mitigation" in overrides:
+                cls = mitigation_type(overrides["mitigation"])
+                masked = sorted(set(cls.masks) & set(candidate.expected_classes))
+                if masked:
+                    raise MitigationConflictError(
+                        f"mitigation {overrides['mitigation']!r} masks the "
+                        f"diagnosis of {masked}, which scenario "
+                        f"{self.name!r} asserts; override expected= in the "
+                        f"same call to opt in, or construct the ScenarioSpec "
+                        f"directly (the sweep mitigations axis scores "
+                        f"policies without asserting diagnosis)"
+                    )
+            return candidate.run(
                 outdir=outdir, seed=seed, exporters=exporters, structured=structured
             )
 
@@ -260,6 +306,10 @@ class ScenarioRun:
             f"scenario {self.scenario.name!r} (seed={self.plan.seed}): "
             f"{self.scenario.description}",
             f"  workload : {self.scenario.make_workload(self.plan.seed).describe()}",
+        ]
+        if self.scenario.mitigation != "do_nothing":
+            lines.append(f"  mitigation: {self.scenario.mitigation}")
+        lines += [
             f"  injected : {self.plan.describe() or ['none']}",
             f"  expected : {list(self.scenario.expected_classes) or ['(clean)']}",
             f"  diagnosed: {list(self.detected) or ['(clean)']}   "
@@ -351,6 +401,22 @@ _LIBRARY: Tuple[ScenarioSpec, ...] = (
         signature="per-request span trees; the slowest RpcRequest's critical "
                   "path runs through ici.pod0.l1, whose wire time per byte is "
                   "a k-MAD outlier vs sibling ICI links",
+    ),
+    ScenarioSpec(
+        name="link_loss_rpc",
+        description="RPC serving over a lossy DCN link — the scenario the "
+                    "mitigation policies compete on (--mitigations sweep)",
+        workload="rpc",
+        workload_params=(("n_requests", 12), ("rate_rps", 2000.0)),
+        program=rpc_handler_program,
+        n_pods=3,
+        chips_per_pod=2,
+        faults=(LinkLoss(link="dcn.h0h1", drop_prob=0.35,
+                         retransmit_ps=4 * PS_PER_MS),),
+        signature="chunk_drop events on dcn.h0h1 inflate remote RpcCall legs "
+                  "by the 4 ms re-send delay; 'retransmit' caps the recovery "
+                  "delay, 'disable_and_reroute' detours via host2 at a "
+                  "capacity penalty — compare with score_mitigations()",
     ),
     ScenarioSpec(
         name="ckpt_slow_dcn",

@@ -10,7 +10,10 @@ the aggregate-driven reading of traces rather than eyeballing single runs.
 The workload axis (``workloads=("collective", "rpc", ...)``) re-runs every
 scenario under each listed workload type; the default (``None``) keeps
 each scenario's own pinned workload, so the curated library sweeps exactly
-as published.
+as published.  The mitigations axis (``mitigations=("do_nothing",
+"retransmit", ...)``) re-runs every cell under each listed remediation
+policy so :func:`repro.core.analysis.score_mitigations` can rank them
+against the ``do_nothing`` baseline on the *same* fault trace.
 
 Execution model: each cell runs the existing
 :class:`~repro.sim.scenarios.ScenarioSpec` → ``TraceSpec``/``ExecutionEngine``
@@ -29,6 +32,7 @@ CLI: ``python -m repro.launch.trace --sweep --jobs 8`` (see docs/sweeps.md).
 """
 from __future__ import annotations
 
+import atexit
 import json
 import multiprocessing
 import os
@@ -38,18 +42,21 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .scenarios import SCENARIOS, ScenarioSpec, get_scenario
 
-SWEEP_SCHEMA = "columbo.sweep/v2"
-_SWEEP_SCHEMAS = ("columbo.sweep/v1", SWEEP_SCHEMA)
+SWEEP_SCHEMA = "columbo.sweep/v3"
+_SWEEP_SCHEMAS = ("columbo.sweep/v1", "columbo.sweep/v2", SWEEP_SCHEMA)
 
 
 @dataclass(frozen=True)
 class SweepSpec:
-    """A grid of ``(scenario, workload, seed)`` cells plus topology overrides.
+    """A grid of ``(scenario, workload, mitigation, seed)`` cells plus topology overrides.
 
     Inert and declarative like :class:`~repro.sim.scenarios.ScenarioSpec`:
     build once, run with any ``--jobs``, get the same shards.
     ``workloads`` (when set) re-runs every scenario under each listed
     workload type; ``None`` keeps each scenario's own pinned workload.
+    ``mitigations`` (when set) re-runs every cell under each listed
+    remediation policy (``None`` keeps each scenario's own — normally the
+    ``do_nothing`` baseline).
     ``n_pods``/``chips_per_pod``/``fabric``/``n_steps`` (when not ``None``)
     override every scenario in the grid — e.g. re-running the curated
     library on a 64-pod fat-tree.
@@ -58,6 +65,7 @@ class SweepSpec:
     scenarios: Tuple[str, ...]
     seeds: Tuple[int, ...]
     workloads: Optional[Tuple[str, ...]] = None   # None -> scenario's own
+    mitigations: Optional[Tuple[str, ...]] = None  # None -> scenario's own
     n_pods: Optional[int] = None
     chips_per_pod: Optional[int] = None
     fabric: Optional[str] = None
@@ -72,14 +80,17 @@ class SweepSpec:
                 out[k] = v
         return out
 
-    def cells(self) -> List[Tuple[str, Optional[str], int]]:
-        """The full ``(scenario, workload, seed)`` grid, scenario-major
-        (deterministic order).  ``workload`` is ``None`` when the cell
-        keeps its scenario's own pinned workload type."""
+    def cells(self) -> List[Tuple[str, Optional[str], Optional[str], int]]:
+        """The full ``(scenario, workload, mitigation, seed)`` grid,
+        scenario-major (deterministic order).  ``workload`` /
+        ``mitigation`` are ``None`` when the cell keeps its scenario's own
+        pinned type/policy."""
         wls: Tuple[Optional[str], ...] = self.workloads or (None,)
+        mits: Tuple[Optional[str], ...] = self.mitigations or (None,)
         return [
-            (s, w, seed)
-            for s in self.scenarios for w in wls for seed in self.seeds
+            (s, w, m, seed)
+            for s in self.scenarios for w in wls for m in mits
+            for seed in self.seeds
         ]
 
     @classmethod
@@ -90,48 +101,56 @@ class SweepSpec:
 
 @dataclass
 class CellResult:
-    """One finished ``(scenario, workload, seed)`` cell."""
+    """One finished ``(scenario, workload, mitigation, seed)`` cell."""
 
     scenario: str
     seed: int
     ok: bool                    # expected fault classes ⊆ diagnosed classes
     shard: str                  # SpanJSONL shard path, relative to the sweep outdir
     stats: "Any"                # core.analysis.RunStats (pre-reduced spans)
-    workload: Optional[str] = None   # explicit sweep-axis workload (None = own)
+    workload: Optional[str] = None    # explicit sweep-axis workload (None = own)
+    mitigation: Optional[str] = None  # explicit sweep-axis policy (None = own)
 
 
-def _shard_name(scenario: str, workload: Optional[str], seed: int) -> str:
-    # the workload only appears in the name when the sweep axis set it, so
+def _shard_name(
+    scenario: str, workload: Optional[str], mitigation: Optional[str], seed: int
+) -> str:
+    # axis values only appear in the name when the sweep axis set them, so
     # default-library shard names stay exactly as they were pre-axis
     mid = f".{workload}" if workload else ""
-    return os.path.join("shards", f"{scenario}{mid}.seed{seed}.spans.jsonl")
+    mit = f".{mitigation}" if mitigation else ""
+    return os.path.join("shards", f"{scenario}{mid}{mit}.seed{seed}.spans.jsonl")
 
 
 def _run_cell(
-    args: Tuple[str, Optional[str], int, Dict[str, Any], str, bool]
+    args: Tuple[str, Optional[str], Optional[str], int, Dict[str, Any], str, bool]
 ) -> Dict[str, Any]:
     """Worker: run one cell end to end (simulate → weave → diagnose),
     write its SpanJSONL shard, return a JSON-serializable summary.
 
     Top-level (picklable) so multiprocessing pools can dispatch it; every
-    random draw inside comes from the cell's seeded fault plan and
-    workload, so the result is independent of which worker runs it.
-    ``structured`` cells take the zero-parse fast path; shard bytes are
-    identical either way.
+    random draw inside comes from the cell's seeded fault plan, workload,
+    and mitigation streams, so the result is independent of which worker
+    runs it.  ``structured`` cells take the zero-parse fast path; shard
+    bytes are identical either way.
     """
     from ..core.analysis import RunStats
 
-    scenario, workload, seed, overrides, outdir, structured = args
+    scenario, workload, mitigation, seed, overrides, outdir, structured = args
     spec: ScenarioSpec = get_scenario(scenario)
     if workload is not None and workload != spec.workload:
         # cross-type axis override: the pinned type's knobs don't transfer
         spec = replace(spec, workload=workload, workload_params=())
+    if mitigation is not None and mitigation != spec.mitigation:
+        # axis cells bypass run()'s masking check by design: a mitigation
+        # sweep *scores* policies; it does not assert diagnosis
+        spec = replace(spec, mitigation=mitigation, mitigation_params=())
     if overrides:
         spec = replace(spec, **overrides)
     t0 = time.perf_counter()
     run = spec.run(seed=seed, structured=structured)
     wall = time.perf_counter() - t0
-    shard = _shard_name(scenario, workload, seed)
+    shard = _shard_name(scenario, workload, mitigation, seed)
     with open(os.path.join(outdir, shard), "w", buffering=1 << 20) as f:
         f.write(run.span_jsonl)
     stats = RunStats.from_spans(
@@ -142,9 +161,67 @@ def _run_cell(
         detected=run.detected,
         wall_s=wall,
         events=run.cluster.sim.events_executed,
+        mitigation=spec.mitigation,
     )
-    return {"scenario": scenario, "workload": workload, "seed": seed,
+    return {"scenario": scenario, "workload": workload,
+            "mitigation": mitigation, "seed": seed,
             "ok": run.ok, "shard": shard, "stats": stats.to_dict()}
+
+
+# ---------------------------------------------------------------------------
+# Persistent worker pool
+# ---------------------------------------------------------------------------
+#
+# Pool startup is what made wall_s_by_jobs flat (9.4/8.2/8.7 s at 1/4/8
+# jobs): every run_sweep() paid worker spawn + interpreter warm-up, which
+# dominates small sweeps.  The pool is now a module-level singleton keyed by
+# (jobs, start_method): repeated sweeps — the bench's per-jobs timings, a
+# notebook's iterate-on-a-sweep loop — reuse warm workers whose imports and
+# registries are already paid for.  Shard bytes depend only on the cell's
+# seed (ids reset per run), so worker reuse cannot leak state across cells.
+
+_POOL: Optional[Any] = None
+_POOL_KEY: Optional[Tuple[int, str]] = None
+
+
+def _worker_warm() -> None:
+    """Pool initializer: pay each worker's heavy imports and registry
+    builds once at pool creation instead of inside its first cell."""
+    from ..core import analysis, parsers, pipeline  # noqa: F401
+    from . import mitigation, workload  # noqa: F401
+
+    workload.list_workloads()       # load + register builtin workloads
+    mitigation.list_mitigations()   # load + register builtin mitigations
+
+
+def _pool_for(jobs: int) -> Any:
+    """The persistent worker pool for ``jobs`` (created or reused)."""
+    global _POOL, _POOL_KEY
+    methods = multiprocessing.get_all_start_methods()
+    method = "fork" if "fork" in methods else "spawn"
+    key = (jobs, method)
+    if _POOL is not None and _POOL_KEY == key:
+        return _POOL
+    shutdown_pool()
+    ctx = multiprocessing.get_context(method)
+    _POOL = ctx.Pool(jobs, initializer=_worker_warm)
+    _POOL_KEY = key
+    return _POOL
+
+
+def shutdown_pool() -> None:
+    """Tear down the persistent sweep pool (idempotent; also runs at
+    interpreter exit).  Call between benchmarks that must not share warm
+    workers."""
+    global _POOL, _POOL_KEY
+    if _POOL is not None:
+        _POOL.close()
+        _POOL.join()
+        _POOL = None
+        _POOL_KEY = None
+
+
+atexit.register(shutdown_pool)
 
 
 @dataclass
@@ -181,23 +258,37 @@ class SweepResult:
 
         return merge_span_jsonl(self.shard_paths(), out_path)
 
+    def score_mitigations(self, baseline: str = "do_nothing") -> "Any":
+        """Rank the sweep's policies against ``baseline`` on the shared
+        fault trace (:func:`repro.core.analysis.score_mitigations`)."""
+        from ..core.analysis import score_mitigations
+
+        return score_mitigations(self.run_stats(), baseline=baseline)
+
     def report(self, aggregate_report: Optional["Any"] = None) -> str:
         """Cell verdict table + the aggregate rollup (pass a precomputed
-        ``aggregate()`` result to avoid pooling the samples twice)."""
+        ``aggregate()`` result to avoid pooling the samples twice).  When
+        the sweep set a ``mitigations`` axis, the per-policy scoreboard is
+        appended."""
         wl_axis = (f" x {len(self.spec.workloads)} workloads"
                    if self.spec.workloads else "")
+        mit_axis = (f" x {len(self.spec.mitigations)} mitigations"
+                    if self.spec.mitigations else "")
         lines = [
             f"sweep: {len(self.cells)} cells "
-            f"({len(self.spec.scenarios)} scenarios{wl_axis} x "
+            f"({len(self.spec.scenarios)} scenarios{wl_axis}{mit_axis} x "
             f"{len(self.spec.seeds)} seeds, "
             f"jobs={self.jobs}) -> {self.outdir}",
         ]
         for c in self.cells:
             verdict = "OK    " if c.ok else "MISSED"
             wl = f" [{c.workload}]" if c.workload else ""
-            lines.append(f"  {verdict} {c.scenario:24s}{wl} seed={c.seed:<4d} "
+            mit = f" [{c.mitigation}]" if c.mitigation else ""
+            lines.append(f"  {verdict} {c.scenario:24s}{wl}{mit} seed={c.seed:<4d} "
                          f"spans={c.stats.n_spans:<5d} wall={c.stats.wall_s:.2f}s")
         lines.append((aggregate_report or self.aggregate()).report())
+        if self.spec.mitigations:
+            lines.append(self.score_mitigations().report())
         return "\n".join(lines)
 
 
@@ -206,12 +297,13 @@ def run_sweep(
 ) -> SweepResult:
     """Run every cell of ``spec``, streaming shards into ``outdir``.
 
-    ``jobs > 1`` distributes cells over a process pool (``fork`` where the
-    platform has it, else ``spawn``); results are collected in grid order
-    regardless of completion order, and each shard's bytes depend only on
-    its ``(scenario, seed)`` — the parallel-equals-serial equivalence
-    asserted in ``tests/test_sweep.py``.  Writes ``sweep.json`` (cells +
-    RunStats) next to the shards.
+    ``jobs > 1`` distributes cells over the persistent warm pool
+    (:func:`shutdown_pool` tears it down); results are collected in grid
+    order regardless of completion order, and each shard's bytes depend
+    only on its cell coordinates — the parallel-equals-serial equivalence
+    asserted in ``tests/test_sweep.py``.  Small cells are batched with a
+    chunksize so per-task dispatch overhead doesn't dominate.  Writes
+    ``sweep.json`` (cells + RunStats) next to the shards.
 
     ``structured=True`` runs every cell on the zero-parse structured fast
     path (no text logs are formatted or parsed); shard bytes stay
@@ -222,20 +314,20 @@ def run_sweep(
 
     os.makedirs(os.path.join(outdir, "shards"), exist_ok=True)
     work = [
-        (s, w, seed, spec.overrides(), outdir, structured)
-        for s, w, seed in spec.cells()
+        (s, w, m, seed, spec.overrides(), outdir, structured)
+        for s, w, m, seed in spec.cells()
     ]
     if jobs <= 1 or len(work) <= 1:
         raw = [_run_cell(w) for w in work]
     else:
-        methods = multiprocessing.get_all_start_methods()
-        ctx = multiprocessing.get_context("fork" if "fork" in methods else "spawn")
-        with ctx.Pool(min(jobs, len(work))) as pool:
-            raw = pool.map(_run_cell, work)
+        pool = _pool_for(jobs)
+        raw = pool.map(_run_cell, work,
+                       chunksize=max(1, len(work) // (jobs * 4)))
     cells = [
         CellResult(
             scenario=r["scenario"], seed=r["seed"], ok=r["ok"], shard=r["shard"],
             stats=RunStats.from_dict(r["stats"]), workload=r.get("workload"),
+            mitigation=r.get("mitigation"),
         )
         for r in raw
     ]
@@ -245,6 +337,7 @@ def run_sweep(
         "scenarios": list(spec.scenarios),
         "seeds": list(spec.seeds),
         "workloads": list(spec.workloads) if spec.workloads else None,
+        "mitigations": list(spec.mitigations) if spec.mitigations else None,
         "overrides": spec.overrides(),
         "jobs": jobs,
         "structured": structured,
@@ -272,16 +365,19 @@ def load_sweep(outdir: str) -> SweepResult:
             f"expected one of {_SWEEP_SCHEMAS!r}"
         )
     workloads = payload.get("workloads")
+    mitigations = payload.get("mitigations")
     spec = SweepSpec(
         scenarios=tuple(payload["scenarios"]),
         seeds=tuple(payload["seeds"]),
         workloads=tuple(workloads) if workloads else None,
+        mitigations=tuple(mitigations) if mitigations else None,
         **payload.get("overrides", {}),
     )
     cells = [
         CellResult(
             scenario=r["scenario"], seed=r["seed"], ok=r["ok"], shard=r["shard"],
             stats=RunStats.from_dict(r["stats"]), workload=r.get("workload"),
+            mitigation=r.get("mitigation"),
         )
         for r in payload["cells"]
     ]

@@ -116,6 +116,32 @@ class Topology:
             r = self._route_links[key] = [self.links[n] for n in self.route(src, dst)]
         return r
 
+    # -- mitigation hooks (driven by sim/mitigation.py) ---------------------------
+
+    def disable_link(self, name: str) -> None:
+        """Take one link out of the route tables (``disable_and_reroute``
+        mitigation hook): its adjacency entries are removed and the BFS
+        route caches cleared, so *future* routes detour around it.
+        In-flight transfers keep their pre-resolved routes (packets already
+        on the wire are not rerouted).  The link stays in :attr:`links`, so
+        byte counters and installed faults remain inspectable."""
+        l = self.links[name]
+        self.adj[l.a] = [(v, ln) for (v, ln) in self.adj[l.a] if ln != name]
+        self.adj[l.b] = [(v, ln) for (v, ln) in self.adj[l.b] if ln != name]
+        self._routes.clear()
+        self._route_links.clear()
+
+    def restore_link(self, name: str) -> None:
+        """Undo :meth:`disable_link`: re-add the link's adjacency entries
+        (idempotent) and clear the route caches."""
+        l = self.links[name]
+        if not any(ln == name for _, ln in self.adj[l.a]):
+            self.adj[l.a].append((l.b, name))
+        if not any(ln == name for _, ln in self.adj[l.b]):
+            self.adj[l.b].append((l.a, name))
+        self._routes.clear()
+        self._route_links.clear()
+
     # -- id helpers ---------------------------------------------------------------
 
     @staticmethod

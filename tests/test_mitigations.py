@@ -1,0 +1,465 @@
+"""The mitigation subsystem: registry semantics, the policy x fault and
+policy x workload compose matrices, weave invariants, byte-identity of the
+``do_nothing`` baseline and the structured fast path, time-varying loss
+traces, conflict checking, the sweep mitigations axis, and the
+``score_mitigations()`` scoreboard.
+
+The contract under test: remediation policies attach to the *same* seeded
+fault trace the workload experiences, fire deterministically, weave their
+trigger/action/done trail into ``Mitigation`` span subtrees, and are scored
+against a baseline that is provably inert.
+"""
+import json
+import os
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.analysis import (
+    MitigationScoreboard,
+    RunStats,
+    request_latency_stats,
+    score_mitigations,
+)
+from repro.sim import (
+    ChunkReorder,
+    ClockDrift,
+    ClockStep,
+    DeviceSlowdown,
+    DoNothing,
+    HostPause,
+    LinkDegradation,
+    LinkLoss,
+    LossRateTrace,
+    MitigationConflictError,
+    MitigationPolicy,
+    ScenarioSpec,
+    StragglerPod,
+    SweepSpec,
+    get_scenario,
+    list_mitigations,
+    make_mitigation,
+    mitigation_type,
+    register_mitigation,
+    run_sweep,
+    synthetic_program,
+)
+from repro.sim.mitigation import _MITIGATIONS
+
+PS_PER_MS = 1_000_000_000
+
+BUILTIN_POLICIES = (
+    "do_nothing", "retransmit", "disable_and_reroute", "evict_straggler",
+    "checkpoint_restore",
+)
+
+
+# ---------------------------------------------------------------------------
+# Registry semantics
+# ---------------------------------------------------------------------------
+
+
+def test_builtins_registered():
+    assert set(list_mitigations()) == set(BUILTIN_POLICIES)
+
+
+def test_make_mitigation_unknown_name_lists_available():
+    with pytest.raises(KeyError, match="unknown mitigation.*retransmit"):
+        make_mitigation("no_such_policy")
+
+
+def test_make_mitigation_rejects_unknown_knob():
+    with pytest.raises(TypeError, match="mitigation 'retransmit'"):
+        make_mitigation("retransmit", not_a_knob=1)
+
+
+def test_register_requires_name_and_rejects_duplicates():
+    class Nameless(MitigationPolicy):
+        """Intentionally missing its registry key."""
+
+    with pytest.raises(ValueError, match="non-empty mitigation_name"):
+        register_mitigation(Nameless)
+    with pytest.raises(ValueError, match="already registered"):
+        register_mitigation(mitigation_type("do_nothing"))
+    # replace=True is the explicit override path; restore afterwards
+    original = mitigation_type("do_nothing")
+    try:
+        register_mitigation(original, replace=True)
+    finally:
+        _MITIGATIONS["do_nothing"] = original
+
+
+def test_policy_describe_and_rng_streams():
+    p = make_mitigation("retransmit", seed=3)
+    assert p.describe()
+    # per-(seed, stream) determinism, disjoint streams
+    assert p.rng(0).random() == make_mitigation("retransmit", seed=3).rng(0).random()
+    assert p.rng(0).random() != p.rng(1).random()
+
+
+# ---------------------------------------------------------------------------
+# Policy x fault matrix: every builtin composes with every fault type
+# ---------------------------------------------------------------------------
+
+
+def _micro_program():
+    return synthetic_program(
+        n_layers=1, layer_flops=2e11, layer_bytes=1e8, grad_bytes=5e7
+    )
+
+
+# every fault spec type (plus a fault-free row), each on a topology the
+# 2-pod x 2-chip micro testbed actually has
+FAULT_CONDITIONS = {
+    "healthy": (),
+    "link_degradation": (LinkDegradation(link="ici.pod0.l0", bw_factor=0.2),),
+    "link_loss": (LinkLoss(link="dcn.h0h1", drop_prob=0.4,
+                           retransmit_ps=PS_PER_MS),),
+    "link_reorder": (ChunkReorder(link="ici.pod0.l0", jitter_ps=2 * PS_PER_MS),),
+    "host_pause": (HostPause(host="host0", pause_ps=20 * PS_PER_MS),),
+    "clock_step": (ClockStep(host="host1", step_ps=5 * PS_PER_MS),),
+    "clock_drift": (ClockDrift(host="host1", drift_ppm=400.0),),
+    "device_slowdown": (DeviceSlowdown(chip="pod1.chip00", factor=3.0),),
+    "straggler_pod": (StragglerPod(pod=1, factor=2.5),),
+}
+
+
+def _micro_spec(faults, policy, workload="collective", **kw):
+    return ScenarioSpec(
+        name="micro_mitigation",
+        description="policy x fault compose matrix cell",
+        faults=faults,
+        expected=(),              # the matrix asserts weaving, not diagnosis
+        n_steps=1,
+        chips_per_pod=2,
+        clock_reads=4,
+        program=_micro_program,
+        workload=workload,
+        mitigation=policy,
+        **kw,
+    )
+
+
+@pytest.mark.parametrize("policy", BUILTIN_POLICIES)
+@pytest.mark.parametrize("condition", sorted(FAULT_CONDITIONS))
+def test_policy_composes_with_every_fault(policy, condition):
+    run = _micro_spec(FAULT_CONDITIONS[condition], policy).run()
+    assert run.spans, f"{policy} x {condition}: no spans woven"
+    assert run.session.finalize_stats["orphans"] == 0, f"{policy} x {condition}"
+
+
+@pytest.mark.parametrize("policy", BUILTIN_POLICIES)
+@pytest.mark.parametrize("workload", ("collective", "rpc", "storage", "pipeline"))
+def test_policy_composes_with_every_workload(policy, workload):
+    faults = (LinkLoss(link="dcn.h0h1", drop_prob=0.3, retransmit_ps=PS_PER_MS),)
+    run = _micro_spec(faults, policy, workload=workload).run()
+    assert run.spans, f"{policy} x {workload}: no spans woven"
+    assert run.session.finalize_stats["orphans"] == 0, f"{policy} x {workload}"
+
+
+@pytest.mark.parametrize("policy", BUILTIN_POLICIES)
+def test_text_equals_structured_per_policy(policy):
+    spec = _micro_spec(
+        (LinkLoss(link="dcn.h0h1", drop_prob=0.4, retransmit_ps=PS_PER_MS),),
+        policy, workload="rpc",
+    )
+    assert spec.run(structured=True).span_jsonl == spec.run().span_jsonl
+
+
+# ---------------------------------------------------------------------------
+# Weave invariants on the mitigation scenario
+# ---------------------------------------------------------------------------
+
+
+def _rid_roots(spans):
+    """rid -> list of RpcRequest root spans carrying it."""
+    roots = {}
+    for s in spans:
+        if s.name == "RpcRequest":
+            roots.setdefault(s.attrs.get("rid"), []).append(s)
+    return roots
+
+
+def test_every_rid_weaves_to_exactly_one_root():
+    run = get_scenario("link_loss_rpc").run(mitigation="retransmit")
+    roots = _rid_roots(run.spans)
+    assert roots, "no RpcRequest spans woven"
+    for rid, spans in roots.items():
+        assert len(spans) == 1, f"rid {rid} woven into {len(spans)} roots"
+        assert spans[0].parent is None, f"rid {rid} root has a parent"
+
+
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1),
+       policy=st.sampled_from(BUILTIN_POLICIES))
+@settings(max_examples=6, deadline=None)
+def test_weave_invariants_any_seed(seed, policy):
+    """Property: for any seed and any policy, the mitigated weave is
+    orphan-free, every rid maps to exactly one root span, and the same
+    seed reproduces byte-identical SpanJSONL."""
+    spec = get_scenario("link_loss_rpc")
+    run = spec.run(seed=seed, mitigation=policy)
+    assert run.session.finalize_stats["orphans"] == 0
+    for rid, spans in _rid_roots(run.spans).items():
+        assert len(spans) == 1, f"rid {rid}: {len(spans)} roots"
+    again = spec.run(seed=seed, mitigation=policy)
+    assert run.span_jsonl == again.span_jsonl
+
+
+def test_retransmit_weaves_mitigation_subtree():
+    run = get_scenario("link_loss_rpc").run(mitigation="retransmit")
+    roots = [s for s in run.spans if s.name == "Mitigation"]
+    assert len(roots) == 1
+    root = roots[0]
+    assert root.parent is None
+    assert root.attrs["policy"] == "retransmit"
+    assert root.attrs["action"] == "fast_retransmit"
+    assert float(root.attrs["penalty"]) == 0.0
+    event_names = {name for _, name, _ in root.events}
+    assert "mitigation_action" in event_names
+    retrans = [s for s in run.spans if s.name == "Retransmit"]
+    assert retrans, "retransmit fired but wove no Retransmit spans"
+    for s in retrans:
+        assert s.parent is not None
+        assert s.parent.span_id == root.context.span_id
+        assert s.context.trace_id == root.context.trace_id
+
+
+def test_reroute_records_capacity_penalty():
+    run = get_scenario("link_loss_rpc").run(mitigation="disable_and_reroute")
+    roots = [s for s in run.spans if s.name == "Mitigation"]
+    assert len(roots) == 1
+    assert roots[0].attrs["action"] == "disable_link"
+    assert roots[0].attrs["target"] == "dcn.h0h1"
+    assert float(roots[0].attrs["penalty"]) > 0.0
+
+
+def test_do_nothing_adds_no_spans_and_is_byte_identical():
+    spec = get_scenario("link_loss_rpc")
+    baseline = spec.run()          # mitigation defaults to do_nothing
+    assert not any(s.name in ("Mitigation", "Retransmit") for s in baseline.spans)
+    explicit = spec.run(mitigation="do_nothing")
+    assert explicit.span_jsonl == baseline.span_jsonl
+
+
+def test_untriggered_policy_expires_quietly():
+    # no faults -> retransmit's probe never fires; the watch loop must
+    # expire after max_polls without keeping the kernel alive or logging
+    run = _micro_spec((), "retransmit").run()
+    assert not any(s.name in ("Mitigation", "Retransmit") for s in run.spans)
+
+
+# ---------------------------------------------------------------------------
+# LossRateTrace: time-varying fault intensity
+# ---------------------------------------------------------------------------
+
+
+def test_loss_rate_trace_profiles():
+    assert LossRateTrace("constant", peak=0.3).rate(10**12) == 0.3
+    step = LossRateTrace("step", peak=0.5, base=0.1, at_ps=100)
+    assert step.rate(99) == 0.1 and step.rate(100) == 0.5
+    ramp = LossRateTrace("ramp", peak=0.4, base=0.0, at_ps=0, ramp_ps=100)
+    assert ramp.rate(0) == 0.0
+    assert ramp.rate(50) == pytest.approx(0.2)
+    assert ramp.rate(1_000) == 0.4
+    burst = LossRateTrace("burst", peak=0.9, base=0.05, at_ps=100, ramp_ps=50)
+    assert burst.rate(99) == 0.05
+    assert burst.rate(100) == 0.9 and burst.rate(149) == 0.9
+    assert burst.rate(150) == 0.05
+    assert "constant" in LossRateTrace("constant").describe()
+
+
+def test_loss_rate_trace_rejects_unknown_profile():
+    with pytest.raises(ValueError, match="profile must be one of"):
+        LossRateTrace("sawtooth")
+
+
+def test_constant_trace_byte_identical_to_plain_drop_prob():
+    plain = _micro_spec(
+        (LinkLoss(link="dcn.h0h1", drop_prob=0.4, retransmit_ps=PS_PER_MS),),
+        "do_nothing",
+    )
+    traced = _micro_spec(
+        (LinkLoss(link="dcn.h0h1", drop_prob=0.99, retransmit_ps=PS_PER_MS,
+                  trace=LossRateTrace("constant", peak=0.4)),),
+        "do_nothing",
+    )
+    assert plain.run().span_jsonl == traced.run().span_jsonl
+
+
+def test_burst_trace_changes_the_run():
+    base = _micro_spec(
+        (LinkLoss(link="dcn.h0h1", drop_prob=0.4, retransmit_ps=PS_PER_MS),),
+        "do_nothing",
+    )
+    burst = _micro_spec(
+        (LinkLoss(link="dcn.h0h1", drop_prob=0.4, retransmit_ps=PS_PER_MS,
+                  trace=LossRateTrace("burst", peak=0.9, base=0.0,
+                                      at_ps=0, ramp_ps=PS_PER_MS)),),
+        "do_nothing",
+    )
+    assert base.run().span_jsonl != burst.run().span_jsonl
+
+
+# ---------------------------------------------------------------------------
+# Conflict checking: run(mitigation=...) vs the expected diagnosis
+# ---------------------------------------------------------------------------
+
+
+def test_masking_override_raises_conflict():
+    for scenario in ("throttled_chip", "straggler_pod2"):
+        with pytest.raises(MitigationConflictError, match="evict_straggler"):
+            get_scenario(scenario).run(mitigation="evict_straggler")
+
+
+def test_conflict_opt_out_via_expected_override():
+    run = get_scenario("throttled_chip").run(
+        mitigation="evict_straggler", expected=(),
+        mitigation_params=(("threshold", 1.5),),
+    )
+    assert run.ok    # expected=() makes the acceptance check vacuous
+    assert any(s.name == "Mitigation" for s in run.spans)
+
+
+def test_non_masking_override_is_allowed():
+    run = get_scenario("lossy_dcn").run(mitigation="retransmit")
+    assert any(s.name == "Mitigation" for s in run.spans)
+
+
+def test_cross_type_mitigation_override_resets_params():
+    # a retransmit-knobbed spec overridden to checkpoint_restore must not
+    # leak timeout_ps into the new policy's constructor
+    spec = _micro_spec(
+        (LinkLoss(link="dcn.h0h1", drop_prob=0.4, retransmit_ps=PS_PER_MS),),
+        "retransmit",
+        mitigation_params=(("timeout_ps", 50_000_000),),
+    )
+    run = spec.run(mitigation="checkpoint_restore")
+    assert run.scenario.mitigation == "checkpoint_restore"
+    assert run.scenario.mitigation_params == ()
+
+
+def test_same_type_override_keeps_params():
+    spec = _micro_spec(
+        (LinkLoss(link="dcn.h0h1", drop_prob=0.4, retransmit_ps=PS_PER_MS),),
+        "retransmit",
+        mitigation_params=(("timeout_ps", 50_000_000),),
+    )
+    run = spec.run(mitigation="retransmit")
+    assert run.scenario.mitigation_params == (("timeout_ps", 50_000_000),)
+
+
+# ---------------------------------------------------------------------------
+# Sweep mitigations axis
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_mitigations_axis_cells_and_shards(tmp_path):
+    spec = SweepSpec(
+        scenarios=("link_loss_rpc",),
+        seeds=(0,),
+        mitigations=("do_nothing", "retransmit"),
+    )
+    assert spec.cells() == [
+        ("link_loss_rpc", None, "do_nothing", 0),
+        ("link_loss_rpc", None, "retransmit", 0),
+    ]
+    result = run_sweep(spec, str(tmp_path), jobs=1, structured=True)
+    assert [c.mitigation for c in result.cells] == ["do_nothing", "retransmit"]
+    assert [c.shard for c in result.cells] == [
+        os.path.join("shards", "link_loss_rpc.do_nothing.seed0.spans.jsonl"),
+        os.path.join("shards", "link_loss_rpc.retransmit.seed0.spans.jsonl"),
+    ]
+    assert [c.stats.mitigation for c in result.cells] == [
+        "do_nothing", "retransmit",
+    ]
+    with open(os.path.join(str(tmp_path), "sweep.json")) as f:
+        payload = json.load(f)
+    assert payload["schema"] == "columbo.sweep/v3"
+    assert payload["mitigations"] == ["do_nothing", "retransmit"]
+    board = result.score_mitigations()
+    assert board["retransmit"].triggers == 1
+    assert "mitigation scoreboard" in result.report()
+
+
+def test_sweep_v2_payload_still_loads(tmp_path):
+    from repro.sim.sweep import load_sweep
+
+    cell_stats = RunStats(scenario="healthy_baseline", seed=0).to_dict()
+    payload = {
+        "schema": "columbo.sweep/v2",
+        "scenarios": ["healthy_baseline"],
+        "seeds": [0],
+        "workloads": None,
+        "overrides": {},
+        "jobs": 1,
+        "structured": False,
+        "cells": [{"scenario": "healthy_baseline", "workload": None,
+                   "seed": 0, "ok": True,
+                   "shard": "shards/healthy_baseline.seed0.spans.jsonl",
+                   "stats": cell_stats}],
+    }
+    with open(tmp_path / "sweep.json", "w") as f:
+        json.dump(payload, f)
+    result = load_sweep(str(tmp_path))
+    assert result.spec.mitigations is None
+    assert result.cells[0].mitigation is None
+    assert result.cells[0].stats.mitigation == ""
+
+
+# ---------------------------------------------------------------------------
+# Scoring
+# ---------------------------------------------------------------------------
+
+
+def test_request_latency_stats_has_p999():
+    assert request_latency_stats([])["p99.9"] == 0.0
+    run = get_scenario("link_loss_rpc").run()
+    stats = request_latency_stats(run.spans)
+    assert stats["p99.9"] >= stats["p99"] >= stats["p50"] > 0.0
+
+
+def _stats(mitigation, request_us, mitigation_us=(), penalty=0.0):
+    return RunStats(
+        scenario="link_loss_rpc", seed=0, mitigation=mitigation,
+        request_us=list(request_us), mitigation_us=list(mitigation_us),
+        capacity_penalty=penalty,
+    )
+
+
+def test_score_mitigations_hand_built():
+    runs = [
+        _stats("do_nothing", [1000.0, 2000.0, 9000.0]),
+        _stats("retransmit", [900.0, 1500.0, 3000.0],
+               mitigation_us=[120.0], penalty=0.0),
+        _stats("disable_and_reroute", [950.0, 1600.0, 12000.0],
+               mitigation_us=[80.0], penalty=0.25),
+    ]
+    board = score_mitigations(runs)
+    assert isinstance(board, MitigationScoreboard)
+    assert board.baseline == "do_nothing"
+    # baseline first, actives alphabetical after
+    assert [s.mitigation for s in board.scores] == [
+        "do_nothing", "disable_and_reroute", "retransmit",
+    ]
+    retr = board["retransmit"]
+    assert retr.beats_baseline is True
+    assert retr.p999_vs_baseline < 1.0
+    assert retr.triggers == 1
+    assert retr.mitigation_us["mean_us"] == pytest.approx(120.0)
+    slow = board["disable_and_reroute"]
+    assert slow.beats_baseline is False
+    assert slow.capacity_penalty == pytest.approx(0.25)
+    base = board["do_nothing"]
+    assert base.p999_vs_baseline is None and base.beats_baseline is None
+    report = board.report()
+    assert "beats do_nothing" in report and "retransmit" in report
+    d = board.to_dict()
+    assert d["baseline"] == "do_nothing" and len(d["scores"]) == 3
+    with pytest.raises(KeyError):
+        board["no_such_policy"]
+
+
+def test_runstats_roundtrip_with_mitigation_fields():
+    rs = _stats("retransmit", [1.0, 2.0], mitigation_us=[3.0], penalty=0.5)
+    assert RunStats.from_dict(rs.to_dict()) == rs

@@ -135,8 +135,10 @@ def small_sweep(tmp_path_factory):
 
 def test_sweep_parallel_equals_serial(small_sweep):
     spec, serial, parallel = small_sweep
-    assert [(c.scenario, c.workload, c.seed) for c in serial.cells] == spec.cells()
-    assert [(c.scenario, c.workload, c.seed) for c in parallel.cells] == spec.cells()
+    assert [(c.scenario, c.workload, c.mitigation, c.seed)
+            for c in serial.cells] == spec.cells()
+    assert [(c.scenario, c.workload, c.mitigation, c.seed)
+            for c in parallel.cells] == spec.cells()
     for cs, cp in zip(serial.cells, parallel.cells):
         with open(os.path.join(serial.outdir, cs.shard), "rb") as f:
             bytes_serial = f.read()
@@ -367,7 +369,7 @@ def _load_engine_bench():
 
 
 def _validate_bench_payload(payload):
-    assert payload["schema"] == "columbo.engine_bench/v3"
+    assert payload["schema"] == "columbo.engine_bench/v4"
     assert isinstance(payload["smoke"], bool)
     assert {"python", "platform"} <= set(payload["host"])
     k = payload["kernel"]
@@ -404,6 +406,21 @@ def _validate_bench_payload(payload):
         assert row["units"] > 0 and row["units_per_sec"] > 0
     rpc_rows = [r for r in payload["workloads"] if r["workload"] == "rpc"]
     assert all(r["unit"] == "request" for r in rpc_rows)
+    mit = payload["mitigations"]
+    assert {"scenario", "pods", "rows"} <= set(mit)
+    policies = {r["policy"] for r in mit["rows"]}
+    assert policies >= {"unmitigated", "do_nothing", "retransmit",
+                        "disable_and_reroute", "evict_straggler",
+                        "checkpoint_restore"}
+    by_policy = {r["policy"]: r for r in mit["rows"]}
+    for row in mit["rows"]:
+        assert {"policy", "events", "wall_s", "events_per_sec",
+                "overhead_vs_unmitigated"} <= set(row)
+        assert row["events"] > 0 and row["events_per_sec"] > 0
+    # the baseline policy must be inert: exactly the unmitigated event
+    # count, and within the bench's own 10% kernel-overhead assertion
+    assert by_policy["do_nothing"]["events"] == by_policy["unmitigated"]["events"]
+    assert by_policy["do_nothing"]["overhead_vs_unmitigated"] <= 1.10
     sw = payload["sweep"]
     assert sw["cells"] == len(sw["scenarios"]) * len(sw["seeds"])
     assert sw["wall_s_by_jobs"], "needs at least one --jobs timing"

@@ -257,7 +257,8 @@ def test_sweep_workload_axis(tmp_path):
         chips_per_pod=2,
     )
     assert spec.cells() == [
-        ("degraded_ici_link", "collective", 0), ("degraded_ici_link", "rpc", 0),
+        ("degraded_ici_link", "collective", None, 0),
+        ("degraded_ici_link", "rpc", None, 0),
     ]
     result = run_sweep(spec, str(tmp_path), jobs=1, structured=True)
     assert [c.workload for c in result.cells] == ["collective", "rpc"]
@@ -279,7 +280,7 @@ def test_sweep_workload_axis(tmp_path):
 
 
 def test_list_scenarios_workload_filter():
-    assert list_scenarios("rpc") == ["rpc_tail_latency"]
+    assert list_scenarios("rpc") == ["rpc_tail_latency", "link_loss_rpc"]
     assert "healthy_baseline" in list_scenarios("collective")
     assert set(list_scenarios()) == set(SCENARIOS)
 
