@@ -1,0 +1,317 @@
+"""Diagnosis accuracy benchmark — the repo's scoring baseline (BENCH_diag.json).
+
+Four sections, each a ``run_sweep`` grid scored by
+``repro.core.evaluation``:
+
+* ``curated``     — the curated scenario library under its own pinned
+                    workloads × seeds: the regression gate.  Per-fault-class
+                    recall must be 1.0 and the healthy baseline must score
+                    zero findings (asserted inside the bench, smoke and
+                    full alike — tier-1 runs ``--smoke``).
+* ``grid``        — the full scenario × workload × seed cross product:
+                    every fault class re-run under every workload type
+                    (``collective`` / ``rpc`` / ``storage`` / ``pipeline``).
+                    Cross-workload attribution is *reported*, not gated —
+                    this is the leaderboard future detector work moves.
+* ``sensitivity`` — the fault-magnitude axis (``SweepSpec(magnitudes=...)``
+                    scaling every fault via ``FaultSpec.scaled``):
+                    detection rate vs fraction-of-published-intensity per
+                    scenario, i.e. at what magnitude each rule stops
+                    firing.  Magnitude 0 must detect nothing (the healthy
+                    edge) and magnitude 1 everything (the curated gate
+                    re-stated) — both asserted.
+* ``masking``     — does remediation hide the fault from the detector?
+                    Scenarios × every registered mitigation policy; each
+                    row reports the policy's detection rate next to its
+                    declared ``masks`` contract (PR 6's
+                    ``MitigationConflictError`` semantics, measured).
+
+Results land in ``BENCH_diag.json`` (schema ``columbo.diag_bench/v1``,
+validated in ``tests/test_sweep.py`` alongside the engine bench); the
+evaluation cookbook is ``docs/evaluation.md``.
+
+    python -m benchmarks.diag_bench                 # full leaderboard (~2 min)
+    python -m benchmarks.diag_bench --smoke         # tier-1 recall gate (~15 s)
+    python -m benchmarks.diag_bench --out my.json --jobs 4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import tempfile
+import time
+
+SCHEMA = "columbo.diag_bench/v1"
+
+WORKLOADS = ("collective", "rpc", "storage", "pipeline")
+
+FULL_SEEDS = (0, 1, 2)
+SMOKE_SEEDS = (0,)
+
+FULL_MAGNITUDES = (0.0, 0.05, 0.1, 0.25, 0.5, 1.0)
+SMOKE_MAGNITUDES = (0.0, 0.25, 1.0)
+FULL_SENSITIVITY_SCENARIOS = (
+    "degraded_ici_link", "lossy_dcn", "gc_pause_host0",
+    "throttled_chip", "drifting_clock_host1",
+)
+SMOKE_SENSITIVITY_SCENARIOS = ("degraded_ici_link",)
+FULL_SENSITIVITY_SEEDS = (0, 1)
+
+FULL_MASKING_SCENARIOS = ("link_loss_rpc", "throttled_chip")
+SMOKE_MASKING_SCENARIOS = ("throttled_chip",)
+
+SMOKE_GRID_SCENARIOS = ("healthy_baseline", "degraded_ici_link", "gc_pause_host0")
+
+
+def _sweep_stats(spec, jobs: int):
+    """Run one sweep into a throwaway dir; returns (stats, wall_s)."""
+    from repro.sim.sweep import run_sweep
+
+    with tempfile.TemporaryDirectory(prefix="diag-bench-") as d:
+        t0 = time.perf_counter()
+        result = run_sweep(spec, d, jobs=jobs, structured=True)
+        wall = time.perf_counter() - t0
+        return result.run_stats(), wall
+
+
+def bench_curated(seeds=FULL_SEEDS, jobs: int = 1) -> dict:
+    """The regression gate: curated library × seeds, pinned workloads.
+
+    Asserts per-class recall == 1.0 and zero healthy false positives —
+    the library is published as fully diagnosable, so any rule or weaver
+    change that breaks the round-trip fails here (and in tier-1, which
+    runs this at smoke sizes).
+    """
+    from repro.core.evaluation import evaluate_diagnosis
+    from repro.sim.sweep import SweepSpec
+
+    spec = SweepSpec.library(seeds=tuple(seeds))
+    stats, wall = _sweep_stats(spec, jobs)
+    ev = evaluate_diagnosis(stats)
+    for name, c in sorted(ev.classes.items()):
+        assert c.recall == 1.0, (
+            f"curated library recall regression: {name} recalled "
+            f"{c.tp}/{c.injected} injected cells"
+        )
+    assert ev.healthy_false_positives == 0, (
+        f"healthy baseline produced findings in "
+        f"{ev.healthy_false_positives}/{ev.healthy_cells} cells"
+    )
+    return {
+        "scenarios": list(spec.scenarios),
+        "seeds": list(seeds),
+        "cells": len(stats),
+        "wall_s": round(wall, 3),
+        "confusion": ev.to_dict(),
+    }
+
+
+def bench_grid(scenarios=None, workloads=WORKLOADS, seeds=FULL_SEEDS,
+               jobs: int = 1) -> dict:
+    """The full cross product: every scenario × every workload type × seeds.
+
+    Faults compose with every workload, but their *signatures* differ by
+    driver (an ICI collapse stretches collectives; under ``rpc`` it shows
+    up in request tails), so cross-workload cells measure how portable
+    each rule is.  Reported, not asserted — the leaderboard to beat.
+    """
+    from repro.core.evaluation import evaluate_diagnosis
+    from repro.sim.sweep import SweepSpec
+
+    if scenarios is None:
+        spec = SweepSpec.library(seeds=tuple(seeds), workloads=tuple(workloads))
+    else:
+        spec = SweepSpec(scenarios=tuple(scenarios), seeds=tuple(seeds),
+                         workloads=tuple(workloads))
+    stats, wall = _sweep_stats(spec, jobs)
+    ev = evaluate_diagnosis(stats)
+    return {
+        "scenarios": list(spec.scenarios),
+        "workloads": list(workloads),
+        "seeds": list(seeds),
+        "cells": len(stats),
+        "wall_s": round(wall, 3),
+        "confusion": ev.to_dict(),
+    }
+
+
+def bench_sensitivity(scenarios=FULL_SENSITIVITY_SCENARIOS,
+                      magnitudes=FULL_MAGNITUDES,
+                      seeds=FULL_SENSITIVITY_SEEDS, jobs: int = 1) -> dict:
+    """Detection-sensitivity curves over the fault-magnitude axis.
+
+    Each scenario re-runs with every fault scaled to ``magnitude`` times
+    its published intensity; the curve is the fraction of seeds whose
+    diagnosis still names the injected class.  The interesting part is
+    the middle — where each rule's k-MAD/threshold floor actually sits.
+    """
+    from repro.core.evaluation import sensitivity_curves
+    from repro.sim.sweep import SweepSpec
+
+    spec = SweepSpec(scenarios=tuple(scenarios), seeds=tuple(seeds),
+                     magnitudes=tuple(magnitudes))
+    stats, wall = _sweep_stats(spec, jobs)
+    curves = sensitivity_curves(stats)
+    for c in curves:
+        rates = dict(c.points)
+        if 0.0 in rates:
+            assert rates[0.0] == 0.0, (
+                f"{c.scenario}: fault class {c.fault_class} detected at "
+                f"magnitude 0 (a scaled-to-nothing fault must be healthy)"
+            )
+        if 1.0 in rates:
+            assert rates[1.0] == 1.0, (
+                f"{c.scenario}: fault class {c.fault_class} missed at "
+                f"magnitude 1 (full intensity must stay diagnosable)"
+            )
+    return {
+        "scenarios": list(scenarios),
+        "magnitudes": list(magnitudes),
+        "seeds": list(seeds),
+        "cells": len(stats),
+        "wall_s": round(wall, 3),
+        "curves": [c.to_dict() for c in curves],
+    }
+
+
+def bench_masking(scenarios=FULL_MASKING_SCENARIOS, seeds=FULL_SEEDS,
+                  jobs: int = 1) -> dict:
+    """Mitigation-masking measurement: detection rate per policy.
+
+    For each scenario, every registered policy runs on the same fault
+    trace (the sweep's mitigations axis bypasses ``run()``'s
+    ``MitigationConflictError`` check by design — here we *measure* the
+    masking that check guards against).  ``masks_expected`` is the
+    policy's declared contract; ``detection_rate`` is what actually
+    happened, so a declared-masking policy with rate 1.0 (or vice versa)
+    is a contract bug surfaced by the leaderboard.
+    """
+    from repro.sim.mitigation import list_mitigations, mitigation_type
+    from repro.sim.scenarios import get_scenario
+    from repro.sim.sweep import SweepSpec
+
+    policies = tuple(list_mitigations())
+    spec = SweepSpec(scenarios=tuple(scenarios), seeds=tuple(seeds),
+                     mitigations=policies)
+    stats, wall = _sweep_stats(spec, jobs)
+    rows = []
+    for scenario in scenarios:
+        expected = set(get_scenario(scenario).expected_classes)
+        for policy in policies:
+            cells = [s for s in stats
+                     if s.scenario == scenario and s.mitigation == policy]
+            hits = sum(1 for s in cells if expected <= set(s.detected))
+            rows.append({
+                "scenario": scenario,
+                "policy": policy,
+                "expected": sorted(expected),
+                "masks_expected": bool(
+                    expected & set(mitigation_type(policy).masks)
+                ),
+                "cells": len(cells),
+                "detection_rate": hits / len(cells) if cells else 0.0,
+            })
+    return {
+        "scenarios": list(scenarios),
+        "policies": list(policies),
+        "seeds": list(seeds),
+        "cells": len(stats),
+        "wall_s": round(wall, 3),
+        "rows": rows,
+    }
+
+
+def collect(smoke: bool = False, jobs: int = 0) -> dict:
+    """Run all four sections and assemble the BENCH_diag.json payload."""
+    if jobs <= 0:
+        jobs = min(8, os.cpu_count() or 1)
+    if smoke:
+        curated = bench_curated(SMOKE_SEEDS, jobs=jobs)
+        grid = bench_grid(SMOKE_GRID_SCENARIOS, WORKLOADS, SMOKE_SEEDS,
+                          jobs=jobs)
+        sensitivity = bench_sensitivity(SMOKE_SENSITIVITY_SCENARIOS,
+                                        SMOKE_MAGNITUDES, SMOKE_SEEDS,
+                                        jobs=jobs)
+        masking = bench_masking(SMOKE_MASKING_SCENARIOS, SMOKE_SEEDS,
+                                jobs=jobs)
+    else:
+        curated = bench_curated(jobs=jobs)
+        grid = bench_grid(jobs=jobs)
+        sensitivity = bench_sensitivity(jobs=jobs)
+        masking = bench_masking(jobs=jobs)
+    return {
+        "schema": SCHEMA,
+        "smoke": smoke,
+        "host": {
+            "python": sys.version.split()[0],
+            "platform": platform.platform(),
+        },
+        "curated": curated,
+        "grid": grid,
+        "sensitivity": sensitivity,
+        "masking": masking,
+    }
+
+
+def run():
+    """``benchmarks.run`` harness hook: smoke-sized rows (name, us, derived)."""
+    payload = collect(smoke=True)
+    cur = payload["curated"]["confusion"]
+    yield ("diag.curated", payload["curated"]["wall_s"] * 1e6,
+           f"recall={cur['macro_recall']:.2f} "
+           f"comp={cur['component_accuracy']:.2f}")
+    g = payload["grid"]["confusion"]
+    yield ("diag.grid", payload["grid"]["wall_s"] * 1e6,
+           f"prec={g['macro_precision']:.2f} rec={g['macro_recall']:.2f}")
+    for c in payload["sensitivity"]["curves"]:
+        thr = c["detection_threshold"]
+        yield (f"diag.sensitivity.{c['scenario']}",
+               payload["sensitivity"]["wall_s"] * 1e6,
+               f"threshold={'-' if thr is None else thr}")
+    masked = sum(1 for r in payload["masking"]["rows"]
+                 if r["masks_expected"] and r["detection_rate"] < 1.0)
+    yield ("diag.masking", payload["masking"]["wall_s"] * 1e6,
+           f"{masked} masked policy rows")
+
+
+def main() -> None:
+    """CLI entry: write the leaderboard payload and print a summary."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for the tier-1 recall gate (~15 s)")
+    ap.add_argument("--out", default="BENCH_diag.json",
+                    help="where to write the JSON payload")
+    ap.add_argument("--jobs", type=int, default=0,
+                    help="sweep worker processes (0 = min(8, cores))")
+    args = ap.parse_args()
+    payload = collect(smoke=args.smoke, jobs=args.jobs)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    for section in ("curated", "grid"):
+        conf = payload[section]["confusion"]
+        print(f"[diag_bench] {section}: {payload[section]['cells']} cells in "
+              f"{payload[section]['wall_s']}s — "
+              f"macro P={conf['macro_precision']:.2f} "
+              f"R={conf['macro_recall']:.2f} F1={conf['macro_f1']:.2f}, "
+              f"component acc {conf['component_accuracy']:.2f}, "
+              f"healthy FPR {conf['healthy_fpr']:.2f}")
+    for c in payload["sensitivity"]["curves"]:
+        pts = " ".join(f"{p['magnitude']:g}:{p['detection_rate']:.2f}"
+                       for p in c["points"])
+        thr = c["detection_threshold"]
+        print(f"[diag_bench] sensitivity {c['scenario']}/{c['fault_class']}: "
+              f"{pts} (threshold {'-' if thr is None else f'{thr:g}'})")
+    for r in payload["masking"]["rows"]:
+        flag = "MASKS" if r["masks_expected"] else "     "
+        print(f"[diag_bench] masking {r['scenario']:16s} "
+              f"{r['policy']:20s} {flag} "
+              f"detection {r['detection_rate']:.2f}")
+    print(f"[diag_bench] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,25 @@ echo "[tier1] examples smoke: quickstart.py + rpc_request_trace.py + mitigation_
 mkdir -p results
 python -m benchmarks.engine_bench --smoke --out results/BENCH_engine.smoke.json
 
+# diagnosis accuracy gate: the curated library must stay fully recalled
+# (recall == 1.0 per fault class, zero healthy false positives — asserted
+# inside the bench; schema is validated in tests/test_sweep.py)
+python -m benchmarks.diag_bench --smoke --out results/BENCH_diag.smoke.json
+python - <<'PY'
+import json
+
+with open("results/BENCH_diag.smoke.json") as f:
+    payload = json.load(f)
+conf = payload["curated"]["confusion"]
+assert conf["macro_recall"] == 1.0, (
+    f"curated library macro recall {conf['macro_recall']} != 1.0"
+)
+assert conf["healthy_false_positives"] == 0
+print(f"[tier1] diag smoke: curated recall 1.00 over "
+      f"{payload['curated']['cells']} cells, healthy FPR "
+      f"{conf['healthy_fpr']:.2f}")
+PY
+
 # perf smoke: the structured fast path must never regress below the text
 # path's events/sec (a ratio check, not an absolute bar, so loaded CI
 # hosts don't flake — the committed full run shows the real ~3x)

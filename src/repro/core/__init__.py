@@ -8,6 +8,7 @@ Public API surface of the paper's contribution (§3):
 * weaver:    span weaving + implicit context propagation
 * exporters: streaming Jaeger / Chrome trace / OTLP / JSONL / console
 * analysis:  breakdowns, critical path, clock + straggler diagnostics
+* evaluation: scored diagnosis — confusion matrices + sensitivity curves
 * registry:  pluggable SimulatorRegistry (custom sim types, no core edits)
 * session:   TraceSpec (declarative) + TraceSession (fluent) composition
 * script:    deprecated ColumboScript shim over TraceSession
@@ -46,6 +47,13 @@ from .analysis import (
     trace_summary,
 )
 from .context import ContextRegistry
+from .evaluation import (
+    ClassConfusion,
+    DiagnosisEvaluation,
+    SensitivityCurve,
+    evaluate_diagnosis,
+    sensitivity_curves,
+)
 from .errors import (
     ColumboError,
     SessionNotRunError,

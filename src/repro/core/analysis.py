@@ -721,6 +721,12 @@ class RunStats:
     mitigation: str = ""               # policy name ("" = unmitigated/baseline)
     mitigation_us: List[float] = field(default_factory=list)  # trigger->done (µs)
     capacity_penalty: float = 0.0      # summed penalty attrs of Mitigation spans
+    magnitude: float = 1.0             # fault-magnitude axis value for this cell
+    # ground truth / diagnosis at component granularity, keyed by fault
+    # class — what the evaluation harness scores component naming against
+    expected_components: Dict[str, List[str]] = field(default_factory=dict)
+    finding_components: Dict[str, List[str]] = field(default_factory=dict)
+    diag_wall_s: float = 0.0           # wall time spent inside diagnose()
 
     @property
     def ok(self) -> bool:
@@ -741,10 +747,22 @@ class RunStats:
         wall_s: float = 0.0,
         events: int = 0,
         mitigation: str = "",
+        findings: Optional[Sequence[Finding]] = None,
+        expected_components: Optional[Dict[str, Sequence[str]]] = None,
+        diag_wall_s: float = 0.0,
+        magnitude: float = 1.0,
     ) -> "RunStats":
         """Reduce woven spans (``detected=None`` runs :func:`diagnose`)."""
         if detected is None:
-            detected = diagnose(spans).fault_classes
+            d = diagnose(spans)
+            detected = d.fault_classes
+            if findings is None:
+                findings = d.findings
+        finding_components: Dict[str, List[str]] = {}
+        for f in findings or ():
+            comps = finding_components.setdefault(f.fault_class, [])
+            if f.component not in comps:
+                comps.append(f.component)
         comp: Dict[str, List[float]] = defaultdict(list)
         request_us: List[float] = []
         mitigation_us: List[float] = []
@@ -778,6 +796,12 @@ class RunStats:
             mitigation=mitigation,
             mitigation_us=mitigation_us,
             capacity_penalty=capacity_penalty,
+            magnitude=magnitude,
+            expected_components={
+                k: list(v) for k, v in (expected_components or {}).items()
+            },
+            finding_components=finding_components,
+            diag_wall_s=diag_wall_s,
         )
 
     @classmethod
@@ -833,6 +857,10 @@ class RunStats:
             "mitigation": self.mitigation,
             "mitigation_us": self.mitigation_us,
             "capacity_penalty": self.capacity_penalty,
+            "magnitude": self.magnitude,
+            "expected_components": self.expected_components,
+            "finding_components": self.finding_components,
+            "diag_wall_s": self.diag_wall_s,
         }
 
     @classmethod
@@ -853,6 +881,15 @@ class RunStats:
             mitigation=str(d.get("mitigation", "")),
             mitigation_us=list(d.get("mitigation_us", ())),
             capacity_penalty=float(d.get("capacity_penalty", 0.0)),
+            # absent before schema-v4: full intensity, no component truth
+            magnitude=float(d.get("magnitude", 1.0)),
+            expected_components={
+                k: list(v) for k, v in d.get("expected_components", {}).items()
+            },
+            finding_components={
+                k: list(v) for k, v in d.get("finding_components", {}).items()
+            },
+            diag_wall_s=float(d.get("diag_wall_s", 0.0)),
         )
 
 

@@ -1,0 +1,318 @@
+"""Scored diagnosis evaluation: confusion matrices + sensitivity curves.
+
+The paper's claim is attribution — a trace should pin an anomalous request
+on the component that caused it.  ``sim/faults.py`` injects ground truth,
+``analysis.diagnose`` attributes blind, and this module *scores* the
+round-trip across a population of runs (Anand et al. and Zhang et al. both
+argue attribution quality is a population property, not a spot check):
+
+* :func:`evaluate_diagnosis` folds a sweep's per-cell
+  :class:`~repro.core.analysis.RunStats` into one per-fault-class
+  confusion matrix (:class:`ClassConfusion`) — precision / recall / F1,
+  false-positive rate on healthy cells, component-naming accuracy (did the
+  finding name the actually-faulted link/host/chip/pod), and the wall time
+  ``diagnose()`` itself spent.
+
+* :func:`sensitivity_curves` reads the sweep's fault-magnitude axis
+  (``SweepSpec(magnitudes=...)``) into per-scenario detection-rate curves:
+  at what fraction of its published intensity does each fault class stop
+  being diagnosed.
+
+``benchmarks/diag_bench.py`` drives both over the curated scenario library
+and commits the result as the ``BENCH_diag.json`` leaderboard; the scoring
+itself lives here so notebooks and tests can evaluate any
+``run_sweep`` / ``load_sweep`` output the same way.
+
+Scoring semantics, per cell and fault class: injected ∧ diagnosed → TP,
+injected ∧ missed → FN, diagnosed ∧ not injected → FP, neither → TN (over
+the union of classes seen anywhere in the population).  A TP cell also
+scores component naming: a hit iff some finding of that class named one of
+the cell's ground-truth targets (``RunStats.finding_components`` ∩
+``RunStats.expected_components``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .analysis import RunStats
+
+
+def _safe_div(num: float, den: float, default: float = 1.0) -> float:
+    """``num / den`` with an explicit vacuous value for an empty denominator
+    (no predictions → precision is vacuously perfect, etc.)."""
+    return num / den if den else default
+
+
+@dataclass
+class ClassConfusion:
+    """One fault class's confusion-matrix counts across a cell population."""
+
+    fault_class: str
+    tp: int = 0                 # injected and diagnosed
+    fn: int = 0                 # injected, missed
+    fp: int = 0                 # diagnosed, not injected
+    tn: int = 0                 # neither
+    component_hits: int = 0     # TP cells whose finding named a true target
+    component_total: int = 0    # TP cells with component ground truth
+
+    @property
+    def injected(self) -> int:
+        """Cells where this class was injected (``tp + fn``)."""
+        return self.tp + self.fn
+
+    @property
+    def precision(self) -> float:
+        """``tp / (tp + fp)`` — vacuously 1.0 with no positive predictions."""
+        return _safe_div(self.tp, self.tp + self.fp)
+
+    @property
+    def recall(self) -> float:
+        """``tp / (tp + fn)`` — vacuously 1.0 with no injected cells."""
+        return _safe_div(self.tp, self.tp + self.fn)
+
+    @property
+    def f1(self) -> float:
+        """Harmonic mean of precision and recall."""
+        p, r = self.precision, self.recall
+        return _safe_div(2 * p * r, p + r, default=0.0)
+
+    @property
+    def fpr(self) -> float:
+        """``fp / (fp + tn)`` — false alarms among clean-of-this-class
+        cells (vacuously 0.0 when every cell injected the class)."""
+        return _safe_div(self.fp, self.fp + self.tn, default=0.0)
+
+    @property
+    def component_accuracy(self) -> float:
+        """Of TP cells with component ground truth, the fraction whose
+        finding named the actually-faulted component."""
+        return _safe_div(self.component_hits, self.component_total)
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-serializable form (one leaderboard row)."""
+        return {
+            "fault_class": self.fault_class,
+            "tp": self.tp, "fn": self.fn, "fp": self.fp, "tn": self.tn,
+            "precision": self.precision,
+            "recall": self.recall,
+            "f1": self.f1,
+            "fpr": self.fpr,
+            "component_hits": self.component_hits,
+            "component_total": self.component_total,
+            "component_accuracy": self.component_accuracy,
+        }
+
+
+@dataclass
+class DiagnosisEvaluation:
+    """What :func:`evaluate_diagnosis` returns: the scored population."""
+
+    classes: Dict[str, ClassConfusion] = field(default_factory=dict)
+    n_cells: int = 0
+    healthy_cells: int = 0               # cells with nothing injected
+    healthy_false_positives: int = 0     # healthy cells with any finding
+    diag_wall_s_total: float = 0.0       # summed diagnose() wall time
+    diag_wall_s_max: float = 0.0
+
+    @property
+    def healthy_fpr(self) -> float:
+        """Fraction of healthy-baseline cells where diagnose() cried wolf."""
+        return _safe_div(self.healthy_false_positives, self.healthy_cells,
+                         default=0.0)
+
+    @property
+    def macro_precision(self) -> float:
+        """Unweighted mean per-class precision."""
+        return self._macro("precision")
+
+    @property
+    def macro_recall(self) -> float:
+        """Unweighted mean per-class recall."""
+        return self._macro("recall")
+
+    @property
+    def macro_f1(self) -> float:
+        """Unweighted mean per-class F1."""
+        return self._macro("f1")
+
+    @property
+    def micro_precision(self) -> float:
+        """Pooled-count precision over every class."""
+        tp = sum(c.tp for c in self.classes.values())
+        fp = sum(c.fp for c in self.classes.values())
+        return _safe_div(tp, tp + fp)
+
+    @property
+    def micro_recall(self) -> float:
+        """Pooled-count recall over every class."""
+        tp = sum(c.tp for c in self.classes.values())
+        fn = sum(c.fn for c in self.classes.values())
+        return _safe_div(tp, tp + fn)
+
+    @property
+    def component_accuracy(self) -> float:
+        """Pooled component-naming accuracy over every class's TP cells."""
+        hits = sum(c.component_hits for c in self.classes.values())
+        total = sum(c.component_total for c in self.classes.values())
+        return _safe_div(hits, total)
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-serializable form (the leaderboard's ``confusion`` block)."""
+        return {
+            "n_cells": self.n_cells,
+            "healthy_cells": self.healthy_cells,
+            "healthy_false_positives": self.healthy_false_positives,
+            "healthy_fpr": self.healthy_fpr,
+            "macro_precision": self.macro_precision,
+            "macro_recall": self.macro_recall,
+            "macro_f1": self.macro_f1,
+            "micro_precision": self.micro_precision,
+            "micro_recall": self.micro_recall,
+            "component_accuracy": self.component_accuracy,
+            "diag_wall_s_total": self.diag_wall_s_total,
+            "diag_wall_s_max": self.diag_wall_s_max,
+            "classes": {k: c.to_dict() for k, c in sorted(self.classes.items())},
+        }
+
+    def report(self) -> str:
+        """Human-readable leaderboard table."""
+        lines = [
+            f"diagnosis evaluation: {self.n_cells} cells "
+            f"({self.healthy_cells} healthy, "
+            f"healthy FPR {self.healthy_fpr:.2f}); "
+            f"diagnose() wall {self.diag_wall_s_total * 1e3:.1f} ms total / "
+            f"{self.diag_wall_s_max * 1e3:.2f} ms max",
+            f"  {'fault class':18s} {'inj':>4s} {'tp':>4s} {'fn':>4s} "
+            f"{'fp':>4s} {'prec':>6s} {'rec':>6s} {'f1':>6s} {'comp':>6s}",
+        ]
+        for name in sorted(self.classes):
+            c = self.classes[name]
+            lines.append(
+                f"  {name:18s} {c.injected:4d} {c.tp:4d} {c.fn:4d} {c.fp:4d} "
+                f"{c.precision:6.2f} {c.recall:6.2f} {c.f1:6.2f} "
+                f"{c.component_accuracy:6.2f}"
+            )
+        lines.append(
+            f"  {'macro':18s} {'':4s} {'':4s} {'':4s} {'':4s} "
+            f"{self.macro_precision:6.2f} {self.macro_recall:6.2f} "
+            f"{self.macro_f1:6.2f} {self.component_accuracy:6.2f}"
+        )
+        return "\n".join(lines)
+
+    def _macro(self, metric: str) -> float:
+        scored = [c for c in self.classes.values() if c.injected or c.fp]
+        if not scored:
+            return 1.0
+        return sum(getattr(c, metric) for c in scored) / len(scored)
+
+
+def evaluate_diagnosis(stats: Sequence[RunStats]) -> DiagnosisEvaluation:
+    """Score a population of cells into a per-fault-class confusion matrix.
+
+    ``stats`` is any collection of pre-reduced cells —
+    ``SweepResult.run_stats()``, a re-hydrated ``load_sweep`` result, or
+    hand-built :class:`~repro.core.analysis.RunStats`.  The class universe
+    (for TN counting) is the union of every cell's expected and detected
+    classes, so the evaluation never needs the injection registry.
+    """
+    ev = DiagnosisEvaluation(n_cells=len(stats))
+    universe: List[str] = []
+    for s in stats:
+        for cls in tuple(s.expected) + tuple(s.detected):
+            if cls not in universe:
+                universe.append(cls)
+    for cls in universe:
+        ev.classes[cls] = ClassConfusion(fault_class=cls)
+    for s in stats:
+        expected = set(s.expected)
+        detected = set(s.detected)
+        if not expected:
+            ev.healthy_cells += 1
+            if detected:
+                ev.healthy_false_positives += 1
+        ev.diag_wall_s_total += s.diag_wall_s
+        ev.diag_wall_s_max = max(ev.diag_wall_s_max, s.diag_wall_s)
+        for cls in universe:
+            c = ev.classes[cls]
+            if cls in expected and cls in detected:
+                c.tp += 1
+                truth = s.expected_components.get(cls)
+                if truth:
+                    c.component_total += 1
+                    named = s.finding_components.get(cls, ())
+                    if set(named) & set(truth):
+                        c.component_hits += 1
+            elif cls in expected:
+                c.fn += 1
+            elif cls in detected:
+                c.fp += 1
+            else:
+                c.tn += 1
+    return ev
+
+
+@dataclass
+class SensitivityCurve:
+    """Detection rate vs fault magnitude for one (scenario, fault class).
+
+    ``points`` are ``(magnitude, detection_rate)`` sorted by magnitude,
+    where detection rate pools every cell of that scenario/magnitude
+    (across seeds, and workloads/mitigations if swept).
+    """
+
+    scenario: str
+    fault_class: str
+    points: List[Tuple[float, float]] = field(default_factory=list)
+
+    @property
+    def detection_threshold(self) -> Optional[float]:
+        """The smallest swept magnitude with a majority (>= 0.5) detection
+        rate — where the rule starts reliably firing; ``None`` if it never
+        does."""
+        for mag, rate in self.points:
+            if rate >= 0.5:
+                return mag
+        return None
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-serializable form (one leaderboard curve)."""
+        return {
+            "scenario": self.scenario,
+            "fault_class": self.fault_class,
+            "points": [{"magnitude": m, "detection_rate": r}
+                       for m, r in self.points],
+            "detection_threshold": self.detection_threshold,
+        }
+
+    def report(self) -> str:
+        """One-line curve summary."""
+        pts = " ".join(f"{m:g}:{r:.2f}" for m, r in self.points)
+        thr = self.detection_threshold
+        return (f"{self.scenario}/{self.fault_class}: {pts} "
+                f"(threshold {'-' if thr is None else f'{thr:g}'})")
+
+
+def sensitivity_curves(stats: Sequence[RunStats]) -> List[SensitivityCurve]:
+    """Fold a magnitude-axis sweep into per-scenario detection curves.
+
+    Cells are grouped by ``(scenario, injected fault class)``; each swept
+    magnitude contributes one point whose rate is the fraction of that
+    group's cells where the class was diagnosed.  Scenarios without any
+    injected class (healthy baselines) produce no curve.
+    """
+    rates: Dict[Tuple[str, str], Dict[float, List[bool]]] = {}
+    for s in stats:
+        for cls in s.expected:
+            hits = rates.setdefault((s.scenario, cls), {})
+            hits.setdefault(s.magnitude, []).append(cls in s.detected)
+    curves = []
+    for (scenario, cls), by_mag in sorted(rates.items()):
+        points = [
+            (mag, sum(hits) / len(hits))
+            for mag, hits in sorted(by_mag.items())
+        ]
+        curves.append(
+            SensitivityCurve(scenario=scenario, fault_class=cls, points=points)
+        )
+    return curves

@@ -1,3 +1,4 @@
+from .compat import shard_map
 from .compression import (
     compressed_psum,
     dequantize_int8,

@@ -1,0 +1,37 @@
+"""jax API compatibility shims for the distributed layer.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (where replication
+checking is the ``check_rep`` kwarg) to top-level ``jax.shard_map`` (where
+it became ``check_vma``).  :func:`shard_map` here presents the new-style
+surface on either jax, so callers write one spelling:
+
+    from repro.distributed.compat import shard_map
+    f = shard_map(fn, mesh=mesh, in_specs=..., out_specs=..., check_vma=False)
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    _TOP_LEVEL_SHARD_MAP = jax.shard_map
+except AttributeError:        # jax < 0.6: only the experimental spelling exists
+    _TOP_LEVEL_SHARD_MAP = None
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the modern signature on any supported jax.
+
+    On older jax the call lowers to ``jax.experimental.shard_map.shard_map``
+    with ``check_vma`` mapped onto its ``check_rep`` predecessor.
+    """
+    if _TOP_LEVEL_SHARD_MAP is not None:
+        return _TOP_LEVEL_SHARD_MAP(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _experimental
+
+    return _experimental(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

@@ -35,6 +35,14 @@ report (detection rates, latency percentiles, critical-path frequency):
 ``python -m repro.launch.trace --sweep --scenarios lossy_dcn,healthy_baseline \\
      --seeds 0,1,2 --sweep-pods 64 --fabric fat-tree``
 
+``--magnitudes`` adds the fault-magnitude sweep axis (scaled fault
+intensities — the detection-sensitivity curves' x axis), and
+``--diag-bench`` runs the scored diagnosis benchmark end to end:
+
+``python -m repro.launch.trace --sweep --scenarios degraded_ici_link \\
+     --magnitudes 0.0,0.25,1.0``
+``python -m repro.launch.trace --diag-bench [--diag-smoke]``
+
 ``--structured`` switches every path onto the zero-parse event fast path
 (simulators hand Event records straight to the weavers; no text logs are
 formatted or re-parsed).  Output bytes are identical — only faster:
@@ -99,6 +107,10 @@ def _run_sweep(args) -> None:
         )
     elif args.mitigation:
         overrides["mitigations"] = (args.mitigation,)
+    if args.magnitudes:
+        overrides["magnitudes"] = tuple(
+            float(m) for m in args.magnitudes.split(",") if m.strip()
+        )
     if scenarios is None:
         spec = SweepSpec.library(seeds=seeds, **overrides)
     else:
@@ -156,6 +168,40 @@ def _run_scenario(args) -> None:
         raise SystemExit(1)
 
 
+def _run_diag_bench(args) -> None:
+    """Run the scored diagnosis benchmark (benchmarks/diag_bench.py) and
+    write its leaderboard payload under ``--outdir``."""
+    try:
+        from benchmarks import diag_bench          # repo root on sys.path
+    except ImportError:                            # installed package: load by path
+        import importlib.util
+
+        root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+        path = os.path.join(root, "benchmarks", "diag_bench.py")
+        if not os.path.exists(path):
+            raise SystemExit(
+                "benchmarks/diag_bench.py not found; run from the repo root "
+                "or use `python -m benchmarks.diag_bench`"
+            )
+        spec = importlib.util.spec_from_file_location("diag_bench", path)
+        diag_bench = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(diag_bench)
+    payload = diag_bench.collect(smoke=args.diag_smoke, jobs=args.jobs)
+    os.makedirs(args.outdir, exist_ok=True)
+    out = os.path.join(
+        args.outdir, "BENCH_diag.smoke.json" if args.diag_smoke else "BENCH_diag.json"
+    )
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    conf = payload["curated"]["confusion"]
+    print(f"[diag-bench] curated macro recall {conf['macro_recall']:.2f}, "
+          f"component accuracy {conf['component_accuracy']:.2f}, "
+          f"healthy FPR {conf['healthy_fpr']:.2f}")
+    print(f"[diag-bench] wrote {out}")
+
+
 def _list_scenarios(args) -> None:
     from ..sim.scenarios import SCENARIOS
 
@@ -210,8 +256,18 @@ def main() -> None:
                     help="comma list: run every sweep cell under each of "
                          "these policies and print the score_mitigations() "
                          "scoreboard (the mitigation sweep axis)")
+    ap.add_argument("--magnitudes", default="",
+                    help="comma list of fault magnitudes: run every sweep "
+                         "cell at each scaled fault intensity (the "
+                         "detection-sensitivity axis, e.g. 0.0,0.25,1.0)")
     ap.add_argument("--list-scenarios", action="store_true")
     ap.add_argument("--list-mitigations", action="store_true")
+    ap.add_argument("--diag-bench", action="store_true",
+                    help="run the scored diagnosis benchmark "
+                         "(benchmarks/diag_bench.py) and write BENCH_diag.json "
+                         "under --outdir")
+    ap.add_argument("--diag-smoke", action="store_true",
+                    help="with --diag-bench: smoke sizes (the tier-1 gate)")
     ap.add_argument("--sweep", action="store_true",
                     help="run a (scenario x seed) sweep through sim/sweep.py")
     ap.add_argument("--jobs", type=int, default=1,
@@ -240,12 +296,17 @@ def main() -> None:
     if args.list_mitigations:
         _list_mitigations()
         return
+    if args.diag_bench:
+        _run_diag_bench(args)
+        return
     if args.sweep:
         _run_sweep(args)
         return
     if args.scenario:
-        if args.workloads or args.mitigations:
-            axis = "--workloads" if args.workloads else "--mitigations"
+        if args.workloads or args.mitigations or args.magnitudes:
+            axis = ("--workloads" if args.workloads
+                    else "--mitigations" if args.mitigations
+                    else "--magnitudes")
             raise SystemExit(
                 f"{axis} is a sweep axis; with --scenario use the singular "
                 f"flag (or add --sweep to fan "
@@ -253,13 +314,14 @@ def main() -> None:
             )
         _run_scenario(args)
         return
-    if args.workload or args.workloads or args.mitigation or args.mitigations:
+    if (args.workload or args.workloads or args.mitigation
+            or args.mitigations or args.magnitudes):
         # the compiled-program training path below has no workload axis;
         # dropping the flag silently would trace the wrong workload
         raise SystemExit(
-            "--workload/--workloads/--mitigation/--mitigations require "
-            "--scenario or --sweep (the default path always traces the "
-            "compiled training program unmitigated)"
+            "--workload/--workloads/--mitigation/--mitigations/--magnitudes "
+            "require --scenario or --sweep (the default path always traces "
+            "the compiled training program unmitigated)"
         )
 
     from ..core import (

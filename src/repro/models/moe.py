@@ -42,8 +42,17 @@ def moe_block(
     p: Params,
     x: jax.Array,                      # (B, S, d)
     group_size: int = 1024,
+    train: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Returns (output, aux_load_balance_loss)."""
+    """Returns (output, aux_load_balance_loss).
+
+    Capacity-based token dropping only applies when ``train=True``: drops
+    depend on the other tokens in the group, so a capacity-bound forward()
+    diverges from incremental decode (which sees one token per call and can
+    never overflow).  Inference is dropless — C = Tg covers the worst case
+    exactly, because top_k yields distinct experts per token, so an expert
+    receives at most Tg assignments.
+    """
     B, S, d = x.shape
     dt = x.dtype
     E, k = cfg.n_experts, cfg.top_k
@@ -57,7 +66,7 @@ def moe_block(
     # renormalize the selected gates
     gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
 
-    C = _capacity(cfg, Tg)
+    C = _capacity(cfg, Tg) if train else Tg
     counts = jnp.zeros((G, E), jnp.float32)
     dispatch = jnp.zeros((G, Tg, E, C), dtype=dt)
     combine = jnp.zeros((G, Tg, E, C), dtype=jnp.float32)

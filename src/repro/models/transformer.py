@@ -114,7 +114,8 @@ def _model_pspecs_body(cfg: ModelConfig, p: Params) -> Params:
 
 
 def apply_block(
-    cfg: ModelConfig, kind: str, p: Params, x: jax.Array, positions: jax.Array
+    cfg: ModelConfig, kind: str, p: Params, x: jax.Array, positions: jax.Array,
+    train: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """Returns (x, moe_aux)."""
     aux = jnp.zeros((), jnp.float32)
@@ -128,17 +129,17 @@ def apply_block(
     x = constrain(x, "batch", None, None)
     h2 = apply_norm(cfg, x, p.get("norm2"))
     if "moe" in p:
-        y, aux = moe_block(cfg, p["moe"], h2)
+        y, aux = moe_block(cfg, p["moe"], h2, train=train)
     else:
         y = mlp(cfg, p["mlp"], h2)
     x = x + y
     return constrain(x, "batch", None, None), aux
 
 
-def _group_body(cfg: ModelConfig, carry, group_params, positions):
+def _group_body(cfg: ModelConfig, carry, group_params, positions, train=False):
     x, aux = carry
     for i, kind in enumerate(cfg.block_pattern):
-        x, a = apply_block(cfg, kind, group_params[f"b{i}"], x, positions)
+        x, a = apply_block(cfg, kind, group_params[f"b{i}"], x, positions, train=train)
         aux = aux + a
     return (x, aux)
 
@@ -159,6 +160,7 @@ def forward(
     tokens: Optional[jax.Array] = None,       # (B, S) int32
     embeds: Optional[jax.Array] = None,       # (B, S, d) modality-frontend stub
     positions: Optional[jax.Array] = None,    # (S,)
+    train: bool = False,                      # capacity-drop MoE tokens (train only)
 ) -> Tuple[jax.Array, jax.Array]:
     """Returns (logits (B, S, V), moe_aux)."""
     if embeds is not None:
@@ -173,7 +175,7 @@ def forward(
 
     aux = jnp.zeros((), jnp.float32)
     if cfg.scan_layers and cfg.n_groups > 0 and "groups" in params:
-        body = _remat(cfg, functools.partial(_group_body, cfg, positions=positions))
+        body = _remat(cfg, functools.partial(_group_body, cfg, positions=positions, train=train))
 
         def scan_fn(carry, gp):
             return body(carry, gp), None
@@ -183,7 +185,7 @@ def forward(
     rest_start = cfg.n_groups * cfg.pattern_period if (cfg.scan_layers and "groups" in params) else 0
     for j, p_rest in enumerate(params["rest"]):
         kind = cfg.block_kind(rest_start + j)
-        x, a = apply_block(cfg, kind, p_rest, x, positions)
+        x, a = apply_block(cfg, kind, p_rest, x, positions, train=train)
         aux = aux + a
 
     x = apply_norm(cfg, x, params.get("final_norm"))

@@ -28,7 +28,7 @@ to detection (asserted per scenario in ``tests/test_scenarios.py``).
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import ClassVar, List, Optional, Sequence, Tuple, TYPE_CHECKING
 
 from .netsim import LinkFault
@@ -59,11 +59,37 @@ class FaultSpec:
     philosophy as :class:`~repro.core.session.TraceSpec`) and implement
     ``schedule(cluster, rng)``; ``rng`` is this fault's private seeded
     stream, supplied by the owning :class:`FaultPlan`.
+
+    Two hooks close the loop with the scored diagnosis benchmark
+    (``core.evaluation`` / ``benchmarks/diag_bench.py``):
+
+    * :attr:`target` — the component name ``diagnose()`` is expected to pin
+      the fault on (the link / host / chip / pod the fault degrades), used
+      for component-naming accuracy scoring;
+    * :meth:`scaled` — the same fault at a different intensity, used by the
+      sweep's fault-magnitude axis to trace detection-sensitivity curves.
     """
 
     fault_class: ClassVar[str]
 
     def schedule(self, cluster: "ClusterOrchestrator", rng: random.Random) -> None:
+        raise NotImplementedError
+
+    @property
+    def target(self) -> str:
+        """The component a correct diagnosis names for this fault."""
+        raise NotImplementedError
+
+    def scaled(self, magnitude: float) -> "FaultSpec":
+        """This fault at ``magnitude`` times its specified intensity.
+
+        The contract every subclass honors: ``magnitude == 1.0`` returns
+        ``self`` unchanged (so default sweeps stay byte-identical),
+        ``magnitude == 0.0`` is a no-op fault (healthy behavior — the
+        sensitivity curve's left edge), and intensity varies monotonically
+        in between.  Timing knobs (``start_ps`` / ``at_ps`` / windows) are
+        never scaled — only the degradation magnitude moves.
+        """
         raise NotImplementedError
 
     def describe(self) -> str:
@@ -93,6 +119,22 @@ class LinkDegradation(FaultSpec):
         cluster.sim.at(self.start_ps, lambda: net.scale_link_bw(self.link, self.bw_factor))
         if self.stop_ps is not None:
             cluster.sim.at(self.stop_ps, lambda: net.scale_link_bw(self.link, 1 / self.bw_factor))
+
+    @property
+    def target(self) -> str:
+        """The degraded link."""
+        return self.link
+
+    def scaled(self, magnitude: float) -> "LinkDegradation":
+        """Exponential interpolation: ``bw_factor ** magnitude``.
+
+        Magnitude 0 gives factor 1.0 (no degradation); magnitude 1 gives the
+        specified collapse; the curve is monotone in between and extrapolates
+        smoothly past 1.
+        """
+        if magnitude == 1.0:
+            return self
+        return replace(self, bw_factor=self.bw_factor ** magnitude)
 
     def describe(self) -> str:
         return f"link {self.link} bandwidth x{self.bw_factor}"
@@ -146,6 +188,20 @@ class LossRateTrace:
             return self.peak
         return self.base
 
+    def scaled(self, magnitude: float) -> "LossRateTrace":
+        """The same profile with ``peak``/``base`` intensities scaled.
+
+        Probabilities clamp to 1.0; the time shape (``at_ps``/``ramp_ps``)
+        is untouched, per the :meth:`FaultSpec.scaled` contract.
+        """
+        if magnitude == 1.0:
+            return self
+        return replace(
+            self,
+            peak=min(1.0, self.peak * magnitude),
+            base=min(1.0, self.base * magnitude),
+        )
+
     def describe(self) -> str:
         """Human-readable profile summary (used by LinkLoss.describe)."""
         if self.profile == "constant":
@@ -183,6 +239,22 @@ class LinkLoss(FaultSpec):
             ),
         )
 
+    @property
+    def target(self) -> str:
+        """The lossy link."""
+        return self.link
+
+    def scaled(self, magnitude: float) -> "LinkLoss":
+        """Scale the drop probability (and any trace's intensities) linearly,
+        clamped to 1.0.  At magnitude 0 nothing ever drops."""
+        if magnitude == 1.0:
+            return self
+        return replace(
+            self,
+            drop_prob=min(1.0, self.drop_prob * magnitude),
+            trace=None if self.trace is None else self.trace.scaled(magnitude),
+        )
+
     def describe(self) -> str:
         if self.trace is not None:
             return f"link {self.link} loss {self.trace.describe()}"
@@ -212,6 +284,17 @@ class ChunkReorder(FaultSpec):
             ),
         )
 
+    @property
+    def target(self) -> str:
+        """The reordering link."""
+        return self.link
+
+    def scaled(self, magnitude: float) -> "ChunkReorder":
+        """Scale the jitter window linearly (0 ps of jitter == healthy)."""
+        if magnitude == 1.0:
+            return self
+        return replace(self, jitter_ps=int(round(self.jitter_ps * magnitude)))
+
     def describe(self) -> str:
         return f"link {self.link} jitter<{self.jitter_ps}ps"
 
@@ -237,6 +320,17 @@ class HostPause(FaultSpec):
         h = cluster.hosts[self.host]
         cluster.sim.at(self.at_ps, lambda: h.inject_stall(self.pause_ps, self.kind))
 
+    @property
+    def target(self) -> str:
+        """The stalled host."""
+        return self.host
+
+    def scaled(self, magnitude: float) -> "HostPause":
+        """Scale the stall duration linearly (a 0 ps stall logs nothing)."""
+        if magnitude == 1.0:
+            return self
+        return replace(self, pause_ps=int(round(self.pause_ps * magnitude)))
+
     def describe(self) -> str:
         return f"{self.host} pauses {self.pause_ps}ps ({self.kind})"
 
@@ -256,6 +350,17 @@ class ClockDrift(FaultSpec):
         clk = cluster.hosts[self.host].clock
         cluster.sim.at(self.at_ps, lambda: clk.set_drift(self.drift_ppm, cluster.sim.now))
 
+    @property
+    def target(self) -> str:
+        """The drifting host."""
+        return self.host
+
+    def scaled(self, magnitude: float) -> "ClockDrift":
+        """Scale the drift rate linearly (0 ppm == a true oscillator)."""
+        if magnitude == 1.0:
+            return self
+        return replace(self, drift_ppm=self.drift_ppm * magnitude)
+
     def describe(self) -> str:
         return f"{self.host} clock drifts {self.drift_ppm}ppm"
 
@@ -274,6 +379,17 @@ class ClockStep(FaultSpec):
     def schedule(self, cluster: "ClusterOrchestrator", rng: random.Random) -> None:
         clk = cluster.hosts[self.host].clock
         cluster.sim.at(self.at_ps, lambda: clk.step(self.step_ps))
+
+    @property
+    def target(self) -> str:
+        """The stepped host."""
+        return self.host
+
+    def scaled(self, magnitude: float) -> "ClockStep":
+        """Scale the step size linearly (a 0 ps step is a no-op)."""
+        if magnitude == 1.0:
+            return self
+        return replace(self, step_ps=int(round(self.step_ps * magnitude)))
 
     def describe(self) -> str:
         return f"{self.host} clock steps {self.step_ps}ps"
@@ -309,6 +425,18 @@ class DeviceSlowdown(FaultSpec):
         if self.stop_ps is not None:
             cluster.sim.at(self.stop_ps, _restore)
 
+    @property
+    def target(self) -> str:
+        """The throttled chip."""
+        return self.chip
+
+    def scaled(self, magnitude: float) -> "DeviceSlowdown":
+        """Interpolate the slowdown: ``1 + (factor - 1) * magnitude``, so
+        magnitude 0 is full speed and magnitude 1 the specified throttle."""
+        if magnitude == 1.0:
+            return self
+        return replace(self, factor=1.0 + (self.factor - 1.0) * magnitude)
+
     def describe(self) -> str:
         return f"chip {self.chip} compute x{self.factor}"
 
@@ -328,6 +456,18 @@ class StragglerPod(FaultSpec):
     def schedule(self, cluster: "ClusterOrchestrator", rng: random.Random) -> None:
         for chip in cluster.topo.pods[self.pod]:
             DeviceSlowdown(chip, self.factor, self.start_ps, self.stop_ps).schedule(cluster, rng)
+
+    @property
+    def target(self) -> str:
+        """The straggling pod, as ``pod<N>``."""
+        return f"pod{self.pod}"
+
+    def scaled(self, magnitude: float) -> "StragglerPod":
+        """Interpolate the pod-wide slowdown exactly like
+        :meth:`DeviceSlowdown.scaled`."""
+        if magnitude == 1.0:
+            return self
+        return replace(self, factor=1.0 + (self.factor - 1.0) * magnitude)
 
     def describe(self) -> str:
         return f"pod{self.pod} compute x{self.factor}"
@@ -362,6 +502,26 @@ class FaultPlan:
 
     def with_seed(self, seed: int) -> "FaultPlan":
         return FaultPlan(self.faults, seed)
+
+    def scaled(self, magnitude: float) -> "FaultPlan":
+        """Every fault at ``magnitude`` times its intensity (same seed).
+
+        Magnitude 1.0 returns ``self`` — the unscaled plan stays
+        byte-identical to pre-magnitude-axis runs.
+        """
+        if magnitude < 0.0:
+            raise ValueError(f"fault magnitude must be >= 0, got {magnitude}")
+        if magnitude == 1.0:
+            return self
+        return FaultPlan(tuple(f.scaled(magnitude) for f in self.faults), self.seed)
+
+    def targets(self) -> List[str]:
+        """Unique faulted components, in injection order."""
+        out: List[str] = []
+        for f in self.faults:
+            if f.target not in out:
+                out.append(f.target)
+        return out
 
     def fault_classes(self) -> List[str]:
         """Unique injected fault classes, in injection order."""

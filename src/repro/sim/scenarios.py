@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import io
 import tempfile
+import time
 from dataclasses import dataclass, field, fields as dataclasses_fields, replace
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -101,6 +102,7 @@ class ScenarioSpec:
     workload_params: Tuple[Tuple[str, object], ...] = ()
     mitigation: str = "do_nothing"                # registered mitigation policy
     mitigation_params: Tuple[Tuple[str, object], ...] = ()
+    fault_magnitude: float = 1.0                  # scales every fault's intensity
 
     @property
     def expected_classes(self) -> Tuple[str, ...]:
@@ -109,8 +111,21 @@ class ScenarioSpec:
             return self.expected
         return tuple(self.fault_plan().fault_classes())
 
+    @property
+    def expected_components(self) -> Dict[str, Tuple[str, ...]]:
+        """Per fault class, the component names a correct diagnosis pins it
+        on (each fault's :attr:`~repro.sim.faults.FaultSpec.target`) —
+        ground truth for the evaluation harness's component-naming score."""
+        out: Dict[str, List[str]] = {}
+        for f in self.faults:
+            targets = out.setdefault(f.fault_class, [])
+            if f.target not in targets:
+                targets.append(f.target)
+        return {cls: tuple(ts) for cls, ts in out.items()}
+
     def fault_plan(self, seed: Optional[int] = None) -> FaultPlan:
-        return FaultPlan(self.faults, self.seed if seed is None else seed)
+        plan = FaultPlan(self.faults, self.seed if seed is None else seed)
+        return plan.scaled(self.fault_magnitude)
 
     def with_seed(self, seed: int) -> "ScenarioSpec":
         return replace(self, seed=seed)
@@ -263,15 +278,19 @@ class ScenarioSpec:
             if tmp is not None:
                 tmp.cleanup()
                 outdir = None
+        t0 = time.perf_counter()
+        diagnosis = diagnose(session.spans)
+        diag_wall_s = time.perf_counter() - t0
         return ScenarioRun(
             scenario=self,
             plan=plan,
             cluster=cluster,
             session=session,
             spans=session.spans,
-            diagnosis=diagnose(session.spans),
+            diagnosis=diagnosis,
             span_jsonl=buf.getvalue(),
             outdir=outdir,
+            diag_wall_s=diag_wall_s,
         )
 
 
@@ -287,6 +306,7 @@ class ScenarioRun:
     diagnosis: object                  # core.analysis.Diagnosis
     span_jsonl: str
     outdir: Optional[str] = None
+    diag_wall_s: float = 0.0           # wall time spent inside diagnose()
 
     @property
     def detected(self) -> Tuple[str, ...]:

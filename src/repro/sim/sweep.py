@@ -42,13 +42,16 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .scenarios import SCENARIOS, ScenarioSpec, get_scenario
 
-SWEEP_SCHEMA = "columbo.sweep/v3"
-_SWEEP_SCHEMAS = ("columbo.sweep/v1", "columbo.sweep/v2", SWEEP_SCHEMA)
+SWEEP_SCHEMA = "columbo.sweep/v4"
+_SWEEP_SCHEMAS = (
+    "columbo.sweep/v1", "columbo.sweep/v2", "columbo.sweep/v3", SWEEP_SCHEMA
+)
 
 
 @dataclass(frozen=True)
 class SweepSpec:
-    """A grid of ``(scenario, workload, mitigation, seed)`` cells plus topology overrides.
+    """A grid of ``(scenario, workload, mitigation, magnitude, seed)`` cells
+    plus topology overrides.
 
     Inert and declarative like :class:`~repro.sim.scenarios.ScenarioSpec`:
     build once, run with any ``--jobs``, get the same shards.
@@ -57,6 +60,11 @@ class SweepSpec:
     ``mitigations`` (when set) re-runs every cell under each listed
     remediation policy (``None`` keeps each scenario's own — normally the
     ``do_nothing`` baseline).
+    ``magnitudes`` (when set) re-runs every cell at each listed
+    fault-magnitude (scaling every fault via
+    :meth:`~repro.sim.faults.FaultSpec.scaled`) — the axis detection-
+    sensitivity curves are traced over; ``None`` keeps each scenario's own
+    ``fault_magnitude`` (normally full intensity, 1.0).
     ``n_pods``/``chips_per_pod``/``fabric``/``n_steps`` (when not ``None``)
     override every scenario in the grid — e.g. re-running the curated
     library on a 64-pod fat-tree.
@@ -66,6 +74,7 @@ class SweepSpec:
     seeds: Tuple[int, ...]
     workloads: Optional[Tuple[str, ...]] = None   # None -> scenario's own
     mitigations: Optional[Tuple[str, ...]] = None  # None -> scenario's own
+    magnitudes: Optional[Tuple[float, ...]] = None  # None -> scenario's own
     n_pods: Optional[int] = None
     chips_per_pod: Optional[int] = None
     fabric: Optional[str] = None
@@ -80,16 +89,19 @@ class SweepSpec:
                 out[k] = v
         return out
 
-    def cells(self) -> List[Tuple[str, Optional[str], Optional[str], int]]:
-        """The full ``(scenario, workload, mitigation, seed)`` grid,
-        scenario-major (deterministic order).  ``workload`` /
-        ``mitigation`` are ``None`` when the cell keeps its scenario's own
-        pinned type/policy."""
+    def cells(
+        self,
+    ) -> List[Tuple[str, Optional[str], Optional[str], Optional[float], int]]:
+        """The full ``(scenario, workload, mitigation, magnitude, seed)``
+        grid, scenario-major (deterministic order).  ``workload`` /
+        ``mitigation`` / ``magnitude`` are ``None`` when the cell keeps its
+        scenario's own pinned type/policy/intensity."""
         wls: Tuple[Optional[str], ...] = self.workloads or (None,)
         mits: Tuple[Optional[str], ...] = self.mitigations or (None,)
+        mags: Tuple[Optional[float], ...] = self.magnitudes or (None,)
         return [
-            (s, w, m, seed)
-            for s in self.scenarios for w in wls for m in mits
+            (s, w, m, g, seed)
+            for s in self.scenarios for w in wls for m in mits for g in mags
             for seed in self.seeds
         ]
 
@@ -101,7 +113,7 @@ class SweepSpec:
 
 @dataclass
 class CellResult:
-    """One finished ``(scenario, workload, mitigation, seed)`` cell."""
+    """One finished ``(scenario, workload, mitigation, magnitude, seed)`` cell."""
 
     scenario: str
     seed: int
@@ -110,20 +122,29 @@ class CellResult:
     stats: "Any"                # core.analysis.RunStats (pre-reduced spans)
     workload: Optional[str] = None    # explicit sweep-axis workload (None = own)
     mitigation: Optional[str] = None  # explicit sweep-axis policy (None = own)
+    magnitude: Optional[float] = None  # explicit sweep-axis magnitude (None = own)
 
 
 def _shard_name(
-    scenario: str, workload: Optional[str], mitigation: Optional[str], seed: int
+    scenario: str,
+    workload: Optional[str],
+    mitigation: Optional[str],
+    magnitude: Optional[float],
+    seed: int,
 ) -> str:
     # axis values only appear in the name when the sweep axis set them, so
     # default-library shard names stay exactly as they were pre-axis
     mid = f".{workload}" if workload else ""
     mit = f".{mitigation}" if mitigation else ""
-    return os.path.join("shards", f"{scenario}{mid}{mit}.seed{seed}.spans.jsonl")
+    mag = f".m{magnitude:g}" if magnitude is not None else ""
+    return os.path.join(
+        "shards", f"{scenario}{mid}{mit}{mag}.seed{seed}.spans.jsonl"
+    )
 
 
 def _run_cell(
-    args: Tuple[str, Optional[str], Optional[str], int, Dict[str, Any], str, bool]
+    args: Tuple[str, Optional[str], Optional[str], Optional[float], int,
+                Dict[str, Any], str, bool]
 ) -> Dict[str, Any]:
     """Worker: run one cell end to end (simulate → weave → diagnose),
     write its SpanJSONL shard, return a JSON-serializable summary.
@@ -136,7 +157,8 @@ def _run_cell(
     """
     from ..core.analysis import RunStats
 
-    scenario, workload, mitigation, seed, overrides, outdir, structured = args
+    (scenario, workload, mitigation, magnitude, seed,
+     overrides, outdir, structured) = args
     spec: ScenarioSpec = get_scenario(scenario)
     if workload is not None and workload != spec.workload:
         # cross-type axis override: the pinned type's knobs don't transfer
@@ -145,12 +167,14 @@ def _run_cell(
         # axis cells bypass run()'s masking check by design: a mitigation
         # sweep *scores* policies; it does not assert diagnosis
         spec = replace(spec, mitigation=mitigation, mitigation_params=())
+    if magnitude is not None:
+        spec = replace(spec, fault_magnitude=magnitude)
     if overrides:
         spec = replace(spec, **overrides)
     t0 = time.perf_counter()
     run = spec.run(seed=seed, structured=structured)
     wall = time.perf_counter() - t0
-    shard = _shard_name(scenario, workload, mitigation, seed)
+    shard = _shard_name(scenario, workload, mitigation, magnitude, seed)
     with open(os.path.join(outdir, shard), "w", buffering=1 << 20) as f:
         f.write(run.span_jsonl)
     stats = RunStats.from_spans(
@@ -162,9 +186,13 @@ def _run_cell(
         wall_s=wall,
         events=run.cluster.sim.events_executed,
         mitigation=spec.mitigation,
+        findings=run.diagnosis.findings,
+        expected_components=spec.expected_components,
+        diag_wall_s=run.diag_wall_s,
+        magnitude=spec.fault_magnitude,
     )
     return {"scenario": scenario, "workload": workload,
-            "mitigation": mitigation, "seed": seed,
+            "mitigation": mitigation, "magnitude": magnitude, "seed": seed,
             "ok": run.ok, "shard": shard, "stats": stats.to_dict()}
 
 
@@ -274,17 +302,21 @@ class SweepResult:
                    if self.spec.workloads else "")
         mit_axis = (f" x {len(self.spec.mitigations)} mitigations"
                     if self.spec.mitigations else "")
+        mag_axis = (f" x {len(self.spec.magnitudes)} magnitudes"
+                    if self.spec.magnitudes else "")
         lines = [
             f"sweep: {len(self.cells)} cells "
-            f"({len(self.spec.scenarios)} scenarios{wl_axis}{mit_axis} x "
-            f"{len(self.spec.seeds)} seeds, "
+            f"({len(self.spec.scenarios)} scenarios{wl_axis}{mit_axis}"
+            f"{mag_axis} x {len(self.spec.seeds)} seeds, "
             f"jobs={self.jobs}) -> {self.outdir}",
         ]
         for c in self.cells:
             verdict = "OK    " if c.ok else "MISSED"
             wl = f" [{c.workload}]" if c.workload else ""
             mit = f" [{c.mitigation}]" if c.mitigation else ""
-            lines.append(f"  {verdict} {c.scenario:24s}{wl}{mit} seed={c.seed:<4d} "
+            mag = f" [m={c.magnitude:g}]" if c.magnitude is not None else ""
+            lines.append(f"  {verdict} {c.scenario:24s}{wl}{mit}{mag} "
+                         f"seed={c.seed:<4d} "
                          f"spans={c.stats.n_spans:<5d} wall={c.stats.wall_s:.2f}s")
         lines.append((aggregate_report or self.aggregate()).report())
         if self.spec.mitigations:
@@ -314,8 +346,8 @@ def run_sweep(
 
     os.makedirs(os.path.join(outdir, "shards"), exist_ok=True)
     work = [
-        (s, w, m, seed, spec.overrides(), outdir, structured)
-        for s, w, m, seed in spec.cells()
+        (s, w, m, g, seed, spec.overrides(), outdir, structured)
+        for s, w, m, g, seed in spec.cells()
     ]
     if jobs <= 1 or len(work) <= 1:
         raw = [_run_cell(w) for w in work]
@@ -327,7 +359,7 @@ def run_sweep(
         CellResult(
             scenario=r["scenario"], seed=r["seed"], ok=r["ok"], shard=r["shard"],
             stats=RunStats.from_dict(r["stats"]), workload=r.get("workload"),
-            mitigation=r.get("mitigation"),
+            mitigation=r.get("mitigation"), magnitude=r.get("magnitude"),
         )
         for r in raw
     ]
@@ -338,6 +370,7 @@ def run_sweep(
         "seeds": list(spec.seeds),
         "workloads": list(spec.workloads) if spec.workloads else None,
         "mitigations": list(spec.mitigations) if spec.mitigations else None,
+        "magnitudes": list(spec.magnitudes) if spec.magnitudes else None,
         "overrides": spec.overrides(),
         "jobs": jobs,
         "structured": structured,
@@ -366,18 +399,20 @@ def load_sweep(outdir: str) -> SweepResult:
         )
     workloads = payload.get("workloads")
     mitigations = payload.get("mitigations")
+    magnitudes = payload.get("magnitudes")
     spec = SweepSpec(
         scenarios=tuple(payload["scenarios"]),
         seeds=tuple(payload["seeds"]),
         workloads=tuple(workloads) if workloads else None,
         mitigations=tuple(mitigations) if mitigations else None,
+        magnitudes=tuple(magnitudes) if magnitudes else None,
         **payload.get("overrides", {}),
     )
     cells = [
         CellResult(
             scenario=r["scenario"], seed=r["seed"], ok=r["ok"], shard=r["shard"],
             stats=RunStats.from_dict(r["stats"]), workload=r.get("workload"),
-            mitigation=r.get("mitigation"),
+            mitigation=r.get("mitigation"), magnitude=r.get("magnitude"),
         )
         for r in payload["cells"]
     ]

@@ -42,6 +42,7 @@ def make_loss_fn(cfg: ModelConfig, tc: TrainConfig):
             params,
             tokens=batch.get("tokens"),
             embeds=batch.get("embeds"),
+            train=True,
         )
         ce, z = cross_entropy(logits, batch["labels"])
         loss = ce + tc.moe_aux_weight * aux + tc.z_loss_weight * z

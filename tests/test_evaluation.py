@@ -1,0 +1,344 @@
+"""Scored diagnosis: confusion-matrix scoring, fault-magnitude scaling,
+and detection-sensitivity curves (core/evaluation.py + faults.scaled).
+
+Hand-built populations pin the counting semantics; hypothesis properties
+pin the invariants (healthy cells score zero findings for any seed,
+precision/recall stay in [0, 1], TP + FN equals the injected count); a
+small live magnitude-axis sweep ties the curve endpoints to the simulator.
+"""
+from dataclasses import replace
+
+import pytest
+from _hypothesis_compat import HealthCheck, given, settings, st
+
+from repro.core.analysis import RunStats
+from repro.core.evaluation import (
+    ClassConfusion,
+    DiagnosisEvaluation,
+    SensitivityCurve,
+    evaluate_diagnosis,
+    sensitivity_curves,
+)
+from repro.sim.faults import (
+    ChunkReorder,
+    ClockDrift,
+    ClockStep,
+    DeviceSlowdown,
+    FaultPlan,
+    HostPause,
+    LinkDegradation,
+    LinkLoss,
+    LossRateTrace,
+    StragglerPod,
+)
+from repro.sim.scenarios import SCENARIOS, get_scenario
+from repro.sim.workload import list_workloads
+
+FAULT_CLASSES = (
+    "link_degradation", "link_loss", "link_reorder", "host_pause",
+    "clock_fault", "device_slowdown", "straggler_pod",
+)
+
+
+def _cell(scenario="s", seed=0, expected=(), detected=(), magnitude=1.0,
+          expected_components=None, finding_components=None, diag_wall_s=0.0):
+    return RunStats(
+        scenario=scenario, seed=seed,
+        expected=tuple(expected), detected=tuple(detected),
+        wall_s=0.1, events=10, n_spans=1,
+        component_us={}, critical_components=[],
+        magnitude=magnitude,
+        expected_components=dict(expected_components or {}),
+        finding_components=dict(finding_components or {}),
+        diag_wall_s=diag_wall_s,
+    )
+
+
+# ---------------------------------------------------------------------------
+# evaluate_diagnosis on hand-built populations
+# ---------------------------------------------------------------------------
+
+
+def test_confusion_counts_hand_built():
+    stats = [
+        _cell("faulty", 0, expected=("link_loss",), detected=("link_loss",)),
+        _cell("faulty", 1, expected=("link_loss",), detected=()),          # FN
+        _cell("clean", 0, expected=(), detected=("link_loss",)),           # FP
+        _cell("clean", 1, expected=(), detected=()),                       # TN
+    ]
+    ev = evaluate_diagnosis(stats)
+    c = ev.classes["link_loss"]
+    assert (c.tp, c.fn, c.fp, c.tn) == (1, 1, 1, 1)
+    assert c.injected == 2
+    assert c.precision == 0.5 and c.recall == 0.5 and c.fpr == 0.5
+    assert c.f1 == pytest.approx(0.5)
+    assert ev.n_cells == 4
+    assert ev.healthy_cells == 2 and ev.healthy_false_positives == 1
+    assert ev.healthy_fpr == 0.5
+    assert "link_loss" in ev.report()
+
+
+def test_confusion_vacuous_denominators():
+    # no predictions and no injections: vacuously perfect, never 0/0
+    ev = evaluate_diagnosis([
+        _cell(expected=("host_pause",), detected=("host_pause",)),
+        _cell(expected=(), detected=()),
+    ])
+    c = ev.classes["host_pause"]
+    assert c.precision == 1.0 and c.recall == 1.0 and c.fpr == 0.0
+    empty = ClassConfusion(fault_class="x")
+    assert empty.precision == 1.0 and empty.recall == 1.0
+    assert empty.f1 == 1.0 and empty.fpr == 0.0 and empty.component_accuracy == 1.0
+
+
+def test_component_naming_accuracy():
+    stats = [
+        _cell("a", 0, expected=("link_loss",), detected=("link_loss",),
+              expected_components={"link_loss": ["dcn.l0"]},
+              finding_components={"link_loss": ["dcn.l0", "dcn.l3"]}),  # hit
+        _cell("a", 1, expected=("link_loss",), detected=("link_loss",),
+              expected_components={"link_loss": ["dcn.l0"]},
+              finding_components={"link_loss": ["dcn.l9"]}),            # miss
+        # TP without component ground truth: not scored for naming
+        _cell("b", 0, expected=("host_pause",), detected=("host_pause",)),
+    ]
+    ev = evaluate_diagnosis(stats)
+    c = ev.classes["link_loss"]
+    assert c.component_total == 2 and c.component_hits == 1
+    assert c.component_accuracy == 0.5
+    assert ev.classes["host_pause"].component_total == 0
+    assert ev.component_accuracy == 0.5      # pooled over scored TP cells
+
+
+def test_diag_wall_time_folds():
+    ev = evaluate_diagnosis([
+        _cell(diag_wall_s=0.2), _cell(diag_wall_s=0.5), _cell(diag_wall_s=0.1),
+    ])
+    assert ev.diag_wall_s_total == pytest.approx(0.8)
+    assert ev.diag_wall_s_max == pytest.approx(0.5)
+
+
+def test_macro_skips_never_seen_classes():
+    # a class seen only as TN everywhere contributes nothing to the macros
+    stats = [
+        _cell(expected=("link_loss",), detected=("link_loss",)),
+        _cell(expected=("host_pause",), detected=()),
+    ]
+    ev = evaluate_diagnosis(stats)
+    assert ev.macro_recall == pytest.approx((1.0 + 0.0) / 2)
+    assert ev.micro_recall == pytest.approx(1 / 2)
+
+
+def test_evaluate_empty_population():
+    ev = evaluate_diagnosis([])
+    assert ev.n_cells == 0 and not ev.classes
+    assert ev.macro_f1 == 1.0          # vacuously perfect, and report() renders
+    assert ev.report()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: confusion-matrix invariants on arbitrary populations
+# ---------------------------------------------------------------------------
+
+_subset = st.sets(st.sampled_from(FAULT_CLASSES), max_size=3)
+
+
+@given(st.lists(st.tuples(_subset, _subset), max_size=24))
+@settings(max_examples=60, deadline=None)
+def test_confusion_invariants_hold_for_any_population(cells):
+    stats = [
+        _cell("s", i, expected=tuple(sorted(exp)), detected=tuple(sorted(det)))
+        for i, (exp, det) in enumerate(cells)
+    ]
+    ev = evaluate_diagnosis(stats)
+    assert ev.n_cells == len(stats)
+    assert ev.healthy_cells == sum(1 for exp, _ in cells if not exp)
+    for name, c in ev.classes.items():
+        assert 0.0 <= c.precision <= 1.0
+        assert 0.0 <= c.recall <= 1.0
+        assert 0.0 <= c.f1 <= 1.0
+        assert 0.0 <= c.fpr <= 1.0
+        # TP + FN is exactly the number of cells that injected the class
+        assert c.tp + c.fn == sum(1 for exp, _ in cells if name in exp)
+        assert c.fp == sum(
+            1 for exp, det in cells if name in det and name not in exp
+        )
+        assert c.tp + c.fn + c.fp + c.tn == len(stats)
+    for metric in (ev.macro_precision, ev.macro_recall, ev.macro_f1,
+                   ev.micro_precision, ev.micro_recall, ev.healthy_fpr):
+        assert 0.0 <= metric <= 1.0
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=5, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow]
+          if hasattr(HealthCheck, "too_slow") else [])
+def test_healthy_scenario_scores_zero_findings_for_any_seed(seed):
+    """The curated healthy baseline diagnoses clean under every workload
+    type for arbitrary seeds: the FPR floor the leaderboard reports."""
+    healthy = [n for n in SCENARIOS if not get_scenario(n).expected_classes]
+    assert healthy, "library must include a healthy baseline"
+    for name in healthy:
+        for wl in list_workloads():
+            spec = replace(get_scenario(name), workload=wl, workload_params=())
+            run = spec.run(seed=seed)
+            assert run.diagnosis.findings == [], (
+                f"{name} under {wl} seed={seed}: healthy cell produced "
+                f"findings {[f.fault_class for f in run.diagnosis.findings]}"
+            )
+
+
+# ---------------------------------------------------------------------------
+# fault-magnitude scaling (FaultSpec.scaled / FaultPlan.scaled)
+# ---------------------------------------------------------------------------
+
+_ALL_FAULTS = (
+    LinkDegradation(link="ici.pod0.l1", bw_factor=0.08),
+    LinkLoss(link="dcn.l0", drop_prob=0.3),
+    LinkLoss(link="dcn.l1", drop_prob=0.0,
+             trace=LossRateTrace(profile="burst", peak=0.4, base=0.01)),
+    ChunkReorder(link="ici.pod1.l0", jitter_ps=40_000),
+    HostPause(host="host0", pause_ps=9_000_000),
+    ClockDrift(host="host1", drift_ppm=150.0),
+    ClockStep(host="host1", step_ps=2_000_000),
+    DeviceSlowdown(chip="pod0.chip02", factor=3.0),
+    StragglerPod(pod=2, factor=1.8),
+)
+
+
+@pytest.mark.parametrize("fault", _ALL_FAULTS, ids=lambda f: type(f).__name__)
+def test_scaled_identity_at_full_magnitude(fault):
+    # the byte-identity contract: magnitude 1.0 is *the same object*, so a
+    # magnitude-1.0 sweep cell reproduces the unscaled scenario exactly
+    assert fault.scaled(1.0) is fault
+
+
+@pytest.mark.parametrize("fault", _ALL_FAULTS, ids=lambda f: type(f).__name__)
+def test_scaled_zero_is_healthy_noop(fault):
+    z = fault.scaled(0.0)
+    neutral = {
+        "bw_factor": 1.0, "drop_prob": 0.0, "jitter_ps": 0, "pause_ps": 0,
+        "drift_ppm": 0.0, "step_ps": 0, "factor": 1.0,
+    }
+    for attr, want in neutral.items():
+        if hasattr(z, attr):
+            assert getattr(z, attr) == want, f"{type(fault).__name__}.{attr}"
+    if getattr(z, "trace", None) is not None:
+        assert z.trace.peak == 0.0 and z.trace.base == 0.0
+
+
+@pytest.mark.parametrize("fault", _ALL_FAULTS, ids=lambda f: type(f).__name__)
+def test_scaled_monotonic_and_preserves_timing(fault):
+    intensity = {
+        # higher = more intense, normalized per knob
+        "bw_factor": lambda f: 1.0 - f.bw_factor,
+        "drop_prob": lambda f: f.drop_prob,
+        "jitter_ps": lambda f: f.jitter_ps,
+        "pause_ps": lambda f: f.pause_ps,
+        "drift_ppm": lambda f: abs(f.drift_ppm),
+        "step_ps": lambda f: abs(f.step_ps),
+        "factor": lambda f: f.factor,
+    }
+    knobs = [fn for attr, fn in intensity.items() if hasattr(fault, attr)]
+    prev = fault.scaled(0.0)
+    for mag in (0.25, 0.5, 0.75, 1.0):
+        cur = fault.scaled(mag)
+        for fn in knobs:
+            assert fn(cur) >= fn(prev) - 1e-12, (
+                f"{type(fault).__name__} not monotonic at magnitude {mag}"
+            )
+        # scheduling knobs are never scaled: when the fault acts moves,
+        # only how hard it hits
+        for attr in ("start_ps", "end_ps", "at_ps", "every_ps", "period_ps"):
+            if hasattr(fault, attr) and not callable(getattr(fault, attr)):
+                assert getattr(cur, attr) == getattr(fault, attr)
+        prev = cur
+
+
+def test_fault_targets_and_plan_scaling():
+    plan = FaultPlan(faults=_ALL_FAULTS, seed=3)
+    assert plan.scaled(1.0) is plan
+    half = plan.scaled(0.5)
+    assert half.seed == plan.seed and len(half.faults) == len(plan.faults)
+    assert half.faults[0].bw_factor == pytest.approx(0.08 ** 0.5)
+    with pytest.raises(ValueError):
+        plan.scaled(-0.1)
+    # targets: the component a correct diagnosis must name, in order
+    assert plan.targets()[0] == "ici.pod0.l1"
+    assert "pod2" in plan.targets()
+    assert len(plan.targets()) == len(set(plan.targets()))
+
+
+def test_scenario_magnitude_flows_into_fault_plan():
+    spec = replace(get_scenario("degraded_ici_link"), fault_magnitude=0.5)
+    plan = spec.fault_plan()
+    [fault] = plan.faults
+    assert fault.bw_factor == pytest.approx(0.08 ** 0.5)
+    assert spec.expected_components == {"link_degradation": ("ici.pod0.l1",)}
+    # the default magnitude (1.0) keeps the published faults untouched
+    published = get_scenario("degraded_ici_link")
+    assert published.fault_plan(seed=7).faults == published.faults
+
+
+# ---------------------------------------------------------------------------
+# sensitivity curves
+# ---------------------------------------------------------------------------
+
+
+def test_sensitivity_curves_hand_built():
+    stats = [
+        _cell("deg", 0, expected=("link_degradation",), detected=(), magnitude=0.0),
+        _cell("deg", 1, expected=("link_degradation",), detected=(), magnitude=0.0),
+        _cell("deg", 0, expected=("link_degradation",), detected=("link_degradation",),
+              magnitude=0.5),
+        _cell("deg", 1, expected=("link_degradation",), detected=(), magnitude=0.5),
+        _cell("deg", 0, expected=("link_degradation",), detected=("link_degradation",),
+              magnitude=1.0),
+        _cell("deg", 1, expected=("link_degradation",), detected=("link_degradation",),
+              magnitude=1.0),
+        _cell("clean", 0, expected=(), detected=(), magnitude=0.5),  # no curve
+    ]
+    [curve] = sensitivity_curves(stats)
+    assert curve.scenario == "deg" and curve.fault_class == "link_degradation"
+    assert curve.points == [(0.0, 0.0), (0.5, 0.5), (1.0, 1.0)]
+    assert curve.detection_threshold == 0.5
+    assert "deg/link_degradation" in curve.report()
+    d = curve.to_dict()
+    assert d["detection_threshold"] == 0.5
+    assert d["points"][0] == {"magnitude": 0.0, "detection_rate": 0.0}
+
+
+def test_detection_threshold_none_when_never_fires():
+    c = SensitivityCurve("s", "link_loss", points=[(0.0, 0.0), (1.0, 0.4)])
+    assert c.detection_threshold is None
+    assert "threshold -" in c.report()
+
+
+@pytest.mark.slow
+def test_magnitude_axis_sweep_end_to_end(tmp_path):
+    """Live endpoints of a sensitivity curve: a zeroed fault diagnoses
+    clean, full intensity diagnoses the published class, and the
+    magnitude-1.0 shard is byte-identical to an axis-free run."""
+    from repro.sim.sweep import SweepSpec, run_sweep
+
+    spec = SweepSpec(scenarios=("degraded_ici_link",), seeds=(0,),
+                     magnitudes=(0.0, 1.0))
+    result = run_sweep(spec, str(tmp_path / "axis"), jobs=1)
+    [curve] = sensitivity_curves(result.run_stats())
+    assert dict(curve.points) == {0.0: 0.0, 1.0: 1.0}
+    assert curve.detection_threshold == 1.0
+    by_mag = {c.magnitude: c for c in result.cells}
+    assert by_mag[0.0].stats.detected == ()
+    assert "link_degradation" in by_mag[1.0].stats.detected
+    # identity contract, measured at the shard level
+    plain = run_sweep(
+        SweepSpec(scenarios=("degraded_ici_link",), seeds=(0,)),
+        str(tmp_path / "plain"), jobs=1,
+    )
+    import os
+
+    with open(os.path.join(result.outdir, by_mag[1.0].shard), "rb") as f:
+        scaled_bytes = f.read()
+    with open(os.path.join(plain.outdir, plain.cells[0].shard), "rb") as f:
+        plain_bytes = f.read()
+    assert scaled_bytes == plain_bytes

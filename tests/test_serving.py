@@ -13,7 +13,14 @@ from repro.configs import get_arch
 from repro.models import forward, init_params, model_pspecs
 from repro.serving import Request, ServingEngine
 
-CFG = get_arch("olmo-1b").config.reduced(n_layers=2)
+# float32 throughout: the greedy tests compare argmax between the engine's
+# incremental decode and a full-sequence forward(), and in bf16 the reduced
+# 512-vocab config hits exact logit ties whose winner flips with summation
+# order (same reason test_arch_decode_matches_forward pins float32)
+CFG = dataclasses.replace(
+    get_arch("olmo-1b").config.reduced(n_layers=2),
+    dtype="float32", kv_cache_dtype="float32", logits_f32=True,
+)
 
 
 @pytest.fixture(scope="module")

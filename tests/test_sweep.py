@@ -135,9 +135,9 @@ def small_sweep(tmp_path_factory):
 
 def test_sweep_parallel_equals_serial(small_sweep):
     spec, serial, parallel = small_sweep
-    assert [(c.scenario, c.workload, c.mitigation, c.seed)
+    assert [(c.scenario, c.workload, c.mitigation, c.magnitude, c.seed)
             for c in serial.cells] == spec.cells()
-    assert [(c.scenario, c.workload, c.mitigation, c.seed)
+    assert [(c.scenario, c.workload, c.mitigation, c.magnitude, c.seed)
             for c in parallel.cells] == spec.cells()
     for cs, cp in zip(serial.cells, parallel.cells):
         with open(os.path.join(serial.outdir, cs.shard), "rb") as f:
@@ -160,6 +160,49 @@ def test_sweep_reloads_from_disk(small_sweep):
     agg_live = serial.aggregate().to_dict()
     agg_reload = reloaded.aggregate().to_dict()
     assert agg_live == agg_reload
+
+
+@pytest.mark.parametrize("version", [1, 2, 3])
+def test_load_sweep_reads_older_schema_payloads(version, tmp_path):
+    """sweep.json written by the v1/v2/v3 schemas (fixtures recorded from
+    the shapes those releases emitted) must load through the current
+    ``load_sweep`` with expected/detected round-tripping and post-hoc
+    axis fields defaulting, not KeyError-ing."""
+    fixture = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "data", f"sweep_v{version}.json"
+    )
+    with open(fixture) as f:
+        payload = json.load(f)
+    with open(tmp_path / "sweep.json", "w") as f:
+        json.dump(payload, f)
+    result = load_sweep(str(tmp_path))
+    assert len(result.cells) == len(payload["cells"])
+    for cell, raw in zip(result.cells, payload["cells"]):
+        assert cell.scenario == raw["scenario"]
+        assert cell.seed == raw["seed"]
+        assert cell.ok == raw["ok"]
+        assert list(cell.stats.expected) == raw["stats"]["expected"]
+        assert list(cell.stats.detected) == raw["stats"]["detected"]
+        # axes that post-date the payload's schema default rather than raise
+        assert cell.workload == raw.get("workload")
+        assert cell.mitigation == raw.get("mitigation")
+        assert cell.magnitude is None
+        assert cell.stats.magnitude == 1.0
+        assert cell.stats.expected_components == {}
+        assert cell.stats.finding_components == {}
+        assert cell.stats.diag_wall_s == 0.0
+    # the re-hydrated result still aggregates and reports
+    agg = result.aggregate()
+    assert agg.n_runs == len(result.cells)
+    assert result.report()
+
+
+def test_load_sweep_rejects_unknown_schema(tmp_path):
+    with open(tmp_path / "sweep.json", "w") as f:
+        json.dump({"schema": "columbo.sweep/v999", "scenarios": [], "seeds": [],
+                   "cells": []}, f)
+    with pytest.raises(ValueError, match="v999"):
+        load_sweep(str(tmp_path))
 
 
 def test_runstats_from_jsonl_agrees_with_from_spans(small_sweep):
@@ -452,3 +495,109 @@ def test_engine_bench_kernel_micro_live():
     res = mod.bench_kernel(n_events=2_000, n_timers=16)
     assert res["n_events"] == 2_000
     assert res["events_per_sec"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Diagnosis bench (BENCH_diag.json) schema + accuracy floors
+# ---------------------------------------------------------------------------
+
+
+def _validate_confusion(conf):
+    assert conf["n_cells"] > 0
+    assert 0 <= conf["healthy_false_positives"] <= conf["healthy_cells"]
+    for key in ("healthy_fpr", "macro_precision", "macro_recall", "macro_f1",
+                "micro_precision", "micro_recall", "component_accuracy"):
+        assert 0.0 <= conf[key] <= 1.0, f"{key} out of [0, 1]: {conf[key]}"
+    assert conf["diag_wall_s_total"] >= conf["diag_wall_s_max"] >= 0
+    assert conf["classes"], "needs at least one scored fault class"
+    for name, c in conf["classes"].items():
+        assert c["fault_class"] == name
+        assert min(c["tp"], c["fn"], c["fp"], c["tn"]) >= 0
+        assert c["tp"] + c["fn"] + c["fp"] + c["tn"] == conf["n_cells"]
+        for key in ("precision", "recall", "f1", "fpr", "component_accuracy"):
+            assert 0.0 <= c[key] <= 1.0
+        assert c["component_hits"] <= c["component_total"] <= c["tp"]
+
+
+def _validate_diag_bench_payload(payload):
+    assert payload["schema"] == "columbo.diag_bench/v1"
+    assert isinstance(payload["smoke"], bool)
+    assert {"python", "platform"} <= set(payload["host"])
+    cur = payload["curated"]
+    assert cur["cells"] == len(cur["scenarios"]) * len(cur["seeds"])
+    _validate_confusion(cur["confusion"])
+    # the accuracy floor the bench itself asserts per cell population:
+    # every curated fault class fully recalled, healthy baseline silent
+    for name, c in cur["confusion"]["classes"].items():
+        if c["tp"] + c["fn"]:
+            assert c["recall"] == 1.0, f"curated recall floor broken: {name}"
+    assert cur["confusion"]["healthy_false_positives"] == 0
+    grid = payload["grid"]
+    assert set(grid["workloads"]) >= {"collective", "rpc", "storage", "pipeline"}
+    assert grid["cells"] == (len(grid["scenarios"]) * len(grid["workloads"])
+                             * len(grid["seeds"]))
+    _validate_confusion(grid["confusion"])
+    sens = payload["sensitivity"]
+    assert sens["curves"], "needs at least one detection-sensitivity curve"
+    assert 0.0 in sens["magnitudes"] and 1.0 in sens["magnitudes"]
+    for curve in sens["curves"]:
+        assert {"scenario", "fault_class", "points",
+                "detection_threshold"} <= set(curve)
+        mags = [p["magnitude"] for p in curve["points"]]
+        assert mags == sorted(mags)
+        assert set(mags) == set(sens["magnitudes"])
+        for p in curve["points"]:
+            assert 0.0 <= p["detection_rate"] <= 1.0
+        rates = {p["magnitude"]: p["detection_rate"] for p in curve["points"]}
+        assert rates[0.0] == 0.0, "a zero-magnitude fault must look healthy"
+        assert rates[1.0] == 1.0, "full intensity must stay diagnosable"
+        assert curve["detection_threshold"] is not None
+    mask = payload["masking"]
+    assert set(mask["policies"]) >= {"do_nothing", "retransmit",
+                                     "disable_and_reroute", "evict_straggler",
+                                     "checkpoint_restore"}
+    assert mask["rows"]
+    for row in mask["rows"]:
+        assert {"scenario", "policy", "expected", "masks_expected", "cells",
+                "detection_rate"} <= set(row)
+        assert 0.0 <= row["detection_rate"] <= 1.0
+    # the masking leaderboard must agree with the declared masks contract:
+    # a policy that masks the scenario's class hides it from diagnose()
+    for row in mask["rows"]:
+        if row["masks_expected"]:
+            assert row["detection_rate"] < 1.0, (
+                f"{row['policy']} declares masking {row['expected']} on "
+                f"{row['scenario']} but diagnosis still fired everywhere"
+            )
+        else:
+            assert row["detection_rate"] == 1.0, (
+                f"{row['policy']} does not declare masking on "
+                f"{row['scenario']} yet detection degraded"
+            )
+
+
+def test_committed_diag_bench_json_is_valid():
+    path = os.path.join(REPO, "BENCH_diag.json")
+    assert os.path.exists(path), "BENCH_diag.json leaderboard missing from repo"
+    with open(path) as f:
+        payload = json.load(f)
+    _validate_diag_bench_payload(payload)
+    assert payload["smoke"] is False, "committed leaderboard must be a full run"
+    # full-grid coverage: the whole curated library across all 4 workloads
+    assert len(payload["grid"]["scenarios"]) >= 8
+    assert len(payload["grid"]["seeds"]) >= 3
+    assert len(payload["sensitivity"]["curves"]) >= 5
+
+
+def test_diag_bench_smoke_live(tmp_path):
+    """The tier-1 gate, run in-process: smoke payload passes the same
+    validator as the committed full leaderboard (the bench's internal
+    recall-floor asserts fire during collect())."""
+    spec = importlib.util.spec_from_file_location(
+        "diag_bench", os.path.join(REPO, "benchmarks", "diag_bench.py")
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    payload = mod.collect(smoke=True, jobs=2)
+    _validate_diag_bench_payload(payload)
+    assert payload["smoke"] is True

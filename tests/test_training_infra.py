@@ -165,11 +165,12 @@ def test_compressed_psum_matches_exact(subproc):
         """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.distributed.compat import shard_map
 from repro.distributed.compression import compressed_psum
 mesh = jax.make_mesh((4,), ('d',))
 x = jax.random.normal(jax.random.PRNGKey(0), (4, 128))
-f = jax.shard_map(lambda x: compressed_psum(x[0], 'd'), mesh=mesh,
-                  in_specs=P('d'), out_specs=P(), check_vma=False)
+f = shard_map(lambda x: compressed_psum(x[0], 'd'), mesh=mesh,
+              in_specs=P('d'), out_specs=P(), check_vma=False)
 approx = f(x)
 exact = x.sum(0)
 rel = float(jnp.max(jnp.abs(approx - exact)) / (jnp.max(jnp.abs(exact)) + 1e-9))
