@@ -71,7 +71,12 @@ for row in payload["pipeline"]:
         f"pods={row['pods']}: structured end-to-end path ({ee['structured']} ev/s) "
         f"fell below the text path ({ee['text']} ev/s)"
     )
-print("[tier1] perf smoke: structured >= text on all pipeline rows")
+    assert ee["inline"] >= ee["structured"], (
+        f"pods={row['pods']}: inline end-to-end path ({ee['inline']} ev/s) "
+        f"fell below the structured post-hoc path ({ee['structured']} ev/s) — "
+        f"the streaming weaver must not cost more than format->parse->weave"
+    )
+print("[tier1] perf smoke: inline >= structured >= text on all pipeline rows")
 PY
 
 scripts/docs_check.sh

@@ -18,6 +18,7 @@ framework exposes as telemetry:
 """
 from __future__ import annotations
 
+import gc
 import statistics
 from collections import Counter, defaultdict
 from dataclasses import dataclass, field
@@ -698,6 +699,93 @@ def _median(values: Sequence[float]) -> float:
     return statistics.median(values)
 
 
+class SpanColumns:
+    """Struct-of-arrays view of finished spans — the columnar record
+    format at the weaver/analysis boundary.
+
+    One pass over the span objects encodes the reduction-relevant fields
+    into parallel arrays (int64 durations, small-int codes for names and
+    ``sim_type:component`` keys), after which :meth:`RunStats.from_columns`
+    computes the per-component latency pools with numpy instead of a
+    python loop per span.  Mitigation spans are rare and carry free-form
+    ``penalty`` attrs, so their durations/penalties stay as plain lists.
+
+    Falls back to plain python lists when numpy is unavailable — the
+    reduction then matches :meth:`RunStats.from_spans` arithmetic exactly
+    either way (int -> float64 conversion is exact below 2**53 ps and
+    division by ``PS_PER_US`` rounds identically)."""
+
+    __slots__ = ("n_spans", "dur_ps", "key_codes", "keys",
+                 "request_idx", "mitigation_us", "mitigation_penalty")
+
+    def __init__(self, spans: Sequence[Span]) -> None:
+        n = len(spans)
+        self.n_spans = n
+        key_of: Dict[Tuple[str, str], int] = {}
+        keys: List[str] = []
+        dur = [0] * n
+        codes = [0] * n
+        request_idx: List[int] = []
+        self.mitigation_us: List[float] = []
+        self.mitigation_penalty = 0.0
+        for i, s in enumerate(spans):
+            dur[i] = s.end - s.start
+            k = (s.sim_type, s.component)
+            c = key_of.get(k)
+            if c is None:
+                c = key_of[k] = len(keys)
+                keys.append(f"{s.sim_type}:{s.component}")
+            codes[i] = c
+            name = s.name
+            if name == "RpcRequest":
+                request_idx.append(i)
+            elif name == "Mitigation":
+                d = dur[i]
+                self.mitigation_us.append((d if d > 1 else 1) / PS_PER_US)
+                try:
+                    self.mitigation_penalty += float(s.attrs.get("penalty", 0.0))
+                except (TypeError, ValueError):
+                    pass
+        self.keys = keys
+        if _np is not None:
+            self.dur_ps = _np.asarray(dur, dtype=_np.int64)
+            self.key_codes = _np.asarray(codes, dtype=_np.int64)
+            self.request_idx = _np.asarray(request_idx, dtype=_np.int64)
+        else:  # pragma: no cover - minimal installs
+            self.dur_ps = dur
+            self.key_codes = codes
+            self.request_idx = request_idx
+
+    def component_us(self) -> Dict[str, List[float]]:
+        """Per-``sim_type:component`` duration pools (µs, 1 ps floor), each
+        pool in span order — exactly :meth:`RunStats.from_spans`'s dict."""
+        keys = self.keys
+        if _np is None or self.n_spans < _COLUMNAR_MIN_SAMPLES:  # pragma: no cover
+            out: Dict[str, List[float]] = {k: [] for k in keys}
+            for c, d in zip(self.key_codes, self.dur_ps):
+                out[keys[c]].append((d if d > 1 else 1) / PS_PER_US)
+            return {k: v for k, v in out.items() if v}
+        us = _np.maximum(self.dur_ps, 1) / PS_PER_US
+        order = _np.argsort(self.key_codes, kind="stable")
+        sorted_codes = self.key_codes[order]
+        bounds = _np.searchsorted(sorted_codes, _np.arange(len(keys) + 1))
+        out = {}
+        for c, k in enumerate(keys):
+            lo, hi = bounds[c], bounds[c + 1]
+            if hi > lo:
+                out[k] = us[order[lo:hi]].tolist()
+        return out
+
+    def request_us(self) -> List[float]:
+        """RpcRequest latency pool (µs, 1 ps floor), in span order."""
+        if _np is None or not len(self.request_idx):  # pragma: no cover
+            return [
+                (self.dur_ps[i] if self.dur_ps[i] > 1 else 1) / PS_PER_US
+                for i in self.request_idx
+            ]
+        return (_np.maximum(self.dur_ps[self.request_idx], 1) / PS_PER_US).tolist()
+
+
 @dataclass
 class RunStats:
     """One run's pre-reduced statistics — the unit :func:`aggregate` merges.
@@ -727,6 +815,7 @@ class RunStats:
     expected_components: Dict[str, List[str]] = field(default_factory=dict)
     finding_components: Dict[str, List[str]] = field(default_factory=dict)
     diag_wall_s: float = 0.0           # wall time spent inside diagnose()
+    late_events: int = 0               # events dropped after their span closed
 
     @property
     def ok(self) -> bool:
@@ -751,6 +840,7 @@ class RunStats:
         expected_components: Optional[Dict[str, Sequence[str]]] = None,
         diag_wall_s: float = 0.0,
         magnitude: float = 1.0,
+        late_events: int = 0,
     ) -> "RunStats":
         """Reduce woven spans (``detected=None`` runs :func:`diagnose`)."""
         if detected is None:
@@ -767,21 +857,31 @@ class RunStats:
         request_us: List[float] = []
         mitigation_us: List[float] = []
         capacity_penalty = 0.0
-        for s in spans:
-            # 1 ps floor matches what SpanJSONLExporter publishes, so stats
-            # built from live spans and from shard files agree exactly
-            us = max(s.duration, 1) / PS_PER_US
-            comp[f"{s.sim_type}:{s.component}"].append(us)
-            if s.name == "RpcRequest":
-                request_us.append(us)
-            elif s.name == "Mitigation":
-                # trigger->done = the policy's detection-to-mitigation
-                # latency; its penalty attr is the capacity it gave up
-                mitigation_us.append(us)
-                try:
-                    capacity_penalty += float(s.attrs.get("penalty", 0.0))
-                except (TypeError, ValueError):
-                    pass
+        # pause the cyclic GC for the reduction (EventKernel.run rationale:
+        # the loop allocates floats/lists but no cycles, while gen-2 passes
+        # re-walk the entire span graph; at 256 pods that halved this stage)
+        paused = gc.isenabled()
+        if paused:
+            gc.disable()
+        try:
+            for s in spans:
+                # 1 ps floor matches what SpanJSONLExporter publishes: stats
+                # built from live spans and from shard files agree exactly
+                us = max(s.duration, 1) / PS_PER_US
+                comp[f"{s.sim_type}:{s.component}"].append(us)
+                if s.name == "RpcRequest":
+                    request_us.append(us)
+                elif s.name == "Mitigation":
+                    # trigger->done = the policy's detection-to-mitigation
+                    # latency; its penalty attr is the capacity it gave up
+                    mitigation_us.append(us)
+                    try:
+                        capacity_penalty += float(s.attrs.get("penalty", 0.0))
+                    except (TypeError, ValueError):
+                        pass
+        finally:
+            if paused:
+                gc.enable()
         return cls(
             scenario=scenario,
             seed=seed,
@@ -802,6 +902,72 @@ class RunStats:
             },
             finding_components=finding_components,
             diag_wall_s=diag_wall_s,
+            late_events=late_events,
+        )
+
+    @classmethod
+    def from_columns(
+        cls,
+        cols: "SpanColumns",
+        spans: Optional[Sequence[Span]] = None,
+        scenario: str = "",
+        seed: int = 0,
+        expected: Sequence[str] = (),
+        detected: Optional[Sequence[str]] = None,
+        wall_s: float = 0.0,
+        events: int = 0,
+        mitigation: str = "",
+        findings: Optional[Sequence[Finding]] = None,
+        expected_components: Optional[Dict[str, Sequence[str]]] = None,
+        diag_wall_s: float = 0.0,
+        magnitude: float = 1.0,
+        late_events: int = 0,
+    ) -> "RunStats":
+        """Columnar twin of :meth:`from_spans`: identical RunStats (same
+        float bits, same dict ordering) computed from a
+        :class:`SpanColumns` reduction instead of a per-span python loop.
+
+        ``spans`` is only needed for the graph-walking parts — critical
+        paths and (when ``detected`` is None) diagnosis; pass ``None`` to
+        skip them when the caller already knows the verdicts and does not
+        need critical components."""
+        if detected is None:
+            if spans is None:
+                raise ValueError("from_columns needs spans to run diagnose(); "
+                                 "pass detected= to skip diagnosis")
+            d = diagnose(spans)
+            detected = d.fault_classes
+            if findings is None:
+                findings = d.findings
+        finding_components: Dict[str, List[str]] = {}
+        for f in findings or ():
+            comps = finding_components.setdefault(f.fault_class, [])
+            if f.component not in comps:
+                comps.append(f.component)
+        critical = (
+            list(_critical_path_components(spans).values()) if spans is not None else []
+        )
+        return cls(
+            scenario=scenario,
+            seed=seed,
+            expected=tuple(expected),
+            detected=tuple(detected),
+            wall_s=wall_s,
+            events=events,
+            n_spans=cols.n_spans,
+            component_us=cols.component_us(),
+            critical_components=critical,
+            request_us=cols.request_us(),
+            mitigation=mitigation,
+            mitigation_us=list(cols.mitigation_us),
+            capacity_penalty=cols.mitigation_penalty,
+            magnitude=magnitude,
+            expected_components={
+                k: list(v) for k, v in (expected_components or {}).items()
+            },
+            finding_components=finding_components,
+            diag_wall_s=diag_wall_s,
+            late_events=late_events,
         )
 
     @classmethod
@@ -861,6 +1027,7 @@ class RunStats:
             "expected_components": self.expected_components,
             "finding_components": self.finding_components,
             "diag_wall_s": self.diag_wall_s,
+            "late_events": self.late_events,
         }
 
     @classmethod
@@ -890,6 +1057,8 @@ class RunStats:
                 k: list(v) for k, v in d.get("finding_components", {}).items()
             },
             diag_wall_s=float(d.get("diag_wall_s", 0.0)),
+            # absent before schema-v5: late events were silently dropped
+            late_events=int(d.get("late_events", 0)),
         )
 
 

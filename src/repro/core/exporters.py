@@ -313,7 +313,80 @@ class SpanJSONLExporter(Exporter):
         self._buf = []
         self.spans_written = 0
 
-    def consume(self, s: Span) -> None:
+    # process-wide memo of escaped JSON strings for values drawn from small
+    # sets (attr keys get the ': ' glued on; names / sim types / components
+    # are bounded by the topology).  Attr *values* are not memoized — chunk
+    # ids are unbounded.
+    _esc_keys: Dict[str, str] = {}
+    _esc_names: Dict[str, str] = {}
+
+    def consume(self, s: Span, _esc=json.encoder.encode_basestring_ascii,
+                _kc=_esc_keys, _nc=_esc_names) -> None:
+        # Hand-assembled JSON line, byte-identical to ``json.dumps(rec)``
+        # of the reference record (see ``_consume_reference``): same key
+        # order, the C escaper ``json.dumps`` itself uses, ``repr`` floats
+        # (what the C encoder emits), ``null`` for a missing parent, and a
+        # ``"%d"`` fast path for int attr values (bools are not ints here:
+        # ``type`` check, not isinstance).  At fleet scale the per-span
+        # dict/list staging for ``dumps`` cost more than the encoding;
+        # this path skips the staging entirely.
+        ctx = s.context
+        parent = s.parent
+        dur = s.end - s.start
+        a = s.attrs
+        if a:
+            parts = []
+            ap = parts.append
+            for k, v in a.items():
+                ks = _kc.get(k)
+                if ks is None:
+                    ks = _kc[k] = _esc(k) + ": "
+                if type(v) is int:
+                    ap('%s"%d"' % (ks, v))
+                else:
+                    ap(ks + _esc(str(v)))
+            attrs_s = "{%s}" % ", ".join(parts)
+        else:
+            attrs_s = "{}"
+        name_s = _nc.get(s.name)
+        if name_s is None:
+            name_s = _nc[s.name] = _esc(s.name)
+        st_s = _nc.get(s.sim_type)
+        if st_s is None:
+            st_s = _nc[s.sim_type] = _esc(s.sim_type)
+        comp_s = _nc.get(s.component)
+        if comp_s is None:
+            comp_s = _nc[s.component] = _esc(s.component)
+        line = (
+            '{"trace_id": "%032x", "span_id": "%016x", "parent_id": %s, '
+            '"name": %s, "sim_type": %s, "component": %s, "start_us": %s, '
+            '"duration_us": %s, "attrs": %s, "n_events": %d, "links": [%s]}'
+            % (
+                ctx.trace_id,
+                ctx.span_id,
+                '"%016x"' % parent.span_id if parent is not None else "null",
+                name_s,
+                st_s,
+                comp_s,
+                repr(s.start / PS_PER_US),
+                repr((dur if dur > 1 else 1) / PS_PER_US),
+                attrs_s,
+                len(s.events),
+                ", ".join(['"%016x"' % l.span_id for l in s.links]),
+            )
+        )
+        buf = self._buf
+        buf.append(line)
+        buf.append("\n")
+        if len(buf) >= 2 * self.flush_every:
+            self._out.write("".join(buf))
+            buf.clear()
+        self.spans_written += 1
+
+    def _consume_reference(self, s: Span) -> None:
+        """The original ``json.dumps`` encoding of one span — kept as the
+        executable spec :meth:`consume` is tested byte-for-byte against
+        (``tests/test_streaming_weave.py``)."""
         ctx = s.context
         parent = s.parent
         dur = s.end - s.start

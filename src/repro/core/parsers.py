@@ -37,8 +37,18 @@ from .events import (
 # ---------------------------------------------------------------------------
 
 
+# Leading characters a numeric token can start with (int or float literal,
+# including inf/Infinity/nan and whitespace-padded forms).  Anything else
+# cannot coerce, so _coerce can skip the exception-based probe entirely —
+# raising and catching ValueError on every identifier-shaped token ("host0",
+# "ici.pod0.l1", ...) dominated parse/weave profiles at 256 pods.
+_NUM_LEAD = frozenset("+-.0123456789iInN \t")
+
+
 def _coerce(v: str) -> Any:
     """Fast-ish str -> int/float/str coercion."""
+    if not v or v[0] not in _NUM_LEAD:
+        return v
     try:
         return int(v)
     except ValueError:

@@ -32,6 +32,7 @@ user code weave exactly like the built-in host/device/net trio::
 """
 from __future__ import annotations
 
+import gc
 import os
 from dataclasses import dataclass, field
 from enum import Enum
@@ -258,12 +259,29 @@ class ExecutionEngine:
         return spans
 
     def stream_to(self, spans: Sequence[Span], exporters: Sequence[Exporter]) -> None:
-        """Fan finished spans out to exporters incrementally.  Exporters are
-        isolated from each other: one raising mid-stream still lets the rest
-        write their output, and its own ``finish()`` runs so partial output
-        flushes instead of sitting in an open buffer.  The first error
-        re-raises after every exporter has had its chance."""
-        errors: List[Exception] = []
+        """Fan finished spans out to exporters (see :func:`stream_to`)."""
+        stream_to(spans, exporters)
+
+
+def stream_to(spans: Sequence[Span], exporters: Sequence[Exporter]) -> None:
+    """Fan finished spans out to exporters incrementally.  Exporters are
+    isolated from each other: one raising mid-stream still lets the rest
+    write their output, and its own ``finish()`` runs so partial output
+    flushes instead of sitting in an open buffer.  The first error
+    re-raises after every exporter has had its chance.
+
+    Module-level because every span-producing path shares it: the post-hoc
+    :class:`TraceSession` and the inline weave's ``InlineTraceSession``.
+
+    The cyclic GC pauses for the duration (the EventKernel.run rationale:
+    encoding allocates heavily but makes no cycles, and gen-2 collections
+    re-walking the multi-million-object span graph dominate export time at
+    fleet scale)."""
+    errors: List[Exception] = []
+    paused = gc.isenabled()
+    if paused:
+        gc.disable()
+    try:
         for e in exporters:
             try:
                 e.begin()
@@ -280,8 +298,11 @@ class ExecutionEngine:
                     e.finish()
             except Exception as ex:
                 errors.append(ex)
-        if errors:
-            raise errors[0]
+    finally:
+        if paused:
+            gc.enable()
+    if errors:
+        raise errors[0]
 
 
 # ---------------------------------------------------------------------------
@@ -485,6 +506,14 @@ class TraceSession:
     def export(self, *exporters: Exporter) -> None:
         """Post-hoc export (streams the finished spans through)."""
         self.engine.stream_to(self.spans, exporters)
+
+    @property
+    def late_events(self) -> int:
+        """Events dropped because their span had already closed (summed
+        over weavers; each drop raised a ``LateEventWarning``).  Same
+        shape as ``InlineTraceSession.late_events`` so sweep cells record
+        the count whichever weave path produced the run."""
+        return sum(w.late_events for w in self.weavers)
 
     # -- stats --------------------------------------------------------------------
 

@@ -1,0 +1,693 @@
+"""Incremental in-sim span weaving (the ``weave="inline"`` path).
+
+Columbo's post-hoc pipeline pays format -> parse -> weave after the
+simulation finishes; the structured fast path drops format/parse but still
+replays every captured record through the weavers in a separate pass.  The
+:class:`StreamingWeaver` goes the last step: the cluster's log writers feed
+it records *as the kernel executes* (see ``sim/clock.InlineWeaveWriter``),
+and it dispatches them straight into the existing :class:`SpanWeaver`
+handlers (same dict-dispatch tables, same :class:`ContextRegistry`) — by
+the time the simulation drains, the spans are already woven.
+
+Byte-identity with the post-hoc paths is the repo's reproducibility
+contract, and it is non-trivial here: the post-hoc weave consumes *all*
+host events, then all device events, then all net events (sync-priority
+order), allocating span/trace ids in exactly that order, while the inline
+weave sees the same events interleaved in virtual-time order.  Two
+mechanisms close the gap:
+
+* **watermark batches** — records buffer per simulator type and flush in
+  sync-priority order whenever the kernel's clock advances (every record
+  is stamped ``kernel.now``, so timestamps are globally nondecreasing).
+  Within one timestamp this reproduces the post-hoc type order
+  (host -> device -> net) and, via a stable sort on writer index, the
+  per-type shard-merge tie-break (``MergedProducer``: equal timestamps go
+  to the earlier-created writer).
+* **tagged id spaces** — each simulator type allocates span/trace ids from
+  its own counter in a disjoint tagged range (``tag << 44``).  At finish,
+  deferred contexts resolve first (they traffic in tagged ids), then a
+  remap pass renumbers every id into exactly what the sequential post-hoc
+  weave would have allocated (host block first, then device, then net),
+  then trace ids unify through the parent graph — the same two post-weave
+  steps as :func:`finalize_spans`, with the remap spliced between them.
+
+Everything else — handlers, context keys, deferred resolution, the final
+``(trace_id, start, span_id)`` sort, SpanJSONL encoding — is shared code,
+which is what makes the byte-for-byte guarantee testable rather than
+aspirational (``tests/test_streaming_weave.py``).
+"""
+from __future__ import annotations
+
+import gc as _gc
+import itertools
+from operator import itemgetter
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from . import span as _span
+from .context import ContextRegistry, UnlockedContextRegistry
+from .events import sim_type_value
+from .parsers import (
+    _NUM_LEAD,
+    DEVICE_NAME_TO_CLASS,
+    HOST_KIND_TO_CLASS,
+    NET_MARK_TO_CLASS,
+    _coerce,
+    coerce_value,
+)
+from .span import Span, SpanContext
+from .weaver import SpanWeaver
+
+try:  # columnar final sort; pure-python fallback stays byte-identical
+    import numpy as _np
+except ModuleNotFoundError:  # pragma: no cover - minimal installs
+    _np = None
+
+__all__ = ["StreamingWeaver", "InlineTraceSession"]
+
+# Tagged id ranges: ordinals are dense per type, the tag keeps the three
+# in-flight id spaces disjoint until the finish-time remap.  44 bits leaves
+# room for ~17.6e12 ids per type — far beyond any simulation this kernel
+# can drain — while tagged values still fit comfortably in an int64 (the
+# columnar sort path).
+_TAG_BITS = 44
+_TAG_STRIDE = 1 << _TAG_BITS
+_TAG_MASK = _TAG_STRIDE - 1
+
+# The builtin trio's post-hoc processing order (sync priority: host=0 <
+# device=10 < net=20).  host MUST be tag 0: untagged ids (including the
+# span_id=0 sentinels some registry keys carry) remap with offset 0, and
+# the sequential weave allocates the host block first anyway.
+_TYPE_TAG = {"host": 0, "device": 1, "net": 2}
+
+_ITEM0 = itemgetter(0)
+
+
+class _EventShim:
+    """Reusable event stand-in for record-level dispatch.
+
+    Weaver handlers only read ``ev.ts`` / ``ev.source`` / ``ev.attrs``
+    (and ``ev.kind`` in the late-event path), so the drain loops reuse one
+    mutable shim per simulator type instead of materializing an Event
+    object per record.  ``kind`` holds the record's dispatch key (host
+    kind, device event-class name, or net mark)."""
+
+    __slots__ = ("ts", "source", "kind", "attrs")
+
+
+class StreamingWeaver:
+    """Weaves spans *during* the simulation from per-event records.
+
+    The cluster's inline log writers call :meth:`attach` once per writer
+    and feed every record to the returned emit callable; :meth:`finish`
+    runs the post-weave steps (deferred resolution, id remap, trace-id
+    unification, canonical sort) and returns spans byte-equivalent to the
+    post-hoc weave of the same simulation.
+
+    ``live_exporters`` optionally receive each span the moment its weaver
+    completes it (mid-simulation, completion order, provisional pre-remap
+    ids) — a monitoring tap with the same fan-out isolation as
+    ``TraceSession.export``; the byte-identical artifact is produced by
+    exporting the finished spans.
+    """
+
+    def __init__(
+        self,
+        simulators=None,
+        registry: Optional[ContextRegistry] = None,
+        poll_timeout: float = 0.0,
+    ) -> None:
+        if simulators is None:
+            from .registry import DEFAULT_REGISTRY
+
+            simulators = DEFAULT_REGISTRY
+        self.simulators = simulators
+        # inline weaving is strictly single-threaded (records arrive from
+        # the kernel's drain loop), so the unlocked registry is safe
+        self.context = registry if registry is not None else UnlockedContextRegistry()
+        self.poll_timeout = poll_timeout
+        self.weavers: Dict[str, SpanWeaver] = {}
+        self.events_in: Dict[str, int] = {}
+        self.spans: Optional[List[Span]] = None
+        self.finalize_stats: Dict[str, int] = {}
+        self.live_exporters: List[Any] = []
+        self.live_errors: List[Exception] = []
+        self._live_failed: set = set()
+        self._tap_installed = False
+        self._wm: List[int] = [-1]          # watermark cell shared by emits
+        self._batches: Dict[str, List[tuple]] = {}
+        self._drains: List[Tuple[List[tuple], Callable[[List[tuple]], None]]] = []
+        self._span_ctrs: Dict[str, Any] = {}
+        self._trace_ctrs: Dict[str, Any] = {}
+        self._writer_counts: Dict[str, int] = {}
+        self._net_emit: Optional[Callable[[tuple], None]] = None
+        self._net_xfer: Dict[Tuple[str, Any], Span] = {}
+        self._net_count = [0]               # mutable cell: fused-path events_in
+        self._columns = None                # cached SpanColumns of finished spans
+        self._finished = False
+
+    # -- capture side (what InlineWeaveWriter binds) ---------------------------
+
+    def attach(self, sim_type) -> Callable[[tuple], None]:
+        """Register one log writer of ``sim_type``; returns its emit.
+
+        Writers of one type are ranked by attach order — the same
+        creation-order rank ``MergedProducer`` uses to tie-break equal
+        timestamps in the post-hoc shard merge."""
+        st = sim_type_value(sim_type)
+        if self._finished:
+            raise RuntimeError("StreamingWeaver already finished; cannot attach")
+        tag = _TYPE_TAG.get(st)
+        if tag is None:
+            raise ValueError(
+                f"inline weaving supports the builtin simulator types "
+                f"{sorted(_TYPE_TAG)}, not {st!r}; use the post-hoc paths "
+                f"for custom types"
+            )
+        if st not in self.weavers:
+            w = self.simulators.make_weaver(st, self.context, poll_timeout=self.poll_timeout)
+            # interleaved arrival order must not leak into context lookups:
+            # defer them all to finish, where the registry holds the same
+            # final state the sequential weave's eager polls observed
+            w.defer_polls = True
+            self.weavers[st] = w
+            if self._tap_installed:
+                self._wrap_emit(w)
+            self.events_in[st] = 0
+            self._span_ctrs[st] = itertools.count(tag * _TAG_STRIDE + 1)
+            self._trace_ctrs[st] = itertools.count(tag * _TAG_STRIDE + 1)
+            self._writer_counts[st] = 0
+            if st == "net":
+                # net records dominate the stream (every link hop is 3-4
+                # records) but under defer_polls the net weaver never reads
+                # the registry — it only defers and pushes — and the net
+                # stream is single-writer, so its records need neither the
+                # watermark buffer nor the MergedProducer tie-break: a
+                # fused handler weaves each record the moment it is emitted
+                self._net_emit = self._make_net_emit(w)
+            else:
+                batch: List[tuple] = []
+                self._batches[st] = batch
+                self._drains.append((batch, self._make_drain(st, w)))
+                self._drains.sort(key=lambda bd: _TYPE_TAG[bd[1].sim_type])
+        idx = self._writer_counts[st]
+        self._writer_counts[st] = idx + 1
+        if st == "net":
+            if idx > 0:
+                raise RuntimeError(
+                    "inline weaving supports a single net log writer (the "
+                    "cluster creates exactly one); multi-writer net streams "
+                    "need the post-hoc shard merge"
+                )
+            return self._net_emit
+        append = self._batches[st].append
+        wm = self._wm
+        advance = self._advance
+
+        def emit(rec, _append=append, _idx=idx, _wm=wm, _advance=advance):
+            if rec[0] != _wm[0]:
+                _advance(rec[0])
+            _append((_idx, rec))
+
+        return emit
+
+    def _advance(self, ts: int) -> None:
+        wm = self._wm
+        if ts < wm[0]:
+            raise RuntimeError(
+                f"inline weave saw a record timestamp go backwards "
+                f"({ts} < {wm[0]}); records must be emitted at kernel.now"
+            )
+        for batch, drain in self._drains:
+            if batch:
+                drain(batch)
+                del batch[:]
+        wm[0] = ts
+
+    # -- record dispatch -------------------------------------------------------
+
+    def _make_drain(self, st: str, w: SpanWeaver) -> Callable[[List[tuple]], None]:
+        """One drain closure per host/device weaver: sorts multi-writer
+        batches by writer rank (stable — the MergedProducer tie-break),
+        replicates ``StructuredLogWriter.events()``'s attr coercion
+        exactly, and dict-dispatches into the weaver's existing handlers
+        through a reusable shim.  Swaps the type's tagged id counters into
+        the span module for the duration (handlers allocate ids via the
+        module-level ``new_span_id``/``new_trace_id``).  Net records never
+        reach a drain — see :meth:`_make_net_emit`."""
+        handlers = w._handlers
+        table = HOST_KIND_TO_CLASS if st == "host" else DEVICE_NAME_TO_CLASS
+        disp: Dict[str, Callable] = {}
+        registered_unhandled = set()
+        for key, cls in table.items():
+            h = handlers.get(cls.kind)
+            if h is None:
+                # registered event class without a handler: the post-hoc
+                # weave counts it unhandled; unknown keys are dropped like
+                # events() drops records with no registered class
+                registered_unhandled.add(key)
+            else:
+                disp[key] = h
+        shim = _EventShim()
+        span_ctr = self._span_ctrs[st]
+        trace_ctr = self._trace_ctrs[st]
+        counts = self.events_in
+        writer_counts = self._writer_counts
+
+        def drain(batch, _get=disp.get, _unh=registered_unhandled,
+                  _shim=shim, _coerce=coerce_value):
+            _span._span_counter = span_ctr
+            _span._trace_counter = trace_ctr
+            if writer_counts[st] > 1 and len(batch) > 1:
+                batch.sort(key=_ITEM0)
+            counts[st] += len(batch)
+            unhandled = 0
+            for _i, rec in batch:
+                ts, source, kind, attrs = rec
+                h = _get(kind)
+                if h is None:
+                    if kind in _unh:
+                        unhandled += 1
+                    continue
+                coerced = None
+                for k, v in attrs.items():
+                    if type(v) is not int:
+                        cv = _coerce(v)
+                        if cv is not v:
+                            if coerced is None:
+                                coerced = dict(attrs)
+                            coerced[k] = cv
+                _shim.ts = ts
+                _shim.source = source
+                _shim.kind = kind
+                _shim.attrs = attrs if coerced is None else coerced
+                h(_shim)
+            if unhandled:
+                w.unhandled_events += unhandled
+
+        drain.sim_type = st
+        return drain
+
+    def _make_net_emit(self, w: SpanWeaver) -> Callable[[tuple], None]:
+        """Fused net weave: one closure replicating ``NetSpanWeaver``'s
+        enqueue/tx/drop/rx handlers (plus ``events()``'s attr coercion and
+        ``_begin``'s span construction) so each net record is woven in a
+        single call — no batch, no shim, no dict dispatch, no module
+        counter swap.  Safe because under ``defer_polls`` the net weaver
+        never *reads* the registry (parents defer, link_span contexts are
+        only consumed by finish-time deferred resolution) and the net
+        stream has one writer, so emit order IS the canonical net event
+        order.  Byte-identity is asserted by the same golden harness as
+        the general path."""
+        xfer = self._net_xfer
+        cell = self._net_count
+        reg = self.context
+        defer = reg.defer
+        push = reg.push
+        spans_append = w.spans.append
+        stc = w.span_type_counts
+        shim = _EventShim()
+        shim.attrs = {}
+        sw = self
+
+        def emit(rec, _cv=coerce_value, _NUM=_NUM_LEAD, _SC=SpanContext,
+                 _Span=Span,
+                 _next_t=self._trace_ctrs["net"].__next__,
+                 _next_s=self._span_ctrs["net"].__next__,
+                 _xget=xfer.get, _xpop=xfer.pop, _late=w._late):
+            ts, mark, link, chunk, size, meta = rec
+            if mark == "r":
+                cell[0] += 1
+                span = _xpop((link, chunk), None)
+                if span is None:
+                    shim.ts = ts
+                    shim.source = link
+                    shim.kind = "chunk_rx"
+                    _late(shim)
+                    return
+                if ts > span.start:
+                    span.end = ts
+                spans_append(span)
+                if sw._tap_installed:
+                    sw._tap(span)
+            elif mark == "+":
+                cell[0] += 1
+                attrs = {"chunk": chunk, "size": size}
+                # the inline-expanded _NUM_LEAD gate of coerce_value: ints
+                # and identifier-shaped strings (the vast majority) pass
+                # through without a function call
+                for k, v in meta.items():
+                    t = type(v)
+                    if t is int or (t is str and (not v or v[0] not in _NUM)):
+                        attrs[k] = v
+                    else:
+                        attrs[k] = _cv(v)
+                span = _Span(name="LinkTransfer", start=ts, end=ts,
+                             context=_SC(_next_t(), _next_s()),
+                             component=link, sim_type="net", attrs=attrs)
+                # same natural-boundary key selection as _on_chunk_enqueue
+                if "dma" in attrs:
+                    defer(span, ("h2d", attrs["dma"]), mode="parent")
+                elif attrs.get("proto") == "ntp":
+                    defer(span, ("ntp", attrs.get("peer"), attrs.get("seq")), mode="parent")
+                elif "rpc" in attrs:
+                    defer(span, ("rpccall", attrs["rpc"]), mode="parent")
+                elif "flow" not in attrs:
+                    defer(span, ("chunk", chunk), mode="parent")
+                push(("link_span", chunk), span.context)
+                xfer[(link, chunk)] = span
+            elif mark == "-":
+                cell[0] += 1
+                span = _xget((link, chunk))
+                if span is None:
+                    shim.ts = ts
+                    shim.source = link
+                    shim.kind = "chunk_tx"
+                    _late(shim)
+                    return
+                attrs = {"chunk": chunk, "size": size}
+                for k, v in meta.items():
+                    t = type(v)
+                    if t is int or (t is str and (not v or v[0] not in _NUM)):
+                        attrs[k] = v
+                    else:
+                        attrs[k] = _cv(v)
+                span.events.append((ts, "wire_tx", attrs))
+                span.attrs["queue_ps"] = ts - span.start
+            elif mark == "d":
+                cell[0] += 1
+                span = _xget((link, chunk))
+                if span is None:
+                    shim.ts = ts
+                    shim.source = link
+                    shim.kind = "chunk_drop"
+                    _late(shim)
+                    return
+                attrs = {"chunk": chunk, "size": size}
+                for k, v in meta.items():
+                    t = type(v)
+                    if t is int or (t is str and (not v or v[0] not in _NUM)):
+                        attrs[k] = v
+                    else:
+                        attrs[k] = _cv(v)
+                span.events.append((ts, "chunk_drop", attrs))
+                a = span.attrs
+                a["drops"] = int(a.get("drops", 0)) + 1
+            # unknown marks: dropped, like events() drops unregistered records
+
+        return emit
+
+    # -- live exporter tap -----------------------------------------------------
+
+    def add_live_exporter(self, exporter) -> None:
+        """Attach an exporter receiving each span the moment its weaver
+        completes it, while the simulation is still running.
+
+        Spans arrive in completion order with provisional (pre-remap) ids:
+        this is a streaming/monitoring tap, not the byte-identical
+        artifact.  Exporters are isolated exactly like
+        ``TraceSession.export``: one raising mid-stream is disabled (its
+        ``finish()`` still runs so partial output flushes), the others keep
+        receiving, and the first error re-raises from :meth:`finish`."""
+        try:
+            exporter.begin()
+        except Exception as ex:
+            self.live_errors.append(ex)
+            self._live_failed.add(id(exporter))
+        self.live_exporters.append(exporter)
+        if not self._tap_installed:
+            self._tap_installed = True
+            for w in self.weavers.values():
+                self._wrap_emit(w)
+
+    def _wrap_emit(self, w: SpanWeaver) -> None:
+        orig = w.emit
+
+        def emit(span, _orig=orig, _tap=self._tap):
+            _orig(span)
+            _tap(span)
+
+        w.emit = emit
+
+    def _tap(self, span: Span) -> None:
+        for e in self.live_exporters:
+            if id(e) in self._live_failed:
+                continue
+            try:
+                e.consume(span)
+            except Exception as ex:
+                self.live_errors.append(ex)
+                self._live_failed.add(id(e))
+
+    # -- finish: the post-weave steps ------------------------------------------
+
+    def finish(self) -> List[Span]:
+        """Flush, resolve, renumber, unify, sort — then the spans are
+        exactly what ``ExecutionEngine.execute`` would have produced."""
+        if self._finished:
+            return self.spans or []
+        self._finished = True
+        # same rationale as EventKernel.run(gc_pause=True): the span graph
+        # is millions of live objects and this method allocates no cycles,
+        # so letting gen-2 collections walk it mid-finish only burns time
+        paused = _gc.isenabled()
+        if paused:
+            _gc.disable()
+        try:
+            return self._finish()
+        finally:
+            if paused:
+                _gc.enable()
+
+    def _finish(self) -> List[Span]:
+        for batch, drain in self._drains:
+            if batch:
+                drain(batch)
+                del batch[:]
+        order = sorted(self.weavers, key=_TYPE_TAG.__getitem__)
+        for st in order:
+            # counters stay swapped in per type in case a handler's
+            # on_finish ever allocates (none do today)
+            _span._span_counter = self._span_ctrs[st]
+            _span._trace_counter = self._trace_ctrs[st]
+            if st == "net":
+                # the fused net path keeps its own open-transfer dict; this
+                # is NetSpanWeaver.on_finish's unclosed flush, verbatim
+                w = self.weavers[st]
+                self._fold_net_counts(w)
+                for span in self._net_xfer.values():
+                    span.attrs["unclosed"] = True
+                    w.emit(span)
+                self._net_xfer.clear()
+            self.weavers[st].on_finish()
+
+        # per-type allocation counts -> the post-hoc block offsets
+        span_off = [0, 0, 0]
+        trace_off = [0, 0, 0]
+        cum_s = 0
+        cum_t = 0
+        for st, tag in _TYPE_TAG.items():
+            span_off[tag] = cum_s
+            trace_off[tag] = cum_t
+            if st in self.weavers:
+                base = tag * _TAG_STRIDE + 1
+                cum_s += next(self._span_ctrs[st]) - base
+                cum_t += next(self._trace_ctrs[st]) - base
+
+        # 1. deferred resolution first: it assigns stored (tagged) contexts
+        #    as parents and rebuilds span contexts from them, so remapping
+        #    earlier would let resolution re-introduce tagged ids
+        stats = self.context.resolve_deferred()
+        spans: List[Span] = []
+        for st in order:
+            spans.extend(self.weavers[st].spans)
+        # 2. + 3. renumber into the sequential weave's dense id blocks and
+        #    unify trace ids through the parent graph — one fused rewrite
+        _remap_and_unify(spans, span_off, trace_off)
+        # 4. the same canonical ordering the post-hoc engine emits
+        _sort_spans(spans)
+
+        # leave the module counters where the sequential weave would have:
+        # continuing after the last allocated id
+        _span._span_counter = itertools.count(cum_s + 1)
+        _span._trace_counter = itertools.count(cum_t + 1)
+
+        self.finalize_stats = stats
+        self.spans = spans
+        for e in self.live_exporters:
+            try:
+                e.finish()
+            except Exception as ex:
+                if id(e) not in self._live_failed:
+                    self.live_errors.append(ex)
+                    self._live_failed.add(id(e))
+        if self.live_errors:
+            raise self.live_errors[0]
+        return spans
+
+    def columns(self):
+        """Columnar (struct-of-arrays) view of the finished spans.
+
+        Built lazily and cached; feeds :meth:`RunStats.from_columns`, which
+        replaces the per-span python reduction loop with numpy passes."""
+        if self._columns is None:
+            from .analysis import SpanColumns
+            self._columns = SpanColumns(self.finish())
+        return self._columns
+
+    def stats(self) -> Dict[str, Any]:
+        """Session-shaped counters (mirrors ``TraceSession.stats``)."""
+        span_types: Dict[str, Dict[str, int]] = {}
+        pipelines: Dict[str, Dict[str, int]] = {}
+        if "net" in self.weavers:
+            self._fold_net_counts(self.weavers["net"])
+        for st, w in sorted(self.weavers.items()):
+            pipelines[st] = {
+                "events_in": self.events_in.get(st, 0),
+                "events_out": self.events_in.get(st, 0),
+                "late_events": w.late_events,
+            }
+            span_types[st] = dict(w.span_type_counts)
+        return {
+            "state": "done" if self._finished else "running",
+            "pipelines": pipelines,
+            "context": self.context.stats(),
+            "finalize": dict(self.finalize_stats),
+            "spans": len(self.spans or ()),
+            "span_types": span_types,
+        }
+
+    @property
+    def late_events(self) -> int:
+        return sum(w.late_events for w in self.weavers.values())
+
+    def _fold_net_counts(self, w: SpanWeaver) -> None:
+        """The fused net emit skips the per-span ``span_type_counts`` and
+        per-record ``events_in`` bookkeeping; fold the batch tallies in
+        (the net weaver emits exactly one span type)."""
+        self.events_in["net"] = self._net_count[0]
+        if w.spans:
+            w.span_type_counts["LinkTransfer"] = len(w.spans)
+
+
+def _remap_and_unify(spans: List[Span], span_off: Sequence[int], trace_off: Sequence[int]) -> None:
+    """Renumber tagged ids into the sequential weave's dense blocks AND
+    unify trace ids through the parent graph, in one rewrite.
+
+    Equivalent to ``_remap_ids`` followed by
+    :func:`~repro.core.weaver.unify_trace_ids`, fused: the parent-chain
+    root resolution runs on the *tagged* ids (the tagged -> final map is a
+    bijection, so chains resolve identically) and every SpanContext is
+    rebuilt exactly once with both the final ids and the unified trace.
+    Mirrors unify's edge semantics: a parent whose span was never woven
+    keeps its own (remapped) trace id, and chain walks cap at 10k hops."""
+    SC = SpanContext
+    BITS = _TAG_BITS
+    MASK = _TAG_MASK
+    parent_of: Dict[int, int] = {}
+    trace_own: Dict[int, int] = {}
+    for s in spans:
+        ctx = s.context
+        sid = ctx.span_id
+        p = s.parent
+        if p is not None:
+            parent_of[sid] = p.span_id
+        trace_own[sid] = ctx.trace_id
+    root: Dict[int, int] = {}
+    root_get = root.get
+    pget = parent_of.get
+    for s in spans:
+        cur = s.context.span_id
+        if cur in root:
+            continue
+        chain = []
+        while True:
+            r = root_get(cur)
+            if r is not None:
+                break
+            chain.append(cur)
+            p = pget(cur)
+            if p is None or p not in trace_own or len(chain) > 10000:
+                r = trace_own[cur]
+                break
+            cur = p
+        for c in chain:
+            root[c] = r
+    for s in spans:
+        ctx = s.context
+        sid = ctx.span_id
+        t = root[sid]
+        s.context = SC((t & MASK) + trace_off[t >> BITS],
+                       (sid & MASK) + span_off[sid >> BITS])
+        p = s.parent
+        if p is not None:
+            psid = p.span_id
+            pt = root_get(psid)
+            if pt is None:
+                pt = p.trace_id   # parent never woven: remap-only, like unify
+            s.parent = SC((pt & MASK) + trace_off[pt >> BITS],
+                          (psid & MASK) + span_off[psid >> BITS])
+        links = s.links
+        if links:
+            for i, l in enumerate(links):
+                t = l.trace_id
+                lsid = l.span_id
+                links[i] = SC((t & MASK) + trace_off[t >> BITS],
+                              (lsid & MASK) + span_off[lsid >> BITS])
+
+
+def _sort_spans(spans: List[Span]) -> None:
+    """Canonical ``(trace_id, start, span_id)`` order.  The key is a total
+    order (span ids are unique), so the columnar argsort and the python
+    tuple sort agree exactly; numpy just gets there faster at 1M+ spans."""
+    if _np is not None and len(spans) >= 4096:
+        n = len(spans)
+        tid = _np.empty(n, dtype=_np.int64)
+        start = _np.empty(n, dtype=_np.int64)
+        sid = _np.empty(n, dtype=_np.int64)
+        for i, s in enumerate(spans):
+            ctx = s.context
+            tid[i] = ctx.trace_id
+            start[i] = s.start
+            sid[i] = ctx.span_id
+        order = _np.lexsort((sid, start, tid))
+        spans[:] = [spans[i] for i in order.tolist()]
+    else:
+        spans.sort(key=lambda s: (s.context.trace_id, s.start, s.context.span_id))
+
+
+class InlineTraceSession:
+    """The ``TraceSession``-shaped result of an inline-woven run.
+
+    Scenario code and callers that only read ``spans`` / ``export`` /
+    ``stats`` work unchanged whichever weave path produced the run."""
+
+    def __init__(self, weaver: StreamingWeaver) -> None:
+        self.weaver = weaver
+        self.state = "done"
+
+    @property
+    def spans(self) -> List[Span]:
+        return self.weaver.spans or []
+
+    def columns(self):
+        return self.weaver.columns()
+
+    @property
+    def context(self) -> ContextRegistry:
+        return self.weaver.context
+
+    @property
+    def finalize_stats(self) -> Dict[str, int]:
+        return self.weaver.finalize_stats
+
+    @property
+    def late_events(self) -> int:
+        return self.weaver.late_events
+
+    def export(self, *exporters) -> None:
+        from .session import stream_to
+
+        stream_to(self.spans, exporters)
+
+    def stats(self) -> Dict[str, Any]:
+        return self.weaver.stats()

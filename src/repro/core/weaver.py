@@ -18,6 +18,7 @@ under "Correct Context Propagation" challenges (§6).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, ClassVar, Dict, List, Optional, Tuple
 
 from .context import ContextRegistry, Key
@@ -28,12 +29,31 @@ from .span import Span, SpanBuilder, SpanContext, new_trace_id
 # ---------------------------------------------------------------------------
 
 
+class LateEventWarning(UserWarning):
+    """An event referenced a span that already closed — e.g. a retransmit
+    or mitigation child completing after its root span finished — so the
+    weaver had to drop it.  Counted per-weaver in ``late_events`` and
+    rolled up into ``RunStats.late_events``; previously these events were
+    silently discarded."""
+
+
 class SpanWeaver(Consumer):
     """Base consumer turning one simulator's event stream into spans,
     propagating context through the shared registry (§3.5–3.6)."""
 
     sim_type: ClassVar[SimType]
     span_types: ClassVar[Tuple[str, ...]] = ()
+
+    #: When True, every :meth:`_parent_or_defer` skips the eager poll and
+    #: defers straight to finish-time resolution.  The inline (in-sim)
+    #: weave sets this: sequential post-hoc weaving drains whole simulator
+    #: types in priority order, so its eager polls observe the pusher
+    #: type's *final* registry state — which interleaved inline polls
+    #: cannot (e.g. two hosts pushing the same ("dispatch", chip, step,
+    #: program) key: post-hoc sees the last push, inline would see
+    #: whichever came before the poll).  Finish-time resolution reads the
+    #: same final store, restoring byte-identity.
+    defer_polls = False
 
     def __init__(
         self,
@@ -45,6 +65,8 @@ class SpanWeaver(Consumer):
         self.spans: List[Span] = []
         self.span_type_counts: Dict[str, int] = {}
         self.unhandled_events = 0
+        self.late_events = 0
+        self._late_warned: set = set()
         self._handlers: Dict[str, Callable[[Event], None]] = {}
         for kind in type(self)._kinds():
             self._handlers[kind] = getattr(self, "_on_" + kind)
@@ -90,6 +112,24 @@ class SpanWeaver(Consumer):
         self.spans.append(span)
         self.span_type_counts[span.name] = self.span_type_counts.get(span.name, 0) + 1
 
+    def _late(self, ev: Event) -> None:
+        """An event whose span already closed (or never opened): count it
+        and warn — never drop silently.  The warning fires once per
+        (kind, source) per weaver (late chunks after a closed collective
+        are legion at scale; the counter carries the full tally), and the
+        message omits the timestamp so the warnings registry stays
+        bounded."""
+        self.late_events += 1
+        key = (ev.kind, ev.source)
+        if key not in self._late_warned:
+            self._late_warned.add(key)
+            warnings.warn(
+                f"late {ev.kind!r} event on {ev.source!r}: its span already "
+                f"closed; event dropped",
+                LateEventWarning,
+                stacklevel=3,
+            )
+
     def _begin(
         self,
         name: str,
@@ -110,13 +150,15 @@ class SpanWeaver(Consumer):
 
     def _parent_or_defer(self, builder: SpanBuilder, key: Key) -> None:
         """Eager poll; if the upstream context is not yet in the registry,
-        defer resolution to script-finish (order-independent weaving)."""
-        ctx = self.registry.poll(key, timeout=self.poll_timeout or None)
-        if ctx is not None:
-            builder.span.parent = ctx
-            builder.span.context = SpanContext(ctx.trace_id, builder.span.context.span_id)
-        else:
-            self.registry.defer(builder.span, key, mode="parent")
+        defer resolution to script-finish (order-independent weaving).
+        With :attr:`defer_polls` set, defer unconditionally."""
+        if not self.defer_polls:
+            ctx = self.registry.poll(key, timeout=self.poll_timeout or None)
+            if ctx is not None:
+                builder.span.parent = ctx
+                builder.span.context = SpanContext(ctx.trace_id, builder.span.context.span_id)
+                return
+        self.registry.defer(builder.span, key, mode="parent")
 
 
 # ---------------------------------------------------------------------------
@@ -192,6 +234,8 @@ class HostSpanWeaver(SpanWeaver):
         b = self._step.pop(ev.source, None)
         if b is not None:
             self.emit(b.finish(ev.ts))
+        else:
+            self._late(ev)
 
     def _on_data_load_begin(self, ev: Event) -> None:
         cur = self._cur(ev.source)
@@ -205,6 +249,8 @@ class HostSpanWeaver(SpanWeaver):
         if b is not None:
             b.span.attrs.update(ev.attrs)
             self.emit(b.finish(ev.ts))
+        else:
+            self._late(ev)
 
     def _on_dma_h2d_issue(self, ev: Event) -> None:
         cur = self._cur(ev.source)
@@ -219,6 +265,8 @@ class HostSpanWeaver(SpanWeaver):
         b = self._h2d.pop(ev.attrs.get("dma"), None)
         if b is not None:
             self.emit(b.finish(ev.ts))
+        else:
+            self._late(ev)
 
     def _on_dma_d2h_issue(self, ev: Event) -> None:
         self._on_dma_h2d_issue(ev)  # same span type, direction in attrs
@@ -243,6 +291,8 @@ class HostSpanWeaver(SpanWeaver):
         b = self._dispatch.pop((ev.source,) + key, None)
         if b is not None:
             self.emit(b.finish(ev.ts))
+        else:
+            self._late(ev)
 
     def _on_ckpt_begin(self, ev: Event) -> None:
         cur = self._cur(ev.source)
@@ -255,16 +305,22 @@ class HostSpanWeaver(SpanWeaver):
         b = self._ckpt.get(ev.source)
         if b is not None:
             b.span.add_event(ev.ts, "shard_write", ev.attrs)
+        else:
+            self._late(ev)
 
     def _on_ckpt_shard_read(self, ev: Event) -> None:
         b = self._ckpt.get(ev.source)
         if b is not None:
             b.span.add_event(ev.ts, "shard_read", ev.attrs)
+        else:
+            self._late(ev)
 
     def _on_ckpt_end(self, ev: Event) -> None:
         b = self._ckpt.pop(ev.source, None)
         if b is not None:
             self.emit(b.finish(ev.ts))
+        else:
+            self._late(ev)
 
     def _on_ntp_exchange(self, ev: Event) -> None:
         # t1..t4 are local/remote timestamps in ps; span covers t1..t4
@@ -339,17 +395,23 @@ class HostSpanWeaver(SpanWeaver):
         if b is not None:
             b.span.attrs.update(ev.attrs)
             self.emit(b.finish(ev.ts))
+        else:
+            self._late(ev)
 
     def _on_rpc_reply(self, ev: Event) -> None:
         b = self._rpc_call.pop((ev.source, ev.attrs.get("sub")), None)
         if b is not None:
             self.emit(b.finish(ev.ts))
+        else:
+            self._late(ev)
 
     def _on_rpc_done(self, ev: Event) -> None:
         b = self._rpc_req.pop((ev.source, ev.attrs.get("rid")), None)
         if b is not None:
             b.span.attrs.update(ev.attrs)
             self.emit(b.finish(ev.ts))
+        else:
+            self._late(ev)
 
     # -- mitigation engine: remediation subtrees ------------------------------
     #
@@ -382,6 +444,8 @@ class HostSpanWeaver(SpanWeaver):
         b = self._mitigation.pop((ev.source, ev.attrs.get("policy")), None)
         if b is not None:
             self.emit(b.finish(ev.ts))
+        else:
+            self._late(ev)
 
     def _on_retransmit_begin(self, ev: Event) -> None:
         ctx = self._mitigation_ctx.get((ev.source, ev.attrs.get("policy")))
@@ -393,6 +457,8 @@ class HostSpanWeaver(SpanWeaver):
         b = self._retransmit.pop((ev.source, ev.attrs.get("chunk")), None)
         if b is not None:
             self.emit(b.finish(ev.ts))
+        else:
+            self._late(ev)
 
     # -- pipelined-training workload: inter-stage activation hand-off ---------
 
@@ -458,6 +524,8 @@ class DeviceSpanWeaver(SpanWeaver):
         b = self._prog.pop(ev.source, None)
         if b is not None:
             self.emit(b.finish(ev.ts))
+        else:
+            self._late(ev)
 
     def _on_op_begin(self, ev: Event) -> None:
         prog = self._prog.get(ev.source)
@@ -480,6 +548,8 @@ class DeviceSpanWeaver(SpanWeaver):
         if b is not None:
             b.span.attrs.update(ev.attrs)
             self.emit(b.finish(ev.ts))
+        else:
+            self._late(ev)
 
     def _sub_event(self, ev: Event, name: str) -> None:
         tgt = self._op.get(ev.source) or self._prog.get(ev.source)
@@ -506,7 +576,9 @@ class DeviceSpanWeaver(SpanWeaver):
 
     def _on_collective_chunk_tx(self, ev: Event) -> None:
         b = self._coll.get((ev.source, ev.attrs.get("coll")))
-        if b is not None:
+        if b is None:
+            self._late(ev)
+        else:
             b.span.add_event(ev.ts, "chunk_tx", ev.attrs)
             # natural boundary (Ethernet-style): the link transfer for this
             # chunk is caused by this collective span
@@ -514,7 +586,9 @@ class DeviceSpanWeaver(SpanWeaver):
 
     def _on_collective_chunk_rx(self, ev: Event) -> None:
         b = self._coll.get((ev.source, ev.attrs.get("coll")))
-        if b is not None:
+        if b is None:
+            self._late(ev)
+        else:
             b.span.add_event(ev.ts, "chunk_rx", ev.attrs)
             # causal link back to the wire transfer that delivered the chunk
             self.registry.defer(b.span, ("link_span", ev.attrs.get("chunk")), mode="link")
@@ -523,6 +597,8 @@ class DeviceSpanWeaver(SpanWeaver):
         b = self._coll.pop((ev.source, ev.attrs.get("coll")), None)
         if b is not None:
             self.emit(b.finish(ev.ts))
+        else:
+            self._late(ev)
 
     def _on_dma_recv(self, ev: Event) -> None:
         b = self._begin("DmaRecv", ev, new_trace_id(), None, dict(ev.attrs))
@@ -581,14 +657,18 @@ class NetSpanWeaver(SpanWeaver):
 
     def _on_chunk_tx(self, ev: Event) -> None:
         b = self._xfer.get((ev.source, ev.attrs.get("chunk")))
-        if b is not None:
+        if b is None:
+            self._late(ev)
+        else:
             b.span.add_event(ev.ts, "wire_tx", ev.attrs)
             # queueing delay = wire_tx.ts - span.start; recorded for analysis
             b.span.attrs["queue_ps"] = ev.ts - b.span.start
 
     def _on_chunk_drop(self, ev: Event) -> None:
         b = self._xfer.get((ev.source, ev.attrs.get("chunk")))
-        if b is not None:
+        if b is None:
+            self._late(ev)
+        else:
             b.span.add_event(ev.ts, "chunk_drop", ev.attrs)
             b.span.attrs["drops"] = int(b.span.attrs.get("drops", 0)) + 1
 
@@ -596,6 +676,8 @@ class NetSpanWeaver(SpanWeaver):
         b = self._xfer.pop((ev.source, ev.attrs.get("chunk")), None)
         if b is not None:
             self.emit(b.finish(ev.ts))
+        else:
+            self._late(ev)
 
     def on_finish(self) -> None:
         for b in self._xfer.values():
@@ -615,6 +697,17 @@ def finalize_spans(spans: List[Span], registry: ContextRegistry) -> Dict[str, in
     """Post-weave pass: resolve deferred context links and unify every
     span's trace id with its root's; returns resolution counters."""
     stats = registry.resolve_deferred()
+    unify_trace_ids(spans)
+    return stats
+
+
+def unify_trace_ids(spans: List[Span]) -> None:
+    """Recompute every span's trace id from the parent graph so the whole
+    causal chain (host -> device -> net) lands in one trace.
+
+    Split out of :func:`finalize_spans` because the inline (in-sim) weave
+    must run it *after* its own span-id normalization pass but after
+    deferred resolution — the two post-weave steps are independent."""
     by_id: Dict[int, Span] = {s.context.span_id: s for s in spans}
 
     root_trace: Dict[int, int] = {}
@@ -640,7 +733,6 @@ def finalize_spans(spans: List[Span], registry: ContextRegistry) -> Dict[str, in
             pt = trace_of(s.parent.span_id)
             if pt != s.parent.trace_id:
                 s.parent = SpanContext(pt, s.parent.span_id)
-    return stats
 
 
 # Retained for backward compatibility; the authoritative binding lives in

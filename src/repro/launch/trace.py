@@ -49,6 +49,17 @@ formatted or re-parsed).  Output bytes are identical — only faster:
 
 ``python -m repro.launch.trace --scenario throttled_chip --structured``
 ``python -m repro.launch.trace --sweep --jobs 8 --structured``
+
+``--weave inline`` goes one step further: spans assemble *while the
+kernel runs* (``core.streaming.StreamingWeaver`` — no format, no parse,
+no post-hoc weave pass), and ``--weave sharded`` adds a ``--jobs``-way
+parallel export merged back in canonical order.  All three modes produce
+byte-identical SpanJSONL (the golden-equivalence harness in
+``tests/test_streaming_weave.py`` holds them to it):
+
+``python -m repro.launch.trace --scenario throttled_chip --weave inline``
+``python -m repro.launch.trace --scenario lossy_dcn --weave sharded --jobs 4``
+``python -m repro.launch.trace --sweep --weave inline --jobs 8``
 """
 import argparse
 import fnmatch
@@ -116,7 +127,8 @@ def _run_sweep(args) -> None:
     else:
         spec = SweepSpec(scenarios=scenarios, seeds=seeds, **overrides)
     outdir = os.path.join(args.outdir, "sweep")
-    result = run_sweep(spec, outdir, jobs=args.jobs, structured=args.structured)
+    result = run_sweep(spec, outdir, jobs=args.jobs, structured=args.structured,
+                       weave=args.weave)
     agg = result.aggregate()
     print(result.report(aggregate_report=agg))
     agg_path = os.path.join(outdir, "aggregate.json")
@@ -147,13 +159,16 @@ def _run_scenario(args) -> None:
     if args.mitigation:
         overrides["mitigation"] = args.mitigation
     run = spec.run(
-        outdir=None if args.structured else base + ".logs",
+        outdir=(None if args.structured or args.weave != "post"
+                else base + ".logs"),
         seed=args.seed,
         exporters=(
             ChromeTraceExporter(base + ".chrome.json"),
             SpanJSONLExporter(base + ".spans.jsonl"),
         ),
         structured=args.structured,
+        weave=args.weave,
+        jobs=args.jobs if args.weave == "sharded" else 1,
         **overrides,
     )
     print(f"[trace] {trace_summary(run.spans)}")
@@ -162,7 +177,9 @@ def _run_scenario(args) -> None:
         # per-request drill-down: tail percentiles + the slowest request's
         # critical path + diagnose() on its trace alone
         print("[trace] " + request_report(run.spans).replace("\n", "\n[trace] "))
-    logs = "structured fast path, no logs" if args.structured else f"logs in {base}.logs/"
+    logs = ("structured fast path, no logs" if args.structured
+            else f"woven inline ({args.weave}), no logs"
+            if args.weave != "post" else f"logs in {base}.logs/")
     print(f"[trace] exported {base}.chrome.json + .spans.jsonl ({logs})")
     if not run.ok:
         raise SystemExit(1)
@@ -286,10 +303,26 @@ def main() -> None:
                     help="zero-parse fast path: simulators hand Event records "
                          "straight to the weavers (identical output, no text "
                          "log round-trip)")
+    ap.add_argument("--weave", default="post",
+                    choices=("post", "inline", "sharded"),
+                    help="span assembly: 'post' weaves after the run (default), "
+                         "'inline' weaves during it (streaming weaver), "
+                         "'sharded' adds --jobs-way parallel export; all "
+                         "modes emit byte-identical SpanJSONL")
     ap.add_argument("--outdir", default="results/traces")
     ap.add_argument("--dryrun-dir", default="results/dryrun")
     args = ap.parse_args()
 
+    if args.weave != "post" and args.structured:
+        raise SystemExit(
+            f"--structured is the post-hoc zero-parse path; --weave "
+            f"{args.weave} weaves during the run and replaces it (drop one)"
+        )
+    if args.sweep and args.weave == "sharded":
+        raise SystemExit(
+            "--weave sharded parallelizes one run's export; a sweep already "
+            "fans cells over --jobs workers (use --weave inline)"
+        )
     if args.list_scenarios:
         _list_scenarios(args)
         return
@@ -374,45 +407,63 @@ def main() -> None:
     program = ProgramSpec(name=args.shape, ops=ops)
 
     # -- simulate ---------------------------------------------------------------
+    if args.weave == "sharded":
+        raise SystemExit(
+            "--weave sharded re-simulates per export shard and needs a "
+            "seedable scenario (use --scenario or --sweep); the "
+            "compiled-program path supports --weave inline"
+        )
     os.makedirs(args.outdir, exist_ok=True)
     logdir = os.path.join(args.outdir, f"{args.arch}.{args.shape}.logs")
     scale = {args.slow_chip: args.slow_factor} if args.slow_chip else None
+    sink = None
+    if args.weave == "inline":
+        from ..core.streaming import StreamingWeaver
+
+        sink = StreamingWeaver()
     cluster = run_training_sim(
         program, n_steps=args.steps, n_pods=args.pods,
         chips_per_pod=args.chips_per_pod,
-        outdir=None if args.structured else logdir, compute_scale=scale,
-        structured=args.structured,
+        outdir=None if (args.structured or sink is not None) else logdir,
+        compute_scale=scale,
+        structured=args.structured, sink=sink,
     )
     print(f"[trace] simulated {args.steps} steps on {args.pods}x{args.chips_per_pod} chips "
           f"-> {cluster.sim.events_executed} DES events, "
           f"virtual time {cluster.sim.now/1e12:.3f}s"
-          + (" [structured fast path]" if args.structured else ""))
+          + (" [structured fast path]" if args.structured else "")
+          + (" [inline weave]" if sink is not None else ""))
 
     # -- Columbo: declarative spec over the tagged simulator logs (or, on the
-    # fast path, over the structured event streams the sims captured) ----------
+    # fast path, over the structured event streams the sims captured; on the
+    # inline path the spans are already woven) ---------------------------------
     base = os.path.join(args.outdir, f"{args.arch}.{args.shape}")
-    if args.structured:
-        sources = [
-            SourceSpec(sim_type=st, events=evs)
-            for st, evs in cluster.structured_sources()
-        ]
+    exporters = [
+        JaegerJSONExporter(base + ".jaeger.json"),
+        ChromeTraceExporter(base + ".chrome.json"),
+        OTLPJSONExporter(base + ".otlp.json"),
+        SpanJSONLExporter(base + ".spans.jsonl"),
+    ]
+    if sink is not None:
+        from ..core.session import stream_to
+
+        spans = sink.finish()
+        stream_to(spans, exporters)
     else:
-        sources = [
-            SourceSpec(sim_type=st, paths=ps) if len(ps) > 1
-            else SourceSpec(sim_type=st, path=ps[0])
-            for st, ps in sorted(cluster.log_paths().items())
-        ]
-    spec = TraceSpec(
-        sources=sources,
-        exporters=[
-            JaegerJSONExporter(base + ".jaeger.json"),
-            ChromeTraceExporter(base + ".chrome.json"),
-            OTLPJSONExporter(base + ".otlp.json"),
-            SpanJSONLExporter(base + ".spans.jsonl"),
-        ],
-    )
-    session = spec.run()
-    spans = session.spans
+        if args.structured:
+            sources = [
+                SourceSpec(sim_type=st, events=evs)
+                for st, evs in cluster.structured_sources()
+            ]
+        else:
+            sources = [
+                SourceSpec(sim_type=st, paths=ps) if len(ps) > 1
+                else SourceSpec(sim_type=st, path=ps[0])
+                for st, ps in sorted(cluster.log_paths().items())
+            ]
+        spec = TraceSpec(sources=sources, exporters=exporters)
+        session = spec.run()
+        spans = session.spans
     print(f"[trace] {trace_summary(spans)}")
     traces = assemble_traces(spans)
     first = traces[sorted(traces)[0]]

@@ -28,8 +28,8 @@ from typing import Any, Dict, Iterator, List, Optional
 from .engine import EventHandle, EventKernel, PeriodicTask, Sim, SimPort
 
 __all__ = [
-    "EventHandle", "EventKernel", "LogWriter", "PeriodicTask", "Sim",
-    "SimPort", "StructuredLogWriter",
+    "EventHandle", "EventKernel", "InlineWeaveWriter", "LogWriter",
+    "PeriodicTask", "Sim", "SimPort", "StructuredLogWriter",
 ]
 
 PS_PER_S = 1_000_000_000_000
@@ -203,3 +203,31 @@ class StructuredLogWriter(LogWriter):
         for rec in self.records:
             emit(rec)
         return out.lines
+
+
+class InlineWeaveWriter(LogWriter):
+    """Log sink that weaves spans *during* the simulation (inline path).
+
+    Instead of buffering text (:class:`LogWriter`) or records
+    (:class:`StructuredLogWriter`) for a later weave pass, every emit goes
+    straight into a :class:`~repro.core.streaming.StreamingWeaver` — the
+    third point on the capture spectrum: no format, no parse, no replay, no
+    retained event buffer.  The sink stays on the sim side of the layering
+    line (``repro.core`` never imports ``repro.sim``): it just binds all
+    three ``emit_*`` slots to the callable the weaver's ``attach`` returns
+    for this writer, so a captured event costs one closure call.
+
+    Headers and free-form ``write`` lines are discarded — they carry no
+    events (the text parsers drop them too).
+    """
+
+    structured = False
+
+    def __init__(self, sim_type: str, sink) -> None:
+        super().__init__()
+        self.sim_type = sim_type
+        self.sink = sink
+        self.emit_host = self.emit_device = self.emit_net = sink.attach(sim_type)
+
+    def write(self, line: str) -> None:
+        pass

@@ -12,7 +12,7 @@ import os
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
-from .clock import LogWriter, StructuredLogWriter
+from .clock import InlineWeaveWriter, LogWriter, StructuredLogWriter
 from .engine import EventKernel
 from .devicesim import ClusterLike, CollectiveInstance, DeviceSim
 from .hostsim import HostClock, HostSim
@@ -45,6 +45,7 @@ class ClusterOrchestrator(ClusterLike):
         clock_params: Optional[Dict[str, Tuple[int, float]]] = None,  # host -> (offset_ps, drift_ppm)
         online_pipes: bool = False,
         structured: bool = False,
+        sink=None,
     ) -> None:
         self.sim = EventKernel()
         self.port = self.sim.register("cluster")
@@ -54,11 +55,20 @@ class ClusterOrchestrator(ClusterLike):
         # structured fast path: sims hand Event records straight to the
         # trace pipeline (StructuredLogWriter); no text is ever formatted
         self.structured = structured
+        # inline weave path: sims hand records straight to a
+        # core.streaming.StreamingWeaver; spans assemble as the kernel runs
+        self.sink = sink
         if structured and (online_pipes or outdir):
             raise ValueError(
                 "structured=True captures events in memory and writes no "
                 "logs; it cannot honor outdir or serve online_pipes "
                 "consumers (both need the text path)"
+            )
+        if sink is not None and (structured or online_pipes or outdir):
+            raise ValueError(
+                "sink= (inline weaving) feeds events straight to the weaver "
+                "and keeps no log or record buffer; it cannot be combined "
+                "with structured=True, outdir, or online_pipes"
             )
         if outdir:
             os.makedirs(outdir, exist_ok=True)
@@ -105,6 +115,13 @@ class ClusterOrchestrator(ClusterLike):
     # -- log management -----------------------------------------------------------------
 
     def _mklog(self, fname: str, sim_type: str) -> LogWriter:
+        if self.sink is not None:
+            # inline weave: attach order fixes the per-type writer rank, so
+            # equal-timestamp ties break toward the earlier-created writer —
+            # the same contract MergedProducer gives the post-hoc paths
+            lw = InlineWeaveWriter(sim_type, self.sink)
+            self._logs.append(lw)
+            return lw
         if self.structured:
             lw = StructuredLogWriter(sim_type)
             # keep the registry tag so render_lines() reproduces the text
@@ -226,7 +243,7 @@ class ClusterOrchestrator(ClusterLike):
         """Host -> chip program dispatch (PCIe natural boundary)."""
         dev = self.device_sim_for(chip)
         # small dispatch latency over PCIe (command, not payload)
-        self.sim.after(
+        self.sim.call_after(
             500_000, lambda: dev.run_program(chip, program, step, lambda t: on_done(chip, t))
         )
 
@@ -286,12 +303,14 @@ def run_training_sim(
     ckpt_every: int = 0,
     failure: Optional[FailurePlan] = None,
     structured: bool = False,
+    sink=None,
 ) -> ClusterOrchestrator:
     """Simulate n_steps of a training program on a multi-pod testbed."""
     topo = tpu_cluster(n_pods=n_pods, chips_per_pod=chips_per_pod)
     cluster = ClusterOrchestrator(
         topo, outdir=outdir, compute_scale=compute_scale,
         host_kwargs={"ckpt_every": ckpt_every}, structured=structured,
+        sink=sink,
     )
     if bg_traffic_link is not None:
         link = topo.links[bg_traffic_link]

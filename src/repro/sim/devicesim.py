@@ -285,7 +285,7 @@ class DeviceSim:
             self.log_event(chip, "OpEnd", op=f"op{idx}", name=op.name, step=step)
             nxt()
 
-        self.sim.after(dur, _end)
+        self.sim.call_after(dur, _end)
 
     def _exec_collective(
         self, chip: str, op: OpSpec, step: int, nxt: Callable[[], None]

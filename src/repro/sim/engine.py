@@ -142,6 +142,11 @@ class SimPort:
         """Schedule ``fn`` ``dt`` picoseconds from now."""
         return self.kernel.at(self.kernel.now + int(dt), fn, port=self)
 
+    def call_after(self, dt: int, fn: Callable[[], None]) -> None:
+        """Fire-and-forget :meth:`after` — no :class:`EventHandle`
+        allocation (see :meth:`EventKernel.call_after`)."""
+        self.kernel.call_after(dt, fn, port=self)
+
     def every(
         self,
         interval_ps: int,
@@ -216,6 +221,19 @@ class EventKernel:
     def after(self, dt: int, fn: Callable[[], None], port: Optional[SimPort] = None) -> EventHandle:
         """Schedule ``fn`` ``dt`` picoseconds from now."""
         return self.at(self.now + int(dt), fn, port=port)
+
+    def call_after(self, dt: int, fn: Callable[[], None], port: Optional[SimPort] = None) -> None:
+        """Fire-and-forget :meth:`after`: same ordering, no
+        :class:`EventHandle` allocation (see :meth:`call_at`).  Op-end and
+        step-sequencing events fire exactly once and are never cancelled,
+        so the handle per event was pure allocator traffic — visible on
+        the inline-weave profile, where span assembly leaves the kernel
+        loop as the dominant remaining cost."""
+        t = self.now + int(dt)
+        if t < self.now:
+            raise ValueError(f"scheduling into the past: {t} < {self.now}")
+        heapq.heappush(self._q, (t, self._seq, fn, port, None))
+        self._seq += 1
 
     def every(
         self,

@@ -165,7 +165,7 @@ class HostSim:
                     ),
                 )
 
-        self.sim.after(wait_ps, _after_load)
+        self.sim.call_after(wait_ps, _after_load)
 
     def _finish_step(
         self,
@@ -190,7 +190,7 @@ class HostSim:
                     _next()
                     return
                 self.log_event("ckpt_shard_write", step=step, shard=i, bytes=self.ckpt_shard_bytes)
-                self.sim.after(shard_ps, lambda: _write(i + 1))
+                self.sim.call_after(shard_ps, lambda: _write(i + 1))
 
             _write(0)
         else:
@@ -296,7 +296,7 @@ class HostSim:
                         on_delivered=_at_client,
                     )
 
-                self.sim.after(server_proc_ps, _respond)
+                self.sim.call_after(server_proc_ps, _respond)
 
             self.cluster.net.transfer(
                 self.name, server.name, NTP_PACKET_BYTES,

@@ -27,6 +27,7 @@ yields byte-identical simulator logs *and* byte-identical span JSONL
 from __future__ import annotations
 
 import io
+import os
 import tempfile
 import time
 from dataclasses import dataclass, field, fields as dataclasses_fields, replace
@@ -166,17 +167,20 @@ class ScenarioSpec:
         outdir: Optional[str],
         seed: Optional[int] = None,
         structured: bool = False,
+        sink=None,
     ) -> ClusterOrchestrator:
         """Run only the full-system simulation; logs land in ``outdir``
-        (text mode) or stay in memory as structured event records
-        (``structured=True``, the zero-parse fast path).  The scenario's
+        (text mode), stay in memory as structured event records
+        (``structured=True``, the zero-parse fast path), or stream straight
+        into an inline weaver (``sink=``, a
+        :class:`~repro.core.streaming.StreamingWeaver`).  The scenario's
         registered workload drives the cluster (clock telemetry — offsets
         vs the sim's ground-truth global clock — is part of every
         workload's drive)."""
         topo = scale(
             pods=self.n_pods, chips_per_pod=self.chips_per_pod, fabric=self.fabric
         )
-        cluster = ClusterOrchestrator(topo, outdir=outdir, structured=structured)
+        cluster = ClusterOrchestrator(topo, outdir=outdir, structured=structured, sink=sink)
         self.fault_plan(seed).schedule(cluster)
         # the policy arms after faults are scheduled and before the workload
         # drives: its trigger loop competes on the same fault trace
@@ -191,9 +195,11 @@ class ScenarioSpec:
         seed: Optional[int] = None,
         exporters: Tuple = (),
         structured: bool = False,
+        weave: str = "post",
+        jobs: int = 1,
         **overrides,
     ) -> "ScenarioRun":
-        """Simulate, weave through a TraceSpec, diagnose.
+        """Simulate, weave, diagnose.
 
         ``outdir=None`` simulates into a temporary directory that is removed
         after weaving; pass a path to keep the raw simulator logs.  Extra
@@ -205,6 +211,20 @@ class ScenarioSpec:
         ``outdir``), producing byte-identical SpanJSONL to the text path
         (asserted in ``tests/test_structured.py``).
 
+        ``weave`` selects how spans are assembled:
+
+        * ``"post"`` (default) — post-hoc weave through a TraceSpec, over
+          text logs or structured records.
+        * ``"inline"`` — spans weave *during* the simulation
+          (:class:`~repro.core.streaming.StreamingWeaver`); no logs, no
+          parse, no replay.  SpanJSONL is byte-identical to ``"post"``
+          (asserted in ``tests/test_streaming_weave.py``).
+        * ``"sharded"`` — inline weave plus a ``jobs``-way parallel export:
+          workers re-simulate deterministically and export disjoint
+          ``trace_id % jobs`` shards, merged back in canonical order via
+          :func:`~repro.core.exporters.merge_span_jsonl`.  Byte-identical
+          to serial for any ``jobs``.
+
         Any extra keyword argument must name a :class:`ScenarioSpec` field
         (``run(workload="rpc")``, ``run(n_pods=4)``): it overrides that
         field for this run.  Anything else raises ``TypeError`` — unknown
@@ -213,6 +233,30 @@ class ScenarioSpec:
         # late import: repro.core must not depend on repro.sim
         from ..core import SourceSpec, SpanJSONLExporter, TraceSpec, reset_ids
         from ..core.analysis import diagnose
+
+        if weave not in ("post", "inline", "sharded"):
+            raise ValueError(
+                f"unknown weave mode {weave!r}; expected 'post', 'inline', "
+                f"or 'sharded'"
+            )
+        if weave != "post" and structured:
+            raise ValueError(
+                "structured=True is a post-hoc capture mode; it cannot be "
+                "combined with weave='inline'/'sharded' (inline weaving "
+                "keeps no record buffer to replay)"
+            )
+        if weave != "post" and outdir is not None:
+            raise ValueError(
+                "inline weaving writes no simulator logs; keep outdir only "
+                "with the post-hoc path (weave='post')"
+            )
+        if jobs < 1:
+            raise ValueError(f"jobs must be >= 1, got {jobs}")
+        if jobs != 1 and weave != "sharded":
+            raise ValueError(
+                f"jobs={jobs} only applies to weave='sharded' "
+                f"(got weave={weave!r}); not silently ignoring it"
+            )
 
         if overrides:
             fields = {f.name for f in dataclasses_fields(ScenarioSpec)}
@@ -245,10 +289,42 @@ class ScenarioSpec:
                         f"policies without asserting diagnosis)"
                     )
             return candidate.run(
-                outdir=outdir, seed=seed, exporters=exporters, structured=structured
+                outdir=outdir, seed=seed, exporters=exporters,
+                structured=structured, weave=weave, jobs=jobs,
             )
 
         plan = self.fault_plan(seed)
+
+        if weave != "post":
+            from ..core.session import stream_to
+            from ..core.streaming import InlineTraceSession, StreamingWeaver
+
+            sw = StreamingWeaver()
+            cluster = self.simulate(None, seed=plan.seed, sink=sw)
+            spans = sw.finish()
+            session = InlineTraceSession(sw)
+            buf = io.StringIO()
+            if weave == "inline":
+                stream_to(spans, (SpanJSONLExporter(buf), *exporters))
+            else:
+                self._export_sharded(spans, plan.seed, jobs, buf)
+                if exporters:
+                    stream_to(spans, exporters)
+            t0 = time.perf_counter()
+            diagnosis = diagnose(spans)
+            diag_wall_s = time.perf_counter() - t0
+            return ScenarioRun(
+                scenario=self,
+                plan=plan,
+                cluster=cluster,
+                session=session,
+                spans=spans,
+                diagnosis=diagnosis,
+                span_jsonl=buf.getvalue(),
+                outdir=None,
+                diag_wall_s=diag_wall_s,
+            )
+
         tmp = None
         if outdir is None and not structured:
             tmp = tempfile.TemporaryDirectory(prefix=f"scenario-{self.name}-")
@@ -292,6 +368,59 @@ class ScenarioSpec:
             outdir=outdir,
             diag_wall_s=diag_wall_s,
         )
+
+    def _export_sharded(self, spans, seed: int, jobs: int, buf) -> None:
+        """``jobs``-way parallel SpanJSONL export of one inline-woven run.
+
+        The parent already holds the full span list; workers re-simulate
+        the same seed (the kernel is deterministic, so they weave identical
+        spans) and export only their ``trace_id % jobs`` shard, while the
+        parent exports shard 0.  Shards partition the id space, so the
+        ``merge_span_jsonl`` heap-merge — keyed ``(trace_id, start_us,
+        span_id)``, exactly the engine's canonical export order — never has
+        to compare within a trace across shards, and the merged bytes equal
+        the serial export for any ``jobs``."""
+        from ..core.exporters import merge_span_jsonl
+
+        with tempfile.TemporaryDirectory(prefix=f"shards-{self.name}-") as td:
+            paths = [os.path.join(td, f"shard{i:03d}.jsonl") for i in range(jobs)]
+            if jobs > 1:
+                import multiprocessing
+
+                ctx = multiprocessing.get_context("fork")
+                work = [(self, seed, jobs, i, paths[i]) for i in range(1, jobs)]
+                with ctx.Pool(processes=min(jobs - 1, os.cpu_count() or 1)) as pool:
+                    result = pool.map_async(_weave_shard, work)
+                    _export_shard(spans, jobs, 0, paths[0])
+                    result.get()
+            else:
+                _export_shard(spans, jobs, 0, paths[0])
+            merged = os.path.join(td, "merged.jsonl")
+            merge_span_jsonl(paths, merged, disambiguate=False)
+            with open(merged) as f:
+                buf.write(f.read())
+
+
+def _export_shard(spans, n_shards: int, shard: int, path: str) -> None:
+    from ..core.exporters import SpanJSONLExporter
+    from ..core.session import stream_to
+
+    stream_to(
+        [s for s in spans if s.context.trace_id % n_shards == shard],
+        (SpanJSONLExporter(path),),
+    )
+
+
+def _weave_shard(packed) -> str:
+    """Pool worker (module-level for picklability): re-simulate the cell
+    deterministically, weave inline, export this worker's trace_id shard."""
+    spec, seed, n_shards, shard, path = packed
+    from ..core.streaming import StreamingWeaver
+
+    sw = StreamingWeaver()
+    spec.simulate(None, seed=seed, sink=sw)
+    _export_shard(sw.finish(), n_shards, shard, path)
+    return path
 
 
 @dataclass

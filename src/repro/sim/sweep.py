@@ -144,7 +144,7 @@ def _shard_name(
 
 def _run_cell(
     args: Tuple[str, Optional[str], Optional[str], Optional[float], int,
-                Dict[str, Any], str, bool]
+                Dict[str, Any], str, bool, str]
 ) -> Dict[str, Any]:
     """Worker: run one cell end to end (simulate → weave → diagnose),
     write its SpanJSONL shard, return a JSON-serializable summary.
@@ -152,13 +152,15 @@ def _run_cell(
     Top-level (picklable) so multiprocessing pools can dispatch it; every
     random draw inside comes from the cell's seeded fault plan, workload,
     and mitigation streams, so the result is independent of which worker
-    runs it.  ``structured`` cells take the zero-parse fast path; shard
-    bytes are identical either way.
+    runs it.  ``structured`` cells take the zero-parse fast path;
+    ``weave="inline"`` cells assemble spans during the simulation and
+    reduce them through the columnar ``RunStats.from_columns`` path; shard
+    bytes are identical whichever path ran.
     """
     from ..core.analysis import RunStats
 
     (scenario, workload, mitigation, magnitude, seed,
-     overrides, outdir, structured) = args
+     overrides, outdir, structured, weave) = args
     spec: ScenarioSpec = get_scenario(scenario)
     if workload is not None and workload != spec.workload:
         # cross-type axis override: the pinned type's knobs don't transfer
@@ -172,13 +174,12 @@ def _run_cell(
     if overrides:
         spec = replace(spec, **overrides)
     t0 = time.perf_counter()
-    run = spec.run(seed=seed, structured=structured)
+    run = spec.run(seed=seed, structured=structured, weave=weave)
     wall = time.perf_counter() - t0
     shard = _shard_name(scenario, workload, mitigation, magnitude, seed)
     with open(os.path.join(outdir, shard), "w", buffering=1 << 20) as f:
         f.write(run.span_jsonl)
-    stats = RunStats.from_spans(
-        run.spans,
+    kwargs = dict(
         scenario=scenario,
         seed=run.plan.seed,
         expected=spec.expected_classes,
@@ -190,7 +191,16 @@ def _run_cell(
         expected_components=spec.expected_components,
         diag_wall_s=run.diag_wall_s,
         magnitude=spec.fault_magnitude,
+        late_events=run.session.late_events,
     )
+    if weave == "post":
+        stats = RunStats.from_spans(run.spans, **kwargs)
+    else:
+        # inline runs reduce through the columnar span records; values are
+        # identical to from_spans (asserted in tests/test_streaming_weave.py)
+        stats = RunStats.from_columns(
+            run.session.columns(), spans=run.spans, **kwargs
+        )
     return {"scenario": scenario, "workload": workload,
             "mitigation": mitigation, "magnitude": magnitude, "seed": seed,
             "ok": run.ok, "shard": shard, "stats": stats.to_dict()}
@@ -325,7 +335,8 @@ class SweepResult:
 
 
 def run_sweep(
-    spec: SweepSpec, outdir: str, jobs: int = 1, structured: bool = False
+    spec: SweepSpec, outdir: str, jobs: int = 1, structured: bool = False,
+    weave: str = "post",
 ) -> SweepResult:
     """Run every cell of ``spec``, streaming shards into ``outdir``.
 
@@ -341,12 +352,28 @@ def run_sweep(
     path (no text logs are formatted or parsed); shard bytes stay
     identical to text-path shards — only the wall clock moves — so the
     flag is pure execution policy, recorded in ``sweep.json`` for audit.
+    ``weave="inline"`` goes further: each cell's spans assemble *during*
+    its simulation (``core.streaming.StreamingWeaver``) and reduce through
+    the columnar analysis path — still byte-identical shards.  The
+    ``"sharded"`` mode is per-run export parallelism and would fight the
+    sweep's own per-cell workers, so it is rejected here.
     """
     from ..core.analysis import RunStats
 
+    if weave not in ("post", "inline"):
+        raise ValueError(
+            f"run_sweep weave must be 'post' or 'inline', got {weave!r} "
+            f"(sharded export parallelizes a single run; a sweep already "
+            f"parallelizes across cells via jobs=)"
+        )
+    if weave == "inline" and structured:
+        raise ValueError(
+            "structured=True is the post-hoc fast path; weave='inline' "
+            "replaces it (pick one)"
+        )
     os.makedirs(os.path.join(outdir, "shards"), exist_ok=True)
     work = [
-        (s, w, m, g, seed, spec.overrides(), outdir, structured)
+        (s, w, m, g, seed, spec.overrides(), outdir, structured, weave)
         for s, w, m, g, seed in spec.cells()
     ]
     if jobs <= 1 or len(work) <= 1:
@@ -374,6 +401,7 @@ def run_sweep(
         "overrides": spec.overrides(),
         "jobs": jobs,
         "structured": structured,
+        "weave": weave,
         "cells": raw,
     }
     with open(os.path.join(outdir, "sweep.json"), "w") as f:

@@ -107,7 +107,7 @@ class PipelinedTraining(Workload):
             if s > 0:
                 h.log_event("pipe_recv", mb=m, stage=s)
                 stall = h.consume_stall(step=m)
-                h.sim.after(stall, lambda: dispatch_stage(s, m))
+                h.sim.call_after(stall, lambda: dispatch_stage(s, m))
             else:
                 h.log_event("data_load_begin", step=m)
                 wait = h.data_load_ps + h.consume_stall(step=m)
@@ -117,7 +117,7 @@ class PipelinedTraining(Workload):
                                 bytes=h.batch_bytes_per_chip * len(h.chips))
                     dispatch_stage(s, m)
 
-                h.sim.after(wait, loaded)
+                h.sim.call_after(wait, loaded)
 
         def dispatch_stage(s: int, m: int) -> None:
             h = hosts[s]

@@ -154,7 +154,7 @@ class RpcServing(Workload):
                 return
             srv.busy = True
             sub, rid, reply = srv.queue.popleft()
-            srv.host.sim.after(
+            srv.host.sim.call_after(
                 self.dequeue_ps, lambda: begin_work(srv, sub, rid, reply)
             )
 
@@ -166,7 +166,7 @@ class RpcServing(Workload):
             # request's RpcWork span (per-request diagnosis sees it)
             stall = h.consume_stall(sub=sub, rid=rid)
             if stall:
-                h.sim.after(stall, lambda: run_handler(srv, sub, rid, reply))
+                h.sim.call_after(stall, lambda: run_handler(srv, sub, rid, reply))
             else:
                 run_handler(srv, sub, rid, reply)
 

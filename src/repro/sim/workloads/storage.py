@@ -88,7 +88,7 @@ class StorageIO(Workload):
                 pending["n"] -= 1
                 if pending["n"] == 0:
                     h.log_event("ckpt_end", round=r, dir=direction)
-                    h.sim.after(self.gap_ps, lambda: run_round(h, r + 1))
+                    h.sim.call_after(self.gap_ps, lambda: run_round(h, r + 1))
 
             for i in range(self.shards):
                 cluster.net.transfer(
@@ -100,4 +100,4 @@ class StorageIO(Workload):
         for i, h in enumerate(hosts[1:], 1):
             # stagger writer starts 1 us apart so round 0 of every writer
             # doesn't land on the head's links at the same instant
-            h.sim.after(1_000_000 * i, lambda hh=h: run_round(hh, 0))
+            h.sim.call_after(1_000_000 * i, lambda hh=h: run_round(hh, 0))

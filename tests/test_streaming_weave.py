@@ -1,0 +1,428 @@
+"""Inline (in-sim) weave: golden byte-identity harness + late-event fix.
+
+The contract under test: ``ScenarioSpec.run(weave="inline")`` — spans woven
+*during* the simulation by ``core/streaming.StreamingWeaver`` — produces
+SpanJSONL byte-identical to the post-hoc paths (text and structured), on
+the committed goldens and across the scenario x workload x mitigation
+matrix.  The sharded path must additionally be jobs-invariant.
+
+Also here: the reproducing test for the late-event silent drop
+(``SpanWeaver`` dropped events arriving after a trace's root span closed —
+late retransmit/mitigation children); they now raise ``LateEventWarning``
+and are counted in ``RunStats.late_events``.
+"""
+import gzip
+import io
+import os
+import warnings
+from dataclasses import replace
+
+import pytest
+
+from _hypothesis_compat import HealthCheck, given, settings, st
+from repro.core.analysis import RunStats, SpanColumns
+from repro.core.context import ContextRegistry
+from repro.core.events import (
+    ChunkEnqueue,
+    ChunkRx,
+    MitigationDone,
+    MitigationTrigger,
+    RetransmitBegin,
+    RetransmitEnd,
+)
+from repro.core.exporters import SpanJSONLExporter
+from repro.core.session import stream_to
+from repro.core.streaming import StreamingWeaver
+from repro.core.weaver import HostSpanWeaver, LateEventWarning, NetSpanWeaver
+from repro.sim.scenarios import SCENARIOS, get_scenario
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden")
+GOLDENS = sorted(
+    f for f in os.listdir(GOLDEN_DIR) if f.endswith(".spans.jsonl.gz")
+) if os.path.isdir(GOLDEN_DIR) else []
+
+# the equivalence matrix: fault diversity x every workload type x every
+# registered mitigation policy (axis cells bypass the masking assertion by
+# construction, exactly like sweep axis cells)
+MATRIX_SCENARIOS = (
+    "healthy_baseline", "degraded_ici_link", "lossy_dcn", "reordered_ici",
+    "gc_pause_host0", "throttled_chip", "straggler_pod2",
+    "rpc_tail_latency", "link_loss_rpc",
+)
+MATRIX_WORKLOADS = ("collective", "rpc", "storage", "pipeline")
+MATRIX_MITIGATIONS = ("do_nothing", "retransmit", "disable_and_reroute",
+                      "evict_straggler", "checkpoint_restore")
+
+
+def _axis_spec(scenario: str, workload: str = None, mitigation: str = None):
+    """A ScenarioSpec with sweep-style axis overrides (no masking check:
+    the matrix scores byte-equivalence, not diagnosis)."""
+    spec = get_scenario(scenario)
+    kw = {}
+    if workload is not None and workload != spec.workload:
+        kw.update(workload=workload, workload_params=())
+    if mitigation is not None and mitigation != spec.mitigation:
+        kw.update(mitigation=mitigation, mitigation_params=())
+    return replace(spec, **kw) if kw else spec
+
+
+def _inline_equals_post(spec, seed: int) -> None:
+    post = spec.run(seed=seed, structured=True).span_jsonl
+    inline = spec.run(seed=seed, weave="inline").span_jsonl
+    assert inline == post, (
+        f"{spec.name} seed={seed}: inline SpanJSONL differs from post-hoc "
+        f"({len(inline)} vs {len(post)} bytes)"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Late-event fix (the reproducing tests — written before the fix)
+# ---------------------------------------------------------------------------
+
+
+def test_late_net_event_warns_and_counts():
+    """A chunk_rx for an already-closed LinkTransfer used to vanish
+    silently; it must now warn (typed) and be counted."""
+    w = NetSpanWeaver(ContextRegistry())
+    w.consume(ChunkEnqueue(ts=0, source="ici.pod0.l0", attrs={"chunk": "c1", "size": 64}))
+    w.consume(ChunkRx(ts=10, source="ici.pod0.l0", attrs={"chunk": "c1"}))
+    assert len(w.spans) == 1 and w.late_events == 0
+    with pytest.warns(LateEventWarning, match="chunk_rx"):
+        w.consume(ChunkRx(ts=20, source="ici.pod0.l0", attrs={"chunk": "c1"}))
+    assert w.late_events == 1
+    assert len(w.spans) == 1  # the late event produced no span
+
+
+def test_late_mitigation_children_warn_and_count():
+    """The ISSUE's motivating case: retransmit/mitigation children landing
+    after the policy's root span closed."""
+    w = HostSpanWeaver(ContextRegistry())
+    w.consume(MitigationTrigger(ts=0, source="host0", attrs={"policy": "retransmit"}))
+    w.consume(MitigationDone(ts=100, source="host0", attrs={"policy": "retransmit"}))
+    # a second done for the same (host, policy): nothing open anymore
+    with pytest.warns(LateEventWarning, match="mitigation_done"):
+        w.consume(MitigationDone(ts=110, source="host0", attrs={"policy": "retransmit"}))
+    # retransmit_end with no matching begin (its begin was consumed by a
+    # closed span in the buggy trace that motivated the fix)
+    w.consume(RetransmitBegin(ts=120, source="host0",
+                              attrs={"policy": "retransmit", "chunk": "c9"}))
+    w.consume(RetransmitEnd(ts=130, source="host0",
+                            attrs={"policy": "retransmit", "chunk": "c9"}))
+    with pytest.warns(LateEventWarning, match="retransmit_end"):
+        w.consume(RetransmitEnd(ts=140, source="host0",
+                                attrs={"policy": "retransmit", "chunk": "c9"}))
+    assert w.late_events == 2
+
+
+def test_late_event_warning_once_per_site_but_counted_every_time():
+    w = NetSpanWeaver(ContextRegistry())
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for ts in (5, 6, 7):
+            w.consume(ChunkRx(ts=ts, source="ici.pod0.l0", attrs={"chunk": "zzz"}))
+    assert w.late_events == 3
+    assert sum(1 for r in rec if issubclass(r.category, LateEventWarning)) == 1
+
+
+def test_late_events_surface_in_run_stats():
+    stats = RunStats.from_spans([], scenario="x", detected=(), late_events=7)
+    assert stats.late_events == 7
+    assert RunStats.from_dict(stats.to_dict()).late_events == 7
+    # pre-v5 payloads (no key) default to zero
+    d = stats.to_dict()
+    del d["late_events"]
+    assert RunStats.from_dict(d).late_events == 0
+
+
+# ---------------------------------------------------------------------------
+# Golden byte-identity: inline == committed goldens == post-hoc
+# ---------------------------------------------------------------------------
+
+
+def _parse_golden_name(fname):
+    # scenario.<name>.seed<N>.spans.jsonl.gz
+    parts = fname.split(".")
+    return parts[1], int(parts[2][len("seed"):])
+
+
+@pytest.mark.parametrize("fname", GOLDENS)
+def test_inline_weave_matches_committed_golden(fname):
+    """The tentpole contract: spans woven *during* the simulation render to
+    SpanJSONL byte-identical to the committed golden artifact."""
+    scenario, seed = _parse_golden_name(fname)
+    with gzip.open(os.path.join(GOLDEN_DIR, fname), "rt") as f:
+        golden = f.read()
+    got = get_scenario(scenario).run(seed=seed, weave="inline").span_jsonl
+    assert got == golden, f"inline weave diverged from golden {fname}"
+
+
+@pytest.mark.parametrize("fname", GOLDENS)
+def test_post_hoc_weave_matches_committed_golden(fname):
+    """The goldens stay anchored to the canonical path too — if both this
+    and the inline test fail together, the *format* changed (regenerate the
+    goldens deliberately); if only the inline one fails, the streaming
+    weaver broke."""
+    scenario, seed = _parse_golden_name(fname)
+    with gzip.open(os.path.join(GOLDEN_DIR, fname), "rt") as f:
+        golden = f.read()
+    got = get_scenario(scenario).run(seed=seed, structured=True).span_jsonl
+    assert got == golden, f"post-hoc weave diverged from golden {fname}"
+
+
+def test_goldens_are_committed():
+    assert len(GOLDENS) >= 2, (
+        f"expected at least two committed goldens in {GOLDEN_DIR}, "
+        f"found {GOLDENS}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Inline == post-hoc across the library and the full axis matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_inline_matches_post_hoc_per_scenario(scenario):
+    """Every curated scenario, pinned workload/mitigation, seed 0."""
+    _inline_equals_post(get_scenario(scenario), seed=0)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("scenario", MATRIX_SCENARIOS)
+@pytest.mark.parametrize("workload", MATRIX_WORKLOADS)
+def test_matrix_inline_equals_post(scenario, workload):
+    """The full equivalence matrix: 9 scenarios x 4 workloads x 5
+    mitigation policies, inline == post-hoc on every cell."""
+    for mitigation in MATRIX_MITIGATIONS:
+        _inline_equals_post(_axis_spec(scenario, workload, mitigation), seed=0)
+
+
+def test_matrix_smoke_diagonal():
+    """A fast cross-section of the matrix (one cell per workload type with
+    a non-default mitigation) so the axis plumbing is covered in tier-1."""
+    cells = [
+        ("lossy_dcn", "rpc", "retransmit"),
+        ("throttled_chip", "storage", "evict_straggler"),
+        ("gc_pause_host0", "pipeline", "checkpoint_restore"),
+        ("degraded_ici_link", "collective", "disable_and_reroute"),
+    ]
+    for scenario, workload, mitigation in cells:
+        _inline_equals_post(_axis_spec(scenario, workload, mitigation), seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Sharded parallel export: jobs-invariant bytes
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_export_matches_inline_serial():
+    spec = get_scenario("lossy_dcn")
+    serial = spec.run(seed=2, weave="inline").span_jsonl
+    assert spec.run(seed=2, weave="sharded", jobs=1).span_jsonl == serial
+    assert spec.run(seed=2, weave="sharded", jobs=2).span_jsonl == serial
+
+
+@pytest.mark.slow
+@given(seed=st.integers(min_value=0, max_value=2**16 - 1))
+@settings(max_examples=3, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow]
+          if hasattr(HealthCheck, "too_slow") else [])
+def test_property_sharded_jobs_invariant(seed):
+    """For any seed, the sharded export is byte-identical at jobs 1/4/8."""
+    spec = get_scenario("degraded_ici_link")
+    serial = spec.run(seed=seed, weave="inline").span_jsonl
+    for jobs in (1, 4, 8):
+        sharded = spec.run(seed=seed, weave="sharded", jobs=jobs).span_jsonl
+        assert sharded == serial, f"jobs={jobs} diverged at seed={seed}"
+
+
+# ---------------------------------------------------------------------------
+# Property tests: any seed, structural invariants
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(min_value=0, max_value=2**16 - 1))
+@settings(max_examples=5, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow]
+          if hasattr(HealthCheck, "too_slow") else [])
+def test_property_inline_equals_post_any_seed(seed):
+    _inline_equals_post(get_scenario("degraded_ici_link"), seed=seed)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**16 - 1))
+@settings(max_examples=5, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow]
+          if hasattr(HealthCheck, "too_slow") else [])
+def test_property_one_root_span_per_request(seed):
+    """Inline-woven rpc runs keep the request-tree invariant: every request
+    id owns exactly one RpcRequest span, and that span is a trace root."""
+    run = get_scenario("link_loss_rpc").run(seed=seed, weave="inline")
+    roots = {}
+    for s in run.spans:
+        if s.name == "RpcRequest":
+            rid = s.attrs["rid"]
+            assert rid not in roots, f"duplicate RpcRequest root for {rid}"
+            roots[rid] = s
+            assert s.parent is None, f"RpcRequest {rid} has a parent"
+    assert roots, "rpc scenario wove no RpcRequest spans"
+    # every span of a request trace hangs off that request's trace id
+    by_trace = {s.context.trace_id for s in roots.values()}
+    assert len(by_trace) == len(roots), "RpcRequest roots share a trace id"
+
+
+# ---------------------------------------------------------------------------
+# Mid-run exporter failure under inline weaving
+# ---------------------------------------------------------------------------
+
+
+class _RecordingExporter:
+    def __init__(self):
+        self.began = self.finished = False
+        self.spans = []
+
+    def begin(self):
+        self.began = True
+
+    def consume(self, span):
+        self.spans.append(span)
+
+    def finish(self):
+        self.finished = True
+
+
+class _BoomExporter(_RecordingExporter):
+    def __init__(self, fail_after):
+        super().__init__()
+        self.fail_after = fail_after
+
+    def consume(self, span):
+        if len(self.spans) >= self.fail_after:
+            raise RuntimeError("boom: exporter failed mid-stream")
+        super().consume(span)
+
+
+def test_live_exporter_failure_mid_run_is_isolated():
+    """Regression: a live exporter dying *mid-simulation* must not take
+    down the run, the healthy exporter, or the span artifact — and the
+    typed error surfaces exactly once, from finish()."""
+    spec = get_scenario("lossy_dcn")
+    sw = StreamingWeaver()
+    good, boom = _RecordingExporter(), _BoomExporter(fail_after=5)
+    sw.add_live_exporter(boom)
+    sw.add_live_exporter(good)
+    spec.simulate(None, seed=0, sink=sw)
+    with pytest.raises(RuntimeError, match="boom"):
+        sw.finish()
+    spans = sw.spans
+    assert spans, "finish() must still weave and cache the spans"
+    # the failing exporter was disabled at the failure point (no retries,
+    # no double-feed), but its finish() ran so partial output can flush
+    assert len(boom.spans) == 5 and boom.finished
+    # the healthy exporter saw every span exactly once and finished
+    assert len(good.spans) == len(spans) and good.finished
+    assert len({id(s) for s in good.spans}) == len(spans), "double-fed span"
+    # the woven artifact is intact: identical bytes to a clean run
+    buf = io.StringIO()
+    stream_to(spans, (SpanJSONLExporter(buf),))
+    assert buf.getvalue() == spec.run(seed=0, structured=True).span_jsonl
+    # finish() is terminal: a second call returns the spans, no re-raise
+    assert sw.finish() is spans
+
+
+def test_inline_export_fan_out_isolates_failures():
+    """stream_to over inline-woven spans: one exporter raising must not
+    starve the others, and the first error re-raises typed."""
+    run = get_scenario("healthy_baseline").run(seed=0, weave="inline")
+    good, boom = _RecordingExporter(), _BoomExporter(fail_after=3)
+    with pytest.raises(RuntimeError, match="boom"):
+        stream_to(run.spans, (boom, good))
+    assert len(good.spans) == len(run.spans) and good.finished
+    assert len(boom.spans) == 3
+
+
+# ---------------------------------------------------------------------------
+# Fast SpanJSONL encoder == executable reference spec
+# ---------------------------------------------------------------------------
+
+
+def test_fast_consume_byte_identical_to_reference():
+    """SpanJSONLExporter.consume hand-assembles each line; it must match
+    the original json.dumps encoding (kept as _consume_reference) byte for
+    byte on real woven spans — including float repr, int-attr fast path,
+    links, and missing parents."""
+    run = get_scenario("link_loss_rpc").run(seed=1, weave="inline")
+    fast_buf, ref_buf = io.StringIO(), io.StringIO()
+    fast = SpanJSONLExporter(fast_buf)
+    ref = SpanJSONLExporter(ref_buf)
+    fast.begin()
+    ref.begin()
+    for s in run.spans:
+        fast.consume(s)
+        ref._consume_reference(s)
+    fast.finish()
+    ref.finish()
+    assert fast_buf.getvalue() == ref_buf.getvalue()
+    assert fast_buf.getvalue()  # non-empty: the comparison meant something
+
+
+def test_fast_consume_edge_values_match_reference():
+    """Attr edge cases the fast path special-cases: bools (NOT ints here),
+    negative/zero ints, floats, strings needing escapes."""
+    from repro.core.span import Span, SpanContext
+
+    spans = [
+        Span(name="X", start=0, end=0, context=SpanContext(1, 2),
+             component='we"ird\\name', sim_type="net",
+             attrs={"b": True, "n": -7, "z": 0, "f": 0.1, "s": 'quote"\n',
+                    "big": 2**63}),
+        Span(name="Y", start=3, end=9, context=SpanContext(1, 3),
+             attrs={}, component="", sim_type="host"),
+    ]
+    spans[1].parent = spans[0].context
+    spans[1].links.append(spans[0].context)
+    fast_buf, ref_buf = io.StringIO(), io.StringIO()
+    fast, ref = SpanJSONLExporter(fast_buf), SpanJSONLExporter(ref_buf)
+    fast.begin()
+    ref.begin()
+    for s in spans:
+        fast.consume(s)
+        ref._consume_reference(s)
+    fast.finish()
+    ref.finish()
+    assert fast_buf.getvalue() == ref_buf.getvalue()
+
+
+# ---------------------------------------------------------------------------
+# Columnar span records: from_columns == from_spans
+# ---------------------------------------------------------------------------
+
+
+def test_columns_reduction_identical_to_from_spans():
+    """The struct-of-arrays reduction must reproduce from_spans exactly —
+    same float bits, same dict ordering — on a mitigated run (exercising
+    the Mitigation penalty accumulation and request pools)."""
+    spec = get_scenario("link_loss_rpc")
+    run = spec.run(seed=1, weave="inline")
+    kw = dict(scenario=spec.name, seed=1, expected=spec.expected_classes,
+              detected=run.detected, findings=run.diagnosis.findings,
+              late_events=run.session.late_events)
+    a = RunStats.from_spans(run.spans, **kw)
+    b = RunStats.from_columns(run.session.columns(), spans=run.spans, **kw)
+    assert a == b
+    assert list(a.component_us) == list(b.component_us)  # dict order too
+    for k in a.component_us:
+        assert a.component_us[k] == b.component_us[k]
+
+
+def test_columns_small_and_empty_inputs():
+    cols = SpanColumns([])
+    assert cols.n_spans == 0
+    assert cols.component_us() == {}
+    assert cols.request_us() == []
+    stats = RunStats.from_columns(cols, spans=[], detected=())
+    assert stats.n_spans == 0 and stats.component_us == {}
+
+
+def test_from_columns_requires_detected_or_spans():
+    with pytest.raises(ValueError, match="detected"):
+        RunStats.from_columns(SpanColumns([]))

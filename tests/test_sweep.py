@@ -412,7 +412,7 @@ def _load_engine_bench():
 
 
 def _validate_bench_payload(payload):
-    assert payload["schema"] == "columbo.engine_bench/v4"
+    assert payload["schema"] == "columbo.engine_bench/v5"
     assert isinstance(payload["smoke"], bool)
     assert {"python", "platform"} <= set(payload["host"])
     k = payload["kernel"]
@@ -425,15 +425,23 @@ def _validate_bench_payload(payload):
     assert payload["pipeline"], "needs at least one per-stage pipeline row"
     for row in payload["pipeline"]:
         assert {"pods", "chips", "events", "log_lines", "parsed_events", "spans",
-                "stages_s", "full_sim_events_per_sec", "end_to_end_events_per_sec",
-                "full_sim_speedup", "end_to_end_speedup"} <= set(row)
+                "stages_s", "inline_stages_s", "full_sim_events_per_sec",
+                "end_to_end_events_per_sec", "full_sim_speedup",
+                "end_to_end_speedup", "inline_speedup"} <= set(row)
         assert set(row["stages_s"]) == {
-            "simulate", "format", "parse", "weave", "export", "analyze"
+            "simulate", "format", "parse", "weave", "inline_weave",
+            "export", "analyze"
         }
         assert all(v >= 0 for v in row["stages_s"].values())
-        for section in ("full_sim_events_per_sec", "end_to_end_events_per_sec"):
-            assert set(row[section]) == {"text", "structured"}
-            assert all(v > 0 for v in row[section].values())
+        assert set(row["inline_stages_s"]) == {
+            "sim_weave", "finish", "export", "analyze"
+        }
+        assert all(v >= 0 for v in row["inline_stages_s"].values())
+        assert set(row["full_sim_events_per_sec"]) == {"text", "structured"}
+        assert all(v > 0 for v in row["full_sim_events_per_sec"].values())
+        ee = row["end_to_end_events_per_sec"]
+        assert set(ee) == {"text", "structured", "inline"}
+        assert all(v > 0 for v in ee.values())
         # the parse stage consumes the rendered text lines: every line
         # except the per-writer "# columbo" headers parses into an event
         assert 0 < row["parsed_events"] < row["log_lines"]
@@ -488,6 +496,15 @@ def test_committed_bench_json_is_valid():
         f"recorded structured full-sim rate {structured} ev/s at 256 pods is "
         f"below 3x the PR 3 baseline ({PR3_FULL_SIM_EV_S} ev/s)"
     )
+    # inline weaving must beat the structured post-hoc end-to-end rate on
+    # every recorded row (the streaming weaver removes the format->parse->
+    # weave passes; if it stops paying for itself the recording is stale)
+    for pods, row in rows.items():
+        ee = row["end_to_end_events_per_sec"]
+        assert ee["inline"] >= ee["structured"], (
+            f"pods={pods}: recorded inline e2e {ee['inline']} ev/s below "
+            f"structured {ee['structured']} ev/s"
+        )
 
 
 def test_engine_bench_kernel_micro_live():
