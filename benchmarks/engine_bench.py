@@ -21,6 +21,11 @@ Six measurements, smallest to largest scope:
                   pass, no format/parse stage at all); its own breakdown
                   is in ``inline_stages_s`` and its ``end_to_end`` rate
                   swaps in the columnar ``RunStats.from_columns`` analyze.
+                  ``columnar_weave`` goes one further: the weaver appends
+                  span fields straight into builder arrays at emit (no
+                  ``Span`` objects for net rows at all), renders SpanJSONL
+                  from the arrays and feeds ``SpanColumns`` without a Span
+                  round-trip; its breakdown is in ``columnar_stages_s``.
 * ``workloads`` — per-workload-type throughput at 8/64/256-pod testbeds:
                   events/sec plus the workload's own unit rate (requests/s
                   for ``rpc``, steps/s, checkpoint rounds/s, microbatches/s)
@@ -37,7 +42,7 @@ Six measurements, smallest to largest scope:
                   ``--jobs 1/4/8`` (simulate + weave + diagnose + shards),
                   now served by the persistent warm worker pool.
 
-Results land in ``BENCH_engine.json`` (schema ``columbo.engine_bench/v5``,
+Results land in ``BENCH_engine.json`` (schema ``columbo.engine_bench/v6``,
 validated in ``tests/test_sweep.py``); the recorded baseline and the exact
 reproduction commands live in ``docs/performance.md``.
 
@@ -55,7 +60,7 @@ import sys
 import tempfile
 import time
 
-SCHEMA = "columbo.engine_bench/v5"
+SCHEMA = "columbo.engine_bench/v6"
 
 SMOKE_TOPOLOGY_PODS = (4, 8)
 FULL_TOPOLOGY_PODS = (8, 64, 256)
@@ -67,8 +72,8 @@ SMOKE_MITIGATION_PODS = 4
 FULL_MITIGATION_PODS = 128
 MITIGATION_SCENARIO = "link_loss_rpc"
 
-STAGES = ("simulate", "format", "parse", "weave", "inline_weave", "export",
-          "analyze")
+STAGES = ("simulate", "format", "parse", "weave", "inline_weave",
+          "columnar_weave", "export", "analyze")
 
 
 def bench_kernel(n_events: int = 200_000, n_timers: int = 256) -> dict:
@@ -324,6 +329,51 @@ def bench_pipeline(pods_list=FULL_PIPELINE_PODS, chips_per_pod: int = 2,
         del spans_inline, cols, stats_i, report_i, buf_i
 
         e2e_inline = t_inline + t_export_i + t_analyze_i
+
+        # columnar: emit straight into builder arrays — net spans never
+        # exist as objects; finish_columns resolves/renumbers/sorts on the
+        # arrays, render_jsonl writes SpanJSONL from them (byte-identical
+        # to SpanJSONLExporter, asserted in tests/test_streaming_weave.py)
+        # and span_columns() feeds RunStats.from_columns with no Span
+        # round-trip anywhere on the path
+        t_col = t_col_run = t_col_finish = None
+        woven = None
+        for _ in range(trials):
+            woven = None
+            gc.collect()
+            sw = StreamingWeaver(columnar=True)
+            cluster_c, run_wall = _pipeline_cluster(
+                pods, chips_per_pod, n_steps, sink=sw
+            )
+            t0 = time.perf_counter()
+            woven = sw.finish_columns()
+            fin_wall = time.perf_counter() - t0
+            del cluster_c, sw
+            total = run_wall + fin_wall
+            if t_col is None or total < t_col:
+                t_col, t_col_run, t_col_finish = total, run_wall, fin_wall
+        assert woven.n_spans == n_spans_structured, (
+            f"columnar wove {woven.n_spans} spans vs "
+            f"{n_spans_structured} post-hoc — the paths must agree"
+        )
+        buf_c = io.StringIO()
+        t0 = time.perf_counter()
+        woven.render_jsonl(buf_c)
+        t_export_c = time.perf_counter() - t0
+
+        # columnar analyze: SpanColumns built from the woven arrays
+        # (object spans encoded once, net rows vectorized), no spans list
+        t0 = time.perf_counter()
+        cols_c = woven.span_columns()
+        stats_c = RunStats.from_columns(
+            cols_c, spans=None, scenario="bench", detected=()
+        )
+        report_c = aggregate([stats_c])
+        t_analyze_c = time.perf_counter() - t0
+        assert report_c.n_runs == 1
+        del woven, cols_c, stats_c, report_c, buf_c
+
+        e2e_col = t_col + t_export_c + t_analyze_c
         rows.append({
             "pods": pods,
             "chips": pods * chips_per_pod,
@@ -337,6 +387,7 @@ def bench_pipeline(pods_list=FULL_PIPELINE_PODS, chips_per_pod: int = 2,
                 "parse": round(t_parse, 3),
                 "weave": round(t_weave, 3),
                 "inline_weave": round(t_inline, 3),
+                "columnar_weave": round(t_col, 3),
                 "export": round(t_export, 3),
                 "analyze": round(t_analyze, 3),
             },
@@ -346,6 +397,12 @@ def bench_pipeline(pods_list=FULL_PIPELINE_PODS, chips_per_pod: int = 2,
                 "export": round(t_export_i, 3),
                 "analyze": round(t_analyze_i, 3),
             },
+            "columnar_stages_s": {
+                "sim_weave": round(t_col_run, 3),
+                "finish": round(t_col_finish, 3),
+                "export": round(t_export_c, 3),
+                "analyze": round(t_analyze_c, 3),
+            },
             "full_sim_events_per_sec": {
                 "text": round(events / t_sim_text) if t_sim_text else 0,
                 "structured": round(events / t_sim_fast) if t_sim_fast else 0,
@@ -354,10 +411,12 @@ def bench_pipeline(pods_list=FULL_PIPELINE_PODS, chips_per_pod: int = 2,
                 "text": round(events / e2e_text) if e2e_text else 0,
                 "structured": round(events / e2e_fast) if e2e_fast else 0,
                 "inline": round(events / e2e_inline) if e2e_inline else 0,
+                "columnar": round(events / e2e_col) if e2e_col else 0,
             },
             "full_sim_speedup": round(t_sim_text / t_sim_fast, 2) if t_sim_fast else 0,
             "end_to_end_speedup": round(e2e_text / e2e_fast, 2) if e2e_fast else 0,
             "inline_speedup": round(e2e_text / e2e_inline, 2) if e2e_inline else 0,
+            "columnar_speedup": round(e2e_text / e2e_col, 2) if e2e_col else 0,
         })
     return rows
 
@@ -594,6 +653,10 @@ def run():
                sum(row["inline_stages_s"].values()) * 1e6,
                f"e2e inline={ee['inline']} vs structured={ee['structured']}"
                f"ev/s ({row['inline_speedup']}x text)")
+        yield (f"engine.pipeline.columnar.pods{row['pods']}",
+               sum(row["columnar_stages_s"].values()) * 1e6,
+               f"e2e columnar={ee['columnar']} vs inline={ee['inline']}"
+               f"ev/s ({row['columnar_speedup']}x text)")
     for row in payload["workloads"]:
         yield (f"engine.workload.{row['workload']}.pods{row['pods']}",
                row["wall_s"] * 1e6,
@@ -639,8 +702,9 @@ def main() -> None:
         print(f"[engine_bench]   full-sim   text {fs['text']:,} -> structured "
               f"{fs['structured']:,} ev/s ({row['full_sim_speedup']}x)")
         print(f"[engine_bench]   end-to-end text {ee['text']:,} -> structured "
-              f"{ee['structured']:,} -> inline {ee['inline']:,} ev/s "
-              f"({row['end_to_end_speedup']}x / {row['inline_speedup']}x)")
+              f"{ee['structured']:,} -> inline {ee['inline']:,} -> columnar "
+              f"{ee['columnar']:,} ev/s ({row['end_to_end_speedup']}x / "
+              f"{row['inline_speedup']}x / {row['columnar_speedup']}x)")
     for row in payload["workloads"]:
         print(f"[engine_bench] workload {row['workload']:<10s} pods={row['pods']:<4d} "
               f"{row['events']:>9,} events in {row['wall_s']:>7.3f}s "

@@ -52,31 +52,45 @@ print(f"[tier1] diag smoke: curated recall 1.00 over "
       f"{conf['healthy_fpr']:.2f}")
 PY
 
-# perf smoke: the structured fast path must never regress below the text
-# path's events/sec (a ratio check, not an absolute bar, so loaded CI
-# hosts don't flake — the committed full run shows the real ~3x)
+# perf smoke: the events/sec order must hold — columnar >= inline >=
+# structured >= text (ratio checks, not absolute bars, so loaded CI hosts
+# don't flake — the committed full run shows the real multiples; the
+# committed-recording order is asserted without guards in
+# tests/test_sweep.py).  Simulate/fused-weave walls are best-of-3 inside
+# the bench, but the other stage walls are single-shot: a pair is
+# skipped when any stage wall feeding either side is under 10ms, where
+# one scheduler blip flips the order regardless of the code.
 python - <<'PY'
 import json
 
 with open("results/BENCH_engine.smoke.json") as f:
     payload = json.load(f)
+
+def check(row, rates, fast, slow, what, walls):
+    if min(walls) < 0.01:
+        print(f"[tier1] perf smoke: pods={row['pods']} {fast}/{slow} {what} "
+              f"has stage walls under 10ms — order check skipped")
+        return
+    assert rates[fast] >= rates[slow], (
+        f"pods={row['pods']}: {fast} {what} path ({rates[fast]} ev/s) "
+        f"fell below the {slow} path ({rates[slow]} ev/s)"
+    )
+
 for row in payload["pipeline"]:
+    ev, st = row["events"], row["stages_s"]
     fs = row["full_sim_events_per_sec"]
-    assert fs["structured"] >= fs["text"], (
-        f"pods={row['pods']}: structured full-sim path ({fs['structured']} ev/s) "
-        f"fell below the text path ({fs['text']} ev/s)"
-    )
+    check(row, fs, "structured", "text", "full-sim",
+          [ev / fs["text"], ev / fs["structured"]])
     ee = row["end_to_end_events_per_sec"]
-    assert ee["structured"] >= ee["text"], (
-        f"pods={row['pods']}: structured end-to-end path ({ee['structured']} ev/s) "
-        f"fell below the text path ({ee['text']} ev/s)"
-    )
-    assert ee["inline"] >= ee["structured"], (
-        f"pods={row['pods']}: inline end-to-end path ({ee['inline']} ev/s) "
-        f"fell below the structured post-hoc path ({ee['structured']} ev/s) — "
-        f"the streaming weaver must not cost more than format->parse->weave"
-    )
-print("[tier1] perf smoke: inline >= structured >= text on all pipeline rows")
+    post = [st[k] for k in ("simulate", "format", "parse", "weave",
+                            "export", "analyze")]
+    inl = list(row["inline_stages_s"].values())
+    col = list(row["columnar_stages_s"].values())
+    check(row, ee, "structured", "text", "end-to-end", post)
+    check(row, ee, "inline", "structured", "end-to-end", inl + post)
+    check(row, ee, "columnar", "inline", "end-to-end", col + inl)
+print("[tier1] perf smoke: columnar >= inline >= structured >= text "
+      "on all pipeline rows (sub-10ms pairs skipped)")
 PY
 
 scripts/docs_check.sh

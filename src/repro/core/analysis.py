@@ -756,6 +756,113 @@ class SpanColumns:
             self.key_codes = codes
             self.request_idx = request_idx
 
+    @classmethod
+    def from_parts(cls, n_spans, dur_ps, key_codes, keys,
+                   request_idx, mitigation_us, mitigation_penalty) -> "SpanColumns":
+        """Assemble from precomputed arrays (no span loop).  The caller
+        owns the invariants the span-loop constructor guarantees: codes
+        numbered by first occurrence in span order, durations in ps,
+        request indices ascending."""
+        self = cls.__new__(cls)
+        self.n_spans = n_spans
+        self.dur_ps = dur_ps
+        self.key_codes = key_codes
+        self.keys = keys
+        self.request_idx = request_idx
+        self.mitigation_us = mitigation_us
+        self.mitigation_penalty = mitigation_penalty
+        return self
+
+    @classmethod
+    def from_woven(cls, woven) -> "SpanColumns":
+        """Columnar-to-columnar build from a finished
+        ``streaming.WovenColumns`` — bit-identical to
+        ``SpanColumns(woven.to_spans())`` without materializing the net
+        spans.  Durations and component codes for the net rows come
+        straight from the emit-time builder arrays; the object-path spans
+        (host/device) contribute through the same per-span loop the plain
+        constructor runs, in the same (sorted) relative order, so the
+        rare-span fields (mitigation durations, penalty float
+        accumulation order, request indices) reproduce exactly."""
+        nb = woven.nb
+        obj = woven.obj_spans
+        m = len(obj)
+        n = woven.n_net
+        key_of: Dict[Tuple[str, str], int] = {}
+        pool: List[str] = []
+        ocodes = [0] * m
+        odur = [0] * m
+        request_rows: List[int] = []
+        mitigation_us: List[float] = []
+        mitigation_penalty = 0.0
+        for i, s in enumerate(obj):
+            odur[i] = s.end - s.start
+            k = (s.sim_type, s.component)
+            c = key_of.get(k)
+            if c is None:
+                c = key_of[k] = len(pool)
+                pool.append(f"{s.sim_type}:{s.component}")
+            ocodes[i] = c
+            name = s.name
+            if name == "RpcRequest":
+                request_rows.append(i)
+            elif name == "Mitigation":
+                d = odur[i]
+                mitigation_us.append((d if d > 1 else 1) / PS_PER_US)
+                try:
+                    mitigation_penalty += float(s.attrs.get("penalty", 0.0))
+                except (TypeError, ValueError):
+                    pass
+        off = len(pool)
+        pool.extend("net:" + link for link in nb.comp_pool)
+        order = woven.order
+        if _np is not None:
+            dur_all = _np.empty(m + n, dtype=_np.int64)
+            dur_all[:m] = odur
+            codes_all = _np.empty(m + n, dtype=_np.int64)
+            codes_all[:m] = ocodes
+            if n:
+                dur_all[m:] = nb.ends
+                dur_all[m:] -= _np.asarray(nb.starts, dtype=_np.int64)
+                codes_all[m:] = nb.comp_codes
+                codes_all[m:] += off
+            order = _np.asarray(order)
+            dur_all = dur_all[order]
+            codes_all = codes_all[order]
+            # renumber codes by first occurrence in the merged canonical
+            # order — the numbering the span-loop constructor produces
+            uniq, first = _np.unique(codes_all, return_index=True)
+            appearance = uniq[_np.argsort(first)]
+            new_code = _np.empty(len(pool), dtype=_np.int64)
+            new_code[appearance] = _np.arange(len(appearance))
+            key_codes = new_code[codes_all]
+            keys = [pool[c] for c in appearance.tolist()]
+            pos = _np.empty(m + n, dtype=_np.int64)
+            pos[order] = _np.arange(m + n)
+            request_idx = pos[request_rows] if request_rows else _np.empty(0, dtype=_np.int64)
+        else:  # pragma: no cover - minimal installs
+            dur_cat = odur + [e - s for e, s in zip(nb.ends, nb.starts)]
+            codes_cat = ocodes + [c + off for c in nb.comp_codes]
+            order = list(order)
+            dur_all = [dur_cat[j] for j in order]
+            codes_raw = [codes_cat[j] for j in order]
+            renum: Dict[int, int] = {}
+            keys = []
+            codes_new = [0] * len(codes_raw)
+            for i, c in enumerate(codes_raw):
+                nc = renum.get(c)
+                if nc is None:
+                    nc = renum[c] = len(keys)
+                    keys.append(pool[c])
+                codes_new[i] = nc
+            key_codes = codes_new
+            pos = [0] * (m + n)
+            for p, j in enumerate(order):
+                pos[j] = p
+            request_idx = [pos[r] for r in request_rows]
+        return cls.from_parts(m + n, dur_all, key_codes, keys,
+                              request_idx, mitigation_us, mitigation_penalty)
+
     def component_us(self) -> Dict[str, List[float]]:
         """Per-``sim_type:component`` duration pools (µs, 1 ps floor), each
         pool in span order — exactly :meth:`RunStats.from_spans`'s dict."""

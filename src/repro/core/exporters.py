@@ -421,6 +421,140 @@ class SpanJSONLExporter(Exporter):
 
 
 # ---------------------------------------------------------------------------
+# Array-native SpanJSONL rendering (the columnar weave's export side)
+# ---------------------------------------------------------------------------
+
+
+def render_woven_jsonl(woven, path_or_stream, flush_every: int = 1024) -> int:
+    """Render a finished columnar weave (``streaming.WovenColumns``) to
+    SpanJSONL, byte-identical to :class:`SpanJSONLExporter` over
+    ``woven.to_spans()`` — without materializing the net spans.
+
+    Object-path spans (host/device, the minority) go through the exact
+    ``SpanJSONLExporter.consume`` code the byte-identity goldens pin
+    down; net rows assemble their lines straight from the column arrays —
+    same format string, same C escaper, same ``repr`` float encoding,
+    same int-attr fast path, same shared escape memos — with attr
+    coercion applied at render time (the columnar emit stores raw meta
+    dicts).  Returns the number of spans written."""
+    exp = SpanJSONLExporter(path_or_stream, flush_every=flush_every)
+    exp.begin()
+    consume = exp.consume
+    _esc = json.encoder.encode_basestring_ascii
+    kc = SpanJSONLExporter._esc_keys
+    nc = SpanJSONLExporter._esc_names
+    from .parsers import _NUM_LEAD, coerce_value
+
+    nb = woven.nb
+    obj = woven.obj_spans
+    m = len(obj)
+    comp_esc = []
+    for c in nb.comp_pool:
+        s = nc.get(c)
+        if s is None:
+            s = nc[c] = _esc(c)
+        comp_esc.append(s)
+    ks_chunk = kc.get("chunk")
+    if ks_chunk is None:
+        ks_chunk = kc["chunk"] = _esc("chunk") + ": "
+    ks_size = kc.get("size")
+    if ks_size is None:
+        ks_size = kc["size"] = _esc("size") + ": "
+    starts = nb.starts
+    ends = nb.ends
+    codes = nb.comp_codes
+    chunks = nb.chunks
+    sizes = nb.sizes
+    metas = nb.metas
+    queues = nb.queues
+    drops = nb.drops
+    nevs = nb.nevs
+    xorders = nb.xorders
+    unclosed = nb.unclosed
+    tids = woven.net_tids
+    psids = woven.net_psids
+    s0 = woven.net_s0
+    order = woven.order
+    if not isinstance(order, list):
+        order = order.tolist()
+    buf = exp._buf
+    out = exp._out
+    fe2 = 2 * exp.flush_every
+    join = ", ".join
+    n_net_written = 0
+    for j in order:
+        if j < m:
+            consume(obj[j])
+            continue
+        i = j - m
+        start = starts[i]
+        dur = ends[i] - start
+        parts = []
+        ap = parts.append
+        v = chunks[i]
+        if type(v) is int:
+            ap('%s"%d"' % (ks_chunk, v))
+        else:
+            ap(ks_chunk + _esc(str(v)))
+        v = sizes[i]
+        if type(v) is int:
+            ap('%s"%d"' % (ks_size, v))
+        else:
+            ap(ks_size + _esc(str(v)))
+        for k, v in metas[i].items():
+            ks = kc.get(k)
+            if ks is None:
+                ks = kc[k] = _esc(k) + ": "
+            t = type(v)
+            if t is int:
+                ap('%s"%d"' % (ks, v))
+            elif t is str and (not v or v[0] not in _NUM_LEAD):
+                ap(ks + _esc(v))
+            else:
+                v = coerce_value(v)
+                if type(v) is int:
+                    ap('%s"%d"' % (ks, v))
+                else:
+                    ap(ks + _esc(str(v)))
+        x = xorders[i]
+        if x:
+            for ch in x:
+                if ch == "q":
+                    ap('"queue_ps": "%d"' % queues[i])
+                else:
+                    ap('"drops": "%d"' % drops[i])
+        if i in unclosed:
+            ap('"unclosed": "True"')
+        psid = psids[i]
+        line = (
+            '{"trace_id": "%032x", "span_id": "%016x", "parent_id": %s, '
+            '"name": "LinkTransfer", "sim_type": "net", "component": %s, '
+            '"start_us": %s, "duration_us": %s, "attrs": {%s}, '
+            '"n_events": %d, "links": []}'
+            % (
+                tids[i],
+                s0 + i + 1,
+                '"%016x"' % psid if psid >= 0 else "null",
+                comp_esc[codes[i]],
+                repr(start / PS_PER_US),
+                repr((dur if dur > 1 else 1) / PS_PER_US),
+                join(parts),
+                nevs[i],
+            )
+        )
+        buf.append(line)
+        buf.append("\n")
+        if len(buf) >= fe2:
+            out.write("".join(buf))
+            buf.clear()
+        n_net_written += 1
+    exp.spans_written += n_net_written
+    n = exp.spans_written
+    exp.finish()
+    return n
+
+
+# ---------------------------------------------------------------------------
 # SpanJSONL shard reading + merging (the sweep's output side)
 # ---------------------------------------------------------------------------
 
@@ -439,9 +573,89 @@ def iter_span_records(paths) -> Iterable[Dict[str, Any]]:
                     yield json.loads(line)
 
 
+# SpanJSONLExporter's fixed line layout (what every shard writer in this
+# repo produces): '{"trace_id": "' + 32 hex + '", "span_id": "' + 16 hex +
+# '", "parent_id": ' + ('"' + 16 hex + '"' | 'null') + ...  The merge keys
+# and id rewrites below slice these offsets directly; anything that does
+# not match the layout falls back to a full json round-trip.
+_TID_SLICE = slice(14, 46)
+_SID_SEP = '", "span_id": "'       # line[46:61]
+_PAR_SEP = '", "parent_id": '      # line[77:93]
+
+
+def _span_line_key(line: str):
+    """``(trace_id, start_us, span_id)`` of one SpanJSONL line — the
+    shard-merge sort key — extracted by fixed-offset slicing, parsing
+    nothing on the exporter-layout fast path."""
+    if (
+        line.startswith('{"trace_id": "')
+        and line[46:61] == _SID_SEP
+        and line[77:93] == _PAR_SEP
+    ):
+        i = line.find('"start_us": ', 93)
+        if i >= 0:
+            j = line.find(",", i + 12)
+            if j >= 0:
+                try:
+                    return line[_TID_SLICE], float(line[i + 12:j]), line[61:77]
+                except ValueError:  # pragma: no cover - malformed number
+                    pass
+    r = json.loads(line)
+    return r["trace_id"], r["start_us"], r["span_id"]
+
+
+def _disambiguated(line: str, prefix: str) -> str:
+    """Rewrite every id's top 8 hex digits to ``prefix`` (trace, span,
+    parent, links) by string surgery on the exporter layout; falls back to
+    the json round-trip for foreign layouts."""
+    if (
+        line.startswith('{"trace_id": "')
+        and line[46:61] == _SID_SEP
+        and line[77:93] == _PAR_SEP
+    ):
+        out = [line[:14], prefix, line[22:61], prefix, line[69:93]]
+        pos = 93
+        if line[93] == '"':
+            # parent value is '"' + 16 hex + '"'
+            out.append('"')
+            out.append(prefix)
+            out.append(line[102:110])
+            pos = 110
+        k = line.find('"links": [', pos)
+        if k >= 0:
+            out.append(line[pos:k + 10])
+            p = k + 10
+            while line[p] == '"':
+                # each link is '"' + 16 hex + '"', ", "-separated
+                out.append('"')
+                out.append(prefix)
+                out.append(line[p + 9:p + 18])
+                p += 18
+                if line[p:p + 2] == ", ":
+                    out.append(", ")
+                    p += 2
+            out.append(line[p:])
+            return "".join(out)
+    r = json.loads(line)
+    r["trace_id"] = prefix + r["trace_id"][8:]
+    r["span_id"] = prefix + r["span_id"][8:]
+    if r.get("parent_id"):
+        r["parent_id"] = prefix + r["parent_id"][8:]
+    if r.get("links"):
+        r["links"] = [prefix + l[8:] for l in r["links"]]
+    return json.dumps(r)
+
+
 def merge_span_jsonl(shard_paths, out_path: str, disambiguate: bool = True) -> int:
     """Streaming-merge N SpanJSONL shards into one file ordered by
     ``(trace_id, start_us, span_id)``.  Returns the number of spans written.
+
+    Shards stream through buffered line iterators — one line per shard is
+    resident at a time, never a whole shard — and exporter-layout lines
+    are keyed (and id-rewritten) by fixed-offset slicing instead of a
+    ``json.loads``/``json.dumps`` round-trip per record; foreign layouts
+    fall back to the round-trip, which normalizes them exactly as the
+    parse-based merge did.
 
     Sweep cells each reset the span/trace id counters (that is what makes
     a cell's bytes seed-reproducible), so ids *collide across shards*.
@@ -455,21 +669,21 @@ def merge_span_jsonl(shard_paths, out_path: str, disambiguate: bool = True) -> i
 
     def _keyed(idx, path):
         prefix = f"{idx:08x}"
-        for r in iter_span_records(path):
-            if disambiguate:
-                r["trace_id"] = prefix + r["trace_id"][8:]
-                r["span_id"] = prefix + r["span_id"][8:]
-                if r.get("parent_id"):
-                    r["parent_id"] = prefix + r["parent_id"][8:]
-                if r.get("links"):
-                    r["links"] = [prefix + l[8:] for l in r["links"]]
-            yield (r["trace_id"], r["start_us"], r["span_id"]), json.dumps(r)
+        with open(path, buffering=1 << 20) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                if disambiguate:
+                    line = _disambiguated(line, prefix)
+                yield _span_line_key(line), line
 
     n = 0
     with open(out_path, "w", buffering=1 << 20) as out:
+        w = out.write
         for _, line in heapq.merge(*[_keyed(i, p) for i, p in enumerate(shard_paths)]):
-            out.write(line)
-            out.write("\n")
+            w(line)
+            w("\n")
             n += 1
     return n
 

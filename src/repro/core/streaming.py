@@ -62,7 +62,7 @@ try:  # columnar final sort; pure-python fallback stays byte-identical
 except ModuleNotFoundError:  # pragma: no cover - minimal installs
     _np = None
 
-__all__ = ["StreamingWeaver", "InlineTraceSession"]
+__all__ = ["StreamingWeaver", "InlineTraceSession", "WovenColumns"]
 
 # Tagged id ranges: ordinals are dense per type, the tag keeps the three
 # in-flight id spaces disjoint until the finish-time remap.  44 bits leaves
@@ -94,6 +94,45 @@ class _EventShim:
     __slots__ = ("ts", "source", "kind", "attrs")
 
 
+class _NetColumnsBuilder:
+    """Growable column builders for the fused columnar net weave.
+
+    One row per LinkTransfer (the ``"+"`` mark); ids are implicit — the
+    fused net emit allocates trace and span ordinals in lockstep, so row
+    ``i`` owns both span ordinal ``i + 1`` and trace ordinal ``i + 1`` in
+    the tagged net id space.  ``metas`` stores the per-transfer meta dicts
+    by reference (``netsim._Transfer`` never mutates them after emit);
+    attr coercion is deferred to render/materialize time, off the hot
+    path.  ``xorders`` records the first-occurrence order of the extra
+    attrs (``'q'`` = queue_ps, ``'d'`` = drops) so rendered dict order
+    matches the object path's insertion order exactly."""
+
+    __slots__ = ("starts", "ends", "comp_codes", "comp_pool", "comp_index",
+                 "chunks", "sizes", "metas", "queues", "drops", "nevs",
+                 "xorders", "pkeys", "events", "open", "unclosed")
+
+    def __init__(self) -> None:
+        self.starts: List[int] = []
+        self.ends: List[int] = []
+        self.comp_codes: List[int] = []      # row -> index into comp_pool
+        self.comp_pool: List[str] = []       # link-name string pool
+        self.comp_index: Dict[str, int] = {}
+        self.chunks: List[Any] = []
+        self.sizes: List[Any] = []
+        self.metas: List[dict] = []
+        self.queues: List[int] = []          # last wire_tx ts - start
+        self.drops: List[int] = []
+        self.nevs: List[int] = []            # wire_tx + chunk_drop count
+        self.xorders: List[str] = []         # '' | 'q' | 'd' | 'qd' | 'dq'
+        self.pkeys: List[Optional[tuple]] = []   # deferred parent key
+        self.events: List[tuple] = []        # flat (row, ts, kind, size, meta)
+        self.open: Dict[Tuple[str, Any], int] = {}
+        self.unclosed: frozenset = frozenset()
+
+    def __len__(self) -> int:
+        return len(self.starts)
+
+
 class StreamingWeaver:
     """Weaves spans *during* the simulation from per-event records.
 
@@ -108,6 +147,17 @@ class StreamingWeaver:
     ids) — a monitoring tap with the same fan-out isolation as
     ``TraceSession.export``; the byte-identical artifact is produced by
     exporting the finished spans.
+
+    ``columnar=True`` switches the net stream — the dominant record class
+    (every link hop is 3-4 records, ~85% of all spans at fleet scale) —
+    to a column-building emit that appends span fields straight into
+    parallel arrays and never materializes a ``Span`` object on the hot
+    path.  :meth:`finish_columns` then resolves, renumbers, and orders the
+    whole run with vectorized passes and returns a :class:`WovenColumns`
+    whose JSONL rendering (``core.exporters.render_woven_jsonl``) is
+    byte-identical to exporting the object-path spans.  ``Span`` objects
+    are still available lazily via ``WovenColumns.to_spans()`` for
+    graph-walking consumers (diagnose, Chrome export).
     """
 
     def __init__(
@@ -115,6 +165,7 @@ class StreamingWeaver:
         simulators=None,
         registry: Optional[ContextRegistry] = None,
         poll_timeout: float = 0.0,
+        columnar: bool = False,
     ) -> None:
         if simulators is None:
             from .registry import DEFAULT_REGISTRY
@@ -144,6 +195,9 @@ class StreamingWeaver:
         self._net_count = [0]               # mutable cell: fused-path events_in
         self._columns = None                # cached SpanColumns of finished spans
         self._finished = False
+        self.columnar = bool(columnar)
+        self._net_builder: Optional[_NetColumnsBuilder] = None
+        self._woven: Optional["WovenColumns"] = None
 
     # -- capture side (what InlineWeaveWriter binds) ---------------------------
 
@@ -183,7 +237,11 @@ class StreamingWeaver:
                 # stream is single-writer, so its records need neither the
                 # watermark buffer nor the MergedProducer tie-break: a
                 # fused handler weaves each record the moment it is emitted
-                self._net_emit = self._make_net_emit(w)
+                if self.columnar:
+                    self._net_builder = _NetColumnsBuilder()
+                    self._net_emit = self._make_net_emit_columnar(w)
+                else:
+                    self._net_emit = self._make_net_emit(w)
             else:
                 batch: List[tuple] = []
                 self._batches[st] = batch
@@ -396,6 +454,143 @@ class StreamingWeaver:
 
         return emit
 
+    def _make_net_emit_columnar(self, w: SpanWeaver) -> Callable[[tuple], None]:
+        """Columnar twin of :meth:`_make_net_emit`: each net record appends
+        raw fields into the :class:`_NetColumnsBuilder` arrays — no Span,
+        no attrs dict, no id allocation (row position IS the ordinal in the
+        tagged net id space).  The registry still sees the same traffic as
+        the object path — a ``("link_span", chunk)`` push per transfer (the
+        device collective weaver links against it) — but parent deferral is
+        reduced to recording the natural-boundary key; resolution happens
+        vectorized in :meth:`finish_columns`.  Attr coercion is applied
+        only to the deferred-key values here (they must match the pushing
+        side's coerced attrs); everything else coerces at render time."""
+        nb = self._net_builder
+        cell = self._net_count
+        push = self.context.push
+        starts = nb.starts
+        ends = nb.ends
+        queues = nb.queues
+        drops = nb.drops
+        nevs = nb.nevs
+        xorders = nb.xorders
+        comp_index = nb.comp_index
+        comp_pool = nb.comp_pool
+        open_map = nb.open
+        shim = _EventShim()
+        shim.attrs = {}
+        a_start = starts.append
+        a_end = ends.append
+        a_code = nb.comp_codes.append
+        a_chunk = nb.chunks.append
+        a_size = nb.sizes.append
+        a_meta = nb.metas.append
+        a_queue = queues.append
+        a_drop = drops.append
+        a_nev = nevs.append
+        a_xord = xorders.append
+        a_pkey = nb.pkeys.append
+        a_ev = nb.events.append
+        base = _TYPE_TAG["net"] * _TAG_STRIDE + 1
+
+        def emit(rec, _cv=coerce_value, _NUM=_NUM_LEAD, _SC=SpanContext,
+                 _oget=open_map.get, _opop=open_map.pop, _late=w._late):
+            ts, mark, link, chunk, size, meta = rec
+            if mark == "r":
+                cell[0] += 1
+                row = _opop((link, chunk), -1)
+                if row < 0:
+                    shim.ts = ts
+                    shim.source = link
+                    shim.kind = "chunk_rx"
+                    _late(shim)
+                    return
+                if ts > starts[row]:
+                    ends[row] = ts
+            elif mark == "+":
+                cell[0] += 1
+                row = len(starts)
+                a_start(ts)
+                a_end(ts)
+                code = comp_index.get(link)
+                if code is None:
+                    code = comp_index[link] = len(comp_pool)
+                    comp_pool.append(link)
+                a_code(code)
+                a_chunk(chunk)
+                a_size(size)
+                a_meta(meta)
+                a_queue(0)
+                a_drop(0)
+                a_nev(0)
+                a_xord("")
+                # same natural-boundary key selection as _on_chunk_enqueue;
+                # key values go through the same coerce_value gate the
+                # object path's coerced attrs dict would apply
+                if "dma" in meta:
+                    v = meta["dma"]
+                    t = type(v)
+                    if not (t is int or (t is str and (not v or v[0] not in _NUM))):
+                        v = _cv(v)
+                    key = ("h2d", v)
+                elif meta.get("proto") == "ntp":
+                    p = meta.get("peer")
+                    t = type(p)
+                    if not (p is None or t is int or (t is str and (not p or p[0] not in _NUM))):
+                        p = _cv(p)
+                    q = meta.get("seq")
+                    t = type(q)
+                    if not (q is None or t is int or (t is str and (not q or q[0] not in _NUM))):
+                        q = _cv(q)
+                    key = ("ntp", p, q)
+                elif "rpc" in meta:
+                    v = meta["rpc"]
+                    t = type(v)
+                    if not (t is int or (t is str and (not v or v[0] not in _NUM))):
+                        v = _cv(v)
+                    key = ("rpccall", v)
+                elif "flow" not in meta:
+                    key = ("chunk", chunk)
+                else:
+                    key = None
+                a_pkey(key)
+                rid = base + row
+                push(("link_span", chunk), _SC(rid, rid))
+                open_map[(link, chunk)] = row
+            elif mark == "-":
+                cell[0] += 1
+                row = _oget((link, chunk), -1)
+                if row < 0:
+                    shim.ts = ts
+                    shim.source = link
+                    shim.kind = "chunk_tx"
+                    _late(shim)
+                    return
+                nevs[row] += 1
+                queues[row] = ts - starts[row]
+                x = xorders[row]
+                if "q" not in x:
+                    xorders[row] = x + "q"
+                a_ev((row, ts, "wire_tx", size, meta))
+            elif mark == "d":
+                cell[0] += 1
+                row = _oget((link, chunk), -1)
+                if row < 0:
+                    shim.ts = ts
+                    shim.source = link
+                    shim.kind = "chunk_drop"
+                    _late(shim)
+                    return
+                nevs[row] += 1
+                drops[row] += 1
+                x = xorders[row]
+                if "d" not in x:
+                    xorders[row] = x + "d"
+                a_ev((row, ts, "chunk_drop", size, meta))
+            # unknown marks: dropped, like events() drops unregistered records
+
+        return emit
+
     # -- live exporter tap -----------------------------------------------------
 
     def add_live_exporter(self, exporter) -> None:
@@ -408,6 +603,12 @@ class StreamingWeaver:
         ``TraceSession.export``: one raising mid-stream is disabled (its
         ``finish()`` still runs so partial output flushes), the others keep
         receiving, and the first error re-raises from :meth:`finish`."""
+        if self.columnar:
+            raise RuntimeError(
+                "live exporters need per-span objects the moment they "
+                "complete; the columnar emit path never materializes them "
+                "— use StreamingWeaver(columnar=False) for a live tap"
+            )
         try:
             exporter.begin()
         except Exception as ex:
@@ -442,7 +643,13 @@ class StreamingWeaver:
 
     def finish(self) -> List[Span]:
         """Flush, resolve, renumber, unify, sort — then the spans are
-        exactly what ``ExecutionEngine.execute`` would have produced."""
+        exactly what ``ExecutionEngine.execute`` would have produced.
+
+        In columnar mode this finishes the columns first and then
+        materializes Span objects from them (lazily cached): callers that
+        only consume the columns/JSONL never pay for this."""
+        if self.columnar:
+            return self.finish_columns().to_spans()
         if self._finished:
             return self.spans or []
         self._finished = True
@@ -524,14 +731,182 @@ class StreamingWeaver:
             raise self.live_errors[0]
         return spans
 
+    def finish_columns(self) -> "WovenColumns":
+        """Columnar finish: flush, resolve, renumber, order — without ever
+        building the net Span objects.  Returns the cached
+        :class:`WovenColumns`; only valid in ``columnar=True`` mode."""
+        if not self.columnar:
+            raise RuntimeError(
+                "finish_columns() requires StreamingWeaver(columnar=True); "
+                "the object-path weaver finishes via finish()"
+            )
+        if self._woven is not None:
+            return self._woven
+        self._finished = True
+        paused = _gc.isenabled()
+        if paused:
+            _gc.disable()
+        try:
+            self._woven = self._finish_columnar()
+        finally:
+            if paused:
+                _gc.enable()
+        return self._woven
+
+    def _finish_columnar(self) -> "WovenColumns":
+        for batch, drain in self._drains:
+            if batch:
+                drain(batch)
+                del batch[:]
+        nb = self._net_builder if self._net_builder is not None else _NetColumnsBuilder()
+        n_net = len(nb)
+        order_types = sorted(self.weavers, key=_TYPE_TAG.__getitem__)
+        for st in order_types:
+            _span._span_counter = self._span_ctrs[st]
+            _span._trace_counter = self._trace_ctrs[st]
+            if st == "net":
+                # the columnar twin of the unclosed flush: rows still open
+                # at drain get the trailing "unclosed" attr at render time
+                w = self.weavers[st]
+                self._fold_net_counts(w)
+                nb.unclosed = frozenset(nb.open.values())
+                nb.open.clear()
+            self.weavers[st].on_finish()
+
+        # per-type allocation counts -> the post-hoc block offsets; the
+        # columnar net stream allocated nothing — its row count IS both
+        # its span and trace count (ordinals advance in lockstep at "+")
+        span_off = [0, 0, 0]
+        trace_off = [0, 0, 0]
+        cum_s = 0
+        cum_t = 0
+        for st, tag in _TYPE_TAG.items():
+            span_off[tag] = cum_s
+            trace_off[tag] = cum_t
+            if st in self.weavers:
+                if st == "net":
+                    cum_s += n_net
+                    cum_t += n_net
+                else:
+                    base = tag * _TAG_STRIDE + 1
+                    cum_s += next(self._span_ctrs[st]) - base
+                    cum_t += next(self._trace_ctrs[st]) - base
+
+        # 1. object-side deferred resolution (device link_spans resolve
+        #    against the contexts the columnar emit pushed)
+        stats = self.context.resolve_deferred()
+        obj_spans: List[Span] = []
+        for st in order_types:
+            obj_spans.extend(self.weavers[st].spans)
+        # 2.+3. remap/unify the object spans; the returned root map is the
+        #    parent-graph trace resolution the net rows join against
+        root = _remap_and_unify(obj_spans, span_off, trace_off)
+        _sort_spans(obj_spans)
+
+        # 4. vectorizable net-row resolution.  resolve_deferred's
+        #    mode="parent" semantics, specialized to the leaf position net
+        #    rows occupy in the parent graph (nothing ever defers *on* a
+        #    net row): a resolved row adopts its parent's unified trace
+        #    (root of the parent chain, like the object path's adopt-then-
+        #    remap), an orphaned or undeferred row keeps its own tagged
+        #    trace remapped into the net block.  Keys repeat heavily
+        #    (one push covers every hop of a transfer), so resolution
+        #    memoizes per key while hit/miss counters stay per row.
+        reg = self.context
+        store = reg._store
+        MASK = _TAG_MASK
+        BITS = _TAG_BITS
+        net_s0 = span_off[2]
+        net_t0 = trace_off[2]
+        tids = [0] * n_net
+        psids = [-1] * n_net
+        resolved = 0
+        orphans = 0
+        memo: Dict[tuple, Tuple[int, int]] = {}
+        mget = memo.get
+        sget = store.get
+        rget = root.get
+        for i, key in enumerate(nb.pkeys):
+            if key is None:
+                tids[i] = net_t0 + i + 1
+                continue
+            hit = mget(key)
+            if hit is None:
+                ctx = sget(key)
+                if ctx is None:
+                    hit = memo[key] = (-1, 0)
+                else:
+                    psid = ctx.span_id
+                    r = rget(psid)
+                    if r is None:
+                        r = ctx.trace_id   # parent never woven: remap-only
+                    hit = memo[key] = (
+                        (psid & MASK) + span_off[psid >> BITS],
+                        (r & MASK) + trace_off[r >> BITS],
+                    )
+            pf, tf = hit
+            if pf < 0:
+                orphans += 1
+                tids[i] = net_t0 + i + 1
+            else:
+                resolved += 1
+                psids[i] = pf
+                tids[i] = tf
+        reg.hits += resolved
+        reg.misses += orphans
+        stats = {"resolved": stats.get("resolved", 0) + resolved,
+                 "orphans": stats.get("orphans", 0) + orphans}
+
+        # 5. one merged canonical (trace_id, start, span_id) order over
+        #    object spans (indices 0..m-1, already sorted) and net rows
+        #    (indices m..m+n-1); span ids are unique so the key is total
+        m = len(obj_spans)
+        if _np is not None:
+            tid_all = _np.empty(m + n_net, dtype=_np.int64)
+            start_all = _np.empty(m + n_net, dtype=_np.int64)
+            sid_all = _np.empty(m + n_net, dtype=_np.int64)
+            for i, s in enumerate(obj_spans):
+                ctx = s.context
+                tid_all[i] = ctx.trace_id
+                start_all[i] = s.start
+                sid_all[i] = ctx.span_id
+            if n_net:
+                tid_all[m:] = tids
+                start_all[m:] = nb.starts
+                sid_all[m:] = _np.arange(net_s0 + 1, net_s0 + n_net + 1,
+                                         dtype=_np.int64)
+            merge_order = _np.lexsort((sid_all, start_all, tid_all))
+        else:  # pragma: no cover - minimal installs
+            keyed = [(s.context.trace_id, s.start, s.context.span_id, i)
+                     for i, s in enumerate(obj_spans)]
+            keyed.extend(
+                (tids[i], nb.starts[i], net_s0 + i + 1, m + i)
+                for i in range(n_net)
+            )
+            keyed.sort()
+            merge_order = [k[3] for k in keyed]
+
+        # leave the module counters where the sequential weave would have
+        _span._span_counter = itertools.count(cum_s + 1)
+        _span._trace_counter = itertools.count(cum_t + 1)
+
+        self.finalize_stats = stats
+        return WovenColumns(self, obj_spans, nb, merge_order,
+                            tids, psids, net_s0, net_t0)
+
     def columns(self):
         """Columnar (struct-of-arrays) view of the finished spans.
 
         Built lazily and cached; feeds :meth:`RunStats.from_columns`, which
-        replaces the per-span python reduction loop with numpy passes."""
+        replaces the per-span python reduction loop with numpy passes.  In
+        columnar mode the arrays come straight from the emit-time builders
+        — no Span round-trip."""
         if self._columns is None:
-            from .analysis import SpanColumns
-            self._columns = SpanColumns(self.finish())
+            if self.columnar:
+                self._columns = self.finish_columns().span_columns()
+            else:
+                from .analysis import SpanColumns
+                self._columns = SpanColumns(self.finish())
         return self._columns
 
     def stats(self) -> Dict[str, Any]:
@@ -547,12 +922,15 @@ class StreamingWeaver:
                 "late_events": w.late_events,
             }
             span_types[st] = dict(w.span_type_counts)
+        n_spans = len(self.spans or ())
+        if self.spans is None and self._woven is not None:
+            n_spans = self._woven.n_spans
         return {
             "state": "done" if self._finished else "running",
             "pipelines": pipelines,
             "context": self.context.stats(),
             "finalize": dict(self.finalize_stats),
-            "spans": len(self.spans or ()),
+            "spans": n_spans,
             "span_types": span_types,
         }
 
@@ -565,11 +943,12 @@ class StreamingWeaver:
         per-record ``events_in`` bookkeeping; fold the batch tallies in
         (the net weaver emits exactly one span type)."""
         self.events_in["net"] = self._net_count[0]
-        if w.spans:
-            w.span_type_counts["LinkTransfer"] = len(w.spans)
+        n = len(self._net_builder) if self.columnar and self._net_builder else len(w.spans)
+        if n:
+            w.span_type_counts["LinkTransfer"] = n
 
 
-def _remap_and_unify(spans: List[Span], span_off: Sequence[int], trace_off: Sequence[int]) -> None:
+def _remap_and_unify(spans: List[Span], span_off: Sequence[int], trace_off: Sequence[int]) -> Dict[int, int]:
     """Renumber tagged ids into the sequential weave's dense blocks AND
     unify trace ids through the parent graph, in one rewrite.
 
@@ -579,7 +958,11 @@ def _remap_and_unify(spans: List[Span], span_off: Sequence[int], trace_off: Sequ
     bijection, so chains resolve identically) and every SpanContext is
     rebuilt exactly once with both the final ids and the unified trace.
     Mirrors unify's edge semantics: a parent whose span was never woven
-    keeps its own (remapped) trace id, and chain walks cap at 10k hops."""
+    keeps its own (remapped) trace id, and chain walks cap at 10k hops.
+
+    Returns the ``tagged span id -> tagged unified trace id`` root map so
+    the columnar finish can resolve net-row parents against it without
+    re-walking the graph."""
     SC = SpanContext
     BITS = _TAG_BITS
     MASK = _TAG_MASK
@@ -633,6 +1016,7 @@ def _remap_and_unify(spans: List[Span], span_off: Sequence[int], trace_off: Sequ
                 lsid = l.span_id
                 links[i] = SC((t & MASK) + trace_off[t >> BITS],
                               (lsid & MASK) + span_off[lsid >> BITS])
+    return root
 
 
 def _sort_spans(spans: List[Span]) -> None:
@@ -653,6 +1037,129 @@ def _sort_spans(spans: List[Span]) -> None:
         spans[:] = [spans[i] for i in order.tolist()]
     else:
         spans.sort(key=lambda s: (s.context.trace_id, s.start, s.context.span_id))
+
+
+def _coerced_net_attrs(chunk, size, meta, _cv=coerce_value, _NUM=_NUM_LEAD):
+    """The object net path's attrs dict ({chunk, size, **coerced meta}),
+    built on demand at materialize time instead of per record."""
+    attrs = {"chunk": chunk, "size": size}
+    for k, v in meta.items():
+        t = type(v)
+        if t is int or (t is str and (not v or v[0] not in _NUM)):
+            attrs[k] = v
+        else:
+            attrs[k] = _cv(v)
+    return attrs
+
+
+class WovenColumns:
+    """A finished columnar weave: sorted object-path spans (host/device —
+    the minority) plus the net rows still in column form, joined by one
+    merged canonical ``(trace_id, start, span_id)`` order.
+
+    The array-native consumers never leave this representation:
+    :meth:`render_jsonl` streams byte-identical SpanJSONL straight from
+    the arrays (``core.exporters.render_woven_jsonl``) and
+    :meth:`span_columns` builds the analysis :class:`SpanColumns` without
+    a Span round-trip.  :meth:`to_spans` materializes the full Span list
+    (cached, and published as ``weaver.spans``) for graph-walking
+    consumers — diagnose, Chrome export, ad-hoc inspection."""
+
+    __slots__ = ("weaver", "obj_spans", "nb", "order", "net_tids",
+                 "net_psids", "net_s0", "net_t0", "n_net", "_spans",
+                 "_span_cols")
+
+    def __init__(self, weaver, obj_spans, nb, order, net_tids, net_psids,
+                 net_s0, net_t0):
+        self.weaver = weaver
+        self.obj_spans = obj_spans
+        self.nb = nb
+        self.order = order
+        self.net_tids = net_tids
+        self.net_psids = net_psids
+        self.net_s0 = net_s0
+        self.net_t0 = net_t0
+        self.n_net = len(nb)
+        self._spans = None
+        self._span_cols = None
+
+    @property
+    def n_spans(self) -> int:
+        return len(self.obj_spans) + self.n_net
+
+    def render_jsonl(self, path_or_stream, flush_every: int = 1024) -> int:
+        """Stream the canonical SpanJSONL artifact from the arrays —
+        byte-identical to ``SpanJSONLExporter`` over :meth:`to_spans`,
+        without materializing the net spans.  Returns spans written."""
+        from .exporters import render_woven_jsonl
+
+        return render_woven_jsonl(self, path_or_stream, flush_every=flush_every)
+
+    def span_columns(self):
+        """The analysis :class:`SpanColumns`, built array-to-array (net
+        durations/codes come straight from the emit-time builders)."""
+        if self._span_cols is None:
+            from .analysis import SpanColumns
+
+            self._span_cols = SpanColumns.from_woven(self)
+        return self._span_cols
+
+    def to_spans(self) -> List[Span]:
+        """Materialize the merged Span list (cached).  Bit-for-bit the
+        object path's output: same contexts, parents, attr dict order,
+        events, and canonical ordering."""
+        if self._spans is not None:
+            return self._spans
+        nb = self.nb
+        n = self.n_net
+        m = len(self.obj_spans)
+        SC = SpanContext
+        ev_by_row: Dict[int, list] = {}
+        for row, ts, kind, size, meta in nb.events:
+            ev_by_row.setdefault(row, []).append((ts, kind, size, meta))
+        net_spans: List[Optional[Span]] = [None] * n
+        starts = nb.starts
+        ends = nb.ends
+        chunks = nb.chunks
+        sizes = nb.sizes
+        metas = nb.metas
+        pool = nb.comp_pool
+        codes = nb.comp_codes
+        tids = self.net_tids
+        psids = self.net_psids
+        unclosed = nb.unclosed
+        s0 = self.net_s0
+        for i in range(n):
+            chunk = chunks[i]
+            attrs = _coerced_net_attrs(chunk, sizes[i], metas[i])
+            for ch in nb.xorders[i]:
+                if ch == "q":
+                    attrs["queue_ps"] = nb.queues[i]
+                else:
+                    attrs["drops"] = nb.drops[i]
+            if i in unclosed:
+                attrs["unclosed"] = True
+            tid = tids[i]
+            psid = psids[i]
+            sp = Span(name="LinkTransfer", start=starts[i], end=ends[i],
+                      context=SC(tid, s0 + i + 1),
+                      parent=SC(tid, psid) if psid >= 0 else None,
+                      component=pool[codes[i]], sim_type="net", attrs=attrs)
+            evs = ev_by_row.get(i)
+            if evs is not None:
+                sp.events = [
+                    (ts, kind, _coerced_net_attrs(chunk, esize, emeta))
+                    for ts, kind, esize, emeta in evs
+                ]
+            net_spans[i] = sp
+        order = self.order
+        if not isinstance(order, list):
+            order = order.tolist()
+        obj = self.obj_spans
+        merged = [obj[j] if j < m else net_spans[j - m] for j in order]
+        self._spans = merged
+        self.weaver.spans = merged
+        return merged
 
 
 class InlineTraceSession:

@@ -52,14 +52,17 @@ formatted or re-parsed).  Output bytes are identical — only faster:
 
 ``--weave inline`` goes one step further: spans assemble *while the
 kernel runs* (``core.streaming.StreamingWeaver`` — no format, no parse,
-no post-hoc weave pass), and ``--weave sharded`` adds a ``--jobs``-way
-parallel export merged back in canonical order.  All three modes produce
-byte-identical SpanJSONL (the golden-equivalence harness in
-``tests/test_streaming_weave.py`` holds them to it):
+no post-hoc weave pass), ``--weave sharded`` adds a ``--jobs``-way
+parallel export merged back in canonical order, and ``--weave columnar``
+keeps the dominant net records in column arrays end to end (no Span
+objects on the hot path, JSONL rendered straight from the arrays).  All
+modes produce byte-identical SpanJSONL (the golden-equivalence harness
+in ``tests/test_streaming_weave.py`` holds them to it):
 
 ``python -m repro.launch.trace --scenario throttled_chip --weave inline``
 ``python -m repro.launch.trace --scenario lossy_dcn --weave sharded --jobs 4``
-``python -m repro.launch.trace --sweep --weave inline --jobs 8``
+``python -m repro.launch.trace --scenario degraded_ici_link --weave columnar``
+``python -m repro.launch.trace --sweep --weave columnar --jobs 8``
 """
 import argparse
 import fnmatch
@@ -178,9 +181,10 @@ def _run_scenario(args) -> None:
         # critical path + diagnose() on its trace alone
         print("[trace] " + request_report(run.spans).replace("\n", "\n[trace] "))
     logs = ("structured fast path, no logs" if args.structured
-            else f"woven inline ({args.weave}), no logs"
+            else "woven in-sim, no logs"
             if args.weave != "post" else f"logs in {base}.logs/")
-    print(f"[trace] exported {base}.chrome.json + .spans.jsonl ({logs})")
+    print(f"[trace] exported {base}.chrome.json + .spans.jsonl "
+          f"(weave={args.weave}, {logs})")
     if not run.ok:
         raise SystemExit(1)
 
@@ -304,15 +308,25 @@ def main() -> None:
                          "straight to the weavers (identical output, no text "
                          "log round-trip)")
     ap.add_argument("--weave", default="post",
-                    choices=("post", "inline", "sharded"),
                     help="span assembly: 'post' weaves after the run (default), "
                          "'inline' weaves during it (streaming weaver), "
-                         "'sharded' adds --jobs-way parallel export; all "
-                         "modes emit byte-identical SpanJSONL")
+                         "'sharded' adds --jobs-way parallel export, "
+                         "'columnar' keeps net records in column arrays end "
+                         "to end; all modes emit byte-identical SpanJSONL")
     ap.add_argument("--outdir", default="results/traces")
     ap.add_argument("--dryrun-dir", default="results/dryrun")
     args = ap.parse_args()
 
+    from ..sim.scenarios import WEAVE_MODES
+
+    if args.weave not in WEAVE_MODES:
+        # one typed, self-describing rejection instead of a KeyError deep
+        # in the weave plumbing (argparse choices would catch the CLI case
+        # but not programmatic callers of main())
+        raise SystemExit(
+            f"unknown --weave mode {args.weave!r}; valid modes: "
+            f"{', '.join(WEAVE_MODES)}"
+        )
     if args.weave != "post" and args.structured:
         raise SystemExit(
             f"--structured is the post-hoc zero-parse path; --weave "
@@ -417,10 +431,10 @@ def main() -> None:
     logdir = os.path.join(args.outdir, f"{args.arch}.{args.shape}.logs")
     scale = {args.slow_chip: args.slow_factor} if args.slow_chip else None
     sink = None
-    if args.weave == "inline":
+    if args.weave in ("inline", "columnar"):
         from ..core.streaming import StreamingWeaver
 
-        sink = StreamingWeaver()
+        sink = StreamingWeaver(columnar=(args.weave == "columnar"))
     cluster = run_training_sim(
         program, n_steps=args.steps, n_pods=args.pods,
         chips_per_pod=args.chips_per_pod,
@@ -432,7 +446,7 @@ def main() -> None:
           f"-> {cluster.sim.events_executed} DES events, "
           f"virtual time {cluster.sim.now/1e12:.3f}s"
           + (" [structured fast path]" if args.structured else "")
-          + (" [inline weave]" if sink is not None else ""))
+          + (f" [{args.weave} weave]" if sink is not None else ""))
 
     # -- Columbo: declarative spec over the tagged simulator logs (or, on the
     # fast path, over the structured event streams the sims captured; on the
@@ -447,8 +461,16 @@ def main() -> None:
     if sink is not None:
         from ..core.session import stream_to
 
-        spans = sink.finish()
-        stream_to(spans, exporters)
+        if args.weave == "columnar":
+            # the .spans.jsonl artifact renders array-natively; the other
+            # formats walk Span objects, so materialize for them
+            woven = sink.finish_columns()
+            woven.render_jsonl(base + ".spans.jsonl")
+            spans = woven.to_spans()
+            stream_to(spans, exporters[:-1])
+        else:
+            spans = sink.finish()
+            stream_to(spans, exporters)
     else:
         if args.structured:
             sources = [

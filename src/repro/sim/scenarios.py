@@ -56,6 +56,10 @@ from .topology import scale
 from .workload import ProgramSpec, Workload, make_workload, synthetic_program
 from .workloads.rpc import rpc_handler_program
 
+# the span-assembly modes ScenarioSpec.run / run_sweep / the trace CLI
+# accept — the single source of truth callers validate against
+WEAVE_MODES: Tuple[str, ...] = ("post", "inline", "sharded", "columnar")
+
 PS_PER_MS = 1_000_000_000
 
 
@@ -224,6 +228,11 @@ class ScenarioSpec:
           ``trace_id % jobs`` shards, merged back in canonical order via
           :func:`~repro.core.exporters.merge_span_jsonl`.  Byte-identical
           to serial for any ``jobs``.
+        * ``"columnar"`` — inline weave with the net stream (the dominant
+          record class) kept in column arrays end to end: no Span objects
+          on the hot path, vectorized finish, SpanJSONL rendered straight
+          from the arrays (byte-identical again); Span objects
+          materialize lazily only for diagnose and extra exporters.
 
         Any extra keyword argument must name a :class:`ScenarioSpec` field
         (``run(workload="rpc")``, ``run(n_pods=4)``): it overrides that
@@ -234,16 +243,16 @@ class ScenarioSpec:
         from ..core import SourceSpec, SpanJSONLExporter, TraceSpec, reset_ids
         from ..core.analysis import diagnose
 
-        if weave not in ("post", "inline", "sharded"):
+        if weave not in WEAVE_MODES:
             raise ValueError(
-                f"unknown weave mode {weave!r}; expected 'post', 'inline', "
-                f"or 'sharded'"
+                f"unknown weave mode {weave!r}; expected one of "
+                f"{', '.join(repr(m) for m in WEAVE_MODES)}"
             )
         if weave != "post" and structured:
             raise ValueError(
                 "structured=True is a post-hoc capture mode; it cannot be "
-                "combined with weave='inline'/'sharded' (inline weaving "
-                "keeps no record buffer to replay)"
+                "combined with weave='inline'/'sharded'/'columnar' (inline "
+                "weaving keeps no record buffer to replay)"
             )
         if weave != "post" and outdir is not None:
             raise ValueError(
@@ -299,14 +308,24 @@ class ScenarioSpec:
             from ..core.session import stream_to
             from ..core.streaming import InlineTraceSession, StreamingWeaver
 
-            sw = StreamingWeaver()
+            sw = StreamingWeaver(columnar=(weave == "columnar"))
             cluster = self.simulate(None, seed=plan.seed, sink=sw)
-            spans = sw.finish()
             session = InlineTraceSession(sw)
             buf = io.StringIO()
-            if weave == "inline":
+            if weave == "columnar":
+                # render JSONL array-native; Span objects materialize only
+                # because diagnose() below walks the graph (and for any
+                # extra exporters)
+                woven = sw.finish_columns()
+                woven.render_jsonl(buf)
+                spans = woven.to_spans()
+                if exporters:
+                    stream_to(spans, exporters)
+            elif weave == "inline":
+                spans = sw.finish()
                 stream_to(spans, (SpanJSONLExporter(buf), *exporters))
             else:
+                spans = sw.finish()
                 self._export_sharded(spans, plan.seed, jobs, buf)
                 if exporters:
                     stream_to(spans, exporters)
@@ -397,8 +416,11 @@ class ScenarioSpec:
                 _export_shard(spans, jobs, 0, paths[0])
             merged = os.path.join(td, "merged.jsonl")
             merge_span_jsonl(paths, merged, disambiguate=False)
+            # chunked copy: never hold the merged file in memory at once
+            import shutil
+
             with open(merged) as f:
-                buf.write(f.read())
+                shutil.copyfileobj(f, buf, 1 << 20)
 
 
 def _export_shard(spans, n_shards: int, shard: int, path: str) -> None:

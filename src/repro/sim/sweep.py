@@ -153,9 +153,11 @@ def _run_cell(
     random draw inside comes from the cell's seeded fault plan, workload,
     and mitigation streams, so the result is independent of which worker
     runs it.  ``structured`` cells take the zero-parse fast path;
-    ``weave="inline"`` cells assemble spans during the simulation and
-    reduce them through the columnar ``RunStats.from_columns`` path; shard
-    bytes are identical whichever path ran.
+    ``weave="inline"``/``"columnar"`` cells assemble spans during the
+    simulation and reduce them through the columnar
+    ``RunStats.from_columns`` path (columnar cells build the columns at
+    emit, no Span round-trip for the reduction); shard bytes are
+    identical whichever path ran.
     """
     from ..core.analysis import RunStats
 
@@ -354,22 +356,24 @@ def run_sweep(
     flag is pure execution policy, recorded in ``sweep.json`` for audit.
     ``weave="inline"`` goes further: each cell's spans assemble *during*
     its simulation (``core.streaming.StreamingWeaver``) and reduce through
-    the columnar analysis path — still byte-identical shards.  The
-    ``"sharded"`` mode is per-run export parallelism and would fight the
-    sweep's own per-cell workers, so it is rejected here.
+    the columnar analysis path — still byte-identical shards.
+    ``weave="columnar"`` keeps the net span records in column arrays end
+    to end and renders each cell's shard array-natively — byte-identical
+    again.  The ``"sharded"`` mode is per-run export parallelism and would
+    fight the sweep's own per-cell workers, so it is rejected here.
     """
     from ..core.analysis import RunStats
 
-    if weave not in ("post", "inline"):
+    if weave not in ("post", "inline", "columnar"):
         raise ValueError(
-            f"run_sweep weave must be 'post' or 'inline', got {weave!r} "
-            f"(sharded export parallelizes a single run; a sweep already "
-            f"parallelizes across cells via jobs=)"
+            f"run_sweep weave must be 'post', 'inline', or 'columnar', got "
+            f"{weave!r} (sharded export parallelizes a single run; a sweep "
+            f"already parallelizes across cells via jobs=)"
         )
-    if weave == "inline" and structured:
+    if weave != "post" and structured:
         raise ValueError(
-            "structured=True is the post-hoc fast path; weave='inline' "
-            "replaces it (pick one)"
+            "structured=True is the post-hoc fast path; "
+            "weave='inline'/'columnar' replaces it (pick one)"
         )
     os.makedirs(os.path.join(outdir, "shards"), exist_ok=True)
     work = [

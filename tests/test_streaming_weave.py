@@ -30,7 +30,7 @@ from repro.core.events import (
     RetransmitBegin,
     RetransmitEnd,
 )
-from repro.core.exporters import SpanJSONLExporter
+from repro.core.exporters import SpanJSONLExporter, merge_span_jsonl
 from repro.core.session import stream_to
 from repro.core.streaming import StreamingWeaver
 from repro.core.weaver import HostSpanWeaver, LateEventWarning, NetSpanWeaver
@@ -426,3 +426,164 @@ def test_columns_small_and_empty_inputs():
 def test_from_columns_requires_detected_or_spans():
     with pytest.raises(ValueError, match="detected"):
         RunStats.from_columns(SpanColumns([]))
+
+
+# ---------------------------------------------------------------------------
+# Columnar emit: builder arrays end to end, byte-identical everywhere
+# ---------------------------------------------------------------------------
+
+
+def _columnar_equals_post(spec, seed: int) -> None:
+    post = spec.run(seed=seed, structured=True).span_jsonl
+    col = spec.run(seed=seed, weave="columnar").span_jsonl
+    assert col == post, (
+        f"{spec.name} seed={seed}: columnar SpanJSONL differs from post-hoc "
+        f"({len(col)} vs {len(post)} bytes)"
+    )
+
+
+@pytest.mark.parametrize("fname", GOLDENS)
+def test_columnar_weave_matches_committed_golden(fname):
+    """The columnar tentpole contract: span fields appended straight into
+    builder arrays at emit, JSONL rendered from the arrays — and the bytes
+    still match the committed golden artifact."""
+    scenario, seed = _parse_golden_name(fname)
+    with gzip.open(os.path.join(GOLDEN_DIR, fname), "rt") as f:
+        golden = f.read()
+    got = get_scenario(scenario).run(seed=seed, weave="columnar").span_jsonl
+    assert got == golden, f"columnar weave diverged from golden {fname}"
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_columnar_matches_post_hoc_per_scenario(scenario):
+    """Every curated scenario, pinned workload/mitigation, seed 0."""
+    _columnar_equals_post(get_scenario(scenario), seed=0)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**16 - 1))
+@settings(max_examples=5, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow]
+          if hasattr(HealthCheck, "too_slow") else [])
+def test_property_columnar_equals_inline_equals_post_any_seed(seed):
+    """For any seed and every workload type, the three weave paths render
+    the same bytes: columnar == inline == post-hoc."""
+    for workload in MATRIX_WORKLOADS:
+        spec = _axis_spec("degraded_ici_link", workload)
+        post = spec.run(seed=seed, structured=True).span_jsonl
+        inline = spec.run(seed=seed, weave="inline").span_jsonl
+        col = spec.run(seed=seed, weave="columnar").span_jsonl
+        assert inline == post, f"{workload} seed={seed}: inline != post"
+        assert col == post, f"{workload} seed={seed}: columnar != post"
+
+
+def test_columnar_spans_identical_to_inline():
+    """to_spans() materialization reproduces the inline object path's Span
+    list exactly — contexts, parents, attrs, events, merged order."""
+    spec = get_scenario("link_loss_rpc")
+    inline = spec.run(seed=1, weave="inline").spans
+    col = spec.run(seed=1, weave="columnar").spans
+    assert col == inline
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_columnar_span_columns_bitwise_matches_object_build(scenario):
+    """SpanColumns built from the woven arrays (no Span round-trip) must be
+    bit-identical to the object-loop build over the materialized spans:
+    same codes, same pools, same float bits."""
+    import struct
+
+    run = get_scenario(scenario).run(seed=0, weave="columnar")
+    a = run.session.columns()      # array-native: SpanColumns.from_woven
+    b = SpanColumns(run.spans)     # reference: per-span python loop
+    assert a.n_spans == b.n_spans
+    assert a.keys == b.keys
+    assert list(a.key_codes) == list(b.key_codes)
+    assert list(a.dur_ps) == list(b.dur_ps)
+    assert list(a.request_idx) == list(b.request_idx)
+    pack = struct.Struct("<d").pack
+    assert [pack(v) for v in a.mitigation_us] == [pack(v) for v in b.mitigation_us]
+    assert pack(a.mitigation_penalty) == pack(b.mitigation_penalty)
+
+
+def test_columnar_run_stats_identical_to_from_spans():
+    """RunStats.from_columns over the columnar-emit SpanColumns reproduces
+    from_spans exactly — same float bits, same dict ordering — on a
+    mitigated run (penalty accumulation + request pools exercised)."""
+    spec = get_scenario("link_loss_rpc")
+    run = spec.run(seed=1, weave="columnar")
+    kw = dict(scenario=spec.name, seed=1, expected=spec.expected_classes,
+              detected=run.detected, findings=run.diagnosis.findings,
+              late_events=run.session.late_events)
+    a = RunStats.from_spans(run.spans, **kw)
+    b = RunStats.from_columns(run.session.columns(), spans=run.spans, **kw)
+    assert a == b
+    assert list(a.component_us) == list(b.component_us)  # dict order too
+
+
+def test_columnar_mode_rejects_live_exporters():
+    sw = StreamingWeaver(columnar=True)
+    with pytest.raises(RuntimeError, match="columnar"):
+        sw.add_live_exporter(_RecordingExporter())
+
+
+def test_finish_columns_requires_columnar_mode():
+    with pytest.raises(RuntimeError, match="columnar=True"):
+        StreamingWeaver().finish_columns()
+
+
+def test_unknown_weave_mode_raises_typed():
+    with pytest.raises(ValueError, match="post.*inline.*sharded.*columnar"):
+        get_scenario("healthy_baseline").run(seed=0, weave="zigzag")
+
+
+# ---------------------------------------------------------------------------
+# Shard merge: streaming, bytes invariant to shard count
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 5, 8])
+def test_merge_span_jsonl_bytes_invariant_to_shard_count(n_shards, tmp_path):
+    """Splitting one export into any number of shards and streaming-merging
+    them back must reproduce the serial bytes exactly (ids already share
+    one space, so no disambiguation)."""
+    serial = get_scenario("lossy_dcn").run(seed=2, weave="inline").span_jsonl
+    lines = serial.splitlines()
+    paths = []
+    for i in range(n_shards):
+        p = tmp_path / f"shard{i}.jsonl"
+        p.write_text("".join(ln + "\n" for ln in lines[i::n_shards]))
+        paths.append(str(p))
+    out = tmp_path / "merged.jsonl"
+    n = merge_span_jsonl(paths, str(out), disambiguate=False)
+    assert n == len(lines)
+    assert out.read_text() == serial
+
+
+def test_merge_span_jsonl_disambiguates_colliding_id_spaces(tmp_path):
+    """Two shards carrying the *same* run (the sweep case: every cell
+    resets the id counters) must come out with disjoint id spaces —
+    shard index in the top 8 hex digits, parents and links rewritten to
+    match — and still parse as JSON."""
+    import json as _json
+
+    serial = get_scenario("lossy_dcn").run(seed=2, weave="inline").span_jsonl
+    paths = []
+    for i in range(2):
+        p = tmp_path / f"cell{i}.jsonl"
+        p.write_text(serial)
+        paths.append(str(p))
+    out = tmp_path / "merged.jsonl"
+    n_lines = len(serial.splitlines())
+    assert merge_span_jsonl(paths, str(out)) == 2 * n_lines
+    seen = set()
+    spans_by_trace_prefix = {0: 0, 1: 0}
+    with open(out) as f:
+        for line in f:
+            r = _json.loads(line)
+            seen.add((r["trace_id"], r["span_id"]))
+            shard = int(r["trace_id"][:8], 16)
+            spans_by_trace_prefix[shard] += 1
+            if r["parent_id"] is not None:
+                assert int(r["parent_id"][:8], 16) == shard  # rewritten too
+    assert len(seen) == 2 * n_lines, "ids still collide after disambiguation"
+    assert spans_by_trace_prefix[0] == spans_by_trace_prefix[1] == n_lines

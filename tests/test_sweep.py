@@ -412,7 +412,7 @@ def _load_engine_bench():
 
 
 def _validate_bench_payload(payload):
-    assert payload["schema"] == "columbo.engine_bench/v5"
+    assert payload["schema"] == "columbo.engine_bench/v6"
     assert isinstance(payload["smoke"], bool)
     assert {"python", "platform"} <= set(payload["host"])
     k = payload["kernel"]
@@ -425,22 +425,27 @@ def _validate_bench_payload(payload):
     assert payload["pipeline"], "needs at least one per-stage pipeline row"
     for row in payload["pipeline"]:
         assert {"pods", "chips", "events", "log_lines", "parsed_events", "spans",
-                "stages_s", "inline_stages_s", "full_sim_events_per_sec",
-                "end_to_end_events_per_sec", "full_sim_speedup",
-                "end_to_end_speedup", "inline_speedup"} <= set(row)
+                "stages_s", "inline_stages_s", "columnar_stages_s",
+                "full_sim_events_per_sec", "end_to_end_events_per_sec",
+                "full_sim_speedup", "end_to_end_speedup", "inline_speedup",
+                "columnar_speedup"} <= set(row)
         assert set(row["stages_s"]) == {
             "simulate", "format", "parse", "weave", "inline_weave",
-            "export", "analyze"
+            "columnar_weave", "export", "analyze"
         }
         assert all(v >= 0 for v in row["stages_s"].values())
         assert set(row["inline_stages_s"]) == {
             "sim_weave", "finish", "export", "analyze"
         }
         assert all(v >= 0 for v in row["inline_stages_s"].values())
+        assert set(row["columnar_stages_s"]) == {
+            "sim_weave", "finish", "export", "analyze"
+        }
+        assert all(v >= 0 for v in row["columnar_stages_s"].values())
         assert set(row["full_sim_events_per_sec"]) == {"text", "structured"}
         assert all(v > 0 for v in row["full_sim_events_per_sec"].values())
         ee = row["end_to_end_events_per_sec"]
-        assert set(ee) == {"text", "structured", "inline"}
+        assert set(ee) == {"text", "structured", "inline", "columnar"}
         assert all(v > 0 for v in ee.values())
         # the parse stage consumes the rendered text lines: every line
         # except the per-writer "# columbo" headers parses into an event
@@ -504,6 +509,13 @@ def test_committed_bench_json_is_valid():
         assert ee["inline"] >= ee["structured"], (
             f"pods={pods}: recorded inline e2e {ee['inline']} ev/s below "
             f"structured {ee['structured']} ev/s"
+        )
+        # columnar emit must in turn beat the inline object path on every
+        # recorded row: it skips Span construction for every net span and
+        # renders JSONL straight from the arrays
+        assert ee["columnar"] >= ee["inline"], (
+            f"pods={pods}: recorded columnar e2e {ee['columnar']} ev/s below "
+            f"inline {ee['inline']} ev/s"
         )
 
 
