@@ -38,11 +38,22 @@ Six measurements, smallest to largest scope:
                   entirely; ``do_nothing`` is asserted to stay within 10%
                   of the unmitigated rate (the subsystem must be free when
                   nothing fires).
+* ``saturation`` — the rpc serving engine at scale: open-loop Poisson
+                  arrivals at 2M req/s into a 256-pod fleet (12,000
+                  requests), one row per registered load-balancing policy
+                  (``sim/workloads/lb.py``) plus a bounded row
+                  (``queue_depth`` + timeout + retries exercising the
+                  drop/retry machinery).  Every row asserts exact request
+                  conservation (issued == completed + dropped +
+                  timed_out) and the unbounded rows assert the fleet
+                  sustains >= 10,000 concurrent in-flight span trees;
+                  reported: goodput, requests/s, events/s and the
+                  completed-request latency tail (p50/p99/p99.9).
 * ``sweep``     — end-to-end ``(scenario, seed)`` sweep wall-time at
                   ``--jobs 1/4/8`` (simulate + weave + diagnose + shards),
                   now served by the persistent warm worker pool.
 
-Results land in ``BENCH_engine.json`` (schema ``columbo.engine_bench/v6``,
+Results land in ``BENCH_engine.json`` (schema ``columbo.engine_bench/v7``,
 validated in ``tests/test_sweep.py``); the recorded baseline and the exact
 reproduction commands live in ``docs/performance.md``.
 
@@ -60,7 +71,7 @@ import sys
 import tempfile
 import time
 
-SCHEMA = "columbo.engine_bench/v6"
+SCHEMA = "columbo.engine_bench/v7"
 
 SMOKE_TOPOLOGY_PODS = (4, 8)
 FULL_TOPOLOGY_PODS = (8, 64, 256)
@@ -71,6 +82,10 @@ FULL_WORKLOAD_PODS = (8, 64, 256)
 SMOKE_MITIGATION_PODS = 4
 FULL_MITIGATION_PODS = 128
 MITIGATION_SCENARIO = "link_loss_rpc"
+SMOKE_SATURATION = dict(pods=8, n_requests=200, rate_rps=200_000.0,
+                        min_in_flight=0)
+FULL_SATURATION = dict(pods=256, n_requests=12_000, rate_rps=2_000_000.0,
+                       min_in_flight=10_000)
 
 STAGES = ("simulate", "format", "parse", "weave", "inline_weave",
           "columnar_weave", "export", "analyze")
@@ -558,6 +573,99 @@ def bench_mitigations(pods: int = FULL_MITIGATION_PODS, trials: int = 5) -> dict
     return {"scenario": MITIGATION_SCENARIO, "pods": pods, "rows": rows}
 
 
+def bench_saturation(pods: int = 256, chips_per_pod: int = 2,
+                     n_requests: int = 12_000, rate_rps: float = 2_000_000.0,
+                     min_in_flight: int = 10_000) -> dict:
+    """The rpc serving engine under open-loop saturation at fleet scale.
+
+    One row per registered load-balancing policy with unbounded backend
+    queues (pure saturation: the Poisson arrival rate far outruns service,
+    so in-flight request count climbs toward ``n_requests`` — the row
+    asserts the fleet sustains at least ``min_in_flight`` concurrent
+    in-flight span trees), plus one *bounded* row (``queue_depth`` +
+    per-request timeout + retries) exercising the drop/retry machinery at
+    the same scale.  Every row asserts exact request conservation —
+    ``issued == completed + dropped + timed_out`` with every request
+    reaching exactly one terminal outcome — and reports goodput,
+    requests/s, events/s and the completed-request latency tail straight
+    off the workload's outcome accounting (no weave on the timed path)."""
+    from repro.core.analysis import percentiles
+    from repro.sim.cluster import ClusterOrchestrator
+    from repro.sim.topology import scale
+    from repro.sim.workload import make_workload
+    from repro.sim.workloads.rpc import rpc_handler_program
+
+    configs = [
+        dict(lb=name, queue_depth=None, timeout_ps=None, max_retries=0)
+        for name in ("round_robin", "least_loaded", "power_of_two_choices")
+    ]
+    configs.append(dict(lb="least_loaded", queue_depth=4,
+                        timeout_ps=20_000_000_000, max_retries=2))
+    rows = []
+    for cfg in configs:
+        bounded = cfg["queue_depth"] is not None
+        wl = make_workload(
+            "rpc", program=rpc_handler_program(), clock_reads=2, seed=0,
+            n_requests=n_requests, arrival="open", rate_rps=rate_rps, **cfg,
+        )
+        gc.collect()
+        t0 = time.perf_counter()
+        cluster = ClusterOrchestrator(scale(pods=pods, chips_per_pod=chips_per_pod))
+        wl.drive(cluster)
+        cluster.run()
+        wall = time.perf_counter() - t0
+        out = wl.outcomes
+        issued = out["issued"]
+        terminal = out["completed"] + out["dropped"] + out["timed_out"]
+        assert issued == terminal == n_requests, (
+            f"lb={cfg['lb']} bounded={bounded}: conservation violated — "
+            f"issued={issued} vs completed+dropped+timed_out={terminal} "
+            f"(expected {n_requests})"
+        )
+        if not bounded and out["max_in_flight"] < min_in_flight:
+            raise AssertionError(
+                f"lb={cfg['lb']}: peak in-flight {out['max_in_flight']} "
+                f"< required {min_in_flight} — the open-loop saturation "
+                f"regime did not materialize"
+            )
+        lat = sorted(out["lat_ps"])
+        p50, p99, p999 = percentiles(lat, (50.0, 99.0, 99.9))
+        ev = cluster.sim.events_executed
+        rows.append({
+            "lb": cfg["lb"],
+            "queue_depth": cfg["queue_depth"],
+            "timeout_us": (cfg["timeout_ps"] / 1e6
+                           if cfg["timeout_ps"] is not None else None),
+            "max_retries": cfg["max_retries"],
+            "issued": issued,
+            "completed": out["completed"],
+            "dropped": out["dropped"],
+            "timed_out": out["timed_out"],
+            "retries": out["retries"],
+            "max_in_flight": out["max_in_flight"],
+            "goodput": round(out["completed"] / issued, 4) if issued else 0.0,
+            "events": ev,
+            "wall_s": round(wall, 3),
+            "events_per_sec": round(ev / wall) if wall else 0,
+            "requests_per_sec": round(issued / wall) if wall else 0,
+            "latency_us": {
+                "p50": round(p50 / 1e6, 1),
+                "p99": round(p99 / 1e6, 1),
+                "p99.9": round(p999 / 1e6, 1),
+                "max": round(lat[-1] / 1e6, 1) if lat else 0.0,
+            },
+        })
+        del cluster, wl
+    return {
+        "pods": pods,
+        "chips": pods * chips_per_pod,
+        "n_requests": n_requests,
+        "rate_rps": rate_rps,
+        "min_in_flight": min_in_flight,
+        "rows": rows,
+    }
+
+
 def bench_sweep(jobs_list=(1, 4, 8), scenarios=None, seeds=(0, 1, 2, 3),
                 **overrides) -> dict:
     """End-to-end sweep wall-time per ``--jobs`` setting (same grid each
@@ -603,6 +711,7 @@ def collect(smoke: bool = False, jobs_list=(1, 4, 8)) -> dict:
         # runs on sub-10ms walls here, where a single-shot measurement
         # flakes on any scheduler blip; best-of-3 keeps the bound honest
         mitigations = bench_mitigations(SMOKE_MITIGATION_PODS, trials=3)
+        saturation = bench_saturation(**SMOKE_SATURATION)
         sweep = bench_sweep(jobs_list=(1, 2),
                             scenarios=("healthy_baseline", "throttled_chip"),
                             seeds=(0,))
@@ -617,6 +726,8 @@ def collect(smoke: bool = False, jobs_list=(1, 4, 8)) -> dict:
         gc.collect()
         mitigations = bench_mitigations()
         gc.collect()
+        saturation = bench_saturation(**FULL_SATURATION)
+        gc.collect()
         sweep = bench_sweep(jobs_list=jobs_list, n_pods=4, n_steps=3)
     return {
         "schema": SCHEMA,
@@ -630,6 +741,7 @@ def collect(smoke: bool = False, jobs_list=(1, 4, 8)) -> dict:
         "pipeline": pipeline,
         "workloads": workloads,
         "mitigations": mitigations,
+        "saturation": saturation,
         "sweep": sweep,
     }
 
@@ -667,6 +779,13 @@ def run():
                row["wall_s"] * 1e6,
                f"{row['events_per_sec']}ev/s "
                f"{row['overhead_vs_unmitigated']}x")
+    for row in payload["saturation"]["rows"]:
+        kind = "bounded" if row["queue_depth"] is not None else "open"
+        yield (f"engine.saturation.{row['lb']}.{kind}",
+               row["wall_s"] * 1e6,
+               f"{row['requests_per_sec']}req/s "
+               f"goodput={row['goodput']} "
+               f"inflight<={row['max_in_flight']}")
     for jobs, wall in payload["sweep"]["wall_s_by_jobs"].items():
         yield (f"engine.sweep.jobs{jobs}", wall * 1e6,
                f"{payload['sweep']['cells']}cells")
@@ -717,6 +836,18 @@ def main() -> None:
               f"{row['events']:>8,} events in {row['wall_s']:>7.4f}s "
               f"-> {row['events_per_sec']:,} ev/s "
               f"({row['overhead_vs_unmitigated']}x unmitigated)")
+    sat = payload["saturation"]
+    for row in sat["rows"]:
+        q = (f"q={row['queue_depth']}" if row["queue_depth"] is not None
+             else "unbounded")
+        lt = row["latency_us"]
+        print(f"[engine_bench] saturation lb={row['lb']:<22s} {q:<10s} "
+              f"({sat['pods']} pods, {sat['rate_rps']:.0f} rps) "
+              f"{row['completed']}/{row['issued']} ok "
+              f"drop={row['dropped']} timeout={row['timed_out']} "
+              f"inflight<={row['max_in_flight']} "
+              f"p50={lt['p50']}us p99.9={lt['p99.9']}us "
+              f"-> {row['requests_per_sec']:,} req/s")
     for jobs, wall in payload["sweep"]["wall_s_by_jobs"].items():
         print(f"[engine_bench] sweep jobs={jobs}: {wall}s "
               f"({payload['sweep']['cells']} cells)")

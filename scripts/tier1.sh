@@ -93,4 +93,51 @@ print("[tier1] perf smoke: columnar >= inline >= structured >= text "
       "on all pipeline rows (sub-10ms pairs skipped)")
 PY
 
+# serving saturation gate: three small open-loop cells on a 4-pod testbed
+# (healthy / saturated-unbounded / bounded-with-retries).  Each must show
+# exact request conservation (issued == completed + dropped + timed_out);
+# the bounded cell must actually exercise the drop/retry machinery; and
+# the queue-bound tail must dominate the healthy tail (virtual-time
+# percentiles — deterministic at seed 0, so no flake guard is needed).
+python - <<'PY'
+from repro.core.analysis import percentile
+from repro.sim.cluster import ClusterOrchestrator
+from repro.sim.topology import scale
+from repro.sim.workload import make_workload
+from repro.sim.workloads.rpc import rpc_handler_program
+
+def cell(**knobs):
+    wl = make_workload("rpc", program=rpc_handler_program(), clock_reads=2,
+                       seed=0, n_requests=40, arrival="open", **knobs)
+    cluster = ClusterOrchestrator(scale(pods=4, chips_per_pod=2))
+    wl.drive(cluster)
+    cluster.run()
+    out = wl.outcomes
+    terminal = out["completed"] + out["dropped"] + out["timed_out"]
+    assert out["issued"] == terminal == 40, (
+        f"conservation violated: issued={out['issued']} vs terminal={terminal}"
+    )
+    assert out["in_flight"] == 0 and out["finalized"] == 40
+    return out
+
+healthy = cell(rate_rps=200.0, lb="round_robin")
+saturated = cell(rate_rps=2_000_000.0, lb="round_robin")
+bounded = cell(rate_rps=2_000_000.0, lb="least_loaded", queue_depth=1,
+               timeout_ps=5_000_000_000, max_retries=2)
+assert bounded["dropped"] + bounded["timed_out"] > 0, (
+    "bounded cell exercised no drops or timeouts"
+)
+assert bounded["retries"] > 0, "bounded cell exercised no retries"
+assert saturated["max_in_flight"] > healthy["max_in_flight"]
+h999 = percentile(healthy["lat_ps"], 99.9)
+s999 = percentile(saturated["lat_ps"], 99.9)
+assert s999 > h999, (
+    f"queue-bound p99.9 {s999/1e6:.0f}us must exceed healthy {h999/1e6:.0f}us"
+)
+print(f"[tier1] saturation smoke: 3x40 requests conserved exactly; "
+      f"bounded cell dropped={bounded['dropped']} retried={bounded['retries']}; "
+      f"p99.9 healthy {h999/1e6:.0f}us -> saturated {s999/1e6:.0f}us "
+      f"(inflight {healthy['max_in_flight']} -> {saturated['max_in_flight']})")
+PY
+
 scripts/docs_check.sh

@@ -289,12 +289,27 @@ def rpc_requests(spans: Iterable[Span]) -> List[Span]:
     )
 
 
+def _request_outcome(s: Span) -> str:
+    """A request span's terminal outcome.  Legacy fan-out runs carry no
+    ``outcome`` attribute — every request completed."""
+    return str(s.attrs.get("outcome", "completed"))
+
+
+def completed_requests(spans: Iterable[Span]) -> List[Span]:
+    """The ``RpcRequest`` roots that actually completed (drops/timeouts
+    excluded), slowest first — the latency-CDF population."""
+    return [s for s in rpc_requests(spans) if _request_outcome(s) == "completed"]
+
+
 def request_latency_stats(spans: Iterable[Span]) -> Dict[str, float]:
     """End-to-end request latency percentiles in µs (p50/p90/p99/p99.9/max
-    over ``RpcRequest`` span durations; zeros when the trace has no
-    requests).  p99.9 is the mitigation scoreboard's headline metric —
-    loss/stall faults live in the extreme tail."""
-    lats = [s.duration / PS_PER_US for s in spans if s.name == "RpcRequest"]
+    over **completed** ``RpcRequest`` span durations; zeros when the trace
+    has no completed requests — a saturated all-dropped run yields the
+    well-formed empty report, never a raise).  p99.9 is the mitigation
+    scoreboard's headline metric — loss/stall faults live in the extreme
+    tail."""
+    lats = [s.duration / PS_PER_US for s in spans
+            if s.name == "RpcRequest" and _request_outcome(s) == "completed"]
     if not lats:
         return {"n": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0, "p99.9": 0.0,
                 "max": 0.0}
@@ -303,27 +318,87 @@ def request_latency_stats(spans: Iterable[Span]) -> Dict[str, float]:
             "p99.9": p999, "max": max(lats)}
 
 
-def slowest_request(spans: Sequence[Span]) -> Optional[Trace]:
-    """The slowest request's *entire* span tree (host + device + net), or
-    ``None`` when no ``RpcRequest`` span exists."""
+def request_outcomes(spans: Iterable[Span]) -> Dict[str, Any]:
+    """Request-outcome accounting over the ``RpcRequest`` roots.
+
+    Returns the conservation counters (``issued == completed + dropped +
+    timed_out`` — exact by construction, asserted in
+    ``tests/test_serving_saturation.py``), the retried-request count and
+    total attempts, goodput (completed / issued), and per-LB-policy
+    completed-latency percentiles incl. p99.9 (``latency_us``, keyed by
+    the root's ``lb`` attribute; legacy fan-out runs group under
+    ``"fanout"``).  Zero-request and zero-completed populations return a
+    well-formed report with zeroed stats."""
     reqs = rpc_requests(spans)
+    counts = {"issued": len(reqs), "completed": 0, "dropped": 0,
+              "timed_out": 0}
+    retried = 0
+    attempts = 0
+    by_policy: Dict[str, List[float]] = {}
+    for s in reqs:
+        outcome = _request_outcome(s)
+        counts[outcome] = counts.get(outcome, 0) + 1
+        a = int(s.attrs.get("attempts", 1))
+        attempts += a
+        if a > 1:
+            retried += 1
+        if outcome == "completed":
+            policy = str(s.attrs.get("lb", "fanout"))
+            by_policy.setdefault(policy, []).append(s.duration / PS_PER_US)
+    latency: Dict[str, Dict[str, float]] = {}
+    for policy in sorted(by_policy):
+        lats = by_policy[policy]
+        p50, p99, p999 = percentiles(lats, (50, 99, 99.9))
+        latency[policy] = {"n": float(len(lats)), "p50": p50, "p99": p99,
+                           "p99.9": p999, "max": max(lats)}
+    goodput = counts["completed"] / counts["issued"] if reqs else 0.0
+    return {**counts, "retried": retried, "attempts": attempts,
+            "goodput": goodput, "latency_us": latency}
+
+
+def slowest_request(spans: Sequence[Span]) -> Optional[Trace]:
+    """The slowest *completed* request's entire span tree (host + device +
+    net); falls back to the slowest request of any outcome, or ``None``
+    when no ``RpcRequest`` span exists."""
+    reqs = completed_requests(spans) or rpc_requests(spans)
     if not reqs:
         return None
     return assemble_traces(spans).get(reqs[0].context.trace_id)
 
 
 def request_report(spans: Sequence[Span], k: float = 4.0) -> str:
-    """Tail-latency drill-down: percentiles, the slowest request's critical
-    path, and :func:`diagnose` run on that request's trace **alone** — the
-    per-request attribution the RPC quickstart prints."""
-    stats = request_latency_stats(spans)
-    if not stats["n"]:
+    """Tail-latency drill-down: outcome accounting, percentiles, the
+    slowest request's critical path, and :func:`diagnose` run on that
+    request's trace **alone** — the per-request attribution the RPC
+    quickstart prints."""
+    outcomes = request_outcomes(spans)
+    if not outcomes["issued"]:
         return "no RpcRequest spans (not an RPC-serving trace)"
-    lines = [
+    stats = request_latency_stats(spans)
+    lines = []
+    if outcomes["issued"] != outcomes["completed"]:
+        lines.append(
+            f"outcomes: issued={outcomes['issued']}  "
+            f"completed={outcomes['completed']}  "
+            f"dropped={outcomes['dropped']}  "
+            f"timed_out={outcomes['timed_out']}  "
+            f"retried={outcomes['retried']}  "
+            f"goodput={outcomes['goodput']:.3f}"
+        )
+    for policy, rl in outcomes["latency_us"].items():
+        if policy != "fanout":
+            lines.append(
+                f"lb={policy}: n={rl['n']:.0f}  p50={rl['p50']:.0f}us  "
+                f"p99={rl['p99']:.0f}us  p99.9={rl['p99.9']:.0f}us"
+            )
+    if not stats["n"]:
+        lines.append("no completed requests (all dropped or timed out)")
+        return "\n".join(lines)
+    lines.append(
         f"requests: n={stats['n']:.0f}  p50={stats['p50']:.0f}us  "
         f"p90={stats['p90']:.0f}us  p99={stats['p99']:.0f}us  "
-        f"max={stats['max']:.0f}us",
-    ]
+        f"p99.9={stats['p99.9']:.0f}us  max={stats['max']:.0f}us",
+    )
     trace = slowest_request(spans)
     if trace is not None:
         root = rpc_requests(trace.spans)[0]

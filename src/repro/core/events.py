@@ -324,10 +324,53 @@ class RpcReply(Event):
 @dataclass(slots=True, repr=False)
 class RpcDone(Event):
     """All fan-out replies are in: request ``rid`` completes, ``lat``
-    carries its end-to-end latency in ps."""
+    carries its end-to-end latency in ps.  Saturation-mode runs add
+    ``outcome`` (completed | dropped | timed_out) and ``attempts`` —
+    every admitted ``rid`` terminates in exactly one ``rpc_done``."""
 
     sim_type: ClassVar[SimType] = SimType.HOST
     kind: ClassVar[str] = "rpc_done"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class RpcLbPick(Event):
+    """The frontend's load balancer chose backend ``dst`` for attempt
+    ``attempt`` of request ``rid`` (``policy`` names the registered LB
+    policy, ``qlen`` is the chosen backend's load at pick time)."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "rpc_lb_pick"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class RpcQueueDrop(Event):
+    """A backend's bounded FIFO was full: subrequest ``sub`` was dropped
+    deterministically on arrival (``qlen`` queued at ``depth`` capacity)."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "rpc_queue_drop"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class RpcTimeout(Event):
+    """The frontend's per-request deadline (``deadline`` ps) expired before
+    attempt ``attempt`` of ``rid`` replied; closes the attempt's span."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "rpc_timeout"
+
+
+@register_event
+@dataclass(slots=True, repr=False)
+class RpcRetry(Event):
+    """The frontend re-issues ``rid`` after a drop/timeout (``reason``):
+    attempt ``attempt`` starts after a seeded exponential ``backoff`` ps."""
+
+    sim_type: ClassVar[SimType] = SimType.HOST
+    kind: ClassVar[str] = "rpc_retry"
 
 
 # -- mitigation engine (sim/mitigation.py): remediation trigger/action/done --

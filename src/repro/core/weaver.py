@@ -174,7 +174,7 @@ class HostSpanWeaver(SpanWeaver):
     span_types = (
         "HostStep", "DataLoad", "H2DTransfer", "Dispatch", "Checkpoint",
         "NtpSync", "HostTimeline", "RpcRequest", "RpcCall", "RpcWork",
-        "Mitigation", "Retransmit",
+        "RpcDrop", "RpcRetry", "Mitigation", "Retransmit",
     )
 
     def __init__(self, registry: ContextRegistry, poll_timeout: float = 0.0) -> None:
@@ -401,6 +401,9 @@ class HostSpanWeaver(SpanWeaver):
     def _on_rpc_reply(self, ev: Event) -> None:
         b = self._rpc_call.pop((ev.source, ev.attrs.get("sub")), None)
         if b is not None:
+            # legacy replies carry only rid/sub (already on the span: bytes
+            # unchanged); saturation-mode drop NACKs add status="dropped"
+            b.span.attrs.update(ev.attrs)
             self.emit(b.finish(ev.ts))
         else:
             self._late(ev)
@@ -412,6 +415,46 @@ class HostSpanWeaver(SpanWeaver):
             self.emit(b.finish(ev.ts))
         else:
             self._late(ev)
+
+    # -- serving saturation: LB picks, bounded-queue drops, deadlines, retries
+    #
+    # rpc_lb_pick annotates the open RpcRequest root (the chosen backend and
+    # the policy that chose it — what per-policy CDFs group by);
+    # rpc_queue_drop emits an instant RpcDrop span under the dropped
+    # attempt's RpcCall context; rpc_timeout closes the attempt's RpcCall in
+    # place of the reply that never came; rpc_retry emits an RpcRetry span
+    # (covering the backoff window) parented under the original RpcRequest —
+    # one trace tells the whole drop/timeout/retry story.
+
+    def _on_rpc_lb_pick(self, ev: Event) -> None:
+        req = self._rpc_req.get((ev.source, ev.attrs.get("rid")))
+        if req is None:
+            self._late(ev)
+            return
+        req.span.add_event(ev.ts, "rpc_lb_pick", ev.attrs)
+        if "policy" in ev.attrs:
+            req.span.attrs.setdefault("lb", ev.attrs["policy"])
+
+    def _on_rpc_queue_drop(self, ev: Event) -> None:
+        b = self._begin("RpcDrop", ev, new_trace_id(), None, dict(ev.attrs))
+        self._parent_or_defer(b, ("rpccall", ev.attrs.get("sub")))
+        self.emit(b.finish(ev.ts))
+
+    def _on_rpc_timeout(self, ev: Event) -> None:
+        b = self._rpc_call.pop((ev.source, ev.attrs.get("sub")), None)
+        if b is not None:
+            b.span.attrs.update(ev.attrs)
+            self.emit(b.finish(ev.ts))
+        else:
+            self._late(ev)
+
+    def _on_rpc_retry(self, ev: Event) -> None:
+        req = self._rpc_req.get((ev.source, ev.attrs.get("rid")))
+        tid = req.context.trace_id if req else new_trace_id()
+        b = self._begin("RpcRetry", ev, tid, req.context if req else None,
+                        dict(ev.attrs))
+        end = ev.ts + int(ev.attrs.get("backoff", 0))
+        self.emit(b.finish(end))
 
     # -- mitigation engine: remediation subtrees ------------------------------
     #

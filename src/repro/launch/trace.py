@@ -43,6 +43,18 @@ intensities — the detection-sensitivity curves' x axis), and
      --magnitudes 0.0,0.25,1.0``
 ``python -m repro.launch.trace --diag-bench [--diag-smoke]``
 
+Saturation serving (docs/workloads.md "Saturation & load balancing"):
+``--arrival-rate`` drives the rpc workload's open-loop Poisson arrival
+rate (a comma list under ``--sweep`` becomes the arrival-rate axis), and
+``--queue-depth`` / ``--lb`` bound each backend's FIFO and pick the
+frontend load-balancing policy (``round_robin``, ``least_loaded``,
+``power_of_two_choices``):
+
+``python -m repro.launch.trace --scenario healthy_baseline --workload rpc \\
+     --arrival-rate 2e6 --queue-depth 4 --lb least_loaded``
+``python -m repro.launch.trace --sweep --scenarios healthy_baseline \\
+     --workloads rpc --arrival-rate 1e3,1e5,2e6 --lb power_of_two_choices``
+
 ``--structured`` switches every path onto the zero-parse event fast path
 (simulators hand Event records straight to the weavers; no text logs are
 formatted or re-parsed).  Output bytes are identical — only faster:
@@ -125,6 +137,14 @@ def _run_sweep(args) -> None:
         overrides["magnitudes"] = tuple(
             float(m) for m in args.magnitudes.split(",") if m.strip()
         )
+    if args.arrival_rate:
+        overrides["arrival_rates"] = tuple(
+            float(r) for r in args.arrival_rate.split(",") if r.strip()
+        )
+    if args.queue_depth:
+        overrides["queue_depth"] = args.queue_depth
+    if args.lb:
+        overrides["lb"] = args.lb
     if scenarios is None:
         spec = SweepSpec.library(seeds=seeds, **overrides)
     else:
@@ -161,6 +181,28 @@ def _run_scenario(args) -> None:
     overrides = {"workload": args.workload} if args.workload else {}
     if args.mitigation:
         overrides["mitigation"] = args.mitigation
+    serving = {}
+    if args.arrival_rate:
+        if "," in args.arrival_rate:
+            raise SystemExit(
+                "a comma list of --arrival-rate values is the sweep axis; "
+                "with --scenario pass one rate (or add --sweep)"
+            )
+        serving["rate_rps"] = float(args.arrival_rate)
+        serving["arrival"] = "open"
+    if args.queue_depth:
+        serving["queue_depth"] = args.queue_depth
+    if args.lb:
+        serving["lb"] = args.lb
+    if serving:
+        # per-type knobs reset on a cross-type --workload override; either
+        # way the serving knobs layer on top (make_workload still rejects
+        # them for non-rpc workloads — no silent ignore)
+        base_params = (() if args.workload and args.workload != spec.workload
+                       else spec.workload_params)
+        overrides["workload_params"] = tuple(
+            {**dict(base_params), **serving}.items()
+        )
     run = spec.run(
         outdir=(None if args.structured or args.weave != "post"
                 else base + ".logs"),
@@ -281,6 +323,16 @@ def main() -> None:
                     help="comma list of fault magnitudes: run every sweep "
                          "cell at each scaled fault intensity (the "
                          "detection-sensitivity axis, e.g. 0.0,0.25,1.0)")
+    ap.add_argument("--arrival-rate", default="",
+                    help="rpc serving: open-loop Poisson arrival rate in "
+                         "requests/s; a comma list under --sweep fans out "
+                         "the arrival-rate axis (e.g. 1e3,1e5,2e6)")
+    ap.add_argument("--queue-depth", type=int, default=0,
+                    help="rpc serving: bound each backend's FIFO; arrivals "
+                         "beyond it are deterministically dropped (NACKed)")
+    ap.add_argument("--lb", default="",
+                    help="rpc serving: frontend load-balancing policy "
+                         "(round_robin, least_loaded, power_of_two_choices)")
     ap.add_argument("--list-scenarios", action="store_true")
     ap.add_argument("--list-mitigations", action="store_true")
     ap.add_argument("--diag-bench", action="store_true",
@@ -362,13 +414,15 @@ def main() -> None:
         _run_scenario(args)
         return
     if (args.workload or args.workloads or args.mitigation
-            or args.mitigations or args.magnitudes):
+            or args.mitigations or args.magnitudes or args.arrival_rate
+            or args.queue_depth or args.lb):
         # the compiled-program training path below has no workload axis;
         # dropping the flag silently would trace the wrong workload
         raise SystemExit(
-            "--workload/--workloads/--mitigation/--mitigations/--magnitudes "
-            "require --scenario or --sweep (the default path always traces "
-            "the compiled training program unmitigated)"
+            "--workload/--workloads/--mitigation/--mitigations/--magnitudes/"
+            "--arrival-rate/--queue-depth/--lb require --scenario or --sweep "
+            "(the default path always traces the compiled training program "
+            "unmitigated)"
         )
 
     from ..core import (

@@ -80,6 +80,16 @@ from .workload import (
     synthetic_program,
     workload_type,
 )
-from .workloads import PipelinedTraining, RpcServing, StorageIO, rpc_handler_program
+from .workloads import (
+    LbPolicy,
+    PipelinedTraining,
+    RpcServing,
+    StorageIO,
+    lb_policy_type,
+    list_lb_policies,
+    make_lb_policy,
+    register_lb_policy,
+    rpc_handler_program,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -42,16 +42,17 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .scenarios import SCENARIOS, ScenarioSpec, get_scenario
 
-SWEEP_SCHEMA = "columbo.sweep/v4"
+SWEEP_SCHEMA = "columbo.sweep/v5"
 _SWEEP_SCHEMAS = (
-    "columbo.sweep/v1", "columbo.sweep/v2", "columbo.sweep/v3", SWEEP_SCHEMA
+    "columbo.sweep/v1", "columbo.sweep/v2", "columbo.sweep/v3",
+    "columbo.sweep/v4", SWEEP_SCHEMA
 )
 
 
 @dataclass(frozen=True)
 class SweepSpec:
-    """A grid of ``(scenario, workload, mitigation, magnitude, seed)`` cells
-    plus topology overrides.
+    """A grid of ``(scenario, workload, mitigation, magnitude, rate, seed)``
+    cells plus topology overrides.
 
     Inert and declarative like :class:`~repro.sim.scenarios.ScenarioSpec`:
     build once, run with any ``--jobs``, get the same shards.
@@ -65,6 +66,13 @@ class SweepSpec:
     :meth:`~repro.sim.faults.FaultSpec.scaled`) — the axis detection-
     sensitivity curves are traced over; ``None`` keeps each scenario's own
     ``fault_magnitude`` (normally full intensity, 1.0).
+    ``arrival_rates`` (when set) re-runs every cell at each listed open-loop
+    arrival rate (rps) — the saturation axis; combined with ``n_pods`` it
+    traces arrival-rate × fleet-size load curves.  It sets the rpc
+    workload's ``rate_rps`` knob, so rate cells must resolve to the ``rpc``
+    workload (pin ``workloads=("rpc",)`` or sweep rpc scenarios).
+    ``queue_depth`` / ``lb`` (scalars, not axes) pass the bounded-FIFO and
+    load-balancer-policy knobs to every rate cell.
     ``n_pods``/``chips_per_pod``/``fabric``/``n_steps`` (when not ``None``)
     override every scenario in the grid — e.g. re-running the curated
     library on a 64-pod fat-tree.
@@ -75,15 +83,22 @@ class SweepSpec:
     workloads: Optional[Tuple[str, ...]] = None   # None -> scenario's own
     mitigations: Optional[Tuple[str, ...]] = None  # None -> scenario's own
     magnitudes: Optional[Tuple[float, ...]] = None  # None -> scenario's own
+    arrival_rates: Optional[Tuple[float, ...]] = None  # None -> workload's own
     n_pods: Optional[int] = None
     chips_per_pod: Optional[int] = None
     fabric: Optional[str] = None
     n_steps: Optional[int] = None
+    queue_depth: Optional[int] = None   # rpc bounded-FIFO knob for rate cells
+    lb: Optional[str] = None            # rpc LB-policy knob for rate cells
 
     def overrides(self) -> Dict[str, Any]:
-        """The non-``None`` ScenarioSpec field overrides for every cell."""
+        """The non-``None`` grid-wide overrides for every cell.  The
+        topology/size keys are ScenarioSpec fields; ``queue_depth``/``lb``
+        are rpc workload knobs the cell runner folds into
+        ``workload_params``."""
         out: Dict[str, Any] = {}
-        for k in ("n_pods", "chips_per_pod", "fabric", "n_steps"):
+        for k in ("n_pods", "chips_per_pod", "fabric", "n_steps",
+                  "queue_depth", "lb"):
             v = getattr(self, k)
             if v is not None:
                 out[k] = v
@@ -91,18 +106,20 @@ class SweepSpec:
 
     def cells(
         self,
-    ) -> List[Tuple[str, Optional[str], Optional[str], Optional[float], int]]:
-        """The full ``(scenario, workload, mitigation, magnitude, seed)``
-        grid, scenario-major (deterministic order).  ``workload`` /
-        ``mitigation`` / ``magnitude`` are ``None`` when the cell keeps its
-        scenario's own pinned type/policy/intensity."""
+    ) -> List[Tuple[str, Optional[str], Optional[str], Optional[float],
+                    Optional[float], int]]:
+        """The full ``(scenario, workload, mitigation, magnitude, rate,
+        seed)`` grid, scenario-major (deterministic order).  ``workload`` /
+        ``mitigation`` / ``magnitude`` / ``rate`` are ``None`` when the
+        cell keeps its scenario's own pinned type/policy/intensity/rate."""
         wls: Tuple[Optional[str], ...] = self.workloads or (None,)
         mits: Tuple[Optional[str], ...] = self.mitigations or (None,)
         mags: Tuple[Optional[float], ...] = self.magnitudes or (None,)
+        rates: Tuple[Optional[float], ...] = self.arrival_rates or (None,)
         return [
-            (s, w, m, g, seed)
+            (s, w, m, g, r, seed)
             for s in self.scenarios for w in wls for m in mits for g in mags
-            for seed in self.seeds
+            for r in rates for seed in self.seeds
         ]
 
     @classmethod
@@ -113,7 +130,8 @@ class SweepSpec:
 
 @dataclass
 class CellResult:
-    """One finished ``(scenario, workload, mitigation, magnitude, seed)`` cell."""
+    """One finished ``(scenario, workload, mitigation, magnitude, rate,
+    seed)`` cell."""
 
     scenario: str
     seed: int
@@ -123,6 +141,7 @@ class CellResult:
     workload: Optional[str] = None    # explicit sweep-axis workload (None = own)
     mitigation: Optional[str] = None  # explicit sweep-axis policy (None = own)
     magnitude: Optional[float] = None  # explicit sweep-axis magnitude (None = own)
+    rate: Optional[float] = None      # explicit sweep-axis arrival rate (rps)
 
 
 def _shard_name(
@@ -130,6 +149,7 @@ def _shard_name(
     workload: Optional[str],
     mitigation: Optional[str],
     magnitude: Optional[float],
+    rate: Optional[float],
     seed: int,
 ) -> str:
     # axis values only appear in the name when the sweep axis set them, so
@@ -137,14 +157,20 @@ def _shard_name(
     mid = f".{workload}" if workload else ""
     mit = f".{mitigation}" if mitigation else ""
     mag = f".m{magnitude:g}" if magnitude is not None else ""
+    rps = f".r{rate:g}" if rate is not None else ""
     return os.path.join(
-        "shards", f"{scenario}{mid}{mit}{mag}.seed{seed}.spans.jsonl"
+        "shards", f"{scenario}{mid}{mit}{mag}{rps}.seed{seed}.spans.jsonl"
     )
 
 
+# grid-wide override keys that are rpc workload knobs, not ScenarioSpec
+# fields — the cell runner folds them into the cell's workload_params
+_WORKLOAD_OVERRIDE_KEYS = ("queue_depth", "lb")
+
+
 def _run_cell(
-    args: Tuple[str, Optional[str], Optional[str], Optional[float], int,
-                Dict[str, Any], str, bool, str]
+    args: Tuple[str, Optional[str], Optional[str], Optional[float],
+                Optional[float], int, Dict[str, Any], str, bool, str]
 ) -> Dict[str, Any]:
     """Worker: run one cell end to end (simulate → weave → diagnose),
     write its SpanJSONL shard, return a JSON-serializable summary.
@@ -161,7 +187,7 @@ def _run_cell(
     """
     from ..core.analysis import RunStats
 
-    (scenario, workload, mitigation, magnitude, seed,
+    (scenario, workload, mitigation, magnitude, rate, seed,
      overrides, outdir, structured, weave) = args
     spec: ScenarioSpec = get_scenario(scenario)
     if workload is not None and workload != spec.workload:
@@ -174,11 +200,25 @@ def _run_cell(
     if magnitude is not None:
         spec = replace(spec, fault_magnitude=magnitude)
     if overrides:
-        spec = replace(spec, **overrides)
+        overrides = dict(overrides)
+        wl_knobs = {k: overrides.pop(k) for k in _WORKLOAD_OVERRIDE_KEYS
+                    if k in overrides}
+        if overrides:
+            spec = replace(spec, **overrides)
+    else:
+        wl_knobs = {}
+    if rate is not None:
+        # the saturation axis: rate_rps is an rpc workload knob (a non-rpc
+        # cell raises make_workload's TypeError — never silently ignored)
+        wl_knobs["rate_rps"] = rate
+    if wl_knobs:
+        params = dict(spec.workload_params)
+        params.update(wl_knobs)
+        spec = replace(spec, workload_params=tuple(params.items()))
     t0 = time.perf_counter()
     run = spec.run(seed=seed, structured=structured, weave=weave)
     wall = time.perf_counter() - t0
-    shard = _shard_name(scenario, workload, mitigation, magnitude, seed)
+    shard = _shard_name(scenario, workload, mitigation, magnitude, rate, seed)
     with open(os.path.join(outdir, shard), "w", buffering=1 << 20) as f:
         f.write(run.span_jsonl)
     kwargs = dict(
@@ -204,8 +244,9 @@ def _run_cell(
             run.session.columns(), spans=run.spans, **kwargs
         )
     return {"scenario": scenario, "workload": workload,
-            "mitigation": mitigation, "magnitude": magnitude, "seed": seed,
-            "ok": run.ok, "shard": shard, "stats": stats.to_dict()}
+            "mitigation": mitigation, "magnitude": magnitude, "rate": rate,
+            "seed": seed, "ok": run.ok, "shard": shard,
+            "stats": stats.to_dict()}
 
 
 # ---------------------------------------------------------------------------
@@ -316,10 +357,12 @@ class SweepResult:
                     if self.spec.mitigations else "")
         mag_axis = (f" x {len(self.spec.magnitudes)} magnitudes"
                     if self.spec.magnitudes else "")
+        rate_axis = (f" x {len(self.spec.arrival_rates)} rates"
+                     if self.spec.arrival_rates else "")
         lines = [
             f"sweep: {len(self.cells)} cells "
             f"({len(self.spec.scenarios)} scenarios{wl_axis}{mit_axis}"
-            f"{mag_axis} x {len(self.spec.seeds)} seeds, "
+            f"{mag_axis}{rate_axis} x {len(self.spec.seeds)} seeds, "
             f"jobs={self.jobs}) -> {self.outdir}",
         ]
         for c in self.cells:
@@ -327,7 +370,8 @@ class SweepResult:
             wl = f" [{c.workload}]" if c.workload else ""
             mit = f" [{c.mitigation}]" if c.mitigation else ""
             mag = f" [m={c.magnitude:g}]" if c.magnitude is not None else ""
-            lines.append(f"  {verdict} {c.scenario:24s}{wl}{mit}{mag} "
+            rps = f" [r={c.rate:g}]" if c.rate is not None else ""
+            lines.append(f"  {verdict} {c.scenario:24s}{wl}{mit}{mag}{rps} "
                          f"seed={c.seed:<4d} "
                          f"spans={c.stats.n_spans:<5d} wall={c.stats.wall_s:.2f}s")
         lines.append((aggregate_report or self.aggregate()).report())
@@ -377,8 +421,8 @@ def run_sweep(
         )
     os.makedirs(os.path.join(outdir, "shards"), exist_ok=True)
     work = [
-        (s, w, m, g, seed, spec.overrides(), outdir, structured, weave)
-        for s, w, m, g, seed in spec.cells()
+        (s, w, m, g, r, seed, spec.overrides(), outdir, structured, weave)
+        for s, w, m, g, r, seed in spec.cells()
     ]
     if jobs <= 1 or len(work) <= 1:
         raw = [_run_cell(w) for w in work]
@@ -391,6 +435,7 @@ def run_sweep(
             scenario=r["scenario"], seed=r["seed"], ok=r["ok"], shard=r["shard"],
             stats=RunStats.from_dict(r["stats"]), workload=r.get("workload"),
             mitigation=r.get("mitigation"), magnitude=r.get("magnitude"),
+            rate=r.get("rate"),
         )
         for r in raw
     ]
@@ -402,6 +447,8 @@ def run_sweep(
         "workloads": list(spec.workloads) if spec.workloads else None,
         "mitigations": list(spec.mitigations) if spec.mitigations else None,
         "magnitudes": list(spec.magnitudes) if spec.magnitudes else None,
+        "arrival_rates": (list(spec.arrival_rates)
+                          if spec.arrival_rates else None),
         "overrides": spec.overrides(),
         "jobs": jobs,
         "structured": structured,
@@ -432,12 +479,14 @@ def load_sweep(outdir: str) -> SweepResult:
     workloads = payload.get("workloads")
     mitigations = payload.get("mitigations")
     magnitudes = payload.get("magnitudes")
+    arrival_rates = payload.get("arrival_rates")
     spec = SweepSpec(
         scenarios=tuple(payload["scenarios"]),
         seeds=tuple(payload["seeds"]),
         workloads=tuple(workloads) if workloads else None,
         mitigations=tuple(mitigations) if mitigations else None,
         magnitudes=tuple(magnitudes) if magnitudes else None,
+        arrival_rates=tuple(arrival_rates) if arrival_rates else None,
         **payload.get("overrides", {}),
     )
     cells = [
@@ -445,6 +494,7 @@ def load_sweep(outdir: str) -> SweepResult:
             scenario=r["scenario"], seed=r["seed"], ok=r["ok"], shard=r["shard"],
             stats=RunStats.from_dict(r["stats"]), workload=r.get("workload"),
             mitigation=r.get("mitigation"), magnitude=r.get("magnitude"),
+            rate=r.get("rate"),
         )
         for r in payload["cells"]
     ]

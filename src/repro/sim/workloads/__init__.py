@@ -14,11 +14,28 @@ simulator types:
 * ``pipeline`` — :class:`~repro.sim.workloads.pipeline.PipelinedTraining`:
   stage-partitioned training with inter-stage activations over the fabric.
 
+The ``rpc`` workload's serving mode selects its frontend load balancer
+from a third registry (:mod:`repro.sim.workloads.lb`): ``round_robin``,
+``least_loaded``, ``power_of_two_choices``, or any policy registered with
+:func:`register_lb_policy`.
+
 ``docs/workloads.md`` is the cookbook: each workload's knobs, the span
 tree it weaves into, and the "write your own Workload" recipe.
 """
+from .lb import (LbPolicy, lb_policy_type, list_lb_policies, make_lb_policy,
+                 register_lb_policy)
 from .pipeline import PipelinedTraining
 from .rpc import RpcServing, rpc_handler_program
 from .storage import StorageIO
 
-__all__ = ["PipelinedTraining", "RpcServing", "StorageIO", "rpc_handler_program"]
+__all__ = [
+    "LbPolicy",
+    "PipelinedTraining",
+    "RpcServing",
+    "StorageIO",
+    "lb_policy_type",
+    "list_lb_policies",
+    "make_lb_policy",
+    "register_lb_policy",
+    "rpc_handler_program",
+]

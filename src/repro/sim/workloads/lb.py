@@ -1,0 +1,142 @@
+"""Frontend load-balancer policies for the ``rpc`` serving workload.
+
+A policy picks which backend serves the next attempt of a request.  Policies
+register by name (``register_lb_policy``) on a small registry mirroring the
+workload (:mod:`repro.sim.workload`) and mitigation
+(:mod:`repro.sim.mitigation`) registries, so sweeps / the CLI / benchmarks
+select them declaratively (``--lb power_of_two_choices``) and unknown knobs
+raise ``TypeError`` instead of being silently ignored.
+
+Built-ins:
+
+* ``round_robin`` — cycle through the backends in pod order;
+* ``least_loaded`` — pick the backend with the fewest queued + in-service
+  subrequests (ties break to the first backend in pod order);
+* ``power_of_two_choices`` — sample two distinct backends from the
+  workload's seeded RNG stream, keep the less loaded one (the classic
+  load-balancing result: almost least-loaded quality at O(1) cost).
+
+Determinism contract: a policy's only randomness source is the
+``random.Random`` handed to :meth:`LbPolicy.pick` (the rpc workload's
+seeded stream), so one seed reproduces byte-identical logs and spans.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Any, ClassVar, Dict, List, Sequence
+
+
+def backend_load(server: Any) -> int:
+    """A backend's instantaneous load: queued + in-service subrequests
+    (what ``least_loaded`` / ``power_of_two_choices`` compare and what the
+    ``rpc_lb_pick`` event's ``qlen`` attribute records)."""
+    return len(server.queue) + (1 if server.busy else 0)
+
+
+@dataclass
+class LbPolicy:
+    """Base class: a frontend backend-selection policy.
+
+    Subclasses set ``lb_name``, implement :meth:`pick`, and register with
+    :func:`register_lb_policy`.  Policies may keep per-instance state (the
+    round-robin cursor); one instance drives one workload run.
+    """
+
+    #: registry key; subclasses set it (e.g. "round_robin")
+    lb_name: ClassVar[str] = ""
+
+    def pick(self, servers: Sequence[Any], rng: random.Random) -> Any:
+        """Choose the backend for the next attempt.  ``servers`` is the
+        chip-bearing backend list in pod order; ``rng`` is the workload's
+        seeded LB stream (the *only* permitted randomness source)."""
+        raise NotImplementedError
+
+
+_LB_POLICIES: Dict[str, type] = {}
+
+
+def register_lb_policy(cls: type, replace: bool = False) -> type:
+    """Class decorator: register an :class:`LbPolicy` subclass under its
+    ``lb_name`` (the LB-layer analogue of ``register_workload``)."""
+    name = getattr(cls, "lb_name", "")
+    if not name:
+        raise ValueError(f"{cls.__name__} must set a non-empty lb_name")
+    if not replace and name in _LB_POLICIES:
+        raise ValueError(
+            f"lb policy {name!r} already registered; pass replace=True to override"
+        )
+    _LB_POLICIES[name] = cls
+    return cls
+
+
+def list_lb_policies() -> List[str]:
+    """Registered load-balancer policy names, sorted."""
+    return sorted(_LB_POLICIES)
+
+
+def lb_policy_type(name: str) -> type:
+    """Look up a registered LB policy class (KeyError lists what exists)."""
+    try:
+        return _LB_POLICIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown lb policy {name!r}; available: {', '.join(sorted(_LB_POLICIES))}"
+        ) from None
+
+
+def make_lb_policy(name: str, **params: Any) -> LbPolicy:
+    """Instantiate a registered LB policy with ``params`` (unknown knobs
+    raise ``TypeError`` naming the policy — same contract as
+    :func:`~repro.sim.workload.make_workload`)."""
+    cls = lb_policy_type(name)
+    try:
+        return cls(**params)
+    except TypeError as e:
+        raise TypeError(f"lb policy {name!r}: {e}") from None
+
+
+@register_lb_policy
+@dataclass
+class RoundRobin(LbPolicy):
+    """Cycle through the backends in pod order, one pick per attempt."""
+
+    lb_name: ClassVar[str] = "round_robin"
+
+    _next: int = field(default=0, init=False, repr=False)
+
+    def pick(self, servers: Sequence[Any], rng: random.Random) -> Any:
+        """The next backend in rotation."""
+        srv = servers[self._next % len(servers)]
+        self._next += 1
+        return srv
+
+
+@register_lb_policy
+@dataclass
+class LeastLoaded(LbPolicy):
+    """Pick the backend with the fewest queued + in-service subrequests
+    (ties break to the first backend in pod order — deterministic)."""
+
+    lb_name: ClassVar[str] = "least_loaded"
+
+    def pick(self, servers: Sequence[Any], rng: random.Random) -> Any:
+        """The least-loaded backend (stable min: first wins ties)."""
+        return min(servers, key=backend_load)
+
+
+@register_lb_policy
+@dataclass
+class PowerOfTwoChoices(LbPolicy):
+    """Sample two distinct backends from the seeded stream and keep the
+    less loaded one (ties keep the first sampled)."""
+
+    lb_name: ClassVar[str] = "power_of_two_choices"
+
+    def pick(self, servers: Sequence[Any], rng: random.Random) -> Any:
+        """The less loaded of two seeded random choices."""
+        if len(servers) == 1:
+            return servers[0]
+        i, j = rng.sample(range(len(servers)), 2)
+        a, b = servers[i], servers[j]
+        return a if backend_load(a) <= backend_load(b) else b

@@ -22,6 +22,21 @@ Serving is **serial per host** (one subrequest at a time, FIFO queue), so
 queueing delay under open-loop overload shows up as RpcCall-minus-RpcWork
 time — the tail-latency signal ``core.analysis.request_latency_stats``
 summarizes and ``slowest_request`` drills into.
+
+Setting any of the **saturation knobs** (``lb`` / ``queue_depth`` /
+``timeout_ps``) switches the workload into *serving mode*: each request is
+dispatched to **one** backend chosen by a registered load-balancer policy
+(:mod:`repro.sim.workloads.lb`) instead of fanned out to every pod, backend
+FIFOs are bounded (``queue_depth``) with deterministic drop-on-full, the
+frontend arms a per-attempt deadline (``timeout_ps``) and re-issues failed
+attempts with seeded exponential backoff up to ``max_retries`` times.
+Every admitted ``rid`` terminates in exactly one ``rpc_done`` carrying
+``outcome`` ∈ {completed, dropped, timed_out} — the conservation invariant
+``issued == completed + dropped + timed_out`` that
+``tests/test_serving_saturation.py`` locks down.  Drop NACKs are modeled as
+instantaneous control-plane signals (the data-plane legs still pay wire
+time).  With all three knobs at their ``None`` defaults the legacy
+fan-out-to-all-pods schedule is byte-identical to pre-saturation runs.
 """
 from __future__ import annotations
 
@@ -32,6 +47,7 @@ from typing import ClassVar, Optional, TYPE_CHECKING
 
 from ..hostsim import _short
 from ..workload import OpSpec, ProgramSpec, Workload, register_workload
+from .lb import backend_load, lb_policy_type, make_lb_policy
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from ..cluster import ClusterOrchestrator
@@ -100,6 +116,24 @@ class RpcServing(Workload):
     * ``request_bytes`` / ``reply_bytes`` — wire payloads per fan-out leg;
     * ``dequeue_ps``    — fixed host-runtime cost to pick up a subrequest.
 
+    Saturation knobs (any of the first three switches on *serving mode* —
+    one LB-picked backend per attempt instead of fan-out to every pod):
+
+    * ``lb``            — registered load-balancer policy name
+      (``round_robin`` / ``least_loaded`` / ``power_of_two_choices``;
+      defaults to ``round_robin`` when only the other knobs are set);
+    * ``queue_depth``   — bound on each backend's pending FIFO (``None`` =
+      unbounded); a full queue drops the attempt deterministically;
+    * ``timeout_ps``    — per-attempt frontend deadline (``None`` = none);
+    * ``max_retries``   — re-issues after a drop/timeout (0 = fail fast);
+    * ``retry_backoff_ps`` — base backoff; attempt ``k`` waits
+      ``base * 2^(k-1) * (1 + U[0,1))`` ps from the seeded retry stream.
+
+    After ``drive()`` + ``cluster.run()``, :attr:`outcomes` holds the
+    request-outcome accounting (issued/completed/dropped/timed_out/retries,
+    ``max_in_flight``, per-completed-request ``lat_ps``) — what the tier-1
+    conservation gate and ``engine_bench``'s saturation section read.
+
     The handler program is ``program`` with any DCN-group ops stripped
     (see :func:`_ici_only`); scenarios that mean serving from the start
     pass :func:`rpc_handler_program` directly.
@@ -114,22 +148,62 @@ class RpcServing(Workload):
     request_bytes: int = 32 << 10
     reply_bytes: int = 64 << 10
     dequeue_ps: int = 200_000             # 0.2 us runtime pickup cost
+    lb: Optional[str] = None              # LB policy name; None = legacy fan-out
+    queue_depth: Optional[int] = None     # per-backend FIFO bound; None = unbounded
+    timeout_ps: Optional[int] = None      # per-attempt deadline; None = none
+    max_retries: int = 1                  # re-issues after drop/timeout
+    retry_backoff_ps: int = 1_000_000     # 1 us base exponential backoff
 
     def __post_init__(self) -> None:
         if self.arrival not in ("open", "closed"):
             raise ValueError(
                 f"arrival must be 'open' or 'closed', got {self.arrival!r}"
             )
+        if self.queue_depth is not None and self.queue_depth < 1:
+            raise ValueError(
+                f"queue_depth must be >= 1 (or None for unbounded), "
+                f"got {self.queue_depth}"
+            )
+        if self.timeout_ps is not None and self.timeout_ps <= 0:
+            raise ValueError(
+                f"timeout_ps must be > 0 (or None for no deadline), "
+                f"got {self.timeout_ps}"
+            )
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.retry_backoff_ps < 0:
+            raise ValueError(
+                f"retry_backoff_ps must be >= 0, got {self.retry_backoff_ps}"
+            )
+        if self.lb is None and (
+                self.queue_depth is not None or self.timeout_ps is not None):
+            self.lb = "round_robin"
+        if self.lb is not None:
+            lb_policy_type(self.lb)   # unknown policy: KeyError listing names
+        #: request-outcome accounting, filled by :meth:`drive` (serving mode)
+        self.outcomes: dict = {}
 
     @property
     def total_requests(self) -> int:
         """The effective request count (``n_requests`` or ``4 * n_steps``)."""
         return self.n_requests if self.n_requests is not None else 4 * self.n_steps
 
+    @property
+    def serving_mode(self) -> bool:
+        """True when a saturation knob switched on LB-picked single-backend
+        serving (vs the legacy fan-out-to-every-pod schedule)."""
+        return self.lb is not None
+
     def describe(self) -> str:
         loop = (f"open {self.rate_rps:g} rps" if self.arrival == "open"
                 else f"closed x{self.concurrency}")
-        return f"rpc({self.total_requests} reqs, {loop})"
+        if not self.serving_mode:
+            return f"rpc({self.total_requests} reqs, {loop})"
+        q = "unbounded" if self.queue_depth is None else f"q={self.queue_depth}"
+        to = ("" if self.timeout_ps is None
+              else f", timeout={self.timeout_ps / 1e6:g}us")
+        return (f"rpc({self.total_requests} reqs, {loop}, lb={self.lb}, "
+                f"{q}{to}, retries<={self.max_retries})")
 
     # -- driving -----------------------------------------------------------------
 
@@ -194,6 +268,10 @@ class RpcServing(Workload):
             if not srv.busy:
                 serve_next(srv)
 
+        if self.serving_mode:
+            self._drive_serving(cluster, hosts, servers, enqueue, state, n_total)
+            return
+
         def admit(i: int) -> None:
             rid = f"r{i}"
             t0 = frontend.sim.now
@@ -244,13 +322,173 @@ class RpcServing(Workload):
             state["issued"] += 1
             admit(i)
 
+        self._arm_arrivals(frontend, n_total, issue_now)
+
+    def _arm_arrivals(self, frontend: "HostSim", n_total: int, issue_now) -> None:
+        """Schedule the arrival process (shared by both serving schedules).
+
+        Open-loop pre-draws the whole Poisson schedule from stream 0
+        (deterministic and identical whether or not saturation knobs are
+        set); closed-loop issues the initial concurrency window.
+        """
         if self.arrival == "open":
             # pre-draw the whole Poisson arrival schedule (deterministic)
             rng = self.rng(stream=0)
             t = 0.0
-            for i in range(n_total):
+            for _ in range(n_total):
                 t += rng.expovariate(self.rate_rps) * PS_PER_S
                 frontend.sim.at(int(t), issue_now)
         else:
             for _ in range(min(self.concurrency, n_total)):
                 issue_now()
+
+    def _drive_serving(
+        self,
+        cluster: "ClusterOrchestrator",
+        hosts: list,
+        servers: dict,
+        enqueue,
+        state: dict,
+        n_total: int,
+    ) -> None:
+        """Serving mode: one LB-picked backend per attempt, bounded queues
+        with deterministic drop-on-full, per-attempt deadlines, seeded
+        retry/backoff — every admitted ``rid`` ends in exactly one
+        ``rpc_done`` with an ``outcome``.
+        """
+        frontend = hosts[0]
+        backends = [servers[h.name] for h in hosts]
+        policy = make_lb_policy(self.lb)
+        rng_retry = self.rng(stream=2)    # backoff jitter
+        rng_lb = self.rng(stream=3)       # power-of-two-choices sampling
+        state.update(
+            dropped=0, timed_out=0, retries=0, finalized=0,
+            in_flight=0, max_in_flight=0, lat_ps=[],
+        )
+        self.outcomes = state
+
+        def finalize(req: dict, outcome: str) -> None:
+            req["done"] = True
+            state["in_flight"] -= 1
+            state[outcome] += 1
+            lat = frontend.sim.now - req["t0"]
+            if outcome == "completed":
+                state["lat_ps"].append(lat)
+            frontend.log_event(
+                "rpc_done", rid=req["rid"], lat=lat,
+                attempts=req["attempt"] + 1, outcome=outcome,
+            )
+            if self.arrival == "closed" and state["issued"] < n_total:
+                issue_now()
+            state["finalized"] += 1
+            if state["finalized"] == n_total:
+                cluster.net.stop_all_flows()
+
+        def retry_or_fail(req: dict, reason: str) -> None:
+            if req["attempt"] < self.max_retries:
+                req["attempt"] += 1
+                state["retries"] += 1
+                backoff = int(
+                    self.retry_backoff_ps * (2 ** (req["attempt"] - 1))
+                    * (1.0 + rng_retry.random())
+                )
+                frontend.log_event(
+                    "rpc_retry", rid=req["rid"], attempt=req["attempt"],
+                    reason=reason, backoff=backoff,
+                )
+                frontend.sim.call_after(backoff, lambda: attempt(req))
+            else:
+                finalize(req, "dropped" if reason == "dropped" else "timed_out")
+
+        def attempt(req: dict) -> None:
+            rid = req["rid"]
+            k = req["attempt"]
+            sub = f"{rid}.a{k}"
+            srv = policy.pick(backends, rng_lb)
+            frontend.log_event(
+                "rpc_lb_pick", rid=rid, attempt=k, policy=self.lb,
+                dst=srv.host.name, qlen=backend_load(srv),
+            )
+            frontend.log_event("rpc_send", rid=rid, sub=sub,
+                               dst=srv.host.name, bytes=self.request_bytes)
+            att = {"resolved": False}
+
+            def settle() -> bool:
+                # first resolution wins: reply, drop NACK, or deadline; a
+                # late reply after a timeout is ignored (the backend still
+                # paid the work — realistic wasted service)
+                if att["resolved"] or req["done"]:
+                    return False
+                att["resolved"] = True
+                return True
+
+            def on_reply() -> None:
+                if not settle():
+                    return
+                frontend.log_event("rpc_reply", rid=rid, sub=sub)
+                finalize(req, "completed")
+
+            def on_drop() -> None:
+                if not settle():
+                    return
+                # the NACK is an instantaneous control-plane signal; the
+                # request leg already paid its wire time
+                frontend.log_event("rpc_reply", rid=rid, sub=sub,
+                                   status="dropped")
+                retry_or_fail(req, "dropped")
+
+            def offer(srv: _PodServer, reply) -> None:
+                if (self.queue_depth is not None
+                        and len(srv.queue) >= self.queue_depth):
+                    srv.host.log_event(
+                        "rpc_queue_drop", sub=sub, rid=rid,
+                        qlen=len(srv.queue), depth=self.queue_depth,
+                    )
+                    on_drop()
+                    return
+                enqueue(srv, sub, rid, reply)
+
+            if self.timeout_ps is not None:
+                def deadline() -> None:
+                    if not settle():
+                        return
+                    frontend.log_event(
+                        "rpc_timeout", rid=rid, sub=sub, attempt=k,
+                        deadline=self.timeout_ps,
+                    )
+                    retry_or_fail(req, "timed_out")
+
+                frontend.sim.call_after(self.timeout_ps, deadline)
+
+            if srv.host is frontend:
+                offer(srv, on_reply)
+            else:
+                def send_reply() -> None:
+                    cluster.net.transfer(
+                        srv.host.name, frontend.name, self.reply_bytes,
+                        meta={"rpc": f"{sub}.r"},
+                        on_delivered=lambda _t: on_reply(),
+                    )
+
+                cluster.net.transfer(
+                    frontend.name, srv.host.name, self.request_bytes,
+                    meta={"rpc": sub},
+                    on_delivered=lambda _t: offer(srv, send_reply),
+                )
+
+        def admit(i: int) -> None:
+            rid = f"r{i}"
+            req = {"rid": rid, "t0": frontend.sim.now, "attempt": 0,
+                   "done": False}
+            state["in_flight"] += 1
+            if state["in_flight"] > state["max_in_flight"]:
+                state["max_in_flight"] = state["in_flight"]
+            frontend.log_event("rpc_recv", rid=rid, bytes=self.request_bytes)
+            attempt(req)
+
+        def issue_now() -> None:
+            i = state["issued"]
+            state["issued"] += 1
+            admit(i)
+
+        self._arm_arrivals(frontend, n_total, issue_now)

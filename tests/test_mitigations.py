@@ -361,8 +361,8 @@ def test_sweep_mitigations_axis_cells_and_shards(tmp_path):
         mitigations=("do_nothing", "retransmit"),
     )
     assert spec.cells() == [
-        ("link_loss_rpc", None, "do_nothing", None, 0),
-        ("link_loss_rpc", None, "retransmit", None, 0),
+        ("link_loss_rpc", None, "do_nothing", None, None, 0),
+        ("link_loss_rpc", None, "retransmit", None, None, 0),
     ]
     result = run_sweep(spec, str(tmp_path), jobs=1, structured=True)
     assert [c.mitigation for c in result.cells] == ["do_nothing", "retransmit"]
@@ -375,7 +375,7 @@ def test_sweep_mitigations_axis_cells_and_shards(tmp_path):
     ]
     with open(os.path.join(str(tmp_path), "sweep.json")) as f:
         payload = json.load(f)
-    assert payload["schema"] == "columbo.sweep/v4"
+    assert payload["schema"] == "columbo.sweep/v5"
     assert payload["mitigations"] == ["do_nothing", "retransmit"]
     board = result.score_mitigations()
     assert board["retransmit"].triggers == 1

@@ -1,0 +1,490 @@
+"""The saturation-capable rpc serving engine (sim/workloads/rpc.py serving
+mode + sim/workloads/lb.py): LB-policy registry semantics, the
+any-seed request-conservation property (every rid terminates in exactly one
+of completed / dropped / timed_out, exactly one root span per rid, zero
+orphans), four-way weave byte-identity for the new drop/timeout/retry/
+lb-pick event kinds, the zero-completed-requests analysis regression, and
+the request-outcome accounting surfaced by ``core.analysis``.
+"""
+import random
+import re
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.analysis import (
+    RunStats,
+    completed_requests,
+    percentile,
+    request_latency_stats,
+    request_outcomes,
+    request_report,
+    rpc_requests,
+    score_mitigations,
+)
+from repro.sim import (
+    LbPolicy,
+    RpcServing,
+    ScenarioSpec,
+    lb_policy_type,
+    list_lb_policies,
+    make_lb_policy,
+    make_workload,
+    register_lb_policy,
+    rpc_handler_program,
+)
+from repro.sim.cluster import ClusterOrchestrator
+from repro.sim.topology import scale
+from repro.sim.workloads.lb import (
+    LeastLoaded,
+    PowerOfTwoChoices,
+    RoundRobin,
+    backend_load,
+)
+
+TERMINAL_OUTCOMES = {"completed", "dropped", "timed_out"}
+
+
+def _serving_spec(name="serving_prop", **params):
+    """An ad-hoc rpc serving scenario on a tiny fault-free testbed."""
+    defaults = dict(n_requests=8, arrival="open", rate_rps=2e6,
+                    lb="least_loaded", queue_depth=2,
+                    timeout_ps=5_000_000_000, max_retries=2)
+    defaults.update(params)
+    return ScenarioSpec(
+        name=name,
+        description="rpc saturation probe",
+        workload="rpc",
+        workload_params=tuple(defaults.items()),
+        program=rpc_handler_program,
+        n_pods=2,
+        chips_per_pod=2,
+        clock_reads=2,
+    )
+
+
+def _rids_in_logs(cluster) -> set:
+    """Request ids appearing anywhere in the simulator logs (same probe as
+    tests/test_workloads.py, local so the modules stay independent)."""
+    rids = set()
+    pat = re.compile(r"\brid=(\S+)")
+    for lw in cluster._logs:
+        if lw.structured:
+            lines = lw.render_lines()
+        elif lw.path is not None:
+            with open(lw.path) as f:
+                lines = f.read().splitlines()
+        else:
+            lines = lw.lines
+        for line in lines:
+            rids.update(pat.findall(line))
+    return rids
+
+
+# ---------------------------------------------------------------------------
+# LB policy registry semantics (mirrors the workload/mitigation registries)
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_lb_policies_registered():
+    assert set(list_lb_policies()) >= {
+        "round_robin", "least_loaded", "power_of_two_choices"
+    }
+    assert lb_policy_type("round_robin") is RoundRobin
+    assert lb_policy_type("least_loaded") is LeastLoaded
+    assert lb_policy_type("power_of_two_choices") is PowerOfTwoChoices
+
+
+def test_lb_policy_type_unknown_name():
+    with pytest.raises(KeyError, match="unknown lb policy"):
+        lb_policy_type("random_choice")
+
+
+def test_register_lb_policy_rejects_duplicates_and_anonymous():
+    with pytest.raises(ValueError, match="already registered"):
+        register_lb_policy(RoundRobin)
+
+    class NoName(LbPolicy):
+        pass
+
+    with pytest.raises(ValueError, match="lb_name"):
+        register_lb_policy(NoName)
+
+
+def test_make_lb_policy_unknown_knob_raises_typeerror():
+    with pytest.raises(TypeError, match="least_loaded"):
+        make_lb_policy("least_loaded", cursor=3)
+
+
+class _FakeServer:
+    """Just enough surface for backend_load(): a queue and a busy flag."""
+
+    def __init__(self, queued: int, busy: bool = False):
+        self.queue = [None] * queued
+        self.busy = busy
+
+
+def test_backend_load_counts_queue_plus_in_service():
+    assert backend_load(_FakeServer(0)) == 0
+    assert backend_load(_FakeServer(3)) == 3
+    assert backend_load(_FakeServer(3, busy=True)) == 4
+
+
+def test_round_robin_cycles_in_pod_order():
+    servers = [_FakeServer(0) for _ in range(3)]
+    rr = make_lb_policy("round_robin")
+    rng = random.Random(0)
+    picks = [rr.pick(servers, rng) for _ in range(6)]
+    assert picks == servers + servers
+
+
+def test_least_loaded_breaks_ties_to_first():
+    a, b, c = _FakeServer(2), _FakeServer(1), _FakeServer(1)
+    assert make_lb_policy("least_loaded").pick([a, b, c], random.Random(0)) is b
+    assert make_lb_policy("least_loaded").pick([b, a, c], random.Random(0)) is b
+
+
+def test_power_of_two_choices_keeps_less_loaded_and_is_seeded():
+    servers = [_FakeServer(i) for i in range(8)]
+    p2c = make_lb_policy("power_of_two_choices")
+    picks_a = [p2c.pick(servers, random.Random(7)) for _ in range(1)]
+    picks_b = [make_lb_policy("power_of_two_choices")
+               .pick(servers, random.Random(7)) for _ in range(1)]
+    assert picks_a == picks_b            # only randomness is the passed rng
+    rng = random.Random(3)
+    for _ in range(50):
+        i, j = random.Random(3).sample(range(8), 2)  # peek the next draw
+        assert p2c.pick(servers, rng) is (
+            servers[i] if backend_load(servers[i]) <= backend_load(servers[j])
+            else servers[j]
+        )
+        rng = random.Random(3)           # re-seed so the peek stays aligned
+
+
+def test_power_of_two_choices_single_server_shortcut():
+    only = _FakeServer(5)
+    assert make_lb_policy("power_of_two_choices").pick(
+        [only], random.Random(0)) is only
+
+
+# ---------------------------------------------------------------------------
+# Serving-mode knob validation (no silent ignores, same as make_workload)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kwargs,match", [
+    (dict(queue_depth=0), "queue_depth"),
+    (dict(timeout_ps=0), "timeout_ps"),
+    (dict(timeout_ps=-5), "timeout_ps"),
+    (dict(max_retries=-1), "max_retries"),
+    (dict(retry_backoff_ps=-1), "retry_backoff_ps"),
+])
+def test_rpc_serving_knob_validation(kwargs, match):
+    with pytest.raises(ValueError, match=match):
+        RpcServing(**kwargs)
+
+
+def test_rpc_unknown_lb_policy_raises_keyerror():
+    with pytest.raises(KeyError, match="unknown lb policy"):
+        RpcServing(lb="sticky_sessions")
+
+
+def test_serving_mode_switches_and_defaults_lb():
+    assert RpcServing().serving_mode is False
+    assert RpcServing(lb="round_robin").serving_mode is True
+    # queue_depth/timeout alone imply serving mode with the default policy
+    assert RpcServing(queue_depth=2).lb == "round_robin"
+    assert RpcServing(timeout_ps=1_000).lb == "round_robin"
+    wl = RpcServing(n_requests=4, lb="least_loaded", queue_depth=3,
+                    timeout_ps=2_000_000)
+    assert "lb=least_loaded" in wl.describe() and "q=3" in wl.describe()
+
+
+# ---------------------------------------------------------------------------
+# The conservation property: any seed x rate x policy x queue bound
+# ---------------------------------------------------------------------------
+
+
+@given(
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+    rate=st.sampled_from([500.0, 50_000.0, 2e6]),
+    lb=st.sampled_from(["round_robin", "least_loaded",
+                        "power_of_two_choices"]),
+    queue_depth=st.sampled_from([None, 1, 4]),
+)
+@settings(max_examples=6, deadline=None)
+def test_serving_conservation_property_any_seed(seed, rate, lb, queue_depth):
+    """Property: for any seed, arrival rate, LB policy and queue bound,
+    every issued rid terminates in exactly one of {completed, dropped,
+    timed_out}, weaves into exactly one parentless RpcRequest root, and
+    no span in the trace is an orphan."""
+    spec = _serving_spec(n_requests=6, rate_rps=rate, lb=lb,
+                         queue_depth=queue_depth,
+                         timeout_ps=5_000_000_000, max_retries=1)
+    run = spec.run(seed=seed, structured=True)
+    roots = [s for s in run.spans if s.name == "RpcRequest"]
+    assert len(roots) == 6 and all(s.parent is None for s in roots)
+    rids = [s.attrs.get("rid") for s in roots]
+    assert len(set(rids)) == 6
+    assert set(rids) == _rids_in_logs(run.cluster)
+    # exactly one terminal outcome per rid
+    for s in roots:
+        assert s.attrs.get("outcome") in TERMINAL_OUTCOMES, (
+            f"rid={s.attrs.get('rid')} has no terminal outcome"
+        )
+    out = request_outcomes(run.spans)
+    assert out["issued"] == 6
+    assert out["completed"] + out["dropped"] + out["timed_out"] == 6
+    if queue_depth is None:
+        assert out["dropped"] == 0     # nothing to drop without a bound
+    # zero orphans: every parented span resolves inside its own trace
+    ids = {s.context.span_id for s in run.spans}
+    for s in run.spans:
+        if s.parent is not None:
+            assert s.parent.span_id in ids, f"orphan span {s.name}"
+
+
+def test_every_rid_has_exactly_one_rpc_done(tmp_path):
+    """The conservation invariant at the log level: exactly one rpc_done
+    line per rid, carrying outcome= and attempts=."""
+    run = _serving_spec(n_requests=10, queue_depth=1).run(
+        outdir=str(tmp_path / "logs"), seed=1
+    )
+    done = {}
+    pat = re.compile(r"rpc_done rid=(\S+).*attempts=(\d+) outcome=(\w+)")
+    for lw in run.cluster._logs:
+        lines = (lw.render_lines() if lw.structured
+                 else open(lw.path).read().splitlines() if lw.path
+                 else lw.lines)
+        for line in lines:
+            m = pat.search(line)
+            if m:
+                assert m.group(1) not in done, f"duplicate rpc_done {m.group(1)}"
+                done[m.group(1)] = (int(m.group(2)), m.group(3))
+    assert len(done) == 10
+    assert all(o in TERMINAL_OUTCOMES and a >= 1 for a, o in done.values())
+
+
+def test_outcome_accounting_matches_span_accounting():
+    """The workload's in-flight counters agree with the span-level
+    accounting, and the open-loop saturation regime drives concurrency."""
+    wl = make_workload(
+        "rpc", program=rpc_handler_program(), clock_reads=2, seed=0,
+        n_requests=30, arrival="open", rate_rps=2e6,
+        lb="power_of_two_choices", queue_depth=1,
+        timeout_ps=5_000_000_000, max_retries=1,
+    )
+    cluster = ClusterOrchestrator(scale(pods=4, chips_per_pod=2))
+    wl.drive(cluster)
+    cluster.run()
+    out = wl.outcomes
+    assert out["issued"] == 30
+    assert out["completed"] + out["dropped"] + out["timed_out"] == 30
+    assert out["finalized"] == 30 and out["in_flight"] == 0
+    assert len(out["lat_ps"]) == out["completed"]
+    # open-loop at 2M rps vs ~ms service: requests pile up concurrently
+    assert out["max_in_flight"] > 1
+    assert out["dropped"] > 0          # queue_depth=1 under that load drops
+
+
+def test_closed_loop_serving_conserves_and_bounds_concurrency():
+    wl = make_workload(
+        "rpc", program=rpc_handler_program(), clock_reads=2, seed=0,
+        n_requests=12, arrival="closed", concurrency=3, lb="round_robin",
+        queue_depth=2, max_retries=1,
+    )
+    cluster = ClusterOrchestrator(scale(pods=2, chips_per_pod=2))
+    wl.drive(cluster)
+    cluster.run()
+    out = wl.outcomes
+    assert out["issued"] == 12
+    assert out["completed"] + out["dropped"] + out["timed_out"] == 12
+    assert out["max_in_flight"] <= 3   # the closed loop's concurrency cap
+
+
+# ---------------------------------------------------------------------------
+# Four-way weave byte-identity for the new event kinds
+# ---------------------------------------------------------------------------
+
+
+def test_saturated_weave_four_way_identity():
+    """text == structured == inline == columnar on a saturated run that
+    exercises every new event kind (lb picks, queue drops, timeouts,
+    retries)."""
+    spec = _serving_spec(n_requests=20, rate_rps=2e6, queue_depth=1,
+                         timeout_ps=4_000_000_000, max_retries=2)
+    text = spec.run(seed=0).span_jsonl
+    structured = spec.run(seed=0, structured=True).span_jsonl
+    inline = spec.run(seed=0, weave="inline").span_jsonl
+    columnar = spec.run(seed=0, weave="columnar").span_jsonl
+    assert text == structured == inline == columnar
+    # the run actually exercised the new machinery
+    assert '"RpcDrop"' in text, "saturated run wove no queue-drop spans"
+    assert '"RpcRetry"' in text, "saturated run wove no retry spans"
+    run = spec.run(seed=0, structured=True)
+    roots_ev = [e for s in rpc_requests(run.spans) for e in s.events]
+    assert any("rpc_lb_pick" in str(e) for e in roots_ev), (
+        "roots carry no lb-pick span events"
+    )
+    assert any(s.attrs.get("lb") == "least_loaded"
+               for s in rpc_requests(run.spans))
+    # retry spans parent under the original request's trace
+    roots = {s.context.trace_id: s for s in rpc_requests(run.spans)}
+    retries = [s for s in run.spans if s.name == "RpcRetry"]
+    assert retries and all(s.context.trace_id in roots for s in retries)
+
+
+def test_timeout_weave_four_way_identity():
+    """Deadline expiry (rpc_timeout closing the in-flight RpcCall) weaves
+    byte-identically on all four paths."""
+    spec = _serving_spec(name="serving_timeout", n_requests=6,
+                         queue_depth=None, timeout_ps=1_000_000,
+                         max_retries=1)
+    text = spec.run(seed=2).span_jsonl
+    assert text == spec.run(seed=2, structured=True).span_jsonl
+    assert text == spec.run(seed=2, weave="inline").span_jsonl
+    assert text == spec.run(seed=2, weave="columnar").span_jsonl
+    assert "rpc_timeout" in text or '"deadline"' in text
+
+
+def test_saturated_sharded_export_jobs_invariant():
+    spec = _serving_spec(n_requests=12, queue_depth=1)
+    serial = spec.run(seed=3, weave="inline").span_jsonl
+    for jobs in (1, 2, 4):
+        sharded = spec.run(seed=3, weave="sharded", jobs=jobs).span_jsonl
+        assert sharded == serial, f"jobs={jobs} diverged on a saturated run"
+
+
+def test_serving_runs_reproduce_per_seed():
+    spec = _serving_spec(n_requests=8, queue_depth=2)
+    assert spec.run(seed=5).span_jsonl == spec.run(seed=5).span_jsonl
+    assert spec.run(seed=5).span_jsonl != spec.run(seed=6).span_jsonl
+
+
+# ---------------------------------------------------------------------------
+# Outcome-aware analysis + the zero-completed-requests regression
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def saturated_run():
+    return _serving_spec(n_requests=20, rate_rps=2e6, queue_depth=1,
+                         timeout_ps=4_000_000_000, max_retries=2).run(
+        seed=0, structured=True)
+
+
+def test_request_outcomes_accounting(saturated_run):
+    out = request_outcomes(saturated_run.spans)
+    assert out["issued"] == 20
+    assert out["completed"] + out["dropped"] + out["timed_out"] == 20
+    assert out["dropped"] > 0
+    assert out["attempts"] >= out["issued"]
+    assert out["retried"] > 0
+    assert out["goodput"] == pytest.approx(out["completed"] / 20)
+    assert set(out["latency_us"]) == {"least_loaded"}
+    lt = out["latency_us"]["least_loaded"]
+    assert lt["n"] == out["completed"]
+    assert 0 < lt["p50"] <= lt["p99"] <= lt["p99.9"] <= lt["max"]
+
+
+def test_request_latency_stats_counts_only_completed(saturated_run):
+    stats = request_latency_stats(saturated_run.spans)
+    out = request_outcomes(saturated_run.spans)
+    assert stats["n"] == out["completed"] < out["issued"]
+    assert stats["n"] == len(completed_requests(saturated_run.spans))
+    assert {"p50", "p90", "p99", "p99.9", "max"} <= set(stats)
+
+
+def test_request_report_prints_outcomes_and_policy_tail(saturated_run):
+    report = request_report(saturated_run.spans)
+    assert "outcomes:" in report and "goodput=" in report
+    assert "lb=least_loaded" in report and "p99.9=" in report
+    assert "slowest request" in report
+
+
+def test_queue_bound_inflates_tail_latency():
+    """The tier-1 smoke gate's ordering, as a unit test: an unbounded
+    saturated queue shows a fatter p99.9 than a healthy arrival rate."""
+    healthy = _serving_spec(name="svc_healthy", n_requests=12, rate_rps=200.0,
+                            queue_depth=None, timeout_ps=None,
+                            max_retries=0).run(seed=0, structured=True)
+    slammed = _serving_spec(name="svc_slammed", n_requests=12, rate_rps=2e6,
+                            queue_depth=None, timeout_ps=None,
+                            max_retries=0).run(seed=0, structured=True)
+    h = request_latency_stats(healthy.spans)
+    s = request_latency_stats(slammed.spans)
+    assert h["n"] == s["n"] == 12       # unbounded: everything completes
+    assert s["p99.9"] > h["p99.9"]
+
+
+def test_zero_completed_requests_analysis_is_well_formed():
+    """Regression: a run where every request times out (or drops) must
+    yield zeroed latency stats and a readable report, not a crash."""
+    run = _serving_spec(name="svc_all_timeout", n_requests=5,
+                        queue_depth=None, timeout_ps=1,
+                        max_retries=0).run(seed=0, structured=True)
+    out = request_outcomes(run.spans)
+    assert out["issued"] == 5 and out["completed"] == 0
+    assert out["timed_out"] == 5
+    assert out["goodput"] == 0.0 and out["latency_us"] == {}
+    stats = request_latency_stats(run.spans)
+    assert stats["n"] == 0
+    assert stats["p50"] == stats["p99.9"] == stats["max"] == 0.0
+    report = request_report(run.spans)
+    assert "no completed requests" in report
+    assert "outcomes:" in report        # the accounting still prints
+    assert slowest_fallback_is_consistent(run)
+
+
+def slowest_fallback_is_consistent(run) -> bool:
+    """With zero completed requests, slowest_request falls back to the
+    slowest request of any outcome instead of returning nothing."""
+    from repro.core.analysis import slowest_request
+
+    trace = slowest_request(run.spans)
+    return trace is not None and rpc_requests(trace.spans)
+
+
+def test_score_mitigations_zero_requests_well_formed():
+    """Regression: scoring runs that completed zero requests (empty
+    request_us pools) returns a well-formed scoreboard."""
+    empty = RunStats(scenario="svc", seed=0, expected=(), detected=(),
+                     wall_s=0.1, events=10, n_spans=1,
+                     component_us={}, critical_components=[],
+                     mitigation="retransmit")
+    base = RunStats(scenario="svc", seed=0, expected=(), detected=(),
+                    wall_s=0.1, events=10, n_spans=1,
+                    component_us={}, critical_components=[],
+                    mitigation="do_nothing")
+    board = score_mitigations([base, empty])
+    by_name = {s.mitigation: s for s in board.scores}
+    assert by_name["retransmit"].request_latency == {}
+    assert by_name["retransmit"].p999_vs_baseline is None
+    assert board.to_dict() and board.report()
+    assert percentile([], 99.9) == 0.0  # the shared empty-pool guard
+
+
+# ---------------------------------------------------------------------------
+# Legacy (fan-out) behavior must be untouched by the serving engine
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_fanout_has_no_outcome_attrs():
+    """Default-knob runs stay on the fan-out schedule: no serving-mode
+    attrs leak into their spans (byte-identity with the committed goldens
+    is asserted in tests/test_sweep.py / test_streaming_weave.py)."""
+    spec = ScenarioSpec(
+        name="legacy_fanout", description="pre-saturation schedule",
+        workload="rpc", workload_params=(("n_requests", 4),),
+        program=rpc_handler_program, n_pods=2, chips_per_pod=2,
+        clock_reads=2,
+    )
+    run = spec.run(seed=0, structured=True)
+    roots = rpc_requests(run.spans)
+    assert len(roots) == 4
+    assert all("outcome" not in s.attrs and "lb" not in s.attrs
+               for s in roots)
+    out = request_outcomes(run.spans)
+    assert out["completed"] == 4       # legacy roots default to completed
+    assert set(out["latency_us"]) == {"fanout"}

@@ -85,7 +85,7 @@ def test_structured_sweep_shards_byte_identical(tmp_path):
     spec = SweepSpec(scenarios=("healthy_baseline", "gc_pause_host0"), seeds=(0, 3))
     text = run_sweep(spec, str(tmp_path / "text"), jobs=1)
     fast = run_sweep(spec, str(tmp_path / "fast"), jobs=2, structured=True)
-    assert [(c.scenario, c.workload, c.mitigation, c.magnitude, c.seed)
+    assert [(c.scenario, c.workload, c.mitigation, c.magnitude, c.rate, c.seed)
             for c in fast.cells] == spec.cells()
     for ct, cf in zip(text.cells, fast.cells):
         with open(os.path.join(text.outdir, ct.shard), "rb") as f:

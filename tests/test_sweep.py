@@ -135,9 +135,9 @@ def small_sweep(tmp_path_factory):
 
 def test_sweep_parallel_equals_serial(small_sweep):
     spec, serial, parallel = small_sweep
-    assert [(c.scenario, c.workload, c.mitigation, c.magnitude, c.seed)
+    assert [(c.scenario, c.workload, c.mitigation, c.magnitude, c.rate, c.seed)
             for c in serial.cells] == spec.cells()
-    assert [(c.scenario, c.workload, c.mitigation, c.magnitude, c.seed)
+    assert [(c.scenario, c.workload, c.mitigation, c.magnitude, c.rate, c.seed)
             for c in parallel.cells] == spec.cells()
     for cs, cp in zip(serial.cells, parallel.cells):
         with open(os.path.join(serial.outdir, cs.shard), "rb") as f:
@@ -162,10 +162,10 @@ def test_sweep_reloads_from_disk(small_sweep):
     assert agg_live == agg_reload
 
 
-@pytest.mark.parametrize("version", [1, 2, 3])
+@pytest.mark.parametrize("version", [1, 2, 3, 4])
 def test_load_sweep_reads_older_schema_payloads(version, tmp_path):
-    """sweep.json written by the v1/v2/v3 schemas (fixtures recorded from
-    the shapes those releases emitted) must load through the current
+    """sweep.json written by the v1/v2/v3/v4 schemas (fixtures recorded
+    from the shapes those releases emitted) must load through the current
     ``load_sweep`` with expected/detected round-tripping and post-hoc
     axis fields defaulting, not KeyError-ing."""
     fixture = os.path.join(
@@ -187,14 +187,46 @@ def test_load_sweep_reads_older_schema_payloads(version, tmp_path):
         assert cell.workload == raw.get("workload")
         assert cell.mitigation == raw.get("mitigation")
         assert cell.magnitude is None
+        assert cell.rate is None          # v5's arrival-rate axis defaults
         assert cell.stats.magnitude == 1.0
         assert cell.stats.expected_components == {}
         assert cell.stats.finding_components == {}
         assert cell.stats.diag_wall_s == 0.0
+    assert result.spec.arrival_rates is None
+    assert result.spec.queue_depth is None and result.spec.lb is None
     # the re-hydrated result still aggregates and reports
     agg = result.aggregate()
     assert agg.n_runs == len(result.cells)
     assert result.report()
+
+
+def test_sweep_arrival_rate_axis_and_serving_knobs(tmp_path):
+    """The arrival-rate axis fans every cell out per rate (6-tuple cells,
+    rate-tagged shards) and the scalar queue_depth/lb knobs ride through
+    overrides() into the rpc workload, round-tripping via load_sweep."""
+    spec = SweepSpec(
+        scenarios=("healthy_baseline",), seeds=(0,), workloads=("rpc",),
+        arrival_rates=(200.0, 2e6), queue_depth=2, lb="least_loaded",
+        n_pods=4,
+    )
+    assert spec.cells() == [
+        ("healthy_baseline", "rpc", None, None, 200.0, 0),
+        ("healthy_baseline", "rpc", None, None, 2000000.0, 0),
+    ]
+    result = run_sweep(spec, str(tmp_path), jobs=1)
+    assert all(c.ok for c in result.cells)
+    assert [c.rate for c in result.cells] == [200.0, 2e6]
+    assert [c.shard for c in result.cells] == [
+        os.path.join("shards", "healthy_baseline.rpc.r200.seed0.spans.jsonl"),
+        os.path.join("shards", "healthy_baseline.rpc.r2e+06.seed0.spans.jsonl"),
+    ]
+    assert "2 rates" in result.report()
+    reloaded = load_sweep(str(tmp_path))
+    assert reloaded.spec.arrival_rates == (200.0, 2e6)
+    assert reloaded.spec.queue_depth == 2
+    assert reloaded.spec.lb == "least_loaded"
+    assert [c.rate for c in reloaded.cells] == [200.0, 2e6]
+    assert reloaded.aggregate().to_dict() == result.aggregate().to_dict()
 
 
 def test_load_sweep_rejects_unknown_schema(tmp_path):
@@ -412,7 +444,7 @@ def _load_engine_bench():
 
 
 def _validate_bench_payload(payload):
-    assert payload["schema"] == "columbo.engine_bench/v6"
+    assert payload["schema"] == "columbo.engine_bench/v7"
     assert isinstance(payload["smoke"], bool)
     assert {"python", "platform"} <= set(payload["host"])
     k = payload["kernel"]
@@ -477,6 +509,34 @@ def _validate_bench_payload(payload):
     # count, and within the bench's own 10% kernel-overhead assertion
     assert by_policy["do_nothing"]["events"] == by_policy["unmitigated"]["events"]
     assert by_policy["do_nothing"]["overhead_vs_unmitigated"] <= 1.10
+    sat = payload["saturation"]
+    assert {"pods", "chips", "n_requests", "rate_rps", "min_in_flight",
+            "rows"} <= set(sat)
+    lbs = {r["lb"] for r in sat["rows"]}
+    assert lbs >= {"round_robin", "least_loaded", "power_of_two_choices"}
+    assert any(r["queue_depth"] is not None for r in sat["rows"]), (
+        "needs a bounded-queue row exercising the drop/retry machinery"
+    )
+    for row in sat["rows"]:
+        assert {"lb", "queue_depth", "timeout_us", "max_retries", "issued",
+                "completed", "dropped", "timed_out", "retries",
+                "max_in_flight", "goodput", "events", "wall_s",
+                "events_per_sec", "requests_per_sec",
+                "latency_us"} <= set(row)
+        # exact request conservation: every issued request reached exactly
+        # one terminal outcome (the bench itself asserts this too)
+        assert row["issued"] == (row["completed"] + row["dropped"]
+                                 + row["timed_out"]) == sat["n_requests"]
+        assert 0.0 <= row["goodput"] <= 1.0
+        assert row["max_in_flight"] >= 1
+        assert row["events"] > 0 and row["events_per_sec"] > 0
+        assert set(row["latency_us"]) == {"p50", "p99", "p99.9", "max"}
+        lt = row["latency_us"]
+        assert 0 <= lt["p50"] <= lt["p99"] <= lt["p99.9"] <= lt["max"]
+        if row["queue_depth"] is None:
+            # unbounded saturation rows must hold the concurrency bar
+            assert row["max_in_flight"] >= sat["min_in_flight"]
+            assert row["dropped"] == 0
     sw = payload["sweep"]
     assert sw["cells"] == len(sw["scenarios"]) * len(sw["seeds"])
     assert sw["wall_s_by_jobs"], "needs at least one --jobs timing"
@@ -517,6 +577,15 @@ def test_committed_bench_json_is_valid():
             f"pods={pods}: recorded columnar e2e {ee['columnar']} ev/s below "
             f"inline {ee['inline']} ev/s"
         )
+    # the serving-scale acceptance bar: the recorded 256-pod open-loop
+    # saturation rows sustained >= 10,000 concurrent in-flight requests
+    sat = payload["saturation"]
+    assert sat["pods"] == 256, "committed baseline needs the 256-pod fleet"
+    assert sat["min_in_flight"] >= 10_000
+    unbounded = [r for r in sat["rows"] if r["queue_depth"] is None]
+    assert unbounded and all(
+        r["max_in_flight"] >= 10_000 for r in unbounded
+    ), "recorded saturation rows fell below 10k concurrent in-flight"
 
 
 def test_engine_bench_kernel_micro_live():

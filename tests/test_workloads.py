@@ -257,8 +257,8 @@ def test_sweep_workload_axis(tmp_path):
         chips_per_pod=2,
     )
     assert spec.cells() == [
-        ("degraded_ici_link", "collective", None, None, 0),
-        ("degraded_ici_link", "rpc", None, None, 0),
+        ("degraded_ici_link", "collective", None, None, None, 0),
+        ("degraded_ici_link", "rpc", None, None, None, 0),
     ]
     result = run_sweep(spec, str(tmp_path), jobs=1, structured=True)
     assert [c.workload for c in result.cells] == ["collective", "rpc"]
